@@ -1,0 +1,59 @@
+//! EQ18 harness: adaptive per-layer compression-ratio selection — the
+//! "A" in LAGS. Shows the selected c^(l) per layer for a zoo profile, the
+//! resulting DES iteration time vs a flat c_u, and the effective c_max
+//! that enters the Corollary-2 convergence bound.
+//!
+//!     cargo run --release --example adaptive_ratios -- [--profile resnet50]
+//!         [--c-max 1000] [--bandwidth 111e6] [--workers 16]
+
+use lags::adaptive::{ratio, RatioConfig};
+use lags::collectives::NetworkModel;
+use lags::models::zoo;
+use lags::pipeline::desim::{simulate, Schedule, SimParams};
+use lags::util::cli::Args;
+use lags::util::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let name = args.str_or("profile", "resnet50");
+    let m = zoo::by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown profile {name}"))?;
+    let net = NetworkModel {
+        alpha: args.f64_or("alpha", 5e-4)?,
+        bandwidth: args.f64_or("bandwidth", 111e6)?,
+        workers: args.usize_or("workers", 16)?,
+    };
+    let cfg = RatioConfig { c_max: args.f64_or("c-max", 1000.0)?, ..RatioConfig::default() };
+    let ratios = ratio::select_ratios(&m, &net, &cfg);
+
+    println!("Eq. 18 selection for {name} (c_u={}, P={}):", cfg.c_max, net.workers);
+    println!("| {:<16} | {:>10} | {:>8} | {:>10} | {:>10} | {:>10} |",
+        "layer", "d^(l)", "c^(l)", "k^(l)", "t_comm", "budget t_b(l+1)");
+    for (i, (l, &c)) in m.layers.iter().zip(ratios.iter()).enumerate() {
+        let k = (l.params as f64 / c).max(1.0);
+        let budget = m.layers.get(i + 1).map(|n| n.t_b).unwrap_or(0.0);
+        println!(
+            "| {:<16} | {:>10} | {:>8.1} | {:>10.0} | {:>10} | {:>10} |",
+            l.name, l.params, c, k,
+            fmt_secs(net.allgather_sparse(k)),
+            fmt_secs(budget)
+        );
+    }
+    println!("\neffective c_max (Corollary 2 bound driver) = {:.1}", ratio::effective_cmax(&ratios));
+
+    // DES: adaptive vs flat
+    let mut p_ada = SimParams::uniform(&m, cfg.c_max);
+    p_ada.ratios = ratios.clone();
+    let flat = simulate(&m, &net, Schedule::Lags, &SimParams::uniform(&m, cfg.c_max));
+    let ada = simulate(&m, &net, Schedule::Lags, &p_ada);
+    let flat_bytes: f64 = flat.events.iter().map(|e| e.wire_bytes).sum();
+    let ada_bytes: f64 = ada.events.iter().map(|e| e.wire_bytes).sum();
+    println!("\nflat c={}: iter {:.4}s, {:.0} KB on wire", cfg.c_max, flat.iter_time, flat_bytes / 1e3);
+    println!("adaptive : iter {:.4}s, {:.0} KB on wire", ada.iter_time, ada_bytes / 1e3);
+    println!(
+        "=> adaptive ships {:.1}x the gradient mass per iteration at {:.1}% time cost \
+         (lower effective compression = tighter Corollary-2 bound = faster convergence)",
+        ada_bytes / flat_bytes.max(1.0),
+        100.0 * (ada.iter_time / flat.iter_time - 1.0)
+    );
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! FIG1 harness: render the per-iteration timelines of the three schedules
+//! (Fig. 1a/b/c) as ASCII Gantt charts over the DES events.
+//!
+//!     cargo run --release --example fig1_timeline -- [--profile resnet50]
+//!         [--compression 1000] [--width 100]
+
+use lags::collectives::NetworkModel;
+use lags::models::zoo;
+use lags::pipeline::desim::{simulate, IterationBreakdown, Schedule, SimParams};
+use lags::util::cli::Args;
+
+fn gantt(b: &IterationBreakdown, width: usize) {
+    let span = b.iter_time;
+    let scale = |t: f64| ((t / span) * (width as f64 - 1.0)) as usize;
+    // compute bar
+    let mut comp = vec![' '; width];
+    for cell in comp.iter_mut().take(scale(b.t_f)) {
+        *cell = 'F';
+    }
+    for cell in comp.iter_mut().take(scale(b.t_f + b.t_b)).skip(scale(b.t_f)) {
+        *cell = 'B';
+    }
+    println!("  comp |{}|", comp.iter().collect::<String>());
+    // comm bar
+    let mut comm = vec![' '; width];
+    for e in &b.events {
+        for cell in comm.iter_mut().take(scale(e.end).min(width)).skip(scale(e.start)) {
+            *cell = '#';
+        }
+    }
+    println!("  comm |{}|  iter = {:.3}s, hidden = {:.3}s", comm.iter().collect::<String>(), b.iter_time, b.hidden);
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let name = args.str_or("profile", "resnet50");
+    let m = zoo::by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown profile {name}"))?;
+    let net = NetworkModel::gige_16().with_workers(args.usize_or("workers", 16)?);
+    let c = args.f64_or("compression", 1000.0)?;
+    let width = args.usize_or("width", 100)?;
+
+    println!("Fig. 1 timelines for {name} (P={}, c={c}):  F=fwd B=bwd #=comm\n", net.workers);
+    for (sched, label, p) in [
+        (Schedule::DensePipelined, "(a) Dense-SGD, layer-wise pipelined", SimParams::dense(&m)),
+        (Schedule::Slgs, "(b) SLGS-SGD, single-shot sparse", SimParams::uniform(&m, c)),
+        (Schedule::Lags, "(c) LAGS-SGD, layer-wise pipelined sparse", SimParams::uniform(&m, c)),
+    ] {
+        println!("{label}");
+        let b = simulate(&m, &net, sched, &p);
+        gantt(&b, width);
+        println!();
+    }
+    Ok(())
+}

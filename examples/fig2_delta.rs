@@ -1,0 +1,77 @@
+//! FIG2 harness: verify Assumption 1 by measuring delta^(l) (Eq. 20) per
+//! layer during LAGS-SGD training, plus the training loss — the paper's
+//! Fig. 2, on the live models (mlp / cnn / grulm as the ResNet-20 /
+//! VGG-16 / LSTM-PTB stand-ins) with P=16 workers.
+//!
+//!     cargo run --release --example fig2_delta -- [--steps N] [--workers P]
+//!
+//! Output: results/fig2/<model>_delta.csv (per-layer series),
+//!         results/fig2/<model>_loss.csv, summary on stdout.
+
+use lags::config::TrainConfig;
+use lags::metrics::{CurveRecorder, ResultWriter};
+use lags::trainer::{Algorithm, Trainer};
+use lags::util::cli::Args;
+use lags::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let steps = args.usize_or("steps", 60)?;
+    let workers = args.usize_or("workers", 16)?;
+    let rt = std::sync::Arc::new(lags::runtime::Runtime::load(
+        args.str_or("artifacts", "artifacts"),
+    )?);
+    let w = ResultWriter::new(args.str_or("out", "results/fig2"))?;
+
+    let mut summary = Vec::new();
+    for (model, c, lr) in [("mlp", 100.0, 0.1), ("cnn", 50.0, 0.1), ("grulm", 100.0, 0.5)] {
+        let mut cfg = TrainConfig::default_for(model);
+        cfg.algorithm = Algorithm::Lags;
+        cfg.workers = workers;
+        cfg.steps = steps;
+        cfg.lr = lr;
+        cfg.compression = c;
+        cfg.delta_every = 5;
+        cfg.eval_every = 0;
+        let mut t = Trainer::with_runtime(&rt, cfg)?;
+        let report = t.run()?;
+        let frac = report.delta_fraction_holding.unwrap();
+        let dmax = report.delta_max.unwrap();
+        println!(
+            "{model:<7} P={workers} c={c:<5} steps={steps}: delta<=1 for {:.1}% of samples, \
+             max delta {dmax:.4}, final loss {:.4}",
+            frac * 100.0,
+            report.final_loss
+        );
+
+        // per-layer delta CSV (7 largest layers, like the paper's figure)
+        let series = t.delta_series().unwrap();
+        let mm = t.model_manifest();
+        let mut order: Vec<usize> = (0..mm.layers.len()).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(mm.layers[i].size));
+        order.truncate(7);
+        let names: Vec<String> = order.iter().map(|&i| mm.layers[i].name.clone()).collect();
+        let cols: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let mut rec = CurveRecorder::new(&cols);
+        if let Some(first) = series.get(order[0]) {
+            for (row, &(step, _)) in first.iter().enumerate() {
+                let vals: Vec<f64> = order
+                    .iter()
+                    .map(|&li| series[li].get(row).map(|&(_, d)| d).unwrap_or(f64::NAN))
+                    .collect();
+                rec.push(step, &vals);
+            }
+        }
+        w.write_csv(&format!("{model}_delta.csv"), &rec)?;
+        w.write_csv(&format!("{model}_loss.csv"), &report.curve)?;
+        summary.push(Json::obj(vec![
+            ("model", Json::Str(model.into())),
+            ("fraction_holding", Json::Num(frac)),
+            ("max_delta", Json::Num(dmax)),
+            ("final_loss", Json::Num(report.final_loss)),
+        ]));
+    }
+    w.write_json("summary.json", &Json::Arr(summary))?;
+    println!("wrote results/fig2/");
+    Ok(())
+}

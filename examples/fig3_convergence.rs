@@ -1,0 +1,47 @@
+//! FIG3 harness: convergence comparison of Dense-SGD vs SLGS-SGD vs
+//! LAGS-SGD under the same number of steps and identical hyper-parameters
+//! — the paper's Fig. 3, on the synthetic Cifar-10-like (mlp, cnn) and
+//! PTB-like (grulm) tasks.
+//!
+//!     cargo run --release --example fig3_convergence -- [--steps N] [--workers P]
+//!
+//! Output: results/fig3/<model>_<alg>.csv curves + merged summary.
+
+use lags::config::TrainConfig;
+use lags::metrics::ResultWriter;
+use lags::trainer::{Algorithm, Trainer};
+use lags::util::cli::Args;
+use lags::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let steps = args.usize_or("steps", 150)?;
+    let workers = args.usize_or("workers", 8)?;
+    let rt = std::sync::Arc::new(lags::runtime::Runtime::load(
+        args.str_or("artifacts", "artifacts"),
+    )?);
+    let w = ResultWriter::new(args.str_or("out", "results/fig3"))?;
+
+    let mut rows = Vec::new();
+    for (model, c, lr) in [("mlp", 100.0, 0.1), ("cnn", 50.0, 0.1), ("grulm", 100.0, 0.5)] {
+        println!("--- {model} (c = {c}, P = {workers}, {steps} steps) ---");
+        for alg in [Algorithm::Dense, Algorithm::Slgs, Algorithm::Lags] {
+            let mut cfg = TrainConfig::default_for(model);
+            cfg.algorithm = alg;
+            cfg.workers = workers;
+            cfg.steps = steps;
+            cfg.lr = lr;
+            cfg.compression = c;
+            cfg.eval_every = (steps / 10).max(1);
+            cfg.eval_batches = 4;
+            let mut t = Trainer::with_runtime(&rt, cfg)?;
+            let r = t.run()?;
+            println!("  {}", r.summary_line());
+            w.write_csv(&format!("{model}_{}.csv", alg.name()), &r.curve)?;
+            rows.push(r.to_json());
+        }
+    }
+    w.write_json("summary.json", &Json::Arr(rows))?;
+    println!("wrote results/fig3/");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! TAB2 harness: DES wall-clock reproduction of Table 2 (iteration time of
+//! Dense / SLGS / LAGS and the S1 / S2 / S_max speedups) on the paper's
+//! published model profiles at P=16, 1 Gbps Ethernet.
+//!
+//!     cargo run --release --example table2_walltime -- [--workers P]
+//!         [--alpha F] [--bandwidth F] [--out results/table2]
+//!
+//! Paper reference rows (Table 2): ResNet-50 1.45/0.67/0.51 (S1 2.86,
+//! S2 1.31, Smax 1.52); Inception-v4 3.85/1.60/1.25 (3.08/1.28/1.29);
+//! LSTM-PTB 7.80/1.02/0.92 (8.52/1.11/1.28).
+
+use lags::adaptive::perf_model;
+use lags::collectives::NetworkModel;
+use lags::metrics::ResultWriter;
+use lags::models::zoo;
+use lags::pipeline::desim::{simulate, Schedule, SimParams};
+use lags::util::cli::Args;
+use lags::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let net = NetworkModel {
+        alpha: args.f64_or("alpha", 5e-4)?,
+        bandwidth: args.f64_or("bandwidth", 111e6)?,
+        workers: args.usize_or("workers", 16)?,
+    };
+    let paper: &[(&str, [f64; 6])] = &[
+        ("resnet50", [1.45, 0.67, 0.51, 2.86, 1.31, 1.52]),
+        ("inception_v4", [3.85, 1.60, 1.25, 3.08, 1.28, 1.29]),
+        ("lstm_ptb", [7.80, 1.02, 0.92, 8.52, 1.11, 1.28]),
+    ];
+    println!("Table 2: measured(DES) vs paper — P={} 1GbE", net.workers);
+    println!(
+        "| {:<13} | {:>13} | {:>13} | {:>13} | {:>11} | {:>11} | {:>11} |",
+        "Model", "Dense", "SLGS", "LAGS", "S1", "S2", "Smax"
+    );
+    let mut rows = Vec::new();
+    for (name, p) in paper {
+        let m = zoo::by_name(name).unwrap();
+        let c = if *name == "lstm_ptb" { 250.0 } else { 1000.0 };
+        let sp = SimParams::uniform(&m, c);
+        let dense = simulate(&m, &net, Schedule::DensePipelined, &SimParams::dense(&m));
+        let slgs = simulate(&m, &net, Schedule::Slgs, &sp);
+        let lags = simulate(&m, &net, Schedule::Lags, &sp);
+        let s1 = dense.iter_time / lags.iter_time;
+        let s2 = slgs.iter_time / lags.iter_time;
+        let smax = perf_model::smax(m.t_f, m.t_b(), slgs.t_comm);
+        println!(
+            "| {:<13} | {:>5.2}s vs {:>4.2} | {:>5.2}s vs {:>4.2} | {:>5.2}s vs {:>4.2} | {:>4.2} vs {:>4.2} | {:>4.2} vs {:>4.2} | {:>4.2} vs {:>4.2} |",
+            name, dense.iter_time, p[0], slgs.iter_time, p[1], lags.iter_time, p[2],
+            s1, p[3], s2, p[4], smax, p[5]
+        );
+        rows.push(Json::obj(vec![
+            ("model", Json::Str(name.to_string())),
+            ("dense", Json::Num(dense.iter_time)),
+            ("slgs", Json::Num(slgs.iter_time)),
+            ("lags", Json::Num(lags.iter_time)),
+            ("s1", Json::Num(s1)),
+            ("s2", Json::Num(s2)),
+            ("smax", Json::Num(smax)),
+            ("smax_fraction", Json::Num((s2 - 1.0) / (smax - 1.0))),
+            ("paper", Json::arr_f64(p)),
+        ]));
+    }
+    let out = args.str_or("out", "results/table2");
+    ResultWriter::new(&out)?.write_json("table2.json", &Json::Arr(rows))?;
+    println!("wrote {out}/table2.json");
+    Ok(())
+}

@@ -1,0 +1,168 @@
+"""AOT compile path: lower L2 models + L1 kernels to HLO text artifacts.
+
+Interchange format is HLO **text**, not ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/gen_hlo.py and README.md gotchas).
+
+Outputs (written to ``artifacts/``):
+    <model>_train.hlo.txt    (params[d], x, y) -> (loss, grad[d])
+    <model>_eval.hlo.txt     (params[d], x, y) -> (loss, metric)
+    <model>_apply.hlo.txt    (params[dp], mom[dp], agg[dp], mu) -> (params', mom')
+    <model>_init.bin         f32 little-endian initial flat params (seeded)
+    compress_<n>.hlo.txt     (grad[n], resid[n], lr, k_i32) -> (sparse, resid', thr)
+    manifest.json            layer tables, offsets, flops, buckets, files
+
+Run via ``make artifacts`` (no-op when inputs unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from .kernels import apply as apply_kernel
+from .kernels import compress as compress_kernel
+
+MIN_BUCKET = 1024  # smallest compress artifact; layers pad up to this
+APPLY_ALIGN = 4096  # flat param dim padded to a multiple of this for apply
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def bucket_for(size: int) -> int:
+    return max(MIN_BUCKET, next_pow2(size))
+
+
+def pad_to(n: int, align: int) -> int:
+    return ((n + align - 1) // align) * align
+
+
+def lower_model(m: model_lib.ModelDef, out: pathlib.Path, seed: int) -> dict:
+    """Lower train/eval/apply for one model; return its manifest entry."""
+    d = m.d
+    dp = pad_to(d, APPLY_ALIGN)
+    pspec = jax.ShapeDtypeStruct((d,), jnp.float32)
+    ppad = jax.ShapeDtypeStruct((dp,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    files = {}
+    train = jax.jit(m.train_step).lower(pspec, m.x_spec, m.y_spec)
+    files["train"] = f"{m.name}_train.hlo.txt"
+    (out / files["train"]).write_text(to_hlo_text(train))
+
+    ev = jax.jit(m.eval_step).lower(pspec, m.x_spec, m.y_spec)
+    files["eval"] = f"{m.name}_eval.hlo.txt"
+    (out / files["eval"]).write_text(to_hlo_text(ev))
+
+    ap = jax.jit(apply_kernel.make_apply(dp)).lower(ppad, ppad, ppad, scalar)
+    files["apply"] = f"{m.name}_apply.hlo.txt"
+    (out / files["apply"]).write_text(to_hlo_text(ap))
+
+    # Seeded initial parameters so rust-side runs are reproducible without jax.
+    flat0 = np.asarray(m.init_flat(jax.random.PRNGKey(seed)), dtype="<f4")
+    files["init"] = f"{m.name}_init.bin"
+    (out / files["init"]).write_bytes(flat0.tobytes())
+
+    offs = m.offsets()
+    return {
+        "name": m.name,
+        "d": d,
+        "d_padded": dp,
+        "metric": m.metric_name,
+        "classes": m.classes,
+        "x": {"shape": list(m.x_spec.shape), "dtype": str(m.x_spec.dtype)},
+        "y": {"shape": list(m.y_spec.shape), "dtype": str(m.y_spec.dtype)},
+        "files": files,
+        "layers": [
+            {
+                "name": l.name,
+                "shape": list(l.shape),
+                "size": l.size,
+                "offset": offs[i],
+                "bucket": bucket_for(l.size),
+                "fwd_flops": l.fwd_flops,
+            }
+            for i, l in enumerate(m.layers)
+        ],
+    }
+
+
+def lower_compress(n: int, out: pathlib.Path, sampled: bool) -> str:
+    vec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+    k = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = compress_kernel.make_compress(n, sampled=sampled)
+    lowered = jax.jit(fn).lower(vec, vec, lr, k)
+    suffix = "s" if sampled else ""
+    fname = f"compress{suffix}_{n}.hlo.txt"
+    (out / fname).write_text(to_hlo_text(lowered))
+    return fname
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--models",
+        default=",".join(model_lib.DEFAULT_MODELS),
+        help="comma-separated model names (see model.registry)",
+    )
+    ap.add_argument("--large", action="store_true", help="also lower translm_large (~110M)")
+    ap.add_argument("--seed", type=int, default=42)
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    names = [s for s in args.models.split(",") if s]
+    if args.large and "translm_large" not in names:
+        names.append("translm_large")
+
+    manifest = {"models": {}, "compress_buckets": [], "seed": args.seed}
+    buckets = set()
+    for name in names:
+        m = model_lib.get_model(name)
+        print(f"[aot] lowering {name}: d={m.d} layers={len(m.layers)}")
+        entry = lower_model(m, out, args.seed)
+        manifest["models"][name] = entry
+        buckets.update(l["bucket"] for l in entry["layers"])
+
+    compress_files = {}
+    for n in sorted(buckets):
+        print(f"[aot] lowering compress bucket n={n}")
+        compress_files[str(n)] = {
+            "exact": lower_compress(n, out, sampled=False),
+            "sampled": lower_compress(n, out, sampled=True),
+        }
+    manifest["compress_buckets"] = sorted(buckets)
+    manifest["compress_files"] = compress_files
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"[aot] wrote {out}/manifest.json ({len(names)} models, {len(buckets)} buckets)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels for LAGS-SGD (build-time only).
+
+Modules:
+  compress — fused error-feedback accumulate + Top-k threshold mask
+  apply    — fused momentum-SGD parameter update
+  ref      — pure-jnp oracles (the correctness contract)
+"""
+
+from . import apply, compress, ref  # noqa: F401

@@ -1,0 +1,65 @@
+"""Layer-1 Pallas kernel: fused momentum-SGD parameter apply.
+
+Algorithm 1 line 10: ``v_t = v_{t-1} - (1/P) g_t`` — plus the optional
+momentum-on-aggregate variant (mu > 0) used by the momentum-correction
+training trick the paper cites (Lin et al. 2018).
+
+The aggregated update ``agg`` arriving from the rust coordinator already
+contains the learning rate (folded into acc at compress time, Alg. 1 l.7)
+and the 1/P averaging, so the kernel is a pure fused elementwise update:
+
+    mom'    = mu * mom + agg
+    params' = params - mom'
+
+Tiled like compress.py: BLK-element VMEM tiles, VPU-bound, 4 tiles live.
+interpret=True for CPU-PJRT executability (see compress.py docstring).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLK = 65536
+
+
+def _apply_kernel(params_ref, mom_ref, agg_ref, mu_ref, out_params_ref, out_mom_ref):
+    mu = mu_ref[0]
+    mom_new = mu * mom_ref[...] + agg_ref[...]
+    out_mom_ref[...] = mom_new
+    out_params_ref[...] = params_ref[...] - mom_new
+
+
+def apply_update(params, mom, agg, mu):
+    """(params[d], mom[d], agg[d], mu) -> (params', mom')."""
+    from .compress import pick_blk
+
+    d = params.shape[0]
+    blk = pick_blk(d)
+    grid = d // blk
+    mu = jnp.asarray(mu, jnp.float32).reshape((1,))
+    tile_spec = pl.BlockSpec((blk,), lambda i: (i,))
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    out_shape = (
+        jax.ShapeDtypeStruct((d,), jnp.float32),
+        jax.ShapeDtypeStruct((d,), jnp.float32),
+    )
+    return pl.pallas_call(
+        _apply_kernel,
+        grid=(grid,),
+        in_specs=[tile_spec, tile_spec, tile_spec, scalar_spec],
+        out_specs=(tile_spec, tile_spec),
+        out_shape=out_shape,
+        interpret=True,
+    )(params, mom, agg, mu)
+
+
+def make_apply(d: int):
+    """Return a jit-able f(params[d], mom[d], agg[d], mu) for AOT lowering."""
+
+    def wrapped(params, mom, agg, mu):
+        p, m = apply_update(params, mom, agg, mu)
+        return (p, m)
+
+    return wrapped

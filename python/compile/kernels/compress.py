@@ -1,0 +1,127 @@
+"""Layer-1 Pallas kernel: fused error-feedback accumulate + Top-k mask.
+
+This is the compute hot-spot of LAGS-SGD (Algorithm 1, lines 7-8): per layer
+``l`` every worker forms ``acc = residual + lr * grad`` and splits it into the
+top-k part (communicated) and the residual (kept locally).
+
+Structure (see DESIGN.md §Hardware-Adaptation):
+
+* the THRESHOLD is computed once per layer outside the Pallas body (an exact
+  sort by default, or the double-sampling estimate of Lin et al. 2018) — the
+  analogue of DGC's sample-then-mask on GPU, avoiding a full device sort in
+  the kernel;
+* the MASK + RESIDUAL update is the streaming elementwise Pallas kernel,
+  blocked into VMEM-sized tiles (``BLK`` elements per grid step). On a real
+  TPU each grid step streams three BLK-element f32 tiles HBM->VMEM
+  (grad, residual in; 2 tiles out), VPU-bound, MXU untouched.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO so the rust runtime can
+execute the artifact (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# VMEM tile: 64k f32 elements = 256 KiB per tile; the kernel touches
+# 4 tiles (grad, resid in; sparse, resid out) -> 1 MiB << 16 MiB VMEM.
+BLK = 65536
+
+
+def pick_blk(n: int, cap: int = BLK) -> int:
+    """Largest power-of-two tile that divides n, capped at `cap`.
+
+    Artifact sizes are padded to powers of two (compress buckets) or
+    4096-multiples (apply), so this returns >= 4096 in practice.
+    """
+    blk = 1
+    while blk * 2 <= cap and n % (blk * 2) == 0:
+        blk *= 2
+    return blk
+
+
+def _mask_kernel(acc_ref, thr_ref, sparse_ref, out_resid_ref):
+    """Elementwise tile body: split acc at |acc| >= thr (TopK mask, Eq. 4)."""
+    thr = thr_ref[0]
+    acc = acc_ref[...]
+    keep = jnp.abs(acc) >= thr
+    sparse = jnp.where(keep, acc, 0.0)
+    sparse_ref[...] = sparse
+    out_resid_ref[...] = acc - sparse
+
+
+def _mask_pallas(acc: jnp.ndarray, thr) -> tuple:
+    """Run the mask kernel over a 1-D vector, tiled in BLK chunks.
+
+    ``acc`` is computed ONCE outside (resid + lr*grad) and reused for the
+    threshold sort and the mask, so kept-set membership is bit-exact with
+    the oracle (recomputing acc in-kernel can flip |acc|==thr boundaries).
+    """
+    n = acc.shape[0]
+    blk = pick_blk(n)
+    grid = n // blk
+    thr = jnp.asarray(thr, jnp.float32).reshape((1,))
+    out_shape = (
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
+    # thr is a per-layer scalar: every grid step maps to block 0.
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    tile_spec = pl.BlockSpec((blk,), lambda i: (i,))
+    return pl.pallas_call(
+        _mask_kernel,
+        grid=(grid,),
+        in_specs=[tile_spec, scalar_spec],
+        out_specs=(tile_spec, tile_spec),
+        out_shape=out_shape,
+        interpret=True,
+    )(acc, thr)
+
+
+def compress(grad, resid, lr, k):
+    """Fused LAGS compress: (grad[n], resid[n], lr, k) -> (sparse, resid', thr).
+
+    Exact threshold (full sort over |acc|), then the Pallas mask kernel.
+    Semantically identical to ref.compress_ref.
+    """
+    acc = resid + lr * grad  # XLA fuses this with the sort input
+    thr = ref.kth_largest_abs(acc, k)
+    sparse, new_resid = _mask_pallas(acc, thr)
+    return sparse, new_resid, thr
+
+
+def compress_sampled(grad, resid, lr, k, sample_stride: int):
+    """Double-sampling variant (Lin et al. 2018): estimate thr from a strided
+    subsample of |acc| instead of a full sort. O(s log s) vs O(n log n).
+
+    The strided (deterministic) sample keeps the artifact reproducible; the
+    rust host fallback uses a PRNG sample — both satisfy the same estimate
+    contract tested in test_kernel.py.
+    """
+    n = grad.shape[0]
+    acc = resid + lr * grad
+    sample_idx = jnp.arange(0, n, sample_stride, dtype=jnp.int32)
+    thr = ref.sampled_threshold_ref(acc, k, sample_idx)
+    sparse, new_resid = _mask_pallas(acc, thr)
+    return sparse, new_resid, thr
+
+
+def make_compress(n: int, sampled: bool = False, sample_stride: int = 64):
+    """Return a jit-able f(grad[n], resid[n], lr, k) for AOT lowering."""
+    if sampled:
+        fn = functools.partial(compress_sampled, sample_stride=sample_stride)
+    else:
+        fn = compress
+
+    def wrapped(grad, resid, lr, k):
+        sparse, new_resid, thr = fn(grad, resid, lr, k)
+        return (sparse, new_resid, thr)
+
+    return wrapped

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal for Layer 1: every Pallas kernel in
+this package must match its oracle here to ~1e-6 under pytest (see
+python/tests/test_kernel.py). The oracles are also the semantic reference
+for the rust host-side fallbacks in rust/src/sparsify/.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kth_largest_abs(acc: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Exact Top-k threshold: the k-th largest |acc_i| (k is 1-based).
+
+    Matches Eq. (4) of the paper: ``thr`` such that keeping |x_i| >= thr
+    keeps (at least) k elements. ``k`` may be a traced int32 scalar.
+    """
+    n = acc.shape[0]
+    sorted_abs = jnp.sort(jnp.abs(acc))  # ascending
+    idx = jnp.clip(n - k, 0, n - 1).astype(jnp.int32)
+    return jnp.take(sorted_abs, idx)
+
+
+def compress_ref(grad, residual, lr, k):
+    """Oracle for the fused error-feedback compress step (Alg. 1, l.7-8).
+
+        acc      = residual + lr * grad
+        thr      = k-th largest |acc|
+        sparse_i = acc_i if |acc_i| >= thr else 0      (dense-masked TopK)
+        resid'_i = acc_i - sparse_i
+
+    Returns (sparse, residual', thr). ``sparse + residual' == acc`` exactly
+    (error feedback conserves mass), the invariant the property tests check.
+    """
+    acc = residual + lr * grad
+    thr = kth_largest_abs(acc, k)
+    mask = jnp.abs(acc) >= thr
+    sparse = jnp.where(mask, acc, 0.0)
+    return sparse, acc - sparse, thr
+
+
+def apply_ref(params, mom, agg, mu):
+    """Oracle for the fused momentum-SGD apply.
+
+        mom'    = mu * mom + agg
+        params' = params - mom'
+
+    ``agg`` is the aggregated (already lr-scaled, already averaged) sparse
+    update (1/P) * sum_p TopK(...); with mu=0 this is Algorithm 1 line 10.
+    """
+    mom_new = mu * mom + agg
+    return params - mom_new, mom_new
+
+
+def sampled_threshold_ref(acc, k, sample_idx):
+    """Oracle for the double-sampling threshold estimate (Lin et al. 2018).
+
+    Estimate the k-th largest |acc| from a subsample: take the
+    ceil(k * s / n)-th largest of the sampled |values|, where s = len(sample).
+    """
+    n = acc.shape[0]
+    s = sample_idx.shape[0]
+    sample = jnp.abs(jnp.take(acc, sample_idx))
+    ks = jnp.clip((k * s + n - 1) // n, 1, s)  # ceil(k*s/n), 1-based
+    sorted_s = jnp.sort(sample)
+    return jnp.take(sorted_s, jnp.clip(s - ks, 0, s - 1).astype(jnp.int32))
+
+
+def topk_ref(x, k):
+    """Plain TopK(x, k) operator of Eq. (4) (no error feedback)."""
+    thr = kth_largest_abs(x, jnp.asarray(k, jnp.int32))
+    return jnp.where(jnp.abs(x) >= thr, x, 0.0)
+
+
+def randk_expected_error_sq(x, k):
+    """E[||x - RandK(x,k)||^2] = (1 - k/d) ||x||^2 (Stich et al. 2018).
+
+    Used by the Assumption-1 verification harness (Eq. 20 denominator is a
+    single draw; its expectation is this closed form).
+    """
+    d = x.shape[0]
+    return (1.0 - k / d) * jnp.sum(x * x)

@@ -1,0 +1,438 @@
+"""Layer-2: JAX model definitions for the LAGS-SGD reproduction.
+
+Every model is expressed as a single flat f32 parameter vector plus a static
+layer table (name, shape, offset) — exactly the representation the paper uses
+(Eq. 2: x = x^(1) ⊔ x^(2) ⊔ ... ⊔ x^(L)).  The rust coordinator slices the
+flat gradient at the layer offsets to perform per-layer sparsification, so
+the AOT surface stays tiny:
+
+    train_step(params[d], x, y) -> (loss, grad[d])
+    eval_step (params[d], x, y) -> (loss, metric)
+
+Model zoo (stand-ins for the paper's ResNet-20/VGG-16/ResNet-50/LSTM-PTB,
+see DESIGN.md §Scale-substitutions):
+
+    mlp          — dense classifier        (Cifar-10-like synthetic task)
+    cnn          — small conv net          (conv-dominated layer profile)
+    grulm        — GRU language model      (LSTM-PTB stand-in)
+    translm      — transformer LM          (modern LM workload)
+    translm_e2e  — ~0.8M-param transformer for the end-to-end driver
+    translm_large— ~110M-param config (lowered on demand with --large)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Shape = Tuple[int, ...]
+
+
+@dataclasses.dataclass
+class LayerSpec:
+    """One learnable tensor = one LAGS 'layer' (paper footnote 2: frameworks
+    may split a layer into weight+bias tensors; sparsification is per
+    tensor)."""
+
+    name: str
+    shape: Shape
+    fwd_flops: float  # per-batch forward FLOPs attributed to this tensor
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+@dataclasses.dataclass
+class ModelDef:
+    name: str
+    layers: List[LayerSpec]
+    x_spec: jax.ShapeDtypeStruct
+    y_spec: jax.ShapeDtypeStruct
+    loss_fn: Callable  # (params_dict, x, y) -> scalar loss
+    metric_fn: Callable  # (params_dict, x, y) -> scalar metric
+    metric_name: str  # "accuracy" | "ppl_loss"
+    classes: int = 0  # label cardinality (classes for classifiers, vocab for LMs)
+
+    @property
+    def d(self) -> int:
+        return sum(l.size for l in self.layers)
+
+    def offsets(self) -> List[int]:
+        offs, off = [], 0
+        for l in self.layers:
+            offs.append(off)
+            off += l.size
+        return offs
+
+    # ---- flat <-> dict ---------------------------------------------------
+    def unflatten(self, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        out, off = {}, 0
+        for l in self.layers:
+            out[l.name] = flat[off : off + l.size].reshape(l.shape)
+            off += l.size
+        return out
+
+    def init_flat(self, rng: jax.Array) -> jnp.ndarray:
+        parts = []
+        for l in self.layers:
+            rng, sub = jax.random.split(rng)
+            parts.append(_init_tensor(sub, l.name, l.shape).reshape(-1))
+        return jnp.concatenate(parts).astype(jnp.float32)
+
+    # ---- AOT entry points -------------------------------------------------
+    def train_step(self, flat, x, y):
+        def loss_of_flat(f):
+            return self.loss_fn(self.unflatten(f), x, y)
+
+        loss, grad = jax.value_and_grad(loss_of_flat)(flat)
+        return (loss, grad)
+
+    def eval_step(self, flat, x, y):
+        params = self.unflatten(flat)
+        return (self.loss_fn(params, x, y), self.metric_fn(params, x, y))
+
+
+def _init_tensor(rng: jax.Array, name: str, shape: Shape) -> jnp.ndarray:
+    """He/Glorot-style init keyed off the tensor role encoded in its name."""
+    if name.endswith(".beta") or name.endswith(".b"):
+        return jnp.zeros(shape, jnp.float32)
+    if name.endswith(".gamma"):
+        return jnp.ones(shape, jnp.float32)
+    if ".emb" in name or name.startswith("emb") or name.startswith("pos"):
+        return 0.02 * jax.random.normal(rng, shape, jnp.float32)
+    if len(shape) >= 2:
+        fan_in = int(math.prod(shape[:-1]))
+        scale = math.sqrt(2.0 / max(fan_in, 1))
+        return scale * jax.random.normal(rng, shape, jnp.float32)
+    return jnp.zeros(shape, jnp.float32)
+
+
+def _xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy; labels int32, logits [..., C]."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logz, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def _accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# MLP classifier
+# ---------------------------------------------------------------------------
+def make_mlp(
+    name: str = "mlp",
+    in_dim: int = 512,
+    hidden: Tuple[int, ...] = (256, 128),
+    classes: int = 10,
+    batch: int = 32,
+) -> ModelDef:
+    dims = (in_dim,) + tuple(hidden) + (classes,)
+    layers: List[LayerSpec] = []
+    for i in range(len(dims) - 1):
+        a, b = dims[i], dims[i + 1]
+        layers.append(LayerSpec(f"fc{i}.w", (a, b), 2.0 * batch * a * b))
+        layers.append(LayerSpec(f"fc{i}.b", (b,), 1.0 * batch * b))
+
+    nlin = len(dims) - 1
+
+    def forward(p, x):
+        h = x
+        for i in range(nlin):
+            h = h @ p[f"fc{i}.w"] + p[f"fc{i}.b"]
+            if i < nlin - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    def loss_fn(p, x, y):
+        return _xent(forward(p, x), y)
+
+    def metric_fn(p, x, y):
+        return _accuracy(forward(p, x), y)
+
+    return ModelDef(
+        name=name,
+        layers=layers,
+        x_spec=jax.ShapeDtypeStruct((batch, in_dim), jnp.float32),
+        y_spec=jax.ShapeDtypeStruct((batch,), jnp.int32),
+        loss_fn=loss_fn,
+        metric_fn=metric_fn,
+        metric_name="accuracy",
+        classes=classes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# CNN-lite (conv-dominated profile — the ResNet/VGG stand-in for numerics)
+# ---------------------------------------------------------------------------
+def make_cnn(
+    name: str = "cnn",
+    hw: int = 16,
+    channels: Tuple[int, ...] = (16, 32, 32),
+    fc_dim: int = 64,
+    classes: int = 10,
+    batch: int = 16,
+) -> ModelDef:
+    layers: List[LayerSpec] = []
+    cin, res = 3, hw
+    for i, cout in enumerate(channels):
+        # 3x3 SAME conv, then 2x2 maxpool
+        flops = 2.0 * batch * res * res * 9 * cin * cout
+        layers.append(LayerSpec(f"conv{i}.w", (3, 3, cin, cout), flops))
+        layers.append(LayerSpec(f"conv{i}.b", (cout,), 1.0 * batch * res * res * cout))
+        cin, res = cout, res // 2
+    feat = channels[-1]
+    layers.append(LayerSpec("fc0.w", (feat, fc_dim), 2.0 * batch * feat * fc_dim))
+    layers.append(LayerSpec("fc0.b", (fc_dim,), 1.0 * batch * fc_dim))
+    layers.append(LayerSpec("fc1.w", (fc_dim, classes), 2.0 * batch * fc_dim * classes))
+    layers.append(LayerSpec("fc1.b", (classes,), 1.0 * batch * classes))
+
+    nconv = len(channels)
+
+    def forward(p, x):
+        h = x
+        for i in range(nconv):
+            h = jax.lax.conv_general_dilated(
+                h,
+                p[f"conv{i}.w"],
+                window_strides=(1, 1),
+                padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+            h = jax.nn.relu(h + p[f"conv{i}.b"])
+            h = jax.lax.reduce_window(
+                h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+            )
+        h = jnp.mean(h, axis=(1, 2))  # global average pool
+        h = jax.nn.relu(h @ p["fc0.w"] + p["fc0.b"])
+        return h @ p["fc1.w"] + p["fc1.b"]
+
+    def loss_fn(p, x, y):
+        return _xent(forward(p, x), y)
+
+    def metric_fn(p, x, y):
+        return _accuracy(forward(p, x), y)
+
+    return ModelDef(
+        name=name,
+        layers=layers,
+        x_spec=jax.ShapeDtypeStruct((batch, hw, hw, 3), jnp.float32),
+        y_spec=jax.ShapeDtypeStruct((batch,), jnp.int32),
+        loss_fn=loss_fn,
+        metric_fn=metric_fn,
+        metric_name="accuracy",
+        classes=classes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# GRU language model (LSTM-PTB stand-in: embedding-dominated profile)
+# ---------------------------------------------------------------------------
+def make_grulm(
+    name: str = "grulm",
+    vocab: int = 64,
+    embed: int = 64,
+    hidden: int = 128,
+    seq: int = 32,
+    batch: int = 8,
+) -> ModelDef:
+    tok = 1.0 * batch * seq
+    layers = [
+        LayerSpec("emb.w", (vocab, embed), tok * embed),
+        LayerSpec("gru.wx", (embed, 3 * hidden), 2.0 * tok * embed * 3 * hidden),
+        LayerSpec("gru.wh", (hidden, 3 * hidden), 2.0 * tok * hidden * 3 * hidden),
+        LayerSpec("gru.b", (3 * hidden,), tok * 3 * hidden),
+        LayerSpec("proj.w", (hidden, vocab), 2.0 * tok * hidden * vocab),
+        LayerSpec("proj.b", (vocab,), tok * vocab),
+    ]
+
+    def forward(p, x):
+        e = p["emb.w"][x]  # [B, T, E]
+        gx = e @ p["gru.wx"] + p["gru.b"]  # [B, T, 3H]
+        h0 = jnp.zeros((x.shape[0], hidden), jnp.float32)
+
+        def cell(h, gx_t):
+            gh = h @ p["gru.wh"]  # [B, 3H]
+            xz, xr, xn = jnp.split(gx_t, 3, axis=-1)
+            hz, hr, hn = jnp.split(gh, 3, axis=-1)
+            z = jax.nn.sigmoid(xz + hz)
+            r = jax.nn.sigmoid(xr + hr)
+            n = jnp.tanh(xn + r * hn)
+            h_new = (1.0 - z) * h + z * n
+            return h_new, h_new
+
+        _, hs = jax.lax.scan(cell, h0, jnp.swapaxes(gx, 0, 1))  # [T, B, H]
+        hs = jnp.swapaxes(hs, 0, 1)  # [B, T, H]
+        return hs @ p["proj.w"] + p["proj.b"]
+
+    def loss_fn(p, x, y):
+        return _xent(forward(p, x), y)
+
+    def metric_fn(p, x, y):
+        # perplexity is exp(loss); report loss, exp() happens in rust
+        return loss_fn(p, x, y)
+
+    return ModelDef(
+        name=name,
+        layers=layers,
+        x_spec=jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        y_spec=jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        loss_fn=loss_fn,
+        metric_fn=metric_fn,
+        metric_name="ppl_loss",
+        classes=vocab,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Transformer language model (decoder-only, tied head)
+# ---------------------------------------------------------------------------
+def make_translm(
+    name: str = "translm",
+    vocab: int = 256,
+    d_model: int = 128,
+    n_layer: int = 2,
+    n_head: int = 4,
+    seq: int = 64,
+    batch: int = 4,
+) -> ModelDef:
+    assert d_model % n_head == 0
+    dh = d_model // n_head
+    tok = 1.0 * batch * seq
+    d_ff = 4 * d_model
+    layers = [
+        LayerSpec("emb.w", (vocab, d_model), tok * d_model),
+        LayerSpec("pos.w", (seq, d_model), tok * d_model),
+    ]
+    for i in range(n_layer):
+        pre = f"blk{i}."
+        attn_flops = 2.0 * tok * d_model * d_model
+        layers += [
+            LayerSpec(pre + "ln1.gamma", (d_model,), tok * d_model),
+            LayerSpec(pre + "ln1.beta", (d_model,), tok * d_model),
+            LayerSpec(pre + "wq", (d_model, d_model), attn_flops),
+            LayerSpec(pre + "wk", (d_model, d_model), attn_flops),
+            LayerSpec(
+                pre + "wv",
+                (d_model, d_model),
+                # attribute the T^2 attention matmuls to wv
+                attn_flops + 4.0 * batch * n_head * seq * seq * dh,
+            ),
+            LayerSpec(pre + "wo", (d_model, d_model), attn_flops),
+            LayerSpec(pre + "ln2.gamma", (d_model,), tok * d_model),
+            LayerSpec(pre + "ln2.beta", (d_model,), tok * d_model),
+            LayerSpec(pre + "w1", (d_model, d_ff), 2.0 * tok * d_model * d_ff),
+            LayerSpec(pre + "b1", (d_ff,), tok * d_ff),
+            LayerSpec(pre + "w2", (d_ff, d_model), 2.0 * tok * d_ff * d_model),
+            LayerSpec(pre + "b2", (d_model,), tok * d_model),
+        ]
+    layers += [
+        LayerSpec("lnf.gamma", (d_model,), tok * d_model),
+        LayerSpec("lnf.beta", (d_model,), tok * d_model),
+        # tied head: logits = h @ emb.w^T (flops attributed here)
+        LayerSpec("head.b", (vocab,), 2.0 * tok * d_model * vocab),
+    ]
+
+    def layer_norm(h, g, b):
+        mu = jnp.mean(h, axis=-1, keepdims=True)
+        var = jnp.var(h, axis=-1, keepdims=True)
+        return g * (h - mu) * jax.lax.rsqrt(var + 1e-5) + b
+
+    causal = jnp.tril(jnp.ones((seq, seq), jnp.bool_))
+
+    def attn(p, pre, h):
+        B, T, D = h.shape
+        q = (h @ p[pre + "wq"]).reshape(B, T, n_head, dh).transpose(0, 2, 1, 3)
+        k = (h @ p[pre + "wk"]).reshape(B, T, n_head, dh).transpose(0, 2, 1, 3)
+        v = (h @ p[pre + "wv"]).reshape(B, T, n_head, dh).transpose(0, 2, 1, 3)
+        scores = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(dh)
+        scores = jnp.where(causal[None, None, :, :], scores, -1e30)
+        out = jax.nn.softmax(scores, axis=-1) @ v  # [B, nh, T, dh]
+        out = out.transpose(0, 2, 1, 3).reshape(B, T, D)
+        return out @ p[pre + "wo"]
+
+    def forward(p, x):
+        h = p["emb.w"][x] + p["pos.w"][None, :, :]
+        for i in range(n_layer):
+            pre = f"blk{i}."
+            h = h + attn(p, pre, layer_norm(h, p[pre + "ln1.gamma"], p[pre + "ln1.beta"]))
+            hn = layer_norm(h, p[pre + "ln2.gamma"], p[pre + "ln2.beta"])
+            ff = jax.nn.gelu(hn @ p[pre + "w1"] + p[pre + "b1"]) @ p[pre + "w2"] + p[pre + "b2"]
+            h = h + ff
+        h = layer_norm(h, p["lnf.gamma"], p["lnf.beta"])
+        return h @ p["emb.w"].T + p["head.b"]
+
+    def loss_fn(p, x, y):
+        return _xent(forward(p, x), y)
+
+    def metric_fn(p, x, y):
+        return loss_fn(p, x, y)
+
+    return ModelDef(
+        name=name,
+        layers=layers,
+        x_spec=jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        y_spec=jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        loss_fn=loss_fn,
+        metric_fn=metric_fn,
+        metric_name="ppl_loss",
+        classes=vocab,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+def registry() -> Dict[str, Callable[[], ModelDef]]:
+    return {
+        "mlp": lambda: make_mlp(),
+        "cnn": lambda: make_cnn(),
+        "grulm": lambda: make_grulm(),
+        "translm": lambda: make_translm(),
+        "translm_e2e": lambda: make_translm(
+            name="translm_e2e", vocab=1024, d_model=128, n_layer=3, n_head=4, seq=32, batch=4
+        ),
+        "translm_large": lambda: make_translm(
+            name="translm_large",
+            vocab=32768,
+            d_model=768,
+            n_layer=12,
+            n_head=12,
+            seq=128,
+            batch=1,
+        ),
+    }
+
+
+DEFAULT_MODELS = ["mlp", "cnn", "grulm", "translm", "translm_e2e"]
+
+
+def get_model(name: str) -> ModelDef:
+    reg = registry()
+    if name not in reg:
+        raise KeyError(f"unknown model {name!r}; have {sorted(reg)}")
+    m = reg[name]()
+    assert m.d == sum(l.size for l in m.layers)
+    return m
+
+
+def sanity_check(m: ModelDef, seed: int = 0) -> float:
+    """Run one train_step on random data; returns the loss (used by tests)."""
+    rng = jax.random.PRNGKey(seed)
+    flat = m.init_flat(rng)
+    if m.x_spec.dtype == jnp.int32:
+        x = jax.random.randint(rng, m.x_spec.shape, 0, 8).astype(jnp.int32)
+    else:
+        x = jax.random.normal(rng, m.x_spec.shape, jnp.float32)
+    y = jax.random.randint(rng, m.y_spec.shape, 0, 8).astype(jnp.int32)
+    loss, grad = m.train_step(flat, x, y)
+    assert grad.shape == (m.d,)
+    assert bool(jnp.isfinite(loss)), "non-finite loss"
+    assert bool(jnp.all(jnp.isfinite(grad))), "non-finite grad"
+    return float(loss)

@@ -1,0 +1,81 @@
+"""AOT path tests: manifest consistency + HLO text emission."""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_bucket_helpers():
+    assert aot.next_pow2(1) == 1
+    assert aot.next_pow2(1000) == 1024
+    assert aot.next_pow2(1024) == 1024
+    assert aot.bucket_for(10) == aot.MIN_BUCKET
+    assert aot.bucket_for(70000) == 131072
+    assert aot.pad_to(1, 4096) == 4096
+    assert aot.pad_to(4096, 4096) == 4096
+    assert aot.pad_to(4097, 4096) == 8192
+
+
+def test_hlo_text_emission_small():
+    """Lower the tiniest model end to end and check the HLO text parses as
+    text (ENTRY present, param count matches)."""
+    m = M.make_mlp(name="tiny", in_dim=4, hidden=(3,), classes=2, batch=2)
+    pspec = jax.ShapeDtypeStruct((m.d,), jnp.float32)
+    lowered = jax.jit(m.train_step).lower(pspec, m.x_spec, m.y_spec)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32[" in text
+
+
+@pytest.mark.skipif(not (ART / "manifest.json").exists(), reason="run `make artifacts` first")
+class TestManifest:
+    def setup_method(self):
+        self.man = json.loads((ART / "manifest.json").read_text())
+
+    def test_models_present(self):
+        for name in M.DEFAULT_MODELS:
+            assert name in self.man["models"]
+
+    def test_layer_tables_match_model_defs(self):
+        for name, entry in self.man["models"].items():
+            m = M.get_model(name)
+            assert entry["d"] == m.d
+            assert len(entry["layers"]) == len(m.layers)
+            off = 0
+            for le, l in zip(entry["layers"], m.layers):
+                assert le["name"] == l.name
+                assert le["size"] == l.size
+                assert le["offset"] == off
+                assert le["bucket"] >= le["size"]
+                off += l.size
+
+    def test_artifact_files_exist(self):
+        for entry in self.man["models"].values():
+            for f in entry["files"].values():
+                assert (ART / f).exists(), f
+        for bucket in self.man["compress_buckets"]:
+            for f in self.man["compress_files"][str(bucket)].values():
+                assert (ART / f).exists(), f
+
+    def test_buckets_cover_all_layers(self):
+        buckets = set(self.man["compress_buckets"])
+        for entry in self.man["models"].values():
+            for le in entry["layers"]:
+                assert le["bucket"] in buckets
+
+    def test_init_bin_sizes(self):
+        for entry in self.man["models"].values():
+            path = ART / entry["files"]["init"]
+            assert path.stat().st_size == 4 * entry["d"]
+
+    def test_padded_dims(self):
+        for entry in self.man["models"].values():
+            assert entry["d_padded"] % aot.APPLY_ALIGN == 0
+            assert entry["d_padded"] >= entry["d"]

@@ -1,0 +1,214 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+This is the CORE correctness signal for the AOT path: the rust runtime
+executes exactly the HLO these kernels lower to, so kernel==oracle here
+plus oracle==rust-host (tested on the rust side) closes the loop.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import apply as apply_kernel
+from compile.kernels import compress as compress_kernel
+from compile.kernels import ref
+
+
+def _rand(n, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=n) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# compress kernel vs oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [1024, 4096, 65536, 131072])
+@pytest.mark.parametrize("k_frac", [0.001, 0.01, 0.1, 1.0])
+def test_compress_matches_ref(n, k_frac):
+    k = max(1, int(n * k_frac))
+    g, r = _rand(n, 1), _rand(n, 2, 0.1)
+    s, nr, thr = compress_kernel.compress(g, r, 0.05, jnp.int32(k))
+    es, er, ethr = ref.compress_ref(g, r, 0.05, jnp.int32(k))
+    np.testing.assert_allclose(s, es, atol=1e-6)
+    np.testing.assert_allclose(nr, er, atol=1e-6)
+    np.testing.assert_allclose(thr, ethr, atol=1e-6)
+
+
+@pytest.mark.parametrize("n,k", [(1024, 1), (1024, 1024), (2048, 2047)])
+def test_compress_edge_k(n, k):
+    g, r = _rand(n, 3), _rand(n, 4, 0.5)
+    s, nr, _ = compress_kernel.compress(g, r, 1.0, jnp.int32(k))
+    es, er, _ = ref.compress_ref(g, r, 1.0, jnp.int32(k))
+    np.testing.assert_allclose(s, es, atol=1e-6)
+    np.testing.assert_allclose(nr, er, atol=1e-6)
+
+
+def test_compress_mass_conservation():
+    """Error feedback invariant: sparse + residual' == residual + lr*grad."""
+    n, k = 8192, 82
+    g, r = _rand(n, 5), _rand(n, 6, 0.2)
+    s, nr, _ = compress_kernel.compress(g, r, 0.1, jnp.int32(k))
+    np.testing.assert_allclose(np.asarray(s) + np.asarray(nr),
+                               np.asarray(r + 0.1 * g), atol=1e-6)
+
+
+def test_compress_selects_at_least_k():
+    n, k = 4096, 41
+    g, r = _rand(n, 7), jnp.zeros(n, jnp.float32)
+    s, _, thr = compress_kernel.compress(g, r, 1.0, jnp.int32(k))
+    nnz = int(np.sum(np.asarray(s) != 0))
+    assert nnz >= k
+    # kept values are exactly those with |acc| >= thr
+    acc = np.asarray(g)
+    kept = np.abs(acc) >= float(thr)
+    np.testing.assert_allclose(np.asarray(s), np.where(kept, acc, 0.0), atol=1e-7)
+
+
+def test_compress_topk_values_are_largest():
+    """The kept set dominates the dropped set in |value| (TopK semantics)."""
+    n, k = 2048, 100
+    g = _rand(n, 8)
+    s, nr, _ = compress_kernel.compress(g, jnp.zeros(n, jnp.float32), 1.0, jnp.int32(k))
+    kept = np.abs(np.asarray(s)[np.asarray(s) != 0])
+    dropped = np.abs(np.asarray(nr)[np.asarray(nr) != 0])
+    if kept.size and dropped.size:
+        assert kept.min() >= dropped.max() - 1e-7
+
+
+def test_compress_all_zero_input():
+    """Degenerate: all-zero acc -> thr 0, everything 'kept' as zeros."""
+    n = 1024
+    z = jnp.zeros(n, jnp.float32)
+    s, nr, thr = compress_kernel.compress(z, z, 0.1, jnp.int32(10))
+    assert float(thr) == 0.0
+    np.testing.assert_array_equal(np.asarray(s), 0.0)
+    np.testing.assert_array_equal(np.asarray(nr), 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    logn=st.integers(min_value=10, max_value=14),
+    k=st.integers(min_value=1, max_value=512),
+    lr=st.floats(min_value=1e-4, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_compress_hypothesis_sweep(logn, k, lr, seed):
+    """Property sweep over shapes/k/lr: kernel == oracle everywhere."""
+    n = 2**logn
+    k = min(k, n)
+    g, r = _rand(n, seed), _rand(n, seed + 1, 0.3)
+    s, nr, thr = compress_kernel.compress(g, r, lr, jnp.int32(k))
+    es, er, ethr = ref.compress_ref(g, r, lr, jnp.int32(k))
+    np.testing.assert_allclose(s, es, atol=1e-5)
+    np.testing.assert_allclose(nr, er, atol=1e-5)
+    np.testing.assert_allclose(thr, ethr, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sampled (double-sampling) compress
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [4096, 65536])
+def test_compress_sampled_matches_ref(n):
+    k = n // 100
+    g, r = _rand(n, 9), _rand(n, 10, 0.1)
+    s, nr, thr = compress_kernel.compress_sampled(g, r, 0.1, jnp.int32(k), 64)
+    acc = r + 0.1 * g
+    idx = jnp.arange(0, n, 64, dtype=jnp.int32)
+    ethr = ref.sampled_threshold_ref(acc, jnp.int32(k), idx)
+    np.testing.assert_allclose(thr, ethr, atol=1e-6)
+    # mask consistency with the estimated threshold
+    np.testing.assert_allclose(
+        np.asarray(s), np.where(np.abs(np.asarray(acc)) >= float(thr), np.asarray(acc), 0.0),
+        atol=1e-6,
+    )
+    np.testing.assert_allclose(np.asarray(s) + np.asarray(nr), np.asarray(acc), atol=1e-6)
+
+
+def test_sampled_threshold_is_reasonable():
+    """Double-sampling estimate selects within ~4x of the target k (gaussian)."""
+    n, k = 65536, 655
+    g = _rand(n, 11)
+    s, _, _ = compress_kernel.compress_sampled(
+        g, jnp.zeros(n, jnp.float32), 1.0, jnp.int32(k), 64
+    )
+    nnz = int(np.sum(np.asarray(s) != 0))
+    assert k / 4 <= nnz <= 4 * k, f"nnz={nnz} too far from k={k}"
+
+
+# ---------------------------------------------------------------------------
+# apply kernel vs oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("d", [4096, 69632, 131072])  # incl. non-pow2 4096-multiple
+@pytest.mark.parametrize("mu", [0.0, 0.9])
+def test_apply_matches_ref(d, mu):
+    p, m, a = _rand(d, 12), _rand(d, 13, 0.01), _rand(d, 14, 0.001)
+    p1, m1 = apply_kernel.apply_update(p, m, a, mu)
+    ep, em = ref.apply_ref(p, m, a, mu)
+    np.testing.assert_allclose(p1, ep, atol=1e-6)
+    np.testing.assert_allclose(m1, em, atol=1e-6)
+
+
+def test_apply_zero_agg_is_momentum_decay():
+    d = 4096
+    p, m = _rand(d, 15), _rand(d, 16, 0.1)
+    z = jnp.zeros(d, jnp.float32)
+    p1, m1 = apply_kernel.apply_update(p, m, z, 0.5)
+    np.testing.assert_allclose(np.asarray(m1), 0.5 * np.asarray(m), atol=1e-7)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p) - 0.5 * np.asarray(m), atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    logd=st.integers(min_value=12, max_value=15),
+    mu=st.floats(min_value=0.0, max_value=0.99),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_apply_hypothesis_sweep(logd, mu, seed):
+    d = 2**logd
+    p, m, a = _rand(d, seed), _rand(d, seed + 1, 0.05), _rand(d, seed + 2, 0.01)
+    p1, m1 = apply_kernel.apply_update(p, m, a, mu)
+    ep, em = ref.apply_ref(p, m, a, mu)
+    np.testing.assert_allclose(p1, ep, atol=1e-5)
+    np.testing.assert_allclose(m1, em, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# tiling helper
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "n,expect",
+    [(1024, 1024), (65536, 65536), (131072, 65536), (69632, 4096), (4096 * 17, 4096)],
+)
+def test_pick_blk(n, expect):
+    blk = compress_kernel.pick_blk(n)
+    assert blk == expect
+    assert n % blk == 0
+
+
+# ---------------------------------------------------------------------------
+# theory helpers (used by Assumption-1 harness)
+# ---------------------------------------------------------------------------
+def test_randk_expected_error_closed_form():
+    """Monte-carlo RandK error matches (1 - k/d)||x||^2 (Stich et al.)."""
+    d, k, trials = 512, 64, 400
+    x = np.asarray(_rand(d, 17))
+    rng = np.random.default_rng(18)
+    errs = []
+    for _ in range(trials):
+        idx = rng.choice(d, size=k, replace=False)
+        kept = np.zeros(d, np.float32)
+        kept[idx] = x[idx]
+        errs.append(np.sum((x - kept) ** 2))
+    expected = float(ref.randk_expected_error_sq(jnp.asarray(x), k))
+    assert abs(np.mean(errs) - expected) / expected < 0.1
+
+
+def test_topk_error_beats_randk_expectation():
+    """Single-vector sanity for Assumption 1: TopK error <= E[RandK error]."""
+    d, k = 2048, 64
+    x = _rand(d, 19)
+    topk_err = float(jnp.sum((x - ref.topk_ref(x, k)) ** 2))
+    randk_err = float(ref.randk_expected_error_sq(x, k))
+    assert topk_err <= randk_err + 1e-6

@@ -1,0 +1,105 @@
+"""Layer-2 correctness: model zoo shape/grad/learning checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+ALL = ["mlp", "cnn", "grulm", "translm", "translm_e2e"]
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_sanity(name):
+    m = M.get_model(name)
+    loss = M.sanity_check(m)
+    assert np.isfinite(loss) and loss > 0
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_layer_table_consistency(name):
+    m = M.get_model(name)
+    offs = m.offsets()
+    assert offs[0] == 0
+    for i in range(1, len(offs)):
+        assert offs[i] == offs[i - 1] + m.layers[i - 1].size
+    assert offs[-1] + m.layers[-1].size == m.d
+    names = [l.name for l in m.layers]
+    assert len(set(names)) == len(names), "duplicate layer names"
+    assert all(l.fwd_flops >= 0 for l in m.layers)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_unflatten_round_trip(name):
+    m = M.get_model(name)
+    flat = m.init_flat(jax.random.PRNGKey(1))
+    parts = m.unflatten(flat)
+    re_flat = jnp.concatenate([parts[l.name].reshape(-1) for l in m.layers])
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(re_flat))
+
+
+def _batch(m, rng, vocab_hint=8):
+    if m.x_spec.dtype == jnp.int32:
+        x = jax.random.randint(rng, m.x_spec.shape, 0, vocab_hint).astype(jnp.int32)
+    else:
+        x = jax.random.normal(rng, m.x_spec.shape, jnp.float32)
+    y = jax.random.randint(jax.random.fold_in(rng, 1), m.y_spec.shape, 0, vocab_hint)
+    return x, y.astype(jnp.int32)
+
+
+@pytest.mark.parametrize("name", ["mlp", "cnn", "grulm", "translm"])
+def test_loss_decreases_with_sgd(name):
+    """Plain SGD on one fixed batch must overfit it (loss halves)."""
+    m = M.get_model(name)
+    flat = m.init_flat(jax.random.PRNGKey(2))
+    x, y = _batch(m, jax.random.PRNGKey(3))
+    step = jax.jit(m.train_step)
+    loss0, _ = step(flat, x, y)
+    lr = 0.2 if name in ("mlp", "cnn") else 0.5
+    for _ in range(40):
+        loss, g = step(flat, x, y)
+        flat = flat - lr * g
+    assert float(loss) < 0.6 * float(loss0), f"{name}: {float(loss0)} -> {float(loss)}"
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_eval_step_shapes(name):
+    m = M.get_model(name)
+    flat = m.init_flat(jax.random.PRNGKey(4))
+    x, y = _batch(m, jax.random.PRNGKey(5))
+    loss, metric = m.eval_step(flat, x, y)
+    assert loss.shape == () and metric.shape == ()
+    if m.metric_name == "accuracy":
+        assert 0.0 <= float(metric) <= 1.0
+    else:
+        np.testing.assert_allclose(float(metric), float(loss), rtol=1e-5)
+
+
+def test_mlp_grad_matches_finite_difference():
+    m = M.make_mlp(in_dim=8, hidden=(6,), classes=3, batch=4)
+    flat = m.init_flat(jax.random.PRNGKey(6))
+    x, y = _batch(m, jax.random.PRNGKey(7), vocab_hint=3)
+    _, g = m.train_step(flat, x, y)
+    rng = np.random.default_rng(8)
+    for idx in rng.choice(m.d, size=8, replace=False):
+        eps = 1e-3
+        e = jnp.zeros(m.d, jnp.float32).at[idx].set(eps)
+        lp = float(m.loss_fn(m.unflatten(flat + e), x, y))
+        lm = float(m.loss_fn(m.unflatten(flat - e), x, y))
+        fd = (lp - lm) / (2 * eps)
+        np.testing.assert_allclose(float(g[idx]), fd, atol=2e-3)
+
+
+def test_registry_covers_defaults():
+    reg = M.registry()
+    for name in M.DEFAULT_MODELS:
+        assert name in reg
+    with pytest.raises(KeyError):
+        M.get_model("nope")
+
+
+def test_translm_large_config_size():
+    """~110M-param config exists (lowered only with --large)."""
+    m = M.registry()["translm_large"]()
+    assert 80e6 < m.d < 150e6

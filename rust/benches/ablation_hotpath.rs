@@ -1,0 +1,115 @@
+//! Hot-path ablations (DESIGN.md §Design-choices + EXPERIMENTS.md §Perf):
+//!
+//!   * exact O(n) select vs double-sampling threshold (§5 heuristic 2)
+//!   * host compress vs XLA/Pallas compress artifact (ablation_compress_path)
+//!   * sparse codec encode/decode/merge throughput
+//!   * ring allreduce throughput
+//!   * full LAGS trainer iteration (the end-to-end hot loop)
+//!
+//!     cargo bench --bench ablation_hotpath
+
+use lags::collectives::dense::ring_allreduce_mean;
+use lags::config::TrainConfig;
+use lags::runtime::Runtime;
+use lags::sparsify::{sparse::SparseVec, threshold, topk, ErrorFeedback};
+use lags::trainer::{Algorithm, Trainer};
+use lags::util::bench::{self, bb};
+use lags::util::rng::Rng;
+use std::sync::Arc;
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal_f32()).collect()
+}
+
+fn main() {
+    println!("# threshold selection: exact O(n) vs double-sampling (stride 64)");
+    for n in [65_536usize, 1 << 20, 1 << 22] {
+        let x = randvec(n, 1);
+        let k = n / 1000;
+        bench::run_val(&format!("topk_exact_n{n}"), || topk::kth_largest_abs(&x, k));
+        let mut st = threshold::SampledThreshold::new(64);
+        bench::run_val(&format!("topk_sampled_n{n}"), || st.estimate(&x, k));
+    }
+
+    println!("\n# error-feedback compress (accumulate + select + split)");
+    for n in [131_072usize, 1 << 20] {
+        let g = randvec(n, 2);
+        let mut ef = ErrorFeedback::new(n, 64);
+        let mut kept = vec![0.0f32; n];
+        bench::run(&format!("ef_compress_exact_n{n}"), || {
+            bb(ef.compress_layer(0, &g, 0.05, n / 1000, true, &mut kept));
+        });
+        let mut ef2 = ErrorFeedback::new(n, 64);
+        bench::run(&format!("ef_compress_sampled_n{n}"), || {
+            bb(ef2.compress_layer(0, &g, 0.05, n / 1000, false, &mut kept));
+        });
+    }
+
+    println!("\n# sparse codec");
+    let n = 1 << 20;
+    let x = {
+        let mut v = vec![0.0f32; n];
+        let mut rng = Rng::new(3);
+        for i in rng.sample_distinct(n, n / 100) {
+            v[i] = rng.normal_f32();
+        }
+        v
+    };
+    let sv = SparseVec::from_dense(&x);
+    let thr = topk::kth_largest_abs(&x, n / 100);
+    bench::run_val("sparse_encode_1M_1pct", || SparseVec::from_dense_threshold(&x, thr));
+    let mut out = vec![0.0f32; n];
+    bench::run(&format!("sparse_decode_add_nnz{}", sv.nnz()), || sv.add_into(bb(&mut out)));
+    let sv2 = SparseVec::from_dense_threshold(&randvec(n, 4), thr);
+    bench::run_val("sparse_merge", || sv.merge(&sv2));
+
+    println!("\n# ring allreduce (P=8)");
+    for n in [65_536usize, 1 << 20] {
+        let base: Vec<Vec<f32>> = (0..8).map(|p| randvec(n, 100 + p as u64)).collect();
+        let mut bufs = base.clone();
+        bench::run(&format!("ring_allreduce_P8_n{n}"), || {
+            bufs.clone_from(&base);
+            ring_allreduce_mean(bb(&mut bufs));
+        });
+    }
+
+    // end-to-end trainer iterations need artifacts
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("\n# full trainer iteration (mlp, P=4, c=100) — host vs xla compress");
+        let rt = Arc::new(Runtime::load("artifacts").unwrap());
+        for (label, comp) in [
+            ("host", lags::sparsify::CompressorKind::HostExact),
+            ("host-sampled", lags::sparsify::CompressorKind::HostSampled),
+            ("xla", lags::sparsify::CompressorKind::XlaExact),
+            ("xla-sampled", lags::sparsify::CompressorKind::XlaSampled),
+        ] {
+            let mut cfg = TrainConfig::default_for("mlp");
+            cfg.algorithm = Algorithm::Lags;
+            cfg.workers = 4;
+            cfg.steps = 1;
+            cfg.compression = 100.0;
+            cfg.compressor = comp;
+            cfg.eval_every = 0;
+            let mut t = Trainer::with_runtime(&rt, cfg).unwrap();
+            bench::run(&format!("trainer_iter_lags_{label}"), || {
+                t.step().unwrap();
+            });
+        }
+        // algorithm comparison at the same settings
+        for alg in [Algorithm::Dense, Algorithm::Slgs, Algorithm::Lags] {
+            let mut cfg = TrainConfig::default_for("mlp");
+            cfg.algorithm = alg;
+            cfg.workers = 4;
+            cfg.steps = 1;
+            cfg.compression = 100.0;
+            cfg.eval_every = 0;
+            let mut t = Trainer::with_runtime(&rt, cfg).unwrap();
+            bench::run(&format!("trainer_iter_{}", alg.name()), || {
+                t.step().unwrap();
+            });
+        }
+    } else {
+        println!("\n(skipping trainer benches: run `make artifacts` first)");
+    }
+}

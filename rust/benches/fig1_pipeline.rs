@@ -1,0 +1,54 @@
+//! FIG1 bench: pipeline overlap quality per schedule — regenerates the
+//! Fig. 1 comparison quantitatively (how much communication each schedule
+//! hides) and sweeps the merge-buffer ablation from DESIGN.md.
+//!
+//!     cargo bench --bench fig1_pipeline
+
+use lags::collectives::NetworkModel;
+use lags::models::zoo;
+use lags::pipeline::desim::{simulate, Schedule, SimParams};
+use lags::util::bench;
+
+fn main() {
+    let net = NetworkModel::gige_16();
+    println!("# Fig 1: communication hidden under computation, per schedule");
+    bench::table_header(&["model", "schedule", "iter_s", "t_comm_s", "hidden_s", "hidden_%"]);
+    for m in zoo::table2_models() {
+        let c = if m.name == "lstm_ptb" { 250.0 } else { 1000.0 };
+        for (sched, label) in [
+            (Schedule::DenseSingle, "dense-single"),
+            (Schedule::DensePipelined, "dense-pipelined"),
+            (Schedule::Slgs, "slgs"),
+            (Schedule::Lags, "lags"),
+        ] {
+            let p = match sched {
+                Schedule::DenseSingle | Schedule::DensePipelined => SimParams::dense(&m),
+                _ => SimParams::uniform(&m, c),
+            };
+            let b = simulate(&m, &net, sched, &p);
+            bench::table_row(&[
+                m.name.clone(),
+                label.to_string(),
+                format!("{:.3}", b.iter_time),
+                format!("{:.3}", b.t_comm),
+                format!("{:.3}", b.hidden),
+                format!("{:.1}", 100.0 * b.hidden / b.t_comm.max(1e-12)),
+            ]);
+        }
+    }
+
+    println!("\n# ablation: merge-buffer capacity (LAGS, resnet50, c=1000)");
+    bench::table_header(&["merge_bytes", "messages", "iter_s", "hidden_s"]);
+    let m = zoo::resnet50();
+    for cap in [0.0, 4096.0, 16384.0, 32768.0, 131072.0, 1048576.0, 1e12] {
+        let mut p = SimParams::uniform(&m, 1000.0);
+        p.merge_bytes = cap;
+        let b = simulate(&m, &net, Schedule::Lags, &p);
+        bench::table_row(&[
+            format!("{cap:.0}"),
+            format!("{}", b.events.len()),
+            format!("{:.4}", b.iter_time),
+            format!("{:.4}", b.hidden),
+        ]);
+    }
+}

@@ -1,0 +1,31 @@
+//! EQ19 bench: S_max sweep over the communication-to-computation ratio
+//! r = t_c / t_b (the paper's analysis after Eq. 19), for each calibrated
+//! model profile — shows the r=1 peak and the 1 + t_b/(t_f+t_b) ceiling.
+//!
+//!     cargo bench --bench smax_eq19
+
+use lags::adaptive::perf_model;
+use lags::models::zoo;
+use lags::util::bench;
+
+fn main() {
+    for m in zoo::table2_models() {
+        let (t_f, t_b) = (m.t_f, m.t_b());
+        let ceiling = 1.0 + t_b / (t_f + t_b);
+        println!(
+            "\n# {}: t_f={t_f:.3}s t_b={t_b:.3}s, S_max ceiling = {ceiling:.3}",
+            m.name
+        );
+        bench::table_header(&["r", "S_max"]);
+        for i in 0..=16 {
+            let r = 0.1 * (10f64).powf(i as f64 / 8.0); // 0.1 .. 10 log grid
+            bench::table_row(&[
+                format!("{r:.2}"),
+                format!("{:.4}", perf_model::smax(t_f, t_b, r * t_b)),
+            ]);
+        }
+    }
+    // the formula itself is branch-light; verify it's effectively free
+    let m = zoo::resnet50();
+    bench::run_val("smax_eval", || perf_model::smax(m.t_f, m.t_b(), 0.3));
+}

@@ -1,0 +1,51 @@
+//! TAB2 bench: end-to-end DES iteration simulation per model/schedule —
+//! regenerates the Table 2 rows and times the simulator itself.
+//!
+//!     cargo bench --bench table2_walltime
+
+use lags::adaptive::perf_model;
+use lags::collectives::NetworkModel;
+use lags::models::zoo;
+use lags::pipeline::desim::{simulate, Schedule, SimParams};
+use lags::util::bench;
+
+fn main() {
+    let net = NetworkModel::gige_16();
+    println!("# Table 2 rows (simulated, paper values in EXPERIMENTS.md)");
+    bench::table_header(&["model", "dense_s", "slgs_s", "lags_s", "S1", "S2", "Smax"]);
+    for m in zoo::table2_models() {
+        let c = if m.name == "lstm_ptb" { 250.0 } else { 1000.0 };
+        let sp = SimParams::uniform(&m, c);
+        let dense = simulate(&m, &net, Schedule::DensePipelined, &SimParams::dense(&m));
+        let slgs = simulate(&m, &net, Schedule::Slgs, &sp);
+        let lags = simulate(&m, &net, Schedule::Lags, &sp);
+        let smax = perf_model::smax(m.t_f, m.t_b(), slgs.t_comm);
+        bench::table_row(&[
+            m.name.clone(),
+            format!("{:.3}", dense.iter_time),
+            format!("{:.3}", slgs.iter_time),
+            format!("{:.3}", lags.iter_time),
+            format!("{:.2}", dense.iter_time / lags.iter_time),
+            format!("{:.2}", slgs.iter_time / lags.iter_time),
+            format!("{:.2}", smax),
+        ]);
+    }
+
+    println!("\n# simulator micro-benchmarks");
+    for m in zoo::table2_models() {
+        let sp = SimParams::uniform(&m, 1000.0);
+        let name = m.name.clone();
+        bench::run_val(&format!("des_lags_{name}"), || {
+            simulate(&m, &net, Schedule::Lags, &sp).iter_time
+        });
+    }
+    // worker-count sweep: DES cost is O(L) regardless of P
+    let m = zoo::resnet50();
+    for p in [4usize, 16, 64, 256] {
+        let net_p = NetworkModel::gige_16().with_workers(p);
+        let sp = SimParams::uniform(&m, 1000.0);
+        bench::run_val(&format!("des_lags_resnet50_P{p}"), || {
+            simulate(&m, &net_p, Schedule::Lags, &sp).iter_time
+        });
+    }
+}

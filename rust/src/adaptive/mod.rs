@@ -1,0 +1,13 @@
+//! The ADAPTIVE half of LAGS: per-layer compression-ratio selection
+//! (Eq. 18) and the pipelining speedup bound (Eq. 19).
+//!
+//! * [`ratio`] — choose c^(l) so each layer's communication (plus its
+//!   sparsification overhead) hides under the next layer's backward
+//!   computation, capped at c_u.
+//! * [`perf_model`] — Eq. 19's S_max and the r = t_c/t_b analysis.
+
+pub mod perf_model;
+pub mod ratio;
+
+pub use perf_model::{smax, smax_components};
+pub use ratio::{select_ratios, RatioConfig};

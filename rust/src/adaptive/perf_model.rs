@@ -1,0 +1,81 @@
+//! Eq. 19: the maximum speedup of LAGS-SGD over SLGS-SGD from pipelining.
+//!
+//! ```text
+//! S_max = 1 + 1 / ( t_f / min(t_c, t_b)  +  max(r, 1/r) ),   r = t_c / t_b
+//! ```
+//!
+//! The bound: pipelining can hide at most min(t_b, t_c) of the iteration,
+//! so S = (t_f + t_b + t_c) / (t_f + t_b + t_c - min(t_b, t_c)).
+
+/// Eq. 19 with explicit (t_f, t_b, t_c).
+pub fn smax(t_f: f64, t_b: f64, t_c: f64) -> f64 {
+    assert!(t_f >= 0.0 && t_b > 0.0 && t_c >= 0.0);
+    if t_c == 0.0 {
+        return 1.0; // nothing to hide
+    }
+    let r = t_c / t_b;
+    1.0 + 1.0 / (t_f / t_c.min(t_b) + r.max(1.0 / r))
+}
+
+/// Direct form S = total / (total - hidden); must equal [`smax`].
+pub fn smax_direct(t_f: f64, t_b: f64, t_c: f64) -> f64 {
+    let total = t_f + t_b + t_c;
+    let hidden = t_b.min(t_c);
+    total / (total - hidden)
+}
+
+/// Decomposition used by the Table-2 harness: (S_max, r, upper bound
+/// 1 + t_b/(t_f+t_b) reached at r == 1).
+pub fn smax_components(t_f: f64, t_b: f64, t_c: f64) -> (f64, f64, f64) {
+    (smax(t_f, t_b, t_c), t_c / t_b, 1.0 + t_b / (t_f + t_b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_direct_form() {
+        for &(f, b, c) in
+            &[(0.2, 0.4, 0.3), (0.1, 1.0, 1.0), (0.5, 0.3, 2.0), (0.0, 1.0, 0.5), (0.3, 0.7, 0.01)]
+        {
+            let a = smax(f, b, c);
+            let d = smax_direct(f, b, c);
+            assert!((a - d).abs() < 1e-12, "({f},{b},{c}): {a} vs {d}");
+        }
+    }
+
+    #[test]
+    fn peak_at_r_equal_one() {
+        let (t_f, t_b) = (0.2, 0.5);
+        let peak = smax(t_f, t_b, t_b);
+        for &c in &[0.1, 0.25, 0.45, 0.55, 1.0, 3.0] {
+            assert!(smax(t_f, t_b, c) <= peak + 1e-12, "c={c}");
+        }
+        // and the peak equals the paper's upper bound 1 + t_b/(t_f+t_b)
+        assert!((peak - (1.0 + t_b / (t_f + t_b))).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bounded_below_by_one() {
+        for &(f, b, c) in &[(0.1, 0.2, 0.001), (1.0, 0.1, 10.0), (0.0, 0.5, 0.0)] {
+            assert!(smax(f, b, c) >= 1.0);
+        }
+    }
+
+    #[test]
+    fn no_comm_no_speedup() {
+        assert_eq!(smax(0.2, 0.4, 0.0), 1.0);
+    }
+
+    #[test]
+    fn paper_table2_magnitudes() {
+        // ResNet-50 calibration (t_f=0.21, t_b=0.41, sparse t_c≈0.33)
+        // should land near the paper's S_max = 1.52
+        let s = smax(0.21, 0.41, 0.33);
+        assert!((1.35..1.7).contains(&s), "resnet50 S_max={s}");
+        // LSTM-PTB: t_f=0.23, t_b=0.46, t_c≈0.33 → paper 1.28
+        let s2 = smax(0.23, 0.46, 0.33);
+        assert!((1.2..1.6).contains(&s2), "lstm S_max={s2}");
+    }
+}

@@ -1,0 +1,146 @@
+//! Eq. 18: adaptive per-layer compression-ratio selection.
+//!
+//! ```text
+//! c^(l) = max{ c_u,  min{ c | t_comm^(l)(c) + t_spar^(l) <= t_comp^(l-1) } }
+//! ```
+//!
+//! (as printed; the intent — and what the surrounding text says — is that
+//! c^(l) is the SMALLEST ratio whose communication hides under the
+//! pipelined computation, CAPPED at the upper bound c_u. We implement the
+//! intent: `min(c_u, smallest c that fits)`, and fall back to c_u when even
+//! c_u cannot hide the layer.)
+//!
+//! `t_comp^(l-1)` is the backward time of the NEXT layer in backprop order
+//! (the computation the transfer can overlap with, Fig. 1c); for the last
+//! transmitted layer there is nothing left to overlap, so the cap applies.
+
+use crate::collectives::NetworkModel;
+use crate::models::ModelProfile;
+
+#[derive(Debug, Clone)]
+pub struct RatioConfig {
+    /// upper bound c_u on any layer's compression ratio (paper uses 1000)
+    pub c_max: f64,
+    /// lower bound (1 = allow dense layers when bandwidth permits)
+    pub c_min: f64,
+    /// sparsification overhead model (same as the DES)
+    pub spar_fixed: f64,
+    pub spar_per_elem: f64,
+}
+
+impl Default for RatioConfig {
+    fn default() -> Self {
+        RatioConfig { c_max: 1000.0, c_min: 1.0, spar_fixed: 5e-5, spar_per_elem: 4e-9 }
+    }
+}
+
+/// Smallest c such that allgather_sparse(d/c) + t_spar <= budget.
+/// Closed form: t = (P-1)(α + 8 (d/c) / B) + t_spar <= budget
+///   ⇒ c >= 8 d (P-1) / (B (budget - t_spar - (P-1)α))
+fn smallest_fitting_c(net: &NetworkModel, d: usize, t_spar: f64, budget: f64) -> Option<f64> {
+    let p = net.workers as f64;
+    if net.workers <= 1 {
+        return Some(1.0); // no communication at all
+    }
+    let fixed = t_spar + (p - 1.0) * net.alpha;
+    if budget <= fixed {
+        return None; // even k=0 wouldn't fit: latency alone exceeds budget
+    }
+    let c = 8.0 * d as f64 * (p - 1.0) / (net.bandwidth * (budget - fixed));
+    Some(c.max(1.0))
+}
+
+/// Select c^(l) for every layer of `model` (backprop order). Layer l's
+/// budget is the backward time of layer l+1 (the next to compute); the last
+/// layer gets no overlap budget and is capped at c_max.
+pub fn select_ratios(model: &ModelProfile, net: &NetworkModel, cfg: &RatioConfig) -> Vec<f64> {
+    let l = model.layers.len();
+    let mut out = Vec::with_capacity(l);
+    for i in 0..l {
+        let d = model.layers[i].params;
+        let t_spar = cfg.spar_fixed + cfg.spar_per_elem * d as f64;
+        let budget = if i + 1 < l { model.layers[i + 1].t_b } else { 0.0 };
+        let c = match smallest_fitting_c(net, d, t_spar, budget) {
+            Some(c) => c.clamp(cfg.c_min, cfg.c_max),
+            None => cfg.c_max,
+        };
+        out.push(c);
+    }
+    out
+}
+
+/// Effective global compression c_max over the selection (drives the
+/// convergence bound of Corollary 2).
+pub fn effective_cmax(ratios: &[f64]) -> f64 {
+    ratios.iter().cloned().fold(1.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn ratios_within_bounds() {
+        let m = zoo::resnet50();
+        let net = NetworkModel::gige_16();
+        let cfg = RatioConfig::default();
+        let rs = select_ratios(&m, &net, &cfg);
+        assert_eq!(rs.len(), m.layers.len());
+        assert!(rs.iter().all(|&c| (cfg.c_min..=cfg.c_max).contains(&c)));
+    }
+
+    #[test]
+    fn faster_network_needs_less_compression() {
+        let m = zoo::lstm_ptb();
+        let cfg = RatioConfig::default();
+        let slow = NetworkModel { alpha: 5e-4, bandwidth: 111e6, workers: 16 };
+        let fast = NetworkModel { alpha: 5e-6, bandwidth: 111e8, workers: 16 };
+        let rs_slow = select_ratios(&m, &slow, &cfg);
+        let rs_fast = select_ratios(&m, &fast, &cfg);
+        for (s, f) in rs_slow.iter().zip(rs_fast.iter()) {
+            assert!(f <= s, "fast {f} > slow {s}");
+        }
+        // 100x network should drop at least one layer's requirement
+        assert!(rs_fast.iter().sum::<f64>() < rs_slow.iter().sum::<f64>());
+    }
+
+    #[test]
+    fn selected_comm_fits_budget_when_not_capped() {
+        let m = zoo::resnet50();
+        let net = NetworkModel::gige_16();
+        let cfg = RatioConfig::default();
+        let rs = select_ratios(&m, &net, &cfg);
+        for i in 0..m.layers.len() - 1 {
+            let c = rs[i];
+            if c < cfg.c_max - 1e-9 && c > cfg.c_min + 1e-9 {
+                let d = m.layers[i].params;
+                let t_spar = cfg.spar_fixed + cfg.spar_per_elem * d as f64;
+                let t = net.layer_comm_time(d, c) + t_spar;
+                assert!(t <= m.layers[i + 1].t_b + 1e-9, "layer {i}: {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_all_dense() {
+        let m = zoo::resnet50();
+        let net = NetworkModel::gige_16().with_workers(1);
+        let rs = select_ratios(&m, &net, &RatioConfig::default());
+        assert!(rs.iter().all(|&c| c == 1.0));
+    }
+
+    #[test]
+    fn last_layer_capped() {
+        let m = zoo::resnet50();
+        let net = NetworkModel::gige_16();
+        let cfg = RatioConfig::default();
+        let rs = select_ratios(&m, &net, &cfg);
+        assert_eq!(*rs.last().unwrap(), cfg.c_max);
+    }
+
+    #[test]
+    fn effective_cmax_is_max() {
+        assert_eq!(effective_cmax(&[1.0, 250.0, 10.0]), 250.0);
+    }
+}

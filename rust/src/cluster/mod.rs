@@ -1,0 +1,103 @@
+//! Logical worker pool.
+//!
+//! The paper's testbed is 16 physical GPU nodes; here the P data-parallel
+//! workers are *logical* replicas sharing one PJRT CPU device. Each worker
+//! owns exactly the state a physical worker would: its data shard (a PRNG
+//! stream), its error-feedback residuals, and its scratch buffers. The
+//! arithmetic each worker performs is therefore identical to a physical
+//! deployment; only the wall-clock comes from the DES instead of a real
+//! NIC (DESIGN.md §Hardware-Adaptation).
+
+use crate::sparsify::ErrorFeedback;
+
+/// Per-replica state.
+pub struct Worker {
+    pub id: usize,
+    /// error-feedback residuals over the flat parameter vector
+    pub ef: ErrorFeedback,
+    /// scratch: last computed gradient (flat)
+    pub grad: Vec<f32>,
+    /// scratch: per-layer kept (TopK) buffer, sized to the largest layer
+    pub kept: Vec<f32>,
+    /// local momentum u_t for momentum correction (Lin et al. 2018);
+    /// allocated lazily on first use
+    pub local_mom: Vec<f32>,
+    /// last training loss this worker observed
+    pub last_loss: f32,
+}
+
+impl Worker {
+    /// Momentum correction (Lin et al. 2018): u ← mu·u + grad, then the
+    /// corrected gradient u replaces grad as the sparsification input.
+    pub fn fold_local_momentum(&mut self, mu: f32) {
+        if self.local_mom.is_empty() {
+            self.local_mom = vec![0.0; self.grad.len()];
+        }
+        for (u, g) in self.local_mom.iter_mut().zip(self.grad.iter_mut()) {
+            *u = mu * *u + *g;
+            *g = *u;
+        }
+    }
+}
+
+impl Worker {
+    pub fn new(id: usize, d: usize, max_layer: usize, sample_stride: usize) -> Worker {
+        Worker {
+            id,
+            ef: ErrorFeedback::new(d, sample_stride),
+            grad: vec![0.0; d],
+            kept: vec![0.0; max_layer],
+            local_mom: Vec::new(),
+            last_loss: f32::NAN,
+        }
+    }
+}
+
+/// The worker pool.
+pub struct Cluster {
+    pub workers: Vec<Worker>,
+}
+
+impl Cluster {
+    pub fn new(p: usize, d: usize, max_layer: usize, sample_stride: usize) -> Cluster {
+        Cluster { workers: (0..p).map(|i| Worker::new(i, d, max_layer, sample_stride)).collect() }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Mean of the workers' last losses (the logged training loss).
+    pub fn mean_loss(&self) -> f64 {
+        let s: f64 = self.workers.iter().map(|w| w.last_loss as f64).sum();
+        s / self.workers.len() as f64
+    }
+
+    /// Total residual mass across workers (diagnostic).
+    pub fn total_residual_norm_sq(&self) -> f64 {
+        self.workers.iter().map(|w| w.ef.residual_norm_sq()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction() {
+        let c = Cluster::new(4, 100, 60, 16);
+        assert_eq!(c.size(), 4);
+        assert_eq!(c.workers[3].id, 3);
+        assert_eq!(c.workers[0].ef.dim(), 100);
+        assert_eq!(c.workers[0].kept.len(), 60);
+        assert_eq!(c.total_residual_norm_sq(), 0.0);
+    }
+
+    #[test]
+    fn mean_loss() {
+        let mut c = Cluster::new(2, 10, 10, 1);
+        c.workers[0].last_loss = 1.0;
+        c.workers[1].last_loss = 3.0;
+        assert_eq!(c.mean_loss(), 2.0);
+    }
+}

@@ -1,0 +1,153 @@
+//! α–β (latency–bandwidth) collective cost models.
+//!
+//! The paper's adaptive ratio selection (Eq. 18) predicts `t_comm^(l)(c)`
+//! "using the communication model of the AllGather or AllReduce collectives
+//! (e.g., Li et al. 2018; Renggli et al. 2018)". These are those models:
+//!
+//! * dense ring allreduce of m bytes over P nodes:
+//!     `2 (P-1) α + 2 m (P-1) / (P B)`
+//! * sparse allgather (each node contributes its own k-nonzero message,
+//!   ring-propagated):  `(P-1) (α + m_s / B)` with `m_s = 8k` bytes
+//!   (u32 idx + f32 val per kept coordinate).
+//!
+//! α additionally includes a fixed per-message software overhead (NCCL/MPI
+//! launch, kernel dispatch) — dominant for the paper's many small layer
+//! messages, which is exactly why the §5 merge-buffer heuristic exists.
+
+/// Cluster interconnect parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct NetworkModel {
+    /// per-message latency (s) — wire latency + software launch overhead
+    pub alpha: f64,
+    /// bandwidth (bytes/s)
+    pub bandwidth: f64,
+    /// number of workers
+    pub workers: usize,
+}
+
+impl NetworkModel {
+    /// The paper's testbed: 16 nodes, 1 Gbps Ethernet. Effective TCP
+    /// bandwidth ~ 111 MB/s; α ~ 0.5 ms measured for small AllReduce on
+    /// OpenMPI+1GbE clusters (Shi et al., MG-WFBP).
+    pub fn gige_16() -> Self {
+        NetworkModel { alpha: 5e-4, bandwidth: 111e6, workers: 16 }
+    }
+
+    pub fn with_workers(mut self, p: usize) -> Self {
+        self.workers = p;
+        self
+    }
+
+    /// Dense ring allreduce time for a payload of `bytes`.
+    pub fn allreduce_dense(&self, bytes: f64) -> f64 {
+        let p = self.workers as f64;
+        if self.workers <= 1 {
+            return 0.0;
+        }
+        2.0 * (p - 1.0) * self.alpha + 2.0 * bytes * (p - 1.0) / (p * self.bandwidth)
+    }
+
+    /// Sparse allgather time where each worker contributes `k` nonzeros
+    /// (8 bytes each on the wire).
+    pub fn allgather_sparse(&self, k: f64) -> f64 {
+        let p = self.workers as f64;
+        if self.workers <= 1 {
+            return 0.0;
+        }
+        let msg = 8.0 * k;
+        (p - 1.0) * (self.alpha + msg / self.bandwidth)
+    }
+
+    /// Communication time for one LAGS layer of `d` elements at compression
+    /// ratio `c` (k = d/c kept).
+    pub fn layer_comm_time(&self, d: usize, c: f64) -> f64 {
+        let k = (d as f64 / c).max(1.0);
+        self.allgather_sparse(k)
+    }
+}
+
+/// Cost of one collective invocation, split for reporting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CollectiveCost {
+    pub latency: f64,
+    pub transfer: f64,
+}
+
+impl CollectiveCost {
+    pub fn total(&self) -> f64 {
+        self.latency + self.transfer
+    }
+}
+
+/// Split-form dense allreduce cost (for merge-buffer ablations).
+pub fn allreduce_dense_cost(net: &NetworkModel, bytes: f64) -> CollectiveCost {
+    let p = net.workers as f64;
+    if net.workers <= 1 {
+        return CollectiveCost { latency: 0.0, transfer: 0.0 };
+    }
+    CollectiveCost {
+        latency: 2.0 * (p - 1.0) * net.alpha,
+        transfer: 2.0 * bytes * (p - 1.0) / (p * net.bandwidth),
+    }
+}
+
+/// Split-form sparse allgather cost.
+pub fn allgather_sparse_cost(net: &NetworkModel, k: f64) -> CollectiveCost {
+    let p = net.workers as f64;
+    if net.workers <= 1 {
+        return CollectiveCost { latency: 0.0, transfer: 0.0 };
+    }
+    CollectiveCost { latency: (p - 1.0) * net.alpha, transfer: (p - 1.0) * 8.0 * k / net.bandwidth }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_worker_is_free() {
+        let net = NetworkModel { alpha: 1e-3, bandwidth: 1e8, workers: 1 };
+        assert_eq!(net.allreduce_dense(1e6), 0.0);
+        assert_eq!(net.allgather_sparse(1e4), 0.0);
+    }
+
+    #[test]
+    fn dense_cost_scales_with_bytes() {
+        let net = NetworkModel::gige_16();
+        let t1 = net.allreduce_dense(1e6);
+        let t2 = net.allreduce_dense(2e6);
+        assert!(t2 > t1);
+        // bandwidth term doubles, latency term constant
+        let lat = 2.0 * 15.0 * net.alpha;
+        assert!(((t2 - lat) / (t1 - lat) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sparse_beats_dense_at_high_compression() {
+        let net = NetworkModel::gige_16();
+        let d = 25_000_000usize; // ResNet-50-ish
+        let dense = net.allreduce_dense(d as f64 * 4.0);
+        let sparse = net.layer_comm_time(d, 1000.0);
+        assert!(sparse < dense / 10.0, "dense={dense} sparse={sparse}");
+    }
+
+    #[test]
+    fn layer_comm_monotone_in_c() {
+        let net = NetworkModel::gige_16();
+        let mut last = f64::INFINITY;
+        for c in [1.0, 10.0, 100.0, 1000.0] {
+            let t = net.layer_comm_time(1_000_000, c);
+            assert!(t <= last);
+            last = t;
+        }
+    }
+
+    #[test]
+    fn split_costs_sum_to_total() {
+        let net = NetworkModel::gige_16();
+        let c = allreduce_dense_cost(&net, 3e6);
+        assert!((c.total() - net.allreduce_dense(3e6)).abs() < 1e-12);
+        let g = allgather_sparse_cost(&net, 5e4);
+        assert!((g.total() - net.allgather_sparse(5e4)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,153 @@
+//! Dense ring allreduce — the numeric reduction a real NCCL/Horovod run
+//! performs, executed in-process over the logical workers' gradient
+//! buffers.
+//!
+//! The reduction follows the actual ring schedule (reduce-scatter then
+//! allgather over P-1 steps each, chunked by rank) rather than a naive
+//! `sum/P`, so floating-point association matches what a real ring
+//! allreduce produces and the result is identical across our workers —
+//! exactly the property S-SGD relies on for replica consistency.
+
+/// In-place ring allreduce over P worker buffers, then divide by P
+/// (gradient averaging). All buffers must be the same length; on return
+/// every buffer holds the same averaged vector.
+pub fn ring_allreduce_mean(buffers: &mut [Vec<f32>]) {
+    let p = buffers.len();
+    assert!(p > 0);
+    let n = buffers[0].len();
+    assert!(buffers.iter().all(|b| b.len() == n));
+    if p == 1 {
+        return;
+    }
+
+    // chunk boundaries: chunk r covers [starts[r], starts[r+1])
+    let starts: Vec<usize> = (0..=p).map(|r| r * n / p).collect();
+
+    // reduce-scatter: at step s rank r sends chunk (r - s) mod p to rank
+    // r+1, which accumulates it. After p-1 steps rank r fully owns chunk
+    // (r + 1) mod p. Sequential in-place processing is hazard-free: the
+    // chunk a rank sends at step s is never the chunk it receives at step s.
+    for s in 0..p - 1 {
+        for r in 0..p {
+            let src = (r + p - s) % p; // chunk r sends at step s
+            let dst = (r + 1) % p;
+            let (a, b) = (starts[src], starts[src + 1]);
+            // dst.chunk += r.chunk  (split_at_mut to borrow two buffers)
+            let (lo, hi) = if r < dst {
+                let (l, h) = buffers.split_at_mut(dst);
+                (&l[r], &mut h[0])
+            } else {
+                let (l, h) = buffers.split_at_mut(r);
+                let dst_ref = &mut l[dst];
+                (&h[0] as &Vec<f32>, dst_ref)
+            };
+            for i in a..b {
+                hi[i] += lo[i];
+            }
+        }
+    }
+
+    // each rank r now fully owns chunk (r+1 mod p); average it
+    for r in 0..p {
+        let own = (r + 1) % p;
+        let (a, b) = (starts[own], starts[own + 1]);
+        let inv = 1.0 / p as f32;
+        for i in a..b {
+            buffers[r][i] *= inv;
+        }
+    }
+
+    // allgather: propagate owned chunks around the ring
+    for s in 0..p - 1 {
+        for r in 0..p {
+            let src_chunk = (r + 1 + p - s) % p; // chunk r sends at step s
+            let dst = (r + 1) % p;
+            let (a, b) = (starts[src_chunk], starts[src_chunk + 1]);
+            let (src_buf, dst_buf) = if r < dst {
+                let (l, h) = buffers.split_at_mut(dst);
+                (&l[r], &mut h[0])
+            } else {
+                let (l, h) = buffers.split_at_mut(r);
+                (&h[0] as &Vec<f32>, &mut l[dst])
+            };
+            dst_buf[a..b].copy_from_slice(&src_buf[a..b]);
+        }
+    }
+}
+
+/// Reference implementation: sum / P with a fixed left-to-right order.
+/// Used by tests to bound the ring result (association differs, so allow
+/// f32 tolerance).
+pub fn naive_mean(buffers: &[Vec<f32>]) -> Vec<f32> {
+    let p = buffers.len();
+    let n = buffers[0].len();
+    let mut out = vec![0.0f32; n];
+    for b in buffers {
+        for i in 0..n {
+            out[i] += b[i];
+        }
+    }
+    for v in out.iter_mut() {
+        *v /= p as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn make(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..p).map(|_| (0..n).map(|_| rng.normal_f32()).collect()).collect()
+    }
+
+    #[test]
+    fn matches_naive_mean() {
+        for &(p, n) in &[(2usize, 10usize), (3, 17), (4, 64), (8, 100), (16, 31)] {
+            let mut bufs = make(p, n, p as u64 * 1000 + n as u64);
+            let expect = naive_mean(&bufs);
+            ring_allreduce_mean(&mut bufs);
+            for r in 0..p {
+                for i in 0..n {
+                    assert!(
+                        (bufs[r][i] - expect[i]).abs() < 1e-4,
+                        "p={p} n={n} rank={r} i={i}: {} vs {}",
+                        bufs[r][i],
+                        expect[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn replicas_bitwise_identical() {
+        let mut bufs = make(8, 1000, 42);
+        ring_allreduce_mean(&mut bufs);
+        for r in 1..8 {
+            assert_eq!(bufs[0], bufs[r], "rank {r} diverged");
+        }
+    }
+
+    #[test]
+    fn single_worker_noop() {
+        let mut bufs = make(1, 16, 7);
+        let orig = bufs[0].clone();
+        ring_allreduce_mean(&mut bufs);
+        assert_eq!(bufs[0], orig);
+    }
+
+    #[test]
+    fn n_smaller_than_p() {
+        let mut bufs = make(8, 3, 9);
+        let expect = naive_mean(&bufs);
+        ring_allreduce_mean(&mut bufs);
+        for r in 0..8 {
+            for i in 0..3 {
+                assert!((bufs[r][i] - expect[i]).abs() < 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Collective communication: numeric implementations + α–β cost models.
+//!
+//! Two concerns, deliberately separated:
+//!
+//! * **Numerics** ([`dense`], [`sparse_agg`]): the actual arithmetic a real
+//!   cluster would compute — ring allreduce over dense gradients, sparse
+//!   allgather + coalesce over TopK messages. These run in-process over the
+//!   logical workers and are bit-deterministic given the reduction order.
+//! * **Timing** ([`cost`]): the analytic α–β communication model the paper
+//!   itself uses for Eq. 18's `t_comm(c)` prediction (cf. Renggli et al.,
+//!   SparCML; Li et al., Pipe-SGD). The DES (`pipeline::desim`) consumes
+//!   these costs to regenerate Table 2 / Fig 1 wall-clock numbers.
+
+pub mod cost;
+pub mod dense;
+pub mod sparse_agg;
+
+pub use cost::{CollectiveCost, NetworkModel};
+pub use dense::ring_allreduce_mean;
+pub use sparse_agg::{sparse_allgather_sum, tree_merge_sum};

@@ -1,0 +1,106 @@
+//! Sparse gradient aggregation (Algorithm 1, line 9).
+//!
+//! Each worker contributes `TopK(acc^p, k)` as a [`SparseVec`]; the
+//! aggregate is the elementwise SUM over workers (the 1/P averaging is
+//! folded into the apply step). Two equivalent schedules:
+//!
+//! * [`sparse_allgather_sum`] — what AllGather-based sparse S-SGD does:
+//!   every worker receives all P messages and reduces locally, in rank
+//!   order, so all replicas stay bit-identical.
+//! * [`tree_merge_sum`] — pairwise coalescing tree (SparCML-style);
+//!   used to check associativity and by the merge-buffer ablation.
+
+use crate::sparsify::sparse::SparseVec;
+
+/// Rank-ordered reduction of sparse messages into a dense accumulator.
+/// Deterministic: the sum order is rank 0, 1, ..., P-1 for every replica.
+pub fn sparse_allgather_sum(messages: &[SparseVec], out: &mut [f32]) {
+    out.iter_mut().for_each(|v| *v = 0.0);
+    for m in messages {
+        m.add_into(out);
+    }
+}
+
+/// Pairwise tree merge of the sparse messages (stays sparse until the end).
+/// Equivalent to the allgather sum up to f32 association.
+pub fn tree_merge_sum(messages: &[SparseVec]) -> SparseVec {
+    assert!(!messages.is_empty());
+    let mut level: Vec<SparseVec> = messages.to_vec();
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.chunks(2);
+        for pair in &mut it {
+            match pair {
+                [a, b] => next.push(a.merge(b)),
+                [a] => next.push(a.clone()),
+                _ => unreachable!(),
+            }
+        }
+        level = next;
+    }
+    level.pop().unwrap()
+}
+
+/// Total wire bytes for an allgather round of these messages (what the
+/// timing model charges).
+pub fn allgather_wire_bytes(messages: &[SparseVec]) -> usize {
+    messages.iter().map(|m| m.wire_bytes()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_sparse(n: usize, nnz: usize, seed: u64) -> SparseVec {
+        let mut rng = Rng::new(seed);
+        let mut dense = vec![0.0f32; n];
+        for i in rng.sample_distinct(n, nnz) {
+            dense[i] = rng.normal_f32();
+        }
+        SparseVec::from_dense(&dense)
+    }
+
+    #[test]
+    fn allgather_matches_dense_sum() {
+        let n = 500;
+        let msgs: Vec<SparseVec> = (0..8).map(|p| random_sparse(n, 30, p)).collect();
+        let mut out = vec![0.0f32; n];
+        sparse_allgather_sum(&msgs, &mut out);
+        let mut expect = vec![0.0f32; n];
+        for m in &msgs {
+            for (e, v) in expect.iter_mut().zip(m.to_dense()) {
+                *e += v;
+            }
+        }
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn tree_matches_allgather_within_f32() {
+        let n = 300;
+        let msgs: Vec<SparseVec> = (0..7).map(|p| random_sparse(n, 40, 100 + p)).collect();
+        let mut flat = vec![0.0f32; n];
+        sparse_allgather_sum(&msgs, &mut flat);
+        let tree = tree_merge_sum(&msgs).to_dense();
+        for i in 0..n {
+            assert!((flat[i] - tree[i]).abs() < 1e-5, "i={i}");
+        }
+    }
+
+    #[test]
+    fn overlapping_indices_sum() {
+        let a = SparseVec { len: 4, idx: vec![0, 2], val: vec![1.0, 2.0] };
+        let b = SparseVec { len: 4, idx: vec![2, 3], val: vec![3.0, 4.0] };
+        let mut out = vec![0.0f32; 4];
+        sparse_allgather_sum(&[a.clone(), b.clone()], &mut out);
+        assert_eq!(out, vec![1.0, 0.0, 5.0, 4.0]);
+        assert_eq!(tree_merge_sum(&[a, b]).to_dense(), vec![1.0, 0.0, 5.0, 4.0]);
+    }
+
+    #[test]
+    fn wire_bytes() {
+        let msgs = vec![random_sparse(100, 10, 1), random_sparse(100, 5, 2)];
+        assert_eq!(allgather_wire_bytes(&msgs), 15 * 8);
+    }
+}

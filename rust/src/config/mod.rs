@@ -1,0 +1,251 @@
+//! Configuration system: typed training/experiment configs with defaults,
+//! JSON config-file loading, CLI overrides, and validation.
+//!
+//! Precedence (lowest to highest): built-in defaults → `--config file.json`
+//! → individual `--key value` CLI flags.
+
+use crate::sparsify::CompressorKind;
+use crate::trainer::Algorithm;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Full configuration of a numeric training run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub model: String,
+    pub algorithm: Algorithm,
+    /// logical data-parallel workers P
+    pub workers: usize,
+    pub steps: usize,
+    pub lr: f64,
+    /// momentum on the aggregated update (0 = plain Algorithm 1)
+    pub momentum: f64,
+    /// momentum CORRECTION (Lin et al. 2018): per-worker local momentum
+    /// accumulated BEFORE sparsification — the training trick the paper
+    /// cites for closing the sparsification accuracy gap (§Comparison of
+    /// Convergence Rates). 0 = off.
+    pub local_momentum: f64,
+    /// warm-up schedule (Lin et al. 2018): ramp the compression ratio
+    /// exponentially from ~1 to `compression` over this many steps. 0 = off.
+    pub warmup_steps: usize,
+    /// uniform compression ratio c (LAGS per-layer k = ceil(d_l / c));
+    /// ignored by Dense
+    pub compression: f64,
+    /// use Eq. 18 adaptive per-layer ratios instead of the uniform c
+    pub adaptive: bool,
+    /// cap c_u for adaptive selection
+    pub c_max: f64,
+    pub compressor: CompressorKind,
+    /// sampled-threshold stride for host/xla sampled compressors
+    pub sample_stride: usize,
+    /// eval every N steps (0 = never)
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    /// record delta^(l) every N steps (0 = never)
+    pub delta_every: usize,
+    /// merge-buffer capacity in bytes for LAGS aggregation granularity
+    pub merge_bytes: usize,
+    pub seed: u64,
+    /// print progress lines
+    pub verbose: bool,
+}
+
+impl TrainConfig {
+    pub fn default_for(model: &str) -> TrainConfig {
+        TrainConfig {
+            model: model.to_string(),
+            algorithm: Algorithm::Lags,
+            workers: 4,
+            steps: 200,
+            lr: 0.05,
+            momentum: 0.0,
+            local_momentum: 0.0,
+            warmup_steps: 0,
+            compression: 100.0,
+            adaptive: false,
+            c_max: 1000.0,
+            compressor: CompressorKind::HostExact,
+            sample_stride: 64,
+            eval_every: 50,
+            eval_batches: 4,
+            delta_every: 0,
+            merge_bytes: 128 * 1024,
+            seed: 42,
+            verbose: false,
+        }
+    }
+
+    /// Apply a JSON config object (unknown keys rejected).
+    pub fn apply_json(&mut self, v: &Json) -> Result<()> {
+        for (k, val) in v.as_obj()? {
+            match k.as_str() {
+                "model" => self.model = val.as_str()?.to_string(),
+                "algorithm" => self.algorithm = Algorithm::parse(val.as_str()?)?,
+                "workers" => self.workers = val.as_usize()?,
+                "steps" => self.steps = val.as_usize()?,
+                "lr" => self.lr = val.as_f64()?,
+                "momentum" => self.momentum = val.as_f64()?,
+                "local_momentum" => self.local_momentum = val.as_f64()?,
+                "warmup_steps" => self.warmup_steps = val.as_usize()?,
+                "compression" => self.compression = val.as_f64()?,
+                "adaptive" => self.adaptive = val.as_bool()?,
+                "c_max" => self.c_max = val.as_f64()?,
+                "compressor" => self.compressor = CompressorKind::parse(val.as_str()?)?,
+                "sample_stride" => self.sample_stride = val.as_usize()?,
+                "eval_every" => self.eval_every = val.as_usize()?,
+                "eval_batches" => self.eval_batches = val.as_usize()?,
+                "delta_every" => self.delta_every = val.as_usize()?,
+                "merge_bytes" => self.merge_bytes = val.as_usize()?,
+                "seed" => self.seed = val.as_usize()? as u64,
+                "verbose" => self.verbose = val.as_bool()?,
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply CLI flags (the train subcommand's surface).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(path) = args.get("config") {
+            let text =
+                std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            self.apply_json(&Json::parse(&text)?)?;
+        }
+        if let Some(m) = args.get("model") {
+            self.model = m.to_string();
+        }
+        if let Some(a) = args.get("algorithm") {
+            self.algorithm = Algorithm::parse(a)?;
+        }
+        self.workers = args.usize_or("workers", self.workers)?;
+        self.steps = args.usize_or("steps", self.steps)?;
+        self.lr = args.f64_or("lr", self.lr)?;
+        self.momentum = args.f64_or("momentum", self.momentum)?;
+        self.local_momentum = args.f64_or("local-momentum", self.local_momentum)?;
+        self.warmup_steps = args.usize_or("warmup-steps", self.warmup_steps)?;
+        self.compression = args.f64_or("compression", self.compression)?;
+        if args.bool("adaptive") {
+            self.adaptive = true;
+        }
+        self.c_max = args.f64_or("c-max", self.c_max)?;
+        if let Some(c) = args.get("compressor") {
+            self.compressor = CompressorKind::parse(c)?;
+        }
+        self.sample_stride = args.usize_or("sample-stride", self.sample_stride)?;
+        self.eval_every = args.usize_or("eval-every", self.eval_every)?;
+        self.eval_batches = args.usize_or("eval-batches", self.eval_batches)?;
+        self.delta_every = args.usize_or("delta-every", self.delta_every)?;
+        self.merge_bytes = args.usize_or("merge-bytes", self.merge_bytes)?;
+        self.seed = args.usize_or("seed", self.seed as usize)? as u64;
+        if args.bool("verbose") {
+            self.verbose = true;
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.steps == 0 {
+            bail!("steps must be >= 1");
+        }
+        if !(self.lr > 0.0 && self.lr.is_finite()) {
+            bail!("lr must be positive");
+        }
+        if !(0.0..1.0).contains(&self.momentum) {
+            bail!("momentum must be in [0, 1)");
+        }
+        if !(0.0..1.0).contains(&self.local_momentum) {
+            bail!("local_momentum must be in [0, 1)");
+        }
+        if self.momentum > 0.0 && self.local_momentum > 0.0 {
+            bail!("use either global momentum or momentum correction, not both");
+        }
+        if self.compression < 1.0 {
+            bail!("compression ratio must be >= 1");
+        }
+        if self.c_max < 1.0 {
+            bail!("c_max must be >= 1");
+        }
+        if self.sample_stride == 0 {
+            bail!("sample_stride must be >= 1");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("algorithm", Json::Str(self.algorithm.name().into())),
+            ("workers", Json::Num(self.workers as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("lr", Json::Num(self.lr)),
+            ("momentum", Json::Num(self.momentum)),
+            ("compression", Json::Num(self.compression)),
+            ("adaptive", Json::Bool(self.adaptive)),
+            ("c_max", Json::Num(self.c_max)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        TrainConfig::default_for("mlp").validate().unwrap();
+    }
+
+    #[test]
+    fn json_round_trip_and_overrides() {
+        let mut cfg = TrainConfig::default_for("mlp");
+        let j = Json::parse(
+            r#"{"model": "cnn", "workers": 8, "lr": 0.1, "algorithm": "slgs", "compression": 250}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.model, "cnn");
+        assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.algorithm, Algorithm::Slgs);
+        assert_eq!(cfg.compression, 250.0);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = TrainConfig::default_for("mlp");
+        let j = Json::parse(r#"{"modle": "cnn"}"#).unwrap();
+        assert!(cfg.apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut cfg = TrainConfig::default_for("mlp");
+        let args = Args::parse(
+            "train --workers 2 --steps 7 --algorithm dense --verbose"
+                .split_whitespace()
+                .map(String::from),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.workers, 2);
+        assert_eq!(cfg.steps, 7);
+        assert_eq!(cfg.algorithm, Algorithm::Dense);
+        assert!(cfg.verbose);
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut cfg = TrainConfig::default_for("mlp");
+        cfg.workers = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default_for("mlp");
+        cfg.momentum = 1.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default_for("mlp");
+        cfg.compression = 0.5;
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! Markov-chain token streams (the PTB stand-in for LM workloads).
+//!
+//! An order-1 chain over `vocab` tokens where each token has a small set of
+//! likely successors (sparse, skewed transition rows). A recurrent or
+//! attention LM can reduce next-token cross-entropy down to the chain's
+//! conditional entropy, so perplexity *trends* across Dense/SLGS/LAGS are
+//! meaningful while the entropy floor keeps runs short.
+
+use super::{batch_rng, Batch};
+use crate::runtime::BatchData;
+use crate::util::rng::Rng;
+
+pub struct MarkovText {
+    vocab: usize,
+    batch: usize,
+    seq: usize,
+    /// per-token successor CDFs: (successor ids, cumulative weights)
+    rows: Vec<(Vec<usize>, Vec<f64>)>,
+    base: Rng,
+}
+
+impl MarkovText {
+    pub fn new(vocab: usize, batch: usize, seq: usize, seed: u64) -> Self {
+        let mut init = Rng::new(seed ^ 0x3A2C0F);
+        let succ = 4.min(vocab);
+        let rows = (0..vocab)
+            .map(|_| {
+                let ids = init.sample_distinct(vocab, succ);
+                // skewed weights: geometric-ish 1, 1/2, 1/4 ... plus a
+                // small uniform escape mass handled via an extra bucket
+                let mut cdf = Vec::with_capacity(succ + 1);
+                let mut acc = 0.0;
+                for i in 0..succ {
+                    acc += 1.0 / (1 << i) as f64;
+                    cdf.push(acc);
+                }
+                acc += 0.15; // escape-to-uniform mass
+                cdf.push(acc);
+                (ids, cdf)
+            })
+            .collect();
+        MarkovText { vocab, batch, seq, rows, base: Rng::new(seed) }
+    }
+
+    fn next_token(&self, cur: usize, rng: &mut Rng) -> usize {
+        let (ids, cdf) = &self.rows[cur];
+        let bucket = rng.categorical(cdf);
+        if bucket < ids.len() {
+            ids[bucket]
+        } else {
+            rng.below(self.vocab) // escape: uniform random token
+        }
+    }
+
+    /// Generate (x, y) = (tokens[0..T], tokens[1..=T]) per sequence.
+    pub fn batch(&self, stream: u64) -> Batch {
+        let mut rng = batch_rng(&self.base, stream);
+        let mut xs = vec![0i32; self.batch * self.seq];
+        let mut ys = vec![0i32; self.batch * self.seq];
+        for b in 0..self.batch {
+            let mut cur = rng.below(self.vocab);
+            for t in 0..self.seq {
+                xs[b * self.seq + t] = cur as i32;
+                cur = self.next_token(cur, &mut rng);
+                ys[b * self.seq + t] = cur as i32;
+            }
+        }
+        Batch { x: BatchData::I32(xs), y: BatchData::I32(ys) }
+    }
+
+    /// Empirical conditional entropy (nats) of the chain — the loss floor
+    /// a perfect model converges to. Estimated by sampling.
+    pub fn entropy_floor(&self, samples: usize) -> f64 {
+        let mut rng = self.base.fork(0xFEED);
+        let mut total = 0.0;
+        for _ in 0..samples {
+            let cur = rng.below(self.vocab);
+            let (ids, cdf) = &self.rows[cur];
+            let z = *cdf.last().unwrap();
+            // entropy of the successor distribution incl. uniform escape
+            let mut h = 0.0;
+            let mut prev = 0.0;
+            for (i, &c) in cdf.iter().enumerate() {
+                let p = (c - prev) / z;
+                prev = c;
+                if i < ids.len() {
+                    h -= p * p.ln();
+                } else {
+                    // escape mass spread over vocab
+                    let pu = p / self.vocab as f64;
+                    if pu > 0.0 {
+                        h -= self.vocab as f64 * pu * pu.ln();
+                    }
+                }
+            }
+            total += h;
+        }
+        total / samples as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_shift() {
+        let m = MarkovText::new(64, 4, 16, 1);
+        let b = m.batch(0);
+        let BatchData::I32(xs) = &b.x else { panic!() };
+        let BatchData::I32(ys) = &b.y else { panic!() };
+        assert_eq!(xs.len(), 64);
+        assert_eq!(ys.len(), 64);
+        // y is x shifted by one within each sequence
+        for s in 0..4 {
+            for t in 0..15 {
+                assert_eq!(ys[s * 16 + t], xs[s * 16 + t + 1]);
+            }
+        }
+        assert!(xs.iter().all(|&t| (0..64).contains(&t)));
+    }
+
+    #[test]
+    fn chain_is_predictable() {
+        // successor distribution is skewed: the most likely successor should
+        // appear much more often than 1/vocab
+        let m = MarkovText::new(64, 1, 4096, 2);
+        let b = m.batch(0);
+        let BatchData::I32(xs) = &b.x else { panic!() };
+        let BatchData::I32(ys) = &b.y else { panic!() };
+        let mut hit = 0usize;
+        for (x, y) in xs.iter().zip(ys.iter()) {
+            let top = m.rows[*x as usize].0[0] as i32;
+            if *y == top {
+                hit += 1;
+            }
+        }
+        let rate = hit as f64 / xs.len() as f64;
+        assert!(rate > 0.25, "top-successor rate {rate} too low");
+    }
+
+    #[test]
+    fn entropy_floor_sane() {
+        let m = MarkovText::new(64, 1, 4, 3);
+        let h = m.entropy_floor(500);
+        // between 0 (deterministic) and ln(64) (uniform)
+        assert!(h > 0.3 && h < (64f64).ln(), "h={h}");
+    }
+}

@@ -1,0 +1,137 @@
+//! Synthetic workload generators — the stand-ins for Cifar-10 / ImageNet /
+//! PTB (see DESIGN.md §Scale-substitutions).
+//!
+//! Requirements for the convergence experiments (Fig 2/3, Table 1):
+//! the task must be *learnable* (so Dense/SLGS/LAGS produce meaningful
+//! accuracy/perplexity trends), *stationary*, and *shardable* so each of
+//! the P workers draws an i.i.d. stream from its own PRNG fork — the
+//! data-parallel sampling model of Eq. 1.
+//!
+//! * [`teacher`] — classification: labels from a fixed random 2-layer
+//!   teacher MLP over gaussian inputs (mlp model), or class-template images
+//!   with additive noise (cnn model).
+//! * [`markov`] — language modelling: an order-1 Markov chain with sparse
+//!   transition structure; next-token prediction is learnable down to the
+//!   chain's entropy floor.
+
+pub mod markov;
+pub mod teacher;
+
+use crate::runtime::{BatchData, DType, ModelManifest};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// One training/eval batch, shaped per the manifest's batch specs.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: BatchData,
+    pub y: BatchData,
+}
+
+/// A per-model synthetic data source. Worker `p` gets an independent
+/// stream; `eval` streams are disjoint from all workers'.
+pub enum Synthetic {
+    TeacherMlp(teacher::TeacherMlp),
+    TeacherImage(teacher::TeacherImage),
+    Markov(markov::MarkovText),
+}
+
+impl Synthetic {
+    /// Choose a generator matching the model's batch specs.
+    pub fn for_model(mm: &ModelManifest, seed: u64) -> Result<Synthetic> {
+        match (mm.x.dtype, mm.x.shape.len()) {
+            (DType::F32, 2) => {
+                let (b, din) = (mm.x.shape[0], mm.x.shape[1]);
+                Ok(Synthetic::TeacherMlp(teacher::TeacherMlp::new(din, mm.classes, b, seed)))
+            }
+            (DType::F32, 4) => {
+                let s = &mm.x.shape;
+                Ok(Synthetic::TeacherImage(teacher::TeacherImage::new(
+                    s[0], s[1], s[2], s[3], mm.classes, seed,
+                )))
+            }
+            (DType::I32, 2) => {
+                let (b, t) = (mm.x.shape[0], mm.x.shape[1]);
+                Ok(Synthetic::Markov(markov::MarkovText::new(mm.classes, b, t, seed)))
+            }
+            (dt, rank) => anyhow::bail!("no generator for dtype {dt:?} rank {rank}"),
+        }
+    }
+
+    /// Draw the next batch for worker `p` at step `step` (pure function of
+    /// (seed, p, step) — workers can replay deterministically).
+    pub fn batch(&self, worker: usize, step: usize) -> Batch {
+        let stream = (worker as u64) << 32 | step as u64;
+        match self {
+            Synthetic::TeacherMlp(t) => t.batch(stream),
+            Synthetic::TeacherImage(t) => t.batch(stream),
+            Synthetic::Markov(m) => m.batch(stream),
+        }
+    }
+
+    /// Held-out batch stream (disjoint stream id space from workers).
+    pub fn eval_batch(&self, idx: usize) -> Batch {
+        self.batch(usize::MAX >> 8, idx)
+    }
+}
+
+/// Helper shared by generators: derive the batch RNG.
+pub(crate) fn batch_rng(base: &Rng, stream: u64) -> Rng {
+    base.fork(stream)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{BatchSpec, Metric};
+    use std::collections::BTreeMap;
+
+    fn mm(xshape: Vec<usize>, xdt: DType, yshape: Vec<usize>, classes: usize) -> ModelManifest {
+        ModelManifest {
+            name: "t".into(),
+            d: 1,
+            d_padded: 4096,
+            metric: Metric::Accuracy,
+            classes,
+            x: BatchSpec { shape: xshape, dtype: xdt },
+            y: BatchSpec { shape: yshape, dtype: DType::I32 },
+            layers: vec![],
+            files: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn picks_generator_by_spec() {
+        let m1 = mm(vec![8, 32], DType::F32, vec![8], 10);
+        assert!(matches!(Synthetic::for_model(&m1, 1).unwrap(), Synthetic::TeacherMlp(_)));
+        let m2 = mm(vec![4, 16, 16, 3], DType::F32, vec![4], 10);
+        assert!(matches!(Synthetic::for_model(&m2, 1).unwrap(), Synthetic::TeacherImage(_)));
+        let m3 = mm(vec![2, 16], DType::I32, vec![2, 16], 64);
+        assert!(matches!(Synthetic::for_model(&m3, 1).unwrap(), Synthetic::Markov(_)));
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let m = mm(vec![8, 32], DType::F32, vec![8], 10);
+        let g = Synthetic::for_model(&m, 7).unwrap();
+        let a = g.batch(3, 5);
+        let b = g.batch(3, 5);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = g.batch(3, 6);
+        assert_ne!(a.x, c.x);
+        let d = g.batch(4, 5);
+        assert_ne!(a.x, d.x);
+    }
+
+    #[test]
+    fn eval_stream_disjoint_from_workers() {
+        let m = mm(vec![8, 32], DType::F32, vec![8], 10);
+        let g = Synthetic::for_model(&m, 7).unwrap();
+        let e = g.eval_batch(0);
+        for w in 0..8 {
+            let b = g.batch(w, 0);
+            assert_ne!(e.x, b.x);
+        }
+    }
+}

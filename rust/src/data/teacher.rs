@@ -1,0 +1,174 @@
+//! Teacher-generated classification tasks (the Cifar-10 stand-ins).
+
+use super::{batch_rng, Batch};
+use crate::runtime::BatchData;
+use crate::util::rng::Rng;
+
+/// Labels from a frozen random 2-layer MLP teacher over gaussian inputs:
+/// y = argmax(relu(x W1) W2). A student MLP of comparable width can reach
+/// high accuracy, so Dense/SLGS/LAGS accuracy *differences* are visible.
+pub struct TeacherMlp {
+    in_dim: usize,
+    classes: usize,
+    batch: usize,
+    hidden: usize,
+    w1: Vec<f32>, // [in_dim, hidden]
+    w2: Vec<f32>, // [hidden, classes]
+    base: Rng,
+}
+
+impl TeacherMlp {
+    pub fn new(in_dim: usize, classes: usize, batch: usize, seed: u64) -> Self {
+        let hidden = 32.max(classes * 2);
+        let mut init = Rng::new(seed ^ 0x7EAC4E12);
+        let mut w1 = vec![0.0f32; in_dim * hidden];
+        let mut w2 = vec![0.0f32; hidden * classes];
+        init.fill_normal(&mut w1, (2.0 / in_dim as f32).sqrt());
+        init.fill_normal(&mut w2, (2.0 / hidden as f32).sqrt());
+        TeacherMlp { in_dim, classes, batch, hidden, w1, w2, base: Rng::new(seed) }
+    }
+
+    pub fn label(&self, x: &[f32]) -> i32 {
+        // h = relu(x W1); logits = h W2; argmax
+        let mut h = vec![0.0f32; self.hidden];
+        for j in 0..self.hidden {
+            let mut acc = 0.0f32;
+            for i in 0..self.in_dim {
+                acc += x[i] * self.w1[i * self.hidden + j];
+            }
+            h[j] = acc.max(0.0);
+        }
+        let mut best = (0usize, f32::NEG_INFINITY);
+        for c in 0..self.classes {
+            let mut acc = 0.0f32;
+            for j in 0..self.hidden {
+                acc += h[j] * self.w2[j * self.classes + c];
+            }
+            if acc > best.1 {
+                best = (c, acc);
+            }
+        }
+        best.0 as i32
+    }
+
+    pub fn batch(&self, stream: u64) -> Batch {
+        let mut rng = batch_rng(&self.base, stream);
+        let mut xs = vec![0.0f32; self.batch * self.in_dim];
+        rng.fill_normal(&mut xs, 1.0);
+        let ys: Vec<i32> =
+            (0..self.batch).map(|b| self.label(&xs[b * self.in_dim..(b + 1) * self.in_dim])).collect();
+        Batch { x: BatchData::F32(xs), y: BatchData::I32(ys) }
+    }
+}
+
+/// Class-template images with additive gaussian noise (the conv-net task):
+/// x = template[y] + sigma * noise. Templates are smooth random fields so
+/// convolutions can exploit locality.
+pub struct TeacherImage {
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    classes: usize,
+    noise: f32,
+    templates: Vec<Vec<f32>>, // classes x (h*w*c)
+    base: Rng,
+}
+
+impl TeacherImage {
+    pub fn new(batch: usize, h: usize, w: usize, c: usize, classes: usize, seed: u64) -> Self {
+        let mut init = Rng::new(seed ^ 0x1A6E5);
+        let n = h * w * c;
+        let templates = (0..classes)
+            .map(|_| {
+                // smooth field: random low-frequency sinusoid mixture
+                let (fx, fy) = (init.range_f64(0.5, 3.0), init.range_f64(0.5, 3.0));
+                let (px, py) = (init.range_f64(0.0, 6.28), init.range_f64(0.0, 6.28));
+                let amp = init.range_f64(0.8, 1.2);
+                let mut t = vec![0.0f32; n];
+                for yy in 0..h {
+                    for xx in 0..w {
+                        for ch in 0..c {
+                            let v = amp
+                                * ((fx * xx as f64 / w as f64 * 6.28 + px).sin()
+                                    + (fy * yy as f64 / h as f64 * 6.28 + py).cos()
+                                    + 0.3 * ch as f64);
+                            t[(yy * w + xx) * c + ch] = v as f32;
+                        }
+                    }
+                }
+                t
+            })
+            .collect();
+        TeacherImage { batch, h, w, c, classes, noise: 0.7, templates, base: Rng::new(seed) }
+    }
+
+    pub fn batch(&self, stream: u64) -> Batch {
+        let mut rng = batch_rng(&self.base, stream);
+        let n = self.h * self.w * self.c;
+        let mut xs = vec![0.0f32; self.batch * n];
+        let mut ys = vec![0i32; self.batch];
+        for b in 0..self.batch {
+            let y = rng.below(self.classes);
+            ys[b] = y as i32;
+            let t = &self.templates[y];
+            for i in 0..n {
+                xs[b * n + i] = t[i] + self.noise * rng.normal_f32();
+            }
+        }
+        Batch { x: BatchData::F32(xs), y: BatchData::I32(ys) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_labels_in_range_and_varied() {
+        let t = TeacherMlp::new(32, 10, 64, 1);
+        let b = t.batch(0);
+        let BatchData::I32(ys) = &b.y else { panic!() };
+        assert!(ys.iter().all(|&y| (0..10).contains(&y)));
+        let distinct: std::collections::HashSet<_> = ys.iter().collect();
+        assert!(distinct.len() >= 3, "labels collapsed: {distinct:?}");
+    }
+
+    #[test]
+    fn mlp_labels_depend_on_x_not_rng() {
+        let t = TeacherMlp::new(16, 5, 4, 2);
+        let b = t.batch(9);
+        let BatchData::F32(xs) = &b.x else { panic!() };
+        let BatchData::I32(ys) = &b.y else { panic!() };
+        for i in 0..4 {
+            assert_eq!(t.label(&xs[i * 16..(i + 1) * 16]), ys[i]);
+        }
+    }
+
+    #[test]
+    fn image_batch_shapes() {
+        let t = TeacherImage::new(8, 16, 16, 3, 10, 3);
+        let b = t.batch(0);
+        assert_eq!(b.x.len(), 8 * 16 * 16 * 3);
+        assert_eq!(b.y.len(), 8);
+    }
+
+    #[test]
+    fn image_classes_distinguishable() {
+        // mean distance between class templates must exceed noise floor
+        let t = TeacherImage::new(4, 8, 8, 3, 4, 4);
+        let mut min_dist = f32::INFINITY;
+        for a in 0..4 {
+            for b in (a + 1)..4 {
+                let d: f32 = t.templates[a]
+                    .iter()
+                    .zip(&t.templates[b])
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum::<f32>()
+                    .sqrt();
+                min_dist = min_dist.min(d);
+            }
+        }
+        assert!(min_dist > 1.0, "templates too close: {min_dist}");
+    }
+}

@@ -1,0 +1,49 @@
+//! # LAGS-SGD — Layer-wise Adaptive Gradient Sparsification
+//!
+//! Reproduction of *"Layer-wise Adaptive Gradient Sparsification for
+//! Distributed Deep Learning with Convergence Guarantees"* (Shi et al.,
+//! AAAI 2020) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the distributed-training coordinator:
+//!   worker pool, collectives with an α–β network model, the wait-free
+//!   layer-wise pipeline scheduler, error-feedback state, adaptive
+//!   compression-ratio selection (Eq. 18), a discrete-event cluster
+//!   simulator for wall-clock reproduction (Table 2 / Fig 1), and the
+//!   three trainers the paper compares: Dense-SGD, SLGS-SGD, LAGS-SGD.
+//! * **Layer 2** — JAX models AOT-lowered to HLO text (`python/compile/`),
+//!   executed here through the PJRT CPU client ([`runtime`]).
+//! * **Layer 1** — Pallas kernels (compress / apply) lowered into the same
+//!   artifacts; [`sparsify`] contains the bit-equivalent host fallbacks.
+//!
+//! Python never runs on the training path: `make artifacts` is the only
+//! compile step, after which the `lags` binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use lags::config::TrainConfig;
+//! use lags::trainer::{Algorithm, Trainer};
+//!
+//! let mut cfg = TrainConfig::default_for("mlp");
+//! cfg.steps = 100;
+//! cfg.workers = 4;
+//! cfg.algorithm = Algorithm::Lags;
+//! let mut t = Trainer::from_artifacts("artifacts", cfg).unwrap();
+//! let report = t.run().unwrap();
+//! println!("final loss {:.4}", report.final_loss);
+//! ```
+
+pub mod adaptive;
+pub mod cluster;
+pub mod collectives;
+pub mod config;
+pub mod data;
+pub mod metrics;
+pub mod models;
+pub mod pipeline;
+pub mod runtime;
+pub mod sparsify;
+pub mod trainer;
+pub mod util;
+
+pub use anyhow::{bail, Context, Result};

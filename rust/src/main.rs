@@ -1,0 +1,347 @@
+//! `lags` — the LAGS-SGD coordinator CLI.
+//!
+//! Subcommands:
+//!   info      — inspect artifacts (models, layer tables, buckets)
+//!   train     — run a distributed training job (dense|slgs|lags)
+//!   compare   — run all three algorithms with identical seeds (Fig 3/Table 1)
+//!   delta     — Assumption-1 delta^(l) monitoring run (Fig 2)
+//!   table2    — DES wall-clock reproduction of Table 2
+//!   timeline  — DES per-layer comm timeline (Fig 1)
+//!   ratios    — Eq. 18 adaptive ratio selection report
+//!   smax      — Eq. 19 S_max sweep over r = t_c/t_b
+
+use anyhow::Result;
+use lags::adaptive::{self, perf_model, RatioConfig};
+use lags::collectives::NetworkModel;
+use lags::config::TrainConfig;
+use lags::metrics::{CurveRecorder, ResultWriter};
+use lags::models::zoo;
+use lags::pipeline::desim::{simulate, Schedule, SimParams};
+use lags::trainer::{Algorithm, Trainer};
+use lags::util::cli::Args;
+use lags::util::json::Json;
+use lags::util::{fmt_bytes, fmt_secs};
+
+const USAGE: &str = "\
+lags — Layer-wise Adaptive Gradient Sparsification (AAAI'20 reproduction)
+
+USAGE: lags <subcommand> [flags]
+
+  info     [--artifacts DIR] [--layers]
+  train    [--artifacts DIR] [--model M] [--algorithm dense|slgs|lags]
+           [--workers P] [--steps N] [--lr F] [--momentum F]
+           [--compression C] [--adaptive] [--c-max C]
+           [--compressor host|host-sampled|xla|xla-sampled]
+           [--delta-every N] [--eval-every N] [--seed S] [--verbose]
+           [--config FILE.json] [--out DIR]
+  compare  same flags as train (runs dense, slgs, lags) [--out DIR]
+  delta    [--model M] [--workers P] [--steps N] [--every N] [--out DIR]
+  table2   [--alpha F] [--bandwidth F] [--workers P] [--out DIR]
+  timeline [--profile resnet50|inception_v4|vgg16|lstm_ptb] [--compression C]
+  ratios   [--profile NAME] [--c-max C] [--alpha F] [--bandwidth F]
+  smax     [--tf F] [--tb F]
+  sweep    [--profile NAME] [--compression C] [--workers P]
+";
+
+fn main() {
+    let args = Args::parse_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("info") => cmd_info(args),
+        Some("train") => cmd_train(args),
+        Some("compare") => cmd_compare(args),
+        Some("delta") => cmd_delta(args),
+        Some("table2") => cmd_table2(args),
+        Some("timeline") => cmd_timeline(args),
+        Some("ratios") => cmd_ratios(args),
+        Some("smax") => cmd_smax(args),
+        Some("sweep") => cmd_sweep(args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.str_or("artifacts", "artifacts")
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let man = lags::runtime::Manifest::load(artifacts_dir(args))?;
+    println!("artifacts: {:?} (seed {})", man.dir, man.seed);
+    println!("compress buckets: {:?}", man.compress_buckets);
+    for (name, m) in &man.models {
+        println!(
+            "\nmodel {name}: d={} ({} layers, padded {}) metric={:?} classes={}",
+            m.d,
+            m.layers.len(),
+            m.d_padded,
+            m.metric,
+            m.classes
+        );
+        println!("  x {:?} {:?}  y {:?} {:?}", m.x.shape, m.x.dtype, m.y.shape, m.y.dtype);
+        if args.bool("layers") {
+            for l in &m.layers {
+                println!(
+                    "  {:<14} size {:>8} off {:>8} bucket {:>7} flops {:.2e}",
+                    l.name, l.size, l.offset, l.bucket, l.fwd_flops
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn train_config(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::default_for(&args.str_or("model", "mlp"));
+    cfg.apply_args(args)?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = train_config(args)?;
+    let mut t = Trainer::from_artifacts(&artifacts_dir(args), cfg)?;
+    let report = t.run()?;
+    println!("{}", report.summary_line());
+    if let Some(out) = args.get("out") {
+        let w = ResultWriter::new(out)?;
+        w.write_json("report.json", &report.to_json())?;
+        w.write_csv("curve.csv", &report.curve)?;
+        println!("wrote {}/report.json", out);
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let base = train_config(args)?;
+    let rt = std::sync::Arc::new(lags::runtime::Runtime::load(artifacts_dir(args))?);
+    let mut rows = Vec::new();
+    for alg in [Algorithm::Dense, Algorithm::Slgs, Algorithm::Lags] {
+        let mut cfg = base.clone();
+        cfg.algorithm = alg;
+        let mut t = Trainer::with_runtime(&rt, cfg)?;
+        let r = t.run()?;
+        println!("{}", r.summary_line());
+        rows.push(r);
+    }
+    if let Some(out) = args.get("out") {
+        let w = ResultWriter::new(out)?;
+        let j = Json::Arr(rows.iter().map(|r| r.to_json()).collect());
+        w.write_json("compare.json", &j)?;
+        for r in &rows {
+            w.write_csv(&format!("curve_{}.csv", r.algorithm.name()), &r.curve)?;
+        }
+        println!("wrote {}/compare.json", out);
+    }
+    Ok(())
+}
+
+fn cmd_delta(args: &Args) -> Result<()> {
+    let mut cfg = train_config(args)?;
+    cfg.algorithm = Algorithm::Lags;
+    cfg.delta_every = args.usize_or("every", 5)?;
+    let mut t = Trainer::from_artifacts(&artifacts_dir(args), cfg)?;
+    let report = t.run()?;
+    println!("{}", report.summary_line());
+    println!(
+        "delta holds (<=1) for {:.1}% of samples; max delta = {:.4}",
+        100.0 * report.delta_fraction_holding.unwrap_or(f64::NAN),
+        report.delta_max.unwrap_or(f64::NAN)
+    );
+    if let Some(out) = args.get("out") {
+        let w = ResultWriter::new(out)?;
+        let series = t.delta_series().expect("delta monitor active");
+        let names: Vec<String> =
+            t.model_manifest().layers.iter().map(|l| l.name.clone()).collect();
+        let cols: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let mut rec = CurveRecorder::new(&cols);
+        // series share the same sampled step grid
+        if let Some(first) = series.first() {
+            for (row_i, &(step, _)) in first.iter().enumerate() {
+                let vals: Vec<f64> = series
+                    .iter()
+                    .map(|s| s.get(row_i).map(|&(_, d)| d).unwrap_or(f64::NAN))
+                    .collect();
+                rec.push(step, &vals);
+            }
+        }
+        w.write_csv("delta.csv", &rec)?;
+        w.write_csv("loss.csv", &report.curve)?;
+        println!("wrote {}/delta.csv", out);
+    }
+    Ok(())
+}
+
+fn network_from_args(args: &Args) -> Result<NetworkModel> {
+    Ok(NetworkModel {
+        alpha: args.f64_or("alpha", 5e-4)?,
+        bandwidth: args.f64_or("bandwidth", 111e6)?,
+        workers: args.usize_or("workers", 16)?,
+    })
+}
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    let net = network_from_args(args)?;
+    println!(
+        "Table 2 reproduction — P={} alpha={} B={}/s  (paper: 16x P102-100, 1GbE)",
+        net.workers,
+        fmt_secs(net.alpha),
+        fmt_bytes(net.bandwidth)
+    );
+    println!(
+        "| {:<13} | {:>7} | {:>7} | {:>7} | {:>5} | {:>5} | {:>5} |",
+        "Model", "Dense", "SLGS", "LAGS", "S1", "S2", "Smax"
+    );
+    let mut rows = Vec::new();
+    for m in zoo::table2_models() {
+        let c = if m.name == "lstm_ptb" { 250.0 } else { 1000.0 };
+        let sp = SimParams::uniform(&m, c);
+        let dense = simulate(&m, &net, Schedule::DensePipelined, &SimParams::dense(&m));
+        let slgs = simulate(&m, &net, Schedule::Slgs, &sp);
+        let lgs = simulate(&m, &net, Schedule::Lags, &sp);
+        let s1 = dense.iter_time / lgs.iter_time;
+        let s2 = slgs.iter_time / lgs.iter_time;
+        let smax = perf_model::smax(m.t_f, m.t_b(), slgs.t_comm);
+        println!(
+            "| {:<13} | {:>6.3}s | {:>6.3}s | {:>6.3}s | {:>5.2} | {:>5.2} | {:>5.2} |",
+            m.name, dense.iter_time, slgs.iter_time, lgs.iter_time, s1, s2, smax
+        );
+        rows.push(Json::obj(vec![
+            ("model", Json::Str(m.name.clone())),
+            ("dense", Json::Num(dense.iter_time)),
+            ("slgs", Json::Num(slgs.iter_time)),
+            ("lags", Json::Num(lgs.iter_time)),
+            ("s1", Json::Num(s1)),
+            ("s2", Json::Num(s2)),
+            ("smax", Json::Num(smax)),
+            ("pipelining_benefit_fraction", Json::Num((s2 - 1.0) / (smax - 1.0))),
+        ]));
+    }
+    if let Some(out) = args.get("out") {
+        ResultWriter::new(out)?.write_json("table2.json", &Json::Arr(rows))?;
+        println!("wrote {}/table2.json", out);
+    }
+    Ok(())
+}
+
+fn cmd_timeline(args: &Args) -> Result<()> {
+    let name = args.str_or("profile", "resnet50");
+    let m = zoo::by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown profile {name}"))?;
+    let net = network_from_args(args)?;
+    let c = args.f64_or("compression", 1000.0)?;
+    for (sched, label, p) in [
+        (Schedule::DensePipelined, "Dense-SGD (Fig 1a)", SimParams::dense(&m)),
+        (Schedule::Slgs, "SLGS-SGD  (Fig 1b)", SimParams::uniform(&m, c)),
+        (Schedule::Lags, "LAGS-SGD  (Fig 1c)", SimParams::uniform(&m, c)),
+    ] {
+        let b = simulate(&m, &net, sched, &p);
+        println!(
+            "\n{label}: iter={} comp={} comm={} hidden={}",
+            fmt_secs(b.iter_time),
+            fmt_secs(b.t_f + b.t_b),
+            fmt_secs(b.t_comm),
+            fmt_secs(b.hidden)
+        );
+        let show = args.usize_or("events", 8)?;
+        for e in b.events.iter().take(show) {
+            println!(
+                "  {:<22} ready {:>9} start {:>9} end {:>9} ({})",
+                e.name,
+                fmt_secs(e.ready),
+                fmt_secs(e.start),
+                fmt_secs(e.end),
+                fmt_bytes(e.wire_bytes)
+            );
+        }
+        if b.events.len() > show {
+            println!("  ... {} more events", b.events.len() - show);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_ratios(args: &Args) -> Result<()> {
+    let name = args.str_or("profile", "resnet50");
+    let m = zoo::by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown profile {name}"))?;
+    let net = network_from_args(args)?;
+    let cfg = RatioConfig { c_max: args.f64_or("c-max", 1000.0)?, ..RatioConfig::default() };
+    let ratios = adaptive::select_ratios(&m, &net, &cfg);
+    println!("Eq. 18 adaptive ratios for {name} (c_u = {}):", cfg.c_max);
+    println!(
+        "| {:<22} | {:>9} | {:>8} | {:>9} | {:>9} |",
+        "layer", "d^(l)", "c^(l)", "k^(l)", "t_comm"
+    );
+    for (l, &c) in m.layers.iter().zip(ratios.iter()) {
+        let k = (l.params as f64 / c).max(1.0);
+        println!(
+            "| {:<22} | {:>9} | {:>8.1} | {:>9.0} | {:>9} |",
+            l.name,
+            l.params,
+            c,
+            k,
+            fmt_secs(net.allgather_sparse(k))
+        );
+    }
+    println!("effective c_max = {:.1}", adaptive::ratio::effective_cmax(&ratios));
+    Ok(())
+}
+
+/// Bandwidth-sensitivity sweep: at which interconnect speed does each
+/// technique stop paying? (The paper's motivation section: sparsification
+/// targets slow commodity networks like 1GbE.)
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let name = args.str_or("profile", "resnet50");
+    let m = zoo::by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown profile {name}"))?;
+    let c = args.f64_or("compression", 1000.0)?;
+    let workers = args.usize_or("workers", 16)?;
+    println!("bandwidth sweep for {name} (P={workers}, c={c}):");
+    println!(
+        "| {:>10} | {:>8} | {:>8} | {:>8} | {:>6} | {:>6} |",
+        "bandwidth", "dense", "slgs", "lags", "S1", "S2"
+    );
+    for exp in 0..=8 {
+        // 12.5 MB/s (100 Mb) .. 3.2 GB/s (25 Gb), x2 steps
+        let bw = 12.5e6 * (2f64).powi(exp);
+        let net = NetworkModel { alpha: 5e-4, bandwidth: bw, workers };
+        let sp = SimParams::uniform(&m, c);
+        let dense = simulate(&m, &net, Schedule::DensePipelined, &SimParams::dense(&m));
+        let slgs = simulate(&m, &net, Schedule::Slgs, &sp);
+        let lags = simulate(&m, &net, Schedule::Lags, &sp);
+        println!(
+            "| {:>10} | {:>7.3}s | {:>7.3}s | {:>7.3}s | {:>6.2} | {:>6.2} |",
+            fmt_bytes(bw),
+            dense.iter_time,
+            slgs.iter_time,
+            lags.iter_time,
+            dense.iter_time / lags.iter_time,
+            slgs.iter_time / lags.iter_time
+        );
+    }
+    println!("(sparsification's S1 shrinks toward 1 as bandwidth grows — the paper's");
+    println!(" premise that gradient compression targets slow commodity interconnects)");
+    Ok(())
+}
+
+fn cmd_smax(args: &Args) -> Result<()> {
+    let t_f = args.f64_or("tf", 0.21)?;
+    let t_b = args.f64_or("tb", 0.41)?;
+    println!("Eq. 19 S_max sweep (t_f={t_f}s, t_b={t_b}s):");
+    println!("| {:>6} | {:>6} |", "r", "S_max");
+    for i in 0..=20 {
+        let r = 0.1 * (10f64).powf(i as f64 / 10.0); // 0.1 .. 10, log grid
+        let s = perf_model::smax(t_f, t_b, r * t_b);
+        println!("| {:>6.2} | {:>6.3} |", r, s);
+    }
+    Ok(())
+}

@@ -1,0 +1,175 @@
+//! δ^(l) — the Assumption-1 verification metric (Eq. 20, Fig. 2):
+//!
+//! ```text
+//! δ^(l) = ‖Σ_p x^{p,(l)} − Σ_p TopK(x^{p,(l)}, k^(l))‖²
+//!         ───────────────────────────────────────────────
+//!         ‖Σ_p x^{p,(l)} − RandK(Σ_p x^{p,(l)}, k^(l))‖²
+//! ```
+//!
+//! with x^{p,(l)} = G^p(v_t)^{(l)} + ε_t^{p,(l)} (the pre-compression
+//! accumulators). Assumption 1 holds when δ^(l) ≤ 1. The paper evaluates
+//! the denominator with a single RandK draw; we support both a single draw
+//! (faithful) and the closed-form expectation (variance-free).
+
+use crate::sparsify::{randk, topk};
+use crate::util::rng::Rng;
+
+/// δ^(l) for one layer given the P workers' accumulators (each length n)
+/// and the layer's k. `expectation` selects the closed-form denominator.
+pub fn delta_metric(
+    accs: &[Vec<f32>],
+    k: usize,
+    rng: &mut Rng,
+    expectation: bool,
+) -> f64 {
+    let p = accs.len();
+    assert!(p > 0);
+    let n = accs[0].len();
+
+    // Σ_p x^p and Σ_p TopK(x^p, k)
+    let mut agg = vec![0.0f32; n];
+    let mut agg_topk = vec![0.0f32; n];
+    let mut kept = vec![0.0f32; n];
+    for acc in accs {
+        debug_assert_eq!(acc.len(), n);
+        for i in 0..n {
+            agg[i] += acc[i];
+        }
+        topk::topk_mask_into(acc, k, &mut kept);
+        for i in 0..n {
+            agg_topk[i] += kept[i];
+        }
+    }
+
+    let num: f64 =
+        agg.iter().zip(agg_topk.iter()).map(|(&a, &s)| ((a - s) as f64).powi(2)).sum();
+    let den: f64 = if expectation {
+        randk::randk_expected_error_sq(&agg, k)
+    } else {
+        randk::randk_error_sq(&agg, k, rng)
+    };
+    if den == 0.0 {
+        // degenerate: aggregate fully captured by k coordinates
+        if num == 0.0 {
+            return 0.0;
+        }
+        return f64::INFINITY;
+    }
+    num / den
+}
+
+/// Streaming per-layer δ monitor used by the LAGS trainer (Fig. 2 series).
+pub struct DeltaMonitor {
+    /// per-layer series: (step, delta)
+    pub series: Vec<Vec<(usize, f64)>>,
+    rng: Rng,
+    expectation: bool,
+    every: usize,
+}
+
+impl DeltaMonitor {
+    pub fn new(num_layers: usize, every: usize, expectation: bool, seed: u64) -> Self {
+        DeltaMonitor {
+            series: vec![Vec::new(); num_layers],
+            rng: Rng::new(seed),
+            expectation,
+            every: every.max(1),
+        }
+    }
+
+    pub fn should_sample(&self, step: usize) -> bool {
+        step % self.every == 0
+    }
+
+    /// Record δ for layer `layer` at `step` from the workers' accumulators.
+    pub fn record(&mut self, layer: usize, step: usize, accs: &[Vec<f32>], k: usize) {
+        let d = delta_metric(accs, k, &mut self.rng, self.expectation);
+        self.series[layer].push((step, d));
+    }
+
+    /// Fraction of samples (across all layers) with δ ≤ 1 — the headline
+    /// Assumption-1 verification number.
+    pub fn fraction_holding(&self) -> f64 {
+        let mut total = 0usize;
+        let mut hold = 0usize;
+        for s in &self.series {
+            for &(_, d) in s {
+                total += 1;
+                if d <= 1.0 {
+                    hold += 1;
+                }
+            }
+        }
+        if total == 0 {
+            return 1.0;
+        }
+        hold as f64 / total as f64
+    }
+
+    pub fn max_delta(&self) -> f64 {
+        self.series
+            .iter()
+            .flat_map(|s| s.iter().map(|&(_, d)| d))
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gaussian_accs(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..p).map(|_| (0..n).map(|_| rng.normal_f32()).collect()).collect()
+    }
+
+    #[test]
+    fn delta_below_one_on_gaussians() {
+        let accs = gaussian_accs(16, 512, 1);
+        let mut rng = Rng::new(2);
+        let d = delta_metric(&accs, 16, &mut rng, true);
+        assert!(d < 1.0, "delta={d}");
+    }
+
+    #[test]
+    fn single_draw_close_to_expectation() {
+        let accs = gaussian_accs(8, 4096, 3);
+        let mut rng = Rng::new(4);
+        let de = delta_metric(&accs, 64, &mut rng, true);
+        let mut draws = Vec::new();
+        for _ in 0..30 {
+            draws.push(delta_metric(&accs, 64, &mut rng, false));
+        }
+        let mean = draws.iter().sum::<f64>() / draws.len() as f64;
+        assert!((mean - de).abs() / de < 0.15, "mean={mean} expect={de}");
+    }
+
+    #[test]
+    fn k_equals_n_gives_zero() {
+        let accs = gaussian_accs(4, 64, 5);
+        let mut rng = Rng::new(6);
+        let d = delta_metric(&accs, 64, &mut rng, true);
+        assert_eq!(d, 0.0);
+    }
+
+    #[test]
+    fn monitor_aggregates() {
+        let mut m = DeltaMonitor::new(2, 1, true, 7);
+        let accs = gaussian_accs(8, 256, 8);
+        m.record(0, 0, &accs, 8);
+        m.record(1, 0, &accs, 16);
+        m.record(0, 1, &accs, 8);
+        assert_eq!(m.series[0].len(), 2);
+        assert_eq!(m.series[1].len(), 1);
+        assert!(m.fraction_holding() > 0.99);
+        assert!(m.max_delta() < 1.0);
+    }
+
+    #[test]
+    fn sampling_interval() {
+        let m = DeltaMonitor::new(1, 10, true, 9);
+        assert!(m.should_sample(0));
+        assert!(!m.should_sample(5));
+        assert!(m.should_sample(20));
+    }
+}

@@ -1,0 +1,8 @@
+//! Training metrics: the δ^(l) Assumption-1 monitor (Eq. 20), curve
+//! recording, and CSV/JSON result writers used by the experiment harnesses.
+
+pub mod delta;
+pub mod recorder;
+
+pub use delta::{delta_metric, DeltaMonitor};
+pub use recorder::{CurveRecorder, ResultWriter};

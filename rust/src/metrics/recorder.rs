@@ -1,0 +1,136 @@
+//! Curve recording + result files (CSV for curves, JSON for summaries).
+//!
+//! Every experiment harness writes into `results/<experiment>/…` so
+//! EXPERIMENTS.md can reference stable paths.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// A named set of (step, value) curves written as wide-format CSV.
+#[derive(Debug, Default, Clone)]
+pub struct CurveRecorder {
+    pub columns: Vec<String>,
+    /// rows: step -> per-column values (NaN = missing)
+    pub rows: Vec<(usize, Vec<f64>)>,
+}
+
+impl CurveRecorder {
+    pub fn new(columns: &[&str]) -> Self {
+        CurveRecorder { columns: columns.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn push(&mut self, step: usize, values: &[f64]) {
+        assert_eq!(values.len(), self.columns.len());
+        self.rows.push((step, values.to_vec()));
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step");
+        for c in &self.columns {
+            out.push(',');
+            out.push_str(c);
+        }
+        out.push('\n');
+        for (step, vals) in &self.rows {
+            out.push_str(&step.to_string());
+            for v in vals {
+                out.push(',');
+                if v.is_nan() {
+                    out.push_str("");
+                } else {
+                    out.push_str(&format!("{v}"));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+
+    /// Last value of a column (for summary tables).
+    pub fn last(&self, column: &str) -> Option<f64> {
+        let idx = self.columns.iter().position(|c| c == column)?;
+        self.rows.iter().rev().find_map(|(_, v)| {
+            let x = v[idx];
+            if x.is_nan() {
+                None
+            } else {
+                Some(x)
+            }
+        })
+    }
+}
+
+/// JSON summary writer for experiment outputs.
+pub struct ResultWriter {
+    dir: PathBuf,
+}
+
+impl ResultWriter {
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        Ok(ResultWriter { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn write_json(&self, name: &str, value: &Json) -> Result<PathBuf> {
+        let path = self.dir.join(name);
+        std::fs::write(&path, value.to_string_pretty()).with_context(|| format!("{path:?}"))?;
+        Ok(path)
+    }
+
+    pub fn write_csv(&self, name: &str, rec: &CurveRecorder) -> Result<PathBuf> {
+        let path = self.dir.join(name);
+        rec.write_csv(&path)?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_format() {
+        let mut r = CurveRecorder::new(&["loss", "acc"]);
+        r.push(0, &[2.5, 0.1]);
+        r.push(10, &[1.25, f64::NAN]);
+        let csv = r.to_csv();
+        assert!(csv.starts_with("step,loss,acc\n"));
+        assert!(csv.contains("0,2.5,0.1\n"));
+        assert!(csv.contains("10,1.25,\n"));
+        assert_eq!(r.last("loss"), Some(1.25));
+        assert_eq!(r.last("acc"), Some(0.1)); // NaN skipped
+        assert_eq!(r.last("nope"), None);
+    }
+
+    #[test]
+    fn writes_files() {
+        let dir = std::env::temp_dir().join("lags_recorder_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let w = ResultWriter::new(&dir).unwrap();
+        let mut r = CurveRecorder::new(&["x"]);
+        r.push(1, &[3.0]);
+        let p = w.write_csv("curve.csv", &r).unwrap();
+        assert!(p.exists());
+        let j = Json::obj(vec![("final", Json::Num(3.0))]);
+        let p2 = w.write_json("summary.json", &j).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(p2).unwrap()).unwrap();
+        assert_eq!(back.get("final").unwrap().as_f64().unwrap(), 3.0);
+    }
+}

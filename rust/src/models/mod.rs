@@ -1,0 +1,101 @@
+//! Model descriptions for the timing experiments.
+//!
+//! Two sources of layer tables:
+//!
+//! * live models from `artifacts/manifest.json` (used by the numeric
+//!   trainers) — converted via [`ModelProfile::from_manifest`];
+//! * the published layer profiles of the paper's evaluation models
+//!   (ResNet-50, Inception-v4, VGG-16, LSTM-PTB) in [`zoo`] — used by the
+//!   discrete-event simulator to regenerate Table 2 / Fig 1, since those
+//!   networks are too large to train numerically on this testbed.
+
+pub mod zoo;
+
+use crate::runtime::ModelManifest;
+
+/// A layer as the timing model sees it: parameter count + backprop compute
+/// time share. Order follows the BACKPROP schedule: index 0 is the OUTPUT
+/// layer (gradient ready first), last index is the input layer (Fig. 1).
+#[derive(Debug, Clone)]
+pub struct LayerProfile {
+    pub name: String,
+    /// number of learnable elements d^(l)
+    pub params: usize,
+    /// backward computation time for this layer (s)
+    pub t_b: f64,
+}
+
+/// Whole-model timing profile.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub name: String,
+    /// forward pass time (s)
+    pub t_f: f64,
+    /// layers in backprop order (output-first)
+    pub layers: Vec<LayerProfile>,
+}
+
+impl ModelProfile {
+    pub fn d(&self) -> usize {
+        self.layers.iter().map(|l| l.params).sum()
+    }
+
+    /// total backward time t_b
+    pub fn t_b(&self) -> f64 {
+        self.layers.iter().map(|l| l.t_b).sum()
+    }
+
+    /// total compute time per iteration
+    pub fn t_comp(&self) -> f64 {
+        self.t_f + self.t_b()
+    }
+
+    /// Build a profile from a live manifest + device speed (flops/s).
+    /// Backward flops ~ 2x forward; layer order reversed (backprop starts
+    /// at the last layer of the table).
+    pub fn from_manifest(mm: &ModelManifest, device_flops: f64) -> ModelProfile {
+        let t_f = mm.total_fwd_flops() / device_flops;
+        let layers = mm
+            .layers
+            .iter()
+            .rev()
+            .map(|l| LayerProfile {
+                name: l.name.clone(),
+                params: l.size,
+                t_b: 2.0 * l.fwd_flops / device_flops,
+            })
+            .collect();
+        ModelProfile { name: mm.name.clone(), t_f, layers }
+    }
+
+    /// Scale all compute times (calibration knob).
+    pub fn scale_compute(mut self, s: f64) -> Self {
+        self.t_f *= s;
+        for l in &mut self.layers {
+            l.t_b *= s;
+        }
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_sums() {
+        let p = ModelProfile {
+            name: "t".into(),
+            t_f: 0.1,
+            layers: vec![
+                LayerProfile { name: "a".into(), params: 10, t_b: 0.2 },
+                LayerProfile { name: "b".into(), params: 20, t_b: 0.3 },
+            ],
+        };
+        assert_eq!(p.d(), 30);
+        assert!((p.t_b() - 0.5).abs() < 1e-12);
+        assert!((p.t_comp() - 0.6).abs() < 1e-12);
+        let p2 = p.scale_compute(2.0);
+        assert!((p2.t_comp() - 1.2).abs() < 1e-12);
+    }
+}

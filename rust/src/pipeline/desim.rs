@@ -1,0 +1,379 @@
+//! Discrete-event simulation of one S-SGD iteration (Fig. 1).
+//!
+//! The model: computation is a serial device stream (forward pass, then
+//! per-layer backward in output-to-input order); communication is a serial
+//! NIC stream. A layer's message becomes *ready* when its backward step
+//! finishes; messages are transmitted FIFO in ready order. The iteration
+//! ends when both streams drain (synchronous SGD barrier).
+//!
+//! This is exactly the two-resource pipeline the paper's Fig. 1 draws, and
+//! the same model MG-WFBP (Shi et al. 2019) uses for wait-free backprop
+//! analysis. Calibration: per-layer backward times from
+//! [`crate::models::zoo`], α–β collective costs from
+//! [`crate::collectives::cost`].
+
+use crate::collectives::NetworkModel;
+use crate::models::ModelProfile;
+
+/// What each algorithm puts on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// Fig 1(a): layer-wise DENSE allreduce, pipelined with backprop.
+    DensePipelined,
+    /// Non-pipelined dense baseline: one allreduce of the whole model after
+    /// backprop (what a naive framework without WFBP does).
+    DenseSingle,
+    /// Fig 1(b): single-shot sparse allgather after the full backprop
+    /// (current sparsification methods — SLGS).
+    Slgs,
+    /// Fig 1(c): layer-wise sparse allgather, pipelined (LAGS), with the
+    /// §5 merge buffer.
+    Lags,
+}
+
+/// One communication event in the simulated timeline.
+#[derive(Debug, Clone)]
+pub struct CommEvent {
+    /// label: layer name or merged group "l5..l2"
+    pub name: String,
+    /// time the payload became ready (last contributing backward done)
+    pub ready: f64,
+    pub start: f64,
+    pub end: f64,
+    pub wire_bytes: f64,
+}
+
+/// Timing breakdown of one iteration.
+#[derive(Debug, Clone)]
+pub struct IterationBreakdown {
+    pub schedule: Schedule,
+    pub t_f: f64,
+    pub t_b: f64,
+    /// sum of pure communication time (busy NIC time)
+    pub t_comm: f64,
+    /// sparsification overhead total (serialized on the compute stream)
+    pub t_spar: f64,
+    /// wall-clock of the whole iteration
+    pub iter_time: f64,
+    /// communication time hidden under computation
+    pub hidden: f64,
+    pub events: Vec<CommEvent>,
+}
+
+/// Simulation parameters beyond the model/network.
+///
+/// Sparsification overhead runs on the COMPRESSION+COMM pipeline (the
+/// paper's implementation compresses and communicates on a thread separate
+/// from the backprop stream), so in LAGS it overlaps the remaining
+/// backprop, while in SLGS the single whole-model selection has nothing
+/// left to overlap — one of the two sources of LAGS's Table-2 advantage
+/// (the other being comm overlap itself).
+#[derive(Debug, Clone)]
+pub struct SimParams {
+    /// per-layer compression ratio c^(l) (indexed in backprop order);
+    /// ignored by the dense schedules. len == model.layers.len()
+    pub ratios: Vec<f64>,
+    /// merge-buffer capacity in wire bytes (0 = no merging)
+    pub merge_bytes: f64,
+    /// sparsification overhead: t_spar(l) = spar_fixed + spar_per_elem * d_l
+    pub spar_fixed: f64,
+    pub spar_per_elem: f64,
+}
+
+impl SimParams {
+    pub fn uniform(model: &ModelProfile, c: f64) -> SimParams {
+        SimParams {
+            ratios: vec![c; model.layers.len()],
+            // small sparse messages: flush every ~32 KiB so latency
+            // amortizes without deferring transmission to backprop end
+            merge_bytes: 32.0 * 1024.0,
+            // double-sampling top-k (compress + decompress pair): fixed
+            // launch + linear scan; ~4 ms per 1M elements on the paper's
+            // P102-100 class GPU
+            spar_fixed: 5e-5,
+            spar_per_elem: 4e-9,
+        }
+    }
+
+    pub fn dense(model: &ModelProfile) -> SimParams {
+        SimParams {
+            ratios: vec![1.0; model.layers.len()],
+            // Horovod-style tensor fusion buffer (64 MiB) — the dense
+            // baseline also batches small layers, as real frameworks do
+            merge_bytes: 64.0 * 1024.0 * 1024.0,
+            spar_fixed: 0.0,
+            spar_per_elem: 0.0,
+        }
+    }
+}
+
+/// Simulate one iteration; see module docs for the two-stream model.
+pub fn simulate(
+    model: &ModelProfile,
+    net: &NetworkModel,
+    schedule: Schedule,
+    params: &SimParams,
+) -> IterationBreakdown {
+    assert_eq!(params.ratios.len(), model.layers.len(), "one ratio per layer");
+    let l = model.layers.len();
+    let sparsifies = matches!(schedule, Schedule::Slgs | Schedule::Lags);
+
+    // --- compute stream: forward, then backward per layer. Sparsification
+    // runs on the compression+comm pipeline (see SimParams docs), so it
+    // does NOT extend the compute stream.
+    let mut ready = vec![0.0f64; l];
+    let mut t = model.t_f;
+    for i in 0..l {
+        t += model.layers[i].t_b;
+        ready[i] = t;
+    }
+    let comp_done = t;
+    let spar_of = |i: usize| {
+        if sparsifies {
+            params.spar_fixed + params.spar_per_elem * model.layers[i].params as f64
+        } else {
+            0.0
+        }
+    };
+    let t_spar_total: f64 = (0..l).map(spar_of).sum();
+
+    // --- build messages per schedule
+    struct Msg {
+        name: String,
+        ready: f64,
+        bytes: f64,
+        time: f64,
+    }
+    let k_of = |i: usize| (model.layers[i].params as f64 / params.ratios[i]).max(1.0);
+    // grouped (merge-buffer) pipelined message builder, shared by the
+    // dense-fusion and LAGS schedules: `load(i)` is the byte load layer i
+    // adds to the buffer; `cost(total_load)` prices a flushed group.
+    let grouped = |load: &dyn Fn(usize) -> f64, cost: &dyn Fn(f64) -> (f64, f64)| -> Vec<Msg> {
+        let mut msgs = Vec::new();
+        let mut group: Vec<usize> = Vec::new();
+        let mut group_load = 0.0f64;
+        let mut group_spar = 0.0f64;
+        let flush =
+            |group: &mut Vec<usize>, group_load: &mut f64, group_spar: &mut f64, msgs: &mut Vec<Msg>| {
+                if group.is_empty() {
+                    return;
+                }
+                let first = *group.first().unwrap();
+                let last = *group.last().unwrap();
+                let name = if group.len() == 1 {
+                    model.layers[first].name.clone()
+                } else {
+                    format!("{}..{}", model.layers[first].name, model.layers[last].name)
+                };
+                let (bytes, time) = cost(*group_load);
+                msgs.push(Msg { name, ready: ready[last], bytes, time: time + *group_spar });
+                group.clear();
+                *group_load = 0.0;
+                *group_spar = 0.0;
+            };
+        for i in 0..l {
+            group.push(i);
+            group_load += load(i);
+            group_spar += spar_of(i);
+            let full = params.merge_bytes > 0.0 && group_load >= params.merge_bytes;
+            if full || params.merge_bytes == 0.0 {
+                flush(&mut group, &mut group_load, &mut group_spar, &mut msgs);
+            }
+        }
+        flush(&mut group, &mut group_load, &mut group_spar, &mut msgs);
+        msgs
+    };
+    let mut msgs: Vec<Msg>;
+    match schedule {
+        Schedule::DensePipelined => {
+            msgs = grouped(
+                &|i| model.layers[i].params as f64 * 4.0,
+                &|bytes| (bytes, net.allreduce_dense(bytes)),
+            );
+        }
+        Schedule::DenseSingle => {
+            msgs = Vec::new();
+            let bytes = model.d() as f64 * 4.0;
+            msgs.push(Msg {
+                name: "all".into(),
+                ready: comp_done,
+                bytes,
+                time: net.allreduce_dense(bytes),
+            });
+        }
+        Schedule::Slgs => {
+            // single TopK over the whole model: k_total = d / c_max-equiv;
+            // use the same per-layer budget summed, matching equal traffic
+            // whole-model selection cost is paid serially before the send
+            let k_total: f64 = (0..l).map(k_of).sum();
+            let spar = params.spar_fixed + params.spar_per_elem * model.d() as f64;
+            msgs = vec![Msg {
+                name: "all".into(),
+                ready: comp_done,
+                bytes: 8.0 * k_total,
+                time: spar + net.allgather_sparse(k_total),
+            }];
+        }
+        Schedule::Lags => {
+            // merge consecutive ready layers until the buffer fills or
+            // backprop ends (§5 heuristic 1); wire load = 8 bytes per kept
+            msgs = grouped(&|i| 8.0 * k_of(i), &|bytes| (bytes, net.allgather_sparse(bytes / 8.0)));
+        }
+    }
+
+    // --- NIC stream: FIFO in ready order
+    msgs.sort_by(|a, b| a.ready.partial_cmp(&b.ready).unwrap());
+    let mut nic_free = 0.0f64;
+    let mut events = Vec::with_capacity(msgs.len());
+    let mut t_comm = 0.0;
+    for m in msgs {
+        let start = m.ready.max(nic_free);
+        let end = start + m.time;
+        nic_free = end;
+        t_comm += m.time;
+        events.push(CommEvent { name: m.name, ready: m.ready, start, end, wire_bytes: m.bytes });
+    }
+    let iter_time = comp_done.max(nic_free);
+    // hidden = comm that overlapped computation
+    let tail = (nic_free - comp_done).max(0.0);
+    let hidden = (t_comm - tail).max(0.0);
+
+    IterationBreakdown {
+        schedule,
+        t_f: model.t_f,
+        t_b: model.t_b(),
+        t_comm,
+        t_spar: t_spar_total,
+        iter_time,
+        hidden,
+        events,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    fn net() -> NetworkModel {
+        NetworkModel::gige_16()
+    }
+
+    #[test]
+    fn lags_never_slower_than_slgs() {
+        for m in zoo::table2_models() {
+            let p = SimParams::uniform(&m, 1000.0);
+            let lags = simulate(&m, &net(), Schedule::Lags, &p);
+            let slgs = simulate(&m, &net(), Schedule::Slgs, &p);
+            assert!(
+                lags.iter_time <= slgs.iter_time + 1e-9,
+                "{}: lags {} > slgs {}",
+                m.name,
+                lags.iter_time,
+                slgs.iter_time
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_never_slower_than_dense() {
+        for m in zoo::table2_models() {
+            let sp = SimParams::uniform(&m, 1000.0);
+            let dp = SimParams::dense(&m);
+            let lags = simulate(&m, &net(), Schedule::Lags, &sp);
+            let dense = simulate(&m, &net(), Schedule::DensePipelined, &dp);
+            assert!(lags.iter_time < dense.iter_time, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn pipelined_dense_beats_single_dense() {
+        // With per-message latency the comparison depends on fusion tuning,
+        // so check the clean invariant at alpha = 0: starting transfers
+        // earlier can only help when messages are free to issue.
+        let free = NetworkModel { alpha: 0.0, ..net() };
+        for m in zoo::table2_models() {
+            let p = SimParams::dense(&m);
+            let a = simulate(&m, &free, Schedule::DensePipelined, &p);
+            let b = simulate(&m, &free, Schedule::DenseSingle, &p);
+            assert!(a.iter_time <= b.iter_time + 1e-9, "{}", m.name);
+        }
+        // and with the default fused buffer + real alpha, pipelined dense
+        // must still hide a nonzero amount of communication
+        let a = simulate(&zoo::resnet50(), &net(), Schedule::DensePipelined, &SimParams::dense(&zoo::resnet50()));
+        assert!(a.hidden > 0.0);
+    }
+
+    #[test]
+    fn iter_time_lower_bound() {
+        // can never beat pure compute or pure comm
+        let m = zoo::resnet50();
+        let p = SimParams::uniform(&m, 1000.0);
+        for s in [Schedule::DensePipelined, Schedule::Slgs, Schedule::Lags] {
+            let b = simulate(&m, &net(), s, &p);
+            assert!(b.iter_time >= b.t_f + b.t_b - 1e-9);
+            assert!(b.iter_time >= b.t_comm - 1e-9);
+        }
+    }
+
+    #[test]
+    fn events_are_fifo_non_overlapping() {
+        let m = zoo::inception_v4();
+        let p = SimParams::uniform(&m, 1000.0);
+        let b = simulate(&m, &net(), Schedule::Lags, &p);
+        for w in b.events.windows(2) {
+            assert!(w[1].start >= w[0].end - 1e-12);
+            assert!(w[0].start >= w[0].ready - 1e-12);
+        }
+        assert!(!b.events.is_empty());
+    }
+
+    #[test]
+    fn merge_buffer_reduces_messages() {
+        let m = zoo::resnet50();
+        let mut p = SimParams::uniform(&m, 1000.0);
+        p.merge_bytes = 0.0;
+        let unmerged = simulate(&m, &net(), Schedule::Lags, &p);
+        p.merge_bytes = 32.0 * 1024.0;
+        let merged = simulate(&m, &net(), Schedule::Lags, &p);
+        assert!(merged.events.len() < unmerged.events.len());
+        // at 1GbE latency (7.5ms/message at P=16), fewer messages must win
+        assert!(
+            merged.iter_time <= unmerged.iter_time + 1e-9,
+            "merged {} > unmerged {}",
+            merged.iter_time,
+            unmerged.iter_time
+        );
+        // over-merging (buffer bigger than all traffic) degenerates to a
+        // single end-of-backprop message = no overlap left
+        p.merge_bytes = 1e12;
+        let single = simulate(&m, &net(), Schedule::Lags, &p);
+        assert_eq!(single.events.len(), 1);
+        assert!(single.hidden < 1e-9);
+    }
+
+    #[test]
+    fn hidden_time_bounded() {
+        let m = zoo::resnet50();
+        let p = SimParams::uniform(&m, 1000.0);
+        let b = simulate(&m, &net(), Schedule::Lags, &p);
+        assert!(b.hidden >= 0.0);
+        assert!(b.hidden <= b.t_comm + 1e-12);
+        // SLGS hides nothing: its single message starts at comp_done
+        let s = simulate(&m, &net(), Schedule::Slgs, &p);
+        assert!(s.hidden < 1e-12);
+    }
+
+    #[test]
+    fn single_worker_no_comm() {
+        let m = zoo::resnet50();
+        let p = SimParams::uniform(&m, 1000.0);
+        let n1 = NetworkModel::gige_16().with_workers(1);
+        let b = simulate(&m, &n1, Schedule::Lags, &p);
+        // pipeline busy time reduces to pure sparsification cost
+        assert!((b.t_comm - b.t_spar).abs() < 1e-12);
+        assert!(b.iter_time >= b.t_f + b.t_b - 1e-9);
+        // only the last group's spar can stick out past backprop
+        assert!(b.iter_time <= b.t_f + b.t_b + b.t_spar + 1e-9);
+    }
+}

@@ -1,0 +1,127 @@
+//! Small-message merge buffer (§5 heuristic 1) — the NUMERIC counterpart
+//! of the grouping the DES models: sparsified layer messages are staged in
+//! a buffer and flushed as one combined message when the buffer fills or
+//! the last layer (backprop order) arrives.
+//!
+//! Used by the LAGS trainer so its aggregation granularity matches what a
+//! real network transport would see, and by the merge-buffer ablation.
+
+use crate::sparsify::sparse::SparseVec;
+
+/// A group of per-layer sparse messages flushed together.
+#[derive(Debug, Clone)]
+pub struct MergedGroup {
+    /// backprop-order layer indices contained in this flush
+    pub layer_indices: Vec<usize>,
+    /// per-layer sparse payloads, same order as layer_indices
+    pub payloads: Vec<SparseVec>,
+}
+
+impl MergedGroup {
+    pub fn wire_bytes(&self) -> usize {
+        self.payloads.iter().map(|p| p.wire_bytes()).sum()
+    }
+}
+
+/// Staging buffer: push per-layer messages, get groups out.
+pub struct MergeBuffer {
+    capacity_bytes: usize,
+    staged: Vec<(usize, SparseVec)>,
+    staged_bytes: usize,
+    flushed: Vec<MergedGroup>,
+}
+
+impl MergeBuffer {
+    /// capacity 0 disables merging (every layer flushes immediately).
+    pub fn new(capacity_bytes: usize) -> Self {
+        MergeBuffer { capacity_bytes, staged: Vec::new(), staged_bytes: 0, flushed: Vec::new() }
+    }
+
+    pub fn push(&mut self, layer_idx: usize, msg: SparseVec) {
+        self.staged_bytes += msg.wire_bytes();
+        self.staged.push((layer_idx, msg));
+        if self.capacity_bytes == 0 || self.staged_bytes >= self.capacity_bytes {
+            self.flush();
+        }
+    }
+
+    /// Force a flush (end of backprop — "gradients of the first layer have
+    /// been calculated").
+    pub fn flush(&mut self) {
+        if self.staged.is_empty() {
+            return;
+        }
+        let mut idxs = Vec::with_capacity(self.staged.len());
+        let mut payloads = Vec::with_capacity(self.staged.len());
+        for (i, p) in self.staged.drain(..) {
+            idxs.push(i);
+            payloads.push(p);
+        }
+        self.staged_bytes = 0;
+        self.flushed.push(MergedGroup { layer_indices: idxs, payloads });
+    }
+
+    /// Drain all completed groups.
+    pub fn take_groups(&mut self) -> Vec<MergedGroup> {
+        std::mem::take(&mut self.flushed)
+    }
+
+    pub fn pending_bytes(&self) -> usize {
+        self.staged_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(nnz: usize) -> SparseVec {
+        SparseVec {
+            len: 1000,
+            idx: (0..nnz as u32).collect(),
+            val: vec![1.0; nnz],
+        }
+    }
+
+    #[test]
+    fn zero_capacity_flushes_each() {
+        let mut b = MergeBuffer::new(0);
+        b.push(0, msg(5));
+        b.push(1, msg(5));
+        let g = b.take_groups();
+        assert_eq!(g.len(), 2);
+        assert_eq!(g[0].layer_indices, vec![0]);
+    }
+
+    #[test]
+    fn merges_until_capacity() {
+        let mut b = MergeBuffer::new(100); // 12 nnz * 8B = 96 < 100; 13*8=104 >= 100
+        b.push(0, msg(6)); // 48B staged
+        assert!(b.take_groups().is_empty());
+        b.push(1, msg(7)); // 104B -> flush
+        let g = b.take_groups();
+        assert_eq!(g.len(), 1);
+        assert_eq!(g[0].layer_indices, vec![0, 1]);
+        assert_eq!(g[0].wire_bytes(), 13 * 8);
+    }
+
+    #[test]
+    fn final_flush_drains_partial() {
+        let mut b = MergeBuffer::new(1 << 20);
+        b.push(0, msg(3));
+        b.push(1, msg(3));
+        assert_eq!(b.pending_bytes(), 48);
+        b.flush();
+        let g = b.take_groups();
+        assert_eq!(g.len(), 1);
+        assert_eq!(g[0].layer_indices, vec![0, 1]);
+        assert_eq!(b.pending_bytes(), 0);
+    }
+
+    #[test]
+    fn flush_on_empty_is_noop() {
+        let mut b = MergeBuffer::new(10);
+        b.flush();
+        assert!(b.take_groups().is_empty());
+    }
+}

@@ -1,0 +1,17 @@
+//! Wait-free backprop pipeline: scheduling + timing of layer-wise
+//! communication (the system half of the paper, §5 and Fig. 1).
+//!
+//! * [`desim`] — discrete-event simulator that replays one training
+//!   iteration's timeline for Dense-SGD (pipelined, Fig 1a), SLGS-SGD
+//!   (single-shot sparse, Fig 1b) and LAGS-SGD (pipelined sparse, Fig 1c)
+//!   over a calibrated [`crate::models::ModelProfile`] and
+//!   [`crate::collectives::NetworkModel`]. Regenerates Table 2 / Fig 1.
+//! * [`merge`] — the §5 small-message merge buffer heuristic: sparsified
+//!   layer messages are batched until the buffer fills (or backprop ends)
+//!   so the (P-1)·α latency term is paid once per group, not per layer.
+
+pub mod desim;
+pub mod merge;
+
+pub use desim::{simulate, CommEvent, IterationBreakdown, Schedule};
+pub use merge::MergeBuffer;

@@ -1,0 +1,287 @@
+//! Typed view of `artifacts/manifest.json` (emitted by python/compile/aot.py).
+//!
+//! The manifest is the contract between the build-time python layer and the
+//! runtime rust layer: layer tables (name/shape/offset/size/bucket/flops),
+//! batch specs, metric kind, artifact file names, compress bucket list.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+    pub offset: usize,
+    /// compress artifact bucket (next pow2, >= MIN_BUCKET)
+    pub bucket: usize,
+    /// forward FLOPs attributed to this tensor (per batch)
+    pub fwd_flops: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl BatchSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let shape = v
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|s| s.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = match v.get("dtype")?.as_str()? {
+            "float32" => DType::F32,
+            "int32" => DType::I32,
+            other => bail!("unsupported dtype {other:?}"),
+        };
+        Ok(BatchSpec { shape, dtype })
+    }
+}
+
+/// Which evaluation metric the model's eval artifact returns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// top-1 accuracy in [0,1]
+    Accuracy,
+    /// cross-entropy loss; perplexity = exp(loss)
+    PplLoss,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    /// flat parameter dimension
+    pub d: usize,
+    /// d padded to the apply-artifact alignment
+    pub d_padded: usize,
+    pub metric: Metric,
+    /// label cardinality (classes for classifiers, vocab for LMs)
+    pub classes: usize,
+    pub x: BatchSpec,
+    pub y: BatchSpec,
+    pub layers: Vec<LayerInfo>,
+    pub files: BTreeMap<String, String>,
+}
+
+impl ModelManifest {
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn file(&self, kind: &str) -> Result<&str> {
+        self.files
+            .get(kind)
+            .map(|s| s.as_str())
+            .with_context(|| format!("model {} has no {kind:?} artifact", self.name))
+    }
+
+    /// Total forward FLOPs per batch.
+    pub fn total_fwd_flops(&self) -> f64 {
+        self.layers.iter().map(|l| l.fwd_flops).sum()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let name = v.get("name")?.as_str()?.to_string();
+        let metric = match v.get("metric")?.as_str()? {
+            "accuracy" => Metric::Accuracy,
+            "ppl_loss" => Metric::PplLoss,
+            other => bail!("unknown metric {other:?}"),
+        };
+        let mut layers = Vec::new();
+        for l in v.get("layers")?.as_arr()? {
+            layers.push(LayerInfo {
+                name: l.get("name")?.as_str()?.to_string(),
+                shape: l
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| s.as_usize())
+                    .collect::<Result<Vec<_>>>()?,
+                size: l.get("size")?.as_usize()?,
+                offset: l.get("offset")?.as_usize()?,
+                bucket: l.get("bucket")?.as_usize()?,
+                fwd_flops: l.get("fwd_flops")?.as_f64()?,
+            });
+        }
+        let files = v
+            .get("files")?
+            .as_obj()?
+            .iter()
+            .map(|(k, f)| Ok((k.clone(), f.as_str()?.to_string())))
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        let mm = ModelManifest {
+            name,
+            d: v.get("d")?.as_usize()?,
+            d_padded: v.get("d_padded")?.as_usize()?,
+            metric,
+            classes: v.get("classes")?.as_usize()?,
+            x: BatchSpec::from_json(v.get("x")?)?,
+            y: BatchSpec::from_json(v.get("y")?)?,
+            layers,
+            files,
+        };
+        mm.validate()?;
+        Ok(mm)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let mut off = 0;
+        for l in &self.layers {
+            if l.offset != off {
+                bail!("layer {} offset {} != expected {}", l.name, l.offset, off);
+            }
+            let prod: usize = l.shape.iter().product();
+            if prod != l.size {
+                bail!("layer {} shape/size mismatch", l.name);
+            }
+            if l.bucket < l.size {
+                bail!("layer {} bucket {} < size {}", l.name, l.bucket, l.size);
+            }
+            off += l.size;
+        }
+        if off != self.d {
+            bail!("layer sizes sum to {off} but d = {}", self.d);
+        }
+        if self.d_padded < self.d {
+            bail!("d_padded < d");
+        }
+        Ok(())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+    pub compress_buckets: Vec<usize>,
+    /// bucket -> (exact file, sampled file)
+    pub compress_files: BTreeMap<usize, (String, String)>,
+    pub seed: u64,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut models = BTreeMap::new();
+        for (name, mv) in v.get("models")?.as_obj()? {
+            models.insert(name.clone(), ModelManifest::from_json(mv)?);
+        }
+        let compress_buckets = v
+            .get("compress_buckets")?
+            .as_arr()?
+            .iter()
+            .map(|b| b.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let mut compress_files = BTreeMap::new();
+        for (k, f) in v.get("compress_files")?.as_obj()? {
+            let bucket: usize = k.parse().context("bucket key")?;
+            compress_files.insert(
+                bucket,
+                (
+                    f.get("exact")?.as_str()?.to_string(),
+                    f.get("sampled")?.as_str()?.to_string(),
+                ),
+            );
+        }
+        let seed = v.get("seed")?.as_usize()? as u64;
+        Ok(Manifest { dir, models, compress_buckets, compress_files, seed })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models.get(name).with_context(|| {
+            format!(
+                "model {name:?} not in manifest (have: {})",
+                self.models.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Load the seeded initial flat parameters for a model.
+    pub fn load_init_params(&self, m: &ModelManifest) -> Result<Vec<f32>> {
+        let path = self.artifact_path(m.file("init")?);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        anyhow::ensure!(bytes.len() == 4 * m.d, "init.bin size mismatch");
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest_json() -> String {
+        r#"{
+          "models": {
+            "toy": {
+              "name": "toy", "d": 6, "d_padded": 4096, "metric": "accuracy",
+              "classes": 2,
+              "x": {"shape": [2, 2], "dtype": "float32"},
+              "y": {"shape": [2], "dtype": "int32"},
+              "files": {"train": "toy_train.hlo.txt", "init": "toy_init.bin"},
+              "layers": [
+                {"name": "w", "shape": [2,2], "size": 4, "offset": 0, "bucket": 1024, "fwd_flops": 16.0},
+                {"name": "b", "shape": [2], "size": 2, "offset": 4, "bucket": 1024, "fwd_flops": 2.0}
+              ]
+            }
+          },
+          "compress_buckets": [1024],
+          "compress_files": {"1024": {"exact": "compress_1024.hlo.txt", "sampled": "compresss_1024.hlo.txt"}},
+          "seed": 42
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parse_tiny() {
+        let dir = std::env::temp_dir().join("lags_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), tiny_manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let toy = m.model("toy").unwrap();
+        assert_eq!(toy.d, 6);
+        assert_eq!(toy.layers.len(), 2);
+        assert_eq!(toy.layers[1].offset, 4);
+        assert_eq!(toy.x.dtype, DType::F32);
+        assert_eq!(toy.y.dtype, DType::I32);
+        assert_eq!(toy.metric, Metric::Accuracy);
+        assert_eq!(toy.classes, 2);
+        assert_eq!(m.compress_files[&1024].0, "compress_1024.hlo.txt");
+        assert!(m.model("missing").is_err());
+        assert_eq!(toy.total_fwd_flops(), 18.0);
+    }
+
+    #[test]
+    fn validation_catches_bad_offsets() {
+        let bad = tiny_manifest_json().replace("\"offset\": 4", "\"offset\": 5");
+        let v = Json::parse(&bad).unwrap();
+        assert!(ModelManifest::from_json(v.get("models").unwrap().get("toy").unwrap()).is_err());
+    }
+}

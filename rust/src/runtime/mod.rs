@@ -1,0 +1,274 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1 CPU):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. One compiled executable per artifact;
+//! compress-bucket executables are compiled lazily and cached.
+//!
+//! All artifacts were lowered with `return_tuple=True`, so every execution
+//! returns a single tuple literal that is decomposed here.
+
+pub mod manifest;
+
+pub use manifest::{BatchSpec, DType, LayerInfo, Manifest, Metric, ModelManifest};
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// A batch tensor crossing into PJRT.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BatchData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl BatchData {
+    pub fn len(&self) -> usize {
+        match self {
+            BatchData::F32(v) => v.len(),
+            BatchData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&s| s as i64).collect();
+        let lit = match self {
+            BatchData::F32(v) => xla::Literal::vec1(v),
+            BatchData::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn to_device(&self, client: &xla::PjRtClient, shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(match self {
+            BatchData::F32(v) => client.buffer_from_host_buffer(v, shape, None)?,
+            BatchData::I32(v) => client.buffer_from_host_buffer(v, shape, None)?,
+        })
+    }
+}
+
+/// Shared PJRT client + manifest; the factory for [`ModelRuntime`]s.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    /// (bucket, sampled) -> compiled compress executable
+    compress_cache: Mutex<BTreeMap<(usize, bool), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn load(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, compress_cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile_file(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.manifest.artifact_path(file);
+        let path_str = path.to_str().context("non-utf8 path")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).with_context(|| format!("compiling {file}"))
+    }
+
+    /// Build the full runtime for one model (train + eval + apply compiled
+    /// eagerly; compress buckets lazily via [`Runtime::compress_exe`]).
+    pub fn model_runtime(self: &std::sync::Arc<Self>, name: &str) -> Result<ModelRuntime> {
+        let mm = self.manifest.model(name)?.clone();
+        let train = self.compile_file(mm.file("train")?)?;
+        let eval = self.compile_file(mm.file("eval")?)?;
+        let apply = self.compile_file(mm.file("apply")?)?;
+        let init_params = self.manifest.load_init_params(&mm)?;
+        Ok(ModelRuntime { rt: self.clone(), mm, train, eval, apply, init_params })
+    }
+
+    /// Lazily compile + cache the compress executable for a bucket.
+    pub fn compress_exe(
+        &self,
+        bucket: usize,
+        sampled: bool,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.compress_cache.lock().unwrap();
+            if let Some(e) = cache.get(&(bucket, sampled)) {
+                return Ok(e.clone());
+            }
+        }
+        let (exact_f, sampled_f) = self
+            .manifest
+            .compress_files
+            .get(&bucket)
+            .with_context(|| format!("no compress artifact for bucket {bucket}"))?;
+        let file = if sampled { sampled_f } else { exact_f };
+        let exe = std::sync::Arc::new(self.compile_file(file)?);
+        self.compress_cache.lock().unwrap().insert((bucket, sampled), exe.clone());
+        Ok(exe)
+    }
+
+    /// Run a compress artifact: (grad[n], resid[n], lr, k) -> (sparse,
+    /// resid', thr). Inputs must already be padded to the bucket length.
+    pub fn run_compress(
+        &self,
+        bucket: usize,
+        sampled: bool,
+        grad: &[f32],
+        resid: &[f32],
+        lr: f32,
+        k: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        anyhow::ensure!(grad.len() == bucket && resid.len() == bucket, "pad to bucket first");
+        let exe = self.compress_exe(bucket, sampled)?;
+        let g = xla::Literal::vec1(grad);
+        let r = xla::Literal::vec1(resid);
+        let lr_l = xla::Literal::scalar(lr);
+        let k_l = xla::Literal::scalar(k as i32);
+        let result = exe.execute::<xla::Literal>(&[g, r, lr_l, k_l])?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 3, "compress artifact returned {} outputs", parts.len());
+        let sparse = parts[0].to_vec::<f32>()?;
+        let new_resid = parts[1].to_vec::<f32>()?;
+        let thr = parts[2].to_vec::<f32>()?[0];
+        Ok((sparse, new_resid, thr))
+    }
+}
+
+/// Compiled executables + metadata for one model.
+pub struct ModelRuntime {
+    rt: std::sync::Arc<Runtime>,
+    pub mm: ModelManifest,
+    train: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    apply: xla::PjRtLoadedExecutable,
+    pub init_params: Vec<f32>,
+}
+
+impl ModelRuntime {
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    fn exec_step(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        params: &[f32],
+        x: &BatchData,
+        y: &BatchData,
+    ) -> Result<(f32, xla::Literal)> {
+        anyhow::ensure!(params.len() == self.mm.d, "params dim mismatch");
+        anyhow::ensure!(x.len() == self.mm.x.elements(), "x batch shape mismatch");
+        anyhow::ensure!(y.len() == self.mm.y.elements(), "y batch shape mismatch");
+        let p = xla::Literal::vec1(params);
+        let xl = x.to_literal(&self.mm.x.shape)?;
+        let yl = y.to_literal(&self.mm.y.shape)?;
+        let result = exe.execute::<xla::Literal>(&[p, xl, yl])?[0][0].to_literal_sync()?;
+        let (loss_l, second) = result.to_tuple2()?;
+        let loss = loss_l.to_vec::<f32>()?[0];
+        Ok((loss, second))
+    }
+
+    /// Run the train artifact: returns (loss, flat gradient[d]).
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        x: &BatchData,
+        y: &BatchData,
+    ) -> Result<(f32, Vec<f32>)> {
+        let (loss, grad_l) = self.exec_step(&self.train, params, x, y)?;
+        let grad = grad_l.to_vec::<f32>()?;
+        anyhow::ensure!(grad.len() == self.mm.d, "grad dim mismatch");
+        Ok((loss, grad))
+    }
+
+    /// Upload the (replica-shared) parameter vector to the device once;
+    /// reuse the returned buffer across all P workers' [`Self::train_step_b`]
+    /// calls in an iteration (§Perf L3-2: saves P-1 host→device copies of
+    /// d floats per step).
+    pub fn params_to_device(&self, params: &[f32]) -> Result<xla::PjRtBuffer> {
+        anyhow::ensure!(params.len() == self.mm.d, "params dim mismatch");
+        Ok(self.rt.client.buffer_from_host_buffer(params, &[self.mm.d], None)?)
+    }
+
+    /// Buffered train step: params already on device.
+    pub fn train_step_b(
+        &self,
+        params_dev: &xla::PjRtBuffer,
+        x: &BatchData,
+        y: &BatchData,
+    ) -> Result<(f32, Vec<f32>)> {
+        anyhow::ensure!(x.len() == self.mm.x.elements(), "x batch shape mismatch");
+        anyhow::ensure!(y.len() == self.mm.y.elements(), "y batch shape mismatch");
+        let xb = x.to_device(&self.rt.client, &self.mm.x.shape)?;
+        let yb = y.to_device(&self.rt.client, &self.mm.y.shape)?;
+        let result = self.train.execute_b::<&xla::PjRtBuffer>(&[params_dev, &xb, &yb])?[0][0]
+            .to_literal_sync()?;
+        let (loss_l, grad_l) = result.to_tuple2()?;
+        let loss = loss_l.to_vec::<f32>()?[0];
+        let grad = grad_l.to_vec::<f32>()?;
+        anyhow::ensure!(grad.len() == self.mm.d, "grad dim mismatch");
+        Ok((loss, grad))
+    }
+
+    /// Run the eval artifact: returns (loss, metric).
+    pub fn eval_step(&self, params: &[f32], x: &BatchData, y: &BatchData) -> Result<(f32, f32)> {
+        let (loss, metric_l) = self.exec_step(&self.eval, params, x, y)?;
+        Ok((loss, metric_l.to_vec::<f32>()?[0]))
+    }
+
+    /// Run the fused momentum-SGD apply artifact over padded buffers:
+    /// (params[dp], mom[dp], agg[dp], mu) -> (params', mom').
+    pub fn apply_update(
+        &self,
+        params_pad: &[f32],
+        mom_pad: &[f32],
+        agg_pad: &[f32],
+        mu: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let dp = self.mm.d_padded;
+        anyhow::ensure!(
+            params_pad.len() == dp && mom_pad.len() == dp && agg_pad.len() == dp,
+            "apply buffers must be padded to d_padded"
+        );
+        let p = xla::Literal::vec1(params_pad);
+        let m = xla::Literal::vec1(mom_pad);
+        let a = xla::Literal::vec1(agg_pad);
+        let mu_l = xla::Literal::scalar(mu);
+        let result =
+            self.apply.execute::<xla::Literal>(&[p, m, a, mu_l])?[0][0].to_literal_sync()?;
+        let (p2, m2) = result.to_tuple2()?;
+        Ok((p2.to_vec::<f32>()?, m2.to_vec::<f32>()?))
+    }
+
+    /// Compress one layer through the AOT Pallas artifact. Handles padding
+    /// to the layer's bucket; returns (sparse[n], resid'[n], thr) trimmed
+    /// back to the layer size.
+    pub fn compress_layer_xla(
+        &self,
+        layer: &LayerInfo,
+        grad: &[f32],
+        resid: &[f32],
+        lr: f32,
+        k: usize,
+        sampled: bool,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let n = layer.size;
+        anyhow::ensure!(grad.len() == n && resid.len() == n, "layer slice mismatch");
+        let b = layer.bucket;
+        let mut gp = vec![0.0f32; b];
+        let mut rp = vec![0.0f32; b];
+        gp[..n].copy_from_slice(grad);
+        rp[..n].copy_from_slice(resid);
+        let (mut s, mut r, thr) = self.rt.run_compress(b, sampled, &gp, &rp, lr, k)?;
+        s.truncate(n);
+        r.truncate(n);
+        Ok((s, r, thr))
+    }
+}

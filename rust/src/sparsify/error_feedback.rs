@@ -1,0 +1,191 @@
+//! Per-worker, per-layer error-feedback state (Algorithm 1, lines 7-8).
+//!
+//! Each worker keeps the residual `eps_t^{p,(l)}` — the mass its TopK
+//! dropped — and folds it into the next iteration's accumulator:
+//!
+//! ```text
+//! acc  = eps + lr * grad          (line 7)
+//! eps' = acc - TopK(acc, k)       (line 8)
+//! ```
+//!
+//! The invariant `TopK(acc,k) + eps' == acc` holds exactly in f32 because
+//! the split only moves elements, never rounds.
+
+use super::topk;
+use crate::sparsify::threshold::SampledThreshold;
+
+/// Residual state for one worker across the whole flat parameter vector,
+/// sliced per layer by the caller.
+#[derive(Debug, Clone)]
+pub struct ErrorFeedback {
+    resid: Vec<f32>,
+    /// scratch accumulator reused across layers (no alloc in the hot loop)
+    acc: Vec<f32>,
+    /// scratch |acc| buffer for the quickselect (§Perf L3-1)
+    mags: Vec<f32>,
+    sampler: SampledThreshold,
+}
+
+/// Result of one layer compression (borrowed views into internal buffers
+/// would complicate lifetimes; the kept vector is written by the caller).
+pub struct CompressStats {
+    pub threshold: f32,
+    pub kept: usize,
+}
+
+impl ErrorFeedback {
+    pub fn new(d: usize, sample_stride: usize) -> Self {
+        ErrorFeedback {
+            resid: vec![0.0; d],
+            acc: Vec::new(),
+            mags: Vec::new(),
+            sampler: SampledThreshold::new(sample_stride),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.resid.len()
+    }
+
+    pub fn residual(&self) -> &[f32] {
+        &self.resid
+    }
+
+    /// Residual slice for one layer (XLA compress path reads this).
+    pub fn residual_slice(&self, off: usize, n: usize) -> &[f32] {
+        &self.resid[off..off + n]
+    }
+
+    /// Overwrite one layer's residual (XLA compress path writes back).
+    pub fn write_residual(&mut self, off: usize, data: &[f32]) {
+        self.resid[off..off + data.len()].copy_from_slice(data);
+    }
+
+    /// Residual L2^2 — diagnostic for how much mass is deferred.
+    pub fn residual_norm_sq(&self) -> f64 {
+        self.resid.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// Compress one layer slice [off, off+n): fold lr*grad into the stored
+    /// residual, write the TopK part into `kept[0..n]`, keep the rest as the
+    /// new residual. `exact` selects exact vs double-sampling threshold.
+    pub fn compress_layer(
+        &mut self,
+        off: usize,
+        grad: &[f32],
+        lr: f32,
+        k: usize,
+        exact: bool,
+        kept: &mut [f32],
+    ) -> CompressStats {
+        let n = grad.len();
+        debug_assert_eq!(kept.len(), n);
+        let resid = &mut self.resid[off..off + n];
+
+        // acc = resid + lr * grad (scratch)
+        self.acc.clear();
+        self.acc.extend(resid.iter().zip(grad.iter()).map(|(&r, &g)| r + lr * g));
+
+        let thr = if exact {
+            topk::kth_largest_abs_with_buf(&self.acc, k, &mut self.mags)
+        } else {
+            self.sampler.estimate(&self.acc, k)
+        };
+        topk::split_with_threshold(&self.acc, thr, kept, resid);
+        CompressStats { threshold: thr, kept: topk::count_kept(&self.acc, thr) }
+    }
+
+    /// The accumulator (resid + lr*grad) for a layer WITHOUT updating state.
+    /// Used by the delta^(l) measurement (Eq. 20), which needs x^{p,(l)} =
+    /// G^p + eps^p before compression.
+    pub fn peek_acc(&self, off: usize, grad: &[f32], lr: f32) -> Vec<f32> {
+        self.resid[off..off + grad.len()]
+            .iter()
+            .zip(grad.iter())
+            .map(|(&r, &g)| r + lr * g)
+            .collect()
+    }
+
+    pub fn reset(&mut self) {
+        self.resid.iter_mut().for_each(|v| *v = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mass_conservation_per_step() {
+        let mut rng = Rng::new(1);
+        let n = 256;
+        let mut ef = ErrorFeedback::new(n, 4);
+        let mut kept = vec![0.0f32; n];
+        for step in 0..20 {
+            let grad: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let before = ef.peek_acc(0, &grad, 0.1);
+            ef.compress_layer(0, &grad, 0.1, 16, true, &mut kept);
+            for i in 0..n {
+                let total = kept[i] + ef.residual()[i];
+                assert!((total - before[i]).abs() < 1e-6, "step {step} i {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn layered_slices_are_independent() {
+        let mut rng = Rng::new(2);
+        let mut ef = ErrorFeedback::new(100, 4);
+        let g1: Vec<f32> = (0..40).map(|_| rng.normal_f32()).collect();
+        let g2: Vec<f32> = (0..60).map(|_| rng.normal_f32()).collect();
+        let mut k1 = vec![0.0f32; 40];
+        let mut k2 = vec![0.0f32; 60];
+        ef.compress_layer(0, &g1, 1.0, 4, true, &mut k1);
+        let resid_l1: Vec<f32> = ef.residual()[..40].to_vec();
+        ef.compress_layer(40, &g2, 1.0, 6, true, &mut k2);
+        // compressing layer 2 must not touch layer 1 residual
+        assert_eq!(&ef.residual()[..40], resid_l1.as_slice());
+    }
+
+    #[test]
+    fn residual_accumulates_dropped_mass() {
+        let mut ef = ErrorFeedback::new(4, 1);
+        let grad = vec![10.0f32, 1.0, 0.1, 0.01];
+        let mut kept = vec![0.0f32; 4];
+        let stats = ef.compress_layer(0, &grad, 1.0, 1, true, &mut kept);
+        assert_eq!(stats.kept, 1);
+        assert_eq!(kept, vec![10.0, 0.0, 0.0, 0.0]);
+        assert_eq!(ef.residual(), &[0.0, 1.0, 0.1, 0.01]);
+        // second step: residual + new grad competes for top-1
+        let stats2 = ef.compress_layer(0, &[0.0, 1.0, 0.0, 0.0], 1.0, 1, true, &mut kept);
+        assert_eq!(stats2.kept, 1);
+        assert_eq!(kept, vec![0.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn sampled_threshold_path_conserves_mass() {
+        let mut rng = Rng::new(3);
+        let n = 4096;
+        let mut ef = ErrorFeedback::new(n, 16);
+        let grad: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let before = ef.peek_acc(0, &grad, 0.5);
+        let mut kept = vec![0.0f32; n];
+        ef.compress_layer(0, &grad, 0.5, 40, false, &mut kept);
+        for i in 0..n {
+            assert!((kept[i] + ef.residual()[i] - before[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut ef = ErrorFeedback::new(8, 1);
+        let mut kept = vec![0.0f32; 8];
+        // distinct magnitudes so top-2 actually drops mass into the residual
+        let grad: Vec<f32> = (1..=8).map(|i| i as f32).collect();
+        ef.compress_layer(0, &grad, 1.0, 2, true, &mut kept);
+        assert!(ef.residual_norm_sq() > 0.0);
+        ef.reset();
+        assert_eq!(ef.residual_norm_sq(), 0.0);
+    }
+}

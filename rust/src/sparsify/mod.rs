@@ -1,0 +1,57 @@
+//! Gradient sparsification primitives: the host-side (rust) implementations
+//! of the Layer-1 kernels, bit-faithful to `python/compile/kernels/ref.py`.
+//!
+//! * [`topk`] — exact Top-k selection (Eq. 4) via O(n) selection,
+//! * [`threshold`] — double-sampling threshold estimation (Lin et al. 2018),
+//! * [`randk`] — RandK operator (used by the Assumption-1 harness, Eq. 20),
+//! * [`error_feedback`] — per-worker, per-layer residual state (Alg. 1 l.7-8),
+//! * [`sparse`] — (index, value) codec for the wire format of sparse
+//!   gradient messages.
+//!
+//! The trainer can run compression either through these host kernels
+//! (`CompressorKind::Host*`) or through the AOT Pallas artifacts
+//! (`CompressorKind::Xla*`); both produce identical dense-masked results,
+//! which `rust/tests/integration_runtime.rs` asserts.
+
+pub mod error_feedback;
+pub mod randk;
+pub mod sparse;
+pub mod threshold;
+pub mod topk;
+
+pub use error_feedback::ErrorFeedback;
+pub use randk::randk_mask;
+pub use sparse::SparseVec;
+pub use threshold::{sampled_threshold, SampledThreshold};
+pub use topk::{kth_largest_abs, topk_mask, topk_mask_into};
+
+/// Which compression implementation the trainer uses for the hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompressorKind {
+    /// Exact Top-k on the host (O(n) select_nth).
+    HostExact,
+    /// Double-sampling threshold estimate on the host (DGC-style).
+    HostSampled,
+    /// AOT Pallas compress artifact (exact sort threshold), via PJRT.
+    XlaExact,
+    /// AOT Pallas compress artifact with strided double-sampling.
+    XlaSampled,
+}
+
+impl CompressorKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "host" | "host-exact" => Self::HostExact,
+            "host-sampled" => Self::HostSampled,
+            "xla" | "xla-exact" => Self::XlaExact,
+            "xla-sampled" => Self::XlaSampled,
+            _ => anyhow::bail!(
+                "unknown compressor {s:?} (host|host-sampled|xla|xla-sampled)"
+            ),
+        })
+    }
+
+    pub fn is_xla(self) -> bool {
+        matches!(self, Self::XlaExact | Self::XlaSampled)
+    }
+}

@@ -1,0 +1,73 @@
+//! RandK operator (Stich et al. 2018): keep k uniformly-random coordinates.
+//!
+//! Used only by the Assumption-1 verification harness (Eq. 20 denominator)
+//! and the property tests — never on the training path. The closed-form
+//! expectation E[||x - RandK(x,k)||^2] = (1 - k/d)||x||^2 is also provided.
+
+use crate::util::rng::Rng;
+
+/// Dense-masked RandK: k distinct uniformly-chosen coordinates survive.
+pub fn randk_mask(x: &[f32], k: usize, rng: &mut Rng) -> Vec<f32> {
+    let n = x.len();
+    let mut out = vec![0.0f32; n];
+    if k >= n {
+        out.copy_from_slice(x);
+        return out;
+    }
+    for i in rng.sample_distinct(n, k) {
+        out[i] = x[i];
+    }
+    out
+}
+
+/// ||x - RandK(x,k)||^2 for a single draw.
+pub fn randk_error_sq(x: &[f32], k: usize, rng: &mut Rng) -> f64 {
+    let kept = randk_mask(x, k, rng);
+    x.iter().zip(kept.iter()).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum()
+}
+
+/// Closed form E[||x - RandK(x,k)||^2] = (1 - k/d) ||x||^2.
+pub fn randk_expected_error_sq(x: &[f32], k: usize) -> f64 {
+    let d = x.len();
+    if d == 0 {
+        return 0.0;
+    }
+    let norm_sq: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    (1.0 - (k.min(d) as f64 / d as f64)) * norm_sq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_exactly_k() {
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+        let m = randk_mask(&x, 13, &mut rng);
+        assert_eq!(m.iter().filter(|&&v| v != 0.0).count(), 13);
+        for (i, &v) in m.iter().enumerate() {
+            assert!(v == 0.0 || v == x[i]);
+        }
+    }
+
+    #[test]
+    fn k_geq_n_keeps_all() {
+        let mut rng = Rng::new(2);
+        let x = vec![1.0f32, 2.0, 3.0];
+        assert_eq!(randk_mask(&x, 3, &mut rng), x);
+        assert_eq!(randk_mask(&x, 10, &mut rng), x);
+    }
+
+    #[test]
+    fn monte_carlo_matches_closed_form() {
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..256).map(|_| rng.normal_f32()).collect();
+        let k = 32;
+        let trials = 600;
+        let mean: f64 =
+            (0..trials).map(|_| randk_error_sq(&x, k, &mut rng)).sum::<f64>() / trials as f64;
+        let expect = randk_expected_error_sq(&x, k);
+        assert!((mean - expect).abs() / expect < 0.1, "mc={mean} closed={expect}");
+    }
+}

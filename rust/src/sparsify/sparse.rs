@@ -1,0 +1,226 @@
+//! Sparse gradient wire format: (u32 index, f32 value) pairs.
+//!
+//! This is what actually crosses the (simulated) network in SLGS/LAGS —
+//! the paper's message size `k * 8` bytes per layer per worker. The codec
+//! is exercised by the sparse allgather in `collectives::sparse_agg` and
+//! the merge buffer in `pipeline::merge`.
+
+/// A sparse view of a dense f32 vector.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SparseVec {
+    /// logical dense length
+    pub len: usize,
+    /// strictly increasing coordinate indices
+    pub idx: Vec<u32>,
+    /// values at those coordinates
+    pub val: Vec<f32>,
+}
+
+impl SparseVec {
+    pub fn new(len: usize) -> Self {
+        SparseVec { len, idx: Vec::new(), val: Vec::new() }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Wire size in bytes (index + value per nonzero).
+    pub fn wire_bytes(&self) -> usize {
+        self.nnz() * 8
+    }
+
+    /// Encode the nonzeros of a dense vector.
+    pub fn from_dense(x: &[f32]) -> Self {
+        let mut s = SparseVec::new(x.len());
+        for (i, &v) in x.iter().enumerate() {
+            if v != 0.0 {
+                s.idx.push(i as u32);
+                s.val.push(v);
+            }
+        }
+        s
+    }
+
+    /// Encode values of `x` at |x_i| >= thr (fused mask + encode; avoids
+    /// materializing the dense masked vector on the hot path).
+    pub fn from_dense_threshold(x: &[f32], thr: f32) -> Self {
+        let mut s = SparseVec::new(x.len());
+        for (i, &v) in x.iter().enumerate() {
+            if v.abs() >= thr {
+                s.idx.push(i as u32);
+                s.val.push(v);
+            }
+        }
+        s
+    }
+
+    /// Decode to a fresh dense vector.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len];
+        self.add_into(&mut out);
+        out
+    }
+
+    /// Accumulate into an existing dense buffer: out[idx] += val.
+    /// This is the aggregation step of Algorithm 1 line 9.
+    pub fn add_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.len);
+        for (&i, &v) in self.idx.iter().zip(self.val.iter()) {
+            out[i as usize] += v;
+        }
+    }
+
+    /// Accumulate a scaled copy: out[idx] += scale * val.
+    pub fn add_scaled_into(&self, scale: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.len);
+        for (&i, &v) in self.idx.iter().zip(self.val.iter()) {
+            out[i as usize] += scale * v;
+        }
+    }
+
+    /// Serialize to bytes (little-endian [nnz u32][len u32][idx...][val...]).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + self.nnz() * 8);
+        out.extend_from_slice(&(self.nnz() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.len as u32).to_le_bytes());
+        for &i in &self.idx {
+            out.extend_from_slice(&i.to_le_bytes());
+        }
+        for &v in &self.val {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> anyhow::Result<Self> {
+        anyhow::ensure!(b.len() >= 8, "truncated sparse header");
+        let nnz = u32::from_le_bytes(b[0..4].try_into()?) as usize;
+        let len = u32::from_le_bytes(b[4..8].try_into()?) as usize;
+        anyhow::ensure!(b.len() == 8 + nnz * 8, "bad sparse payload size");
+        let mut idx = Vec::with_capacity(nnz);
+        let mut val = Vec::with_capacity(nnz);
+        for i in 0..nnz {
+            let o = 8 + i * 4;
+            idx.push(u32::from_le_bytes(b[o..o + 4].try_into()?));
+        }
+        for i in 0..nnz {
+            let o = 8 + nnz * 4 + i * 4;
+            val.push(f32::from_le_bytes(b[o..o + 4].try_into()?));
+        }
+        Ok(SparseVec { len, idx, val })
+    }
+
+    /// Merge-coalesce two index-sorted sparse vectors (values summed at
+    /// shared indices). Used by tree-reduction aggregation.
+    pub fn merge(&self, other: &SparseVec) -> SparseVec {
+        debug_assert_eq!(self.len, other.len);
+        let mut out = SparseVec::new(self.len);
+        out.idx.reserve(self.nnz() + other.nnz());
+        out.val.reserve(self.nnz() + other.nnz());
+        let (mut a, mut b) = (0, 0);
+        while a < self.nnz() && b < other.nnz() {
+            match self.idx[a].cmp(&other.idx[b]) {
+                std::cmp::Ordering::Less => {
+                    out.idx.push(self.idx[a]);
+                    out.val.push(self.val[a]);
+                    a += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    out.idx.push(other.idx[b]);
+                    out.val.push(other.val[b]);
+                    b += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    out.idx.push(self.idx[a]);
+                    out.val.push(self.val[a] + other.val[b]);
+                    a += 1;
+                    b += 1;
+                }
+            }
+        }
+        for i in a..self.nnz() {
+            out.idx.push(self.idx[i]);
+            out.val.push(self.val[i]);
+        }
+        for i in b..other.nnz() {
+            out.idx.push(other.idx[i]);
+            out.val.push(other.val[i]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sparse_random(n: usize, nnz: usize, seed: u64) -> SparseVec {
+        let mut rng = Rng::new(seed);
+        let mut dense = vec![0.0f32; n];
+        for i in rng.sample_distinct(n, nnz) {
+            dense[i] = rng.normal_f32();
+        }
+        SparseVec::from_dense(&dense)
+    }
+
+    #[test]
+    fn dense_round_trip() {
+        let x = vec![0.0f32, 1.5, 0.0, -2.0, 0.0, 3.0];
+        let s = SparseVec::from_dense(&x);
+        assert_eq!(s.nnz(), 3);
+        assert_eq!(s.to_dense(), x);
+        assert_eq!(s.wire_bytes(), 24);
+    }
+
+    #[test]
+    fn threshold_encode_matches_mask() {
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..512).map(|_| rng.normal_f32()).collect();
+        let thr = crate::sparsify::topk::kth_largest_abs(&x, 50);
+        let s = SparseVec::from_dense_threshold(&x, thr);
+        let (masked, _) = crate::sparsify::topk::topk_mask(&x, 50);
+        assert_eq!(s.to_dense(), masked);
+    }
+
+    #[test]
+    fn bytes_round_trip() {
+        let s = sparse_random(1000, 64, 2);
+        let b = s.to_bytes();
+        assert_eq!(b.len(), 8 + 64 * 8);
+        let s2 = SparseVec::from_bytes(&b).unwrap();
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn bytes_reject_truncated() {
+        let s = sparse_random(100, 10, 3);
+        let b = s.to_bytes();
+        assert!(SparseVec::from_bytes(&b[..b.len() - 1]).is_err());
+        assert!(SparseVec::from_bytes(&b[..4]).is_err());
+    }
+
+    #[test]
+    fn merge_equals_dense_sum() {
+        let a = sparse_random(300, 40, 4);
+        let b = sparse_random(300, 40, 5);
+        let m = a.merge(&b);
+        let mut expect = a.to_dense();
+        for (e, v) in expect.iter_mut().zip(b.to_dense()) {
+            *e += v;
+        }
+        assert_eq!(m.to_dense(), expect);
+        // indices stay sorted
+        assert!(m.idx.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn add_scaled() {
+        let a = sparse_random(50, 5, 6);
+        let mut out = vec![0.0f32; 50];
+        a.add_scaled_into(0.5, &mut out);
+        let expect: Vec<f32> = a.to_dense().iter().map(|v| v * 0.5).collect();
+        assert_eq!(out, expect);
+    }
+}

@@ -1,0 +1,120 @@
+//! Double-sampling threshold estimation (Lin et al. 2018, §System of the
+//! LAGS paper heuristic 2): instead of an exact O(n log n) selection over
+//! the full accumulator, estimate the k-th largest |x| from a subsample.
+//!
+//! The paper uses this to cut the GPU top-k time; here it cuts the host
+//! selection cost from O(n) over the full layer to O(s) over the sample,
+//! which matters for the biggest layers of the DES profiles.
+
+use super::topk::kth_largest_abs;
+use crate::util::rng::Rng;
+
+/// Strided deterministic sampling — mirrors the Pallas artifact
+/// (`compress_sampled` with `sample_idx = arange(0, n, stride)`), so the
+/// host and XLA paths produce identical thresholds.
+pub fn sampled_threshold(x: &[f32], k: usize, stride: usize) -> f32 {
+    let n = x.len();
+    if n == 0 || k == 0 {
+        return f32::INFINITY;
+    }
+    let stride = stride.max(1);
+    let sample: Vec<f32> = x.iter().step_by(stride).copied().collect();
+    let s = sample.len();
+    // ceil(k * s / n), clamped to [1, s] — matches ref.sampled_threshold_ref
+    let ks = ((k * s + n - 1) / n).clamp(1, s);
+    kth_largest_abs(&sample, ks)
+}
+
+/// PRNG-sampled variant (what a GPU implementation would do); statistically
+/// equivalent to the strided variant on exchangeable inputs.
+pub fn sampled_threshold_random(x: &[f32], k: usize, s: usize, rng: &mut Rng) -> f32 {
+    let n = x.len();
+    if n == 0 || k == 0 {
+        return f32::INFINITY;
+    }
+    let s = s.clamp(1, n);
+    let sample: Vec<f32> = (0..s).map(|_| x[rng.below(n)]).collect();
+    let ks = ((k * s + n - 1) / n).clamp(1, s);
+    kth_largest_abs(&sample, ks)
+}
+
+/// Reusable sampled-threshold state (avoids re-allocating the sample buffer
+/// in the trainer hot loop).
+#[derive(Debug, Clone)]
+pub struct SampledThreshold {
+    stride: usize,
+    sample: Vec<f32>,
+}
+
+impl SampledThreshold {
+    pub fn new(stride: usize) -> Self {
+        SampledThreshold { stride: stride.max(1), sample: Vec::new() }
+    }
+
+    pub fn estimate(&mut self, x: &[f32], k: usize) -> f32 {
+        let n = x.len();
+        if n == 0 || k == 0 {
+            return f32::INFINITY;
+        }
+        self.sample.clear();
+        self.sample.extend(x.iter().step_by(self.stride).copied());
+        let s = self.sample.len();
+        let ks = ((k * s + n - 1) / n).clamp(1, s);
+        kth_largest_abs(&self.sample, ks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsify::topk;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn stride_one_is_exact() {
+        let mut r = Rng::new(1);
+        let x: Vec<f32> = (0..500).map(|_| r.normal_f32()).collect();
+        assert_eq!(sampled_threshold(&x, 50, 1), kth_largest_abs(&x, 50));
+    }
+
+    #[test]
+    fn estimate_close_on_gaussian() {
+        let mut r = Rng::new(2);
+        let n = 65536;
+        let x: Vec<f32> = (0..n).map(|_| r.normal_f32()).collect();
+        let k = n / 100;
+        let exact = kth_largest_abs(&x, k);
+        let est = sampled_threshold(&x, k, 64);
+        // kept-count within 4x of target
+        let kept = topk::count_kept(&x, est);
+        assert!(kept >= k / 4 && kept <= k * 4, "kept={kept} k={k} est={est} exact={exact}");
+    }
+
+    #[test]
+    fn random_variant_reasonable() {
+        let mut r = Rng::new(3);
+        let n = 32768;
+        let x: Vec<f32> = (0..n).map(|_| r.normal_f32()).collect();
+        let k = n / 50;
+        let est = sampled_threshold_random(&x, k, n / 32, &mut r);
+        let kept = topk::count_kept(&x, est);
+        assert!(kept >= k / 4 && kept <= k * 4, "kept={kept} k={k}");
+    }
+
+    #[test]
+    fn reusable_state_matches_free_fn() {
+        let mut r = Rng::new(4);
+        let x: Vec<f32> = (0..4096).map(|_| r.normal_f32()).collect();
+        let mut st = SampledThreshold::new(16);
+        assert_eq!(st.estimate(&x, 40), sampled_threshold(&x, 40, 16));
+        // reuse on a second vector
+        let y: Vec<f32> = (0..2048).map(|_| r.normal_f32()).collect();
+        assert_eq!(st.estimate(&y, 20), sampled_threshold(&y, 20, 16));
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(sampled_threshold(&[], 5, 4).is_infinite());
+        assert!(sampled_threshold(&[1.0], 0, 4).is_infinite());
+    }
+}

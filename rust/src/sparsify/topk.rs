@@ -1,0 +1,171 @@
+//! Exact Top-k selection (paper Eq. 4).
+//!
+//! `TopK(x, k)_i = x_i if |x_i| >= thr else 0`, where `thr` is the k-th
+//! largest |x_i|. Matches `ref.kth_largest_abs` / `ref.topk_ref` including
+//! the tie behaviour: every element with |x_i| == thr is kept, so at least
+//! `k` elements survive.
+
+/// The k-th largest |x_i| (k is 1-based). O(n) via quickselect.
+/// k == 0 returns +inf (select nothing); k >= n returns the min |x|.
+pub fn kth_largest_abs(x: &[f32], k: usize) -> f32 {
+    let mut buf = Vec::new();
+    kth_largest_abs_with_buf(x, k, &mut buf)
+}
+
+/// Allocation-free variant for hot loops: `buf` is a reusable scratch
+/// vector (cleared and refilled with |x|). ~2x faster than the allocating
+/// form on the trainer's per-layer cadence (EXPERIMENTS.md §Perf L3-1).
+pub fn kth_largest_abs_with_buf(x: &[f32], k: usize, buf: &mut Vec<f32>) -> f32 {
+    if k == 0 {
+        return f32::INFINITY;
+    }
+    let n = x.len();
+    if n == 0 {
+        return f32::INFINITY;
+    }
+    let k = k.min(n);
+    buf.clear();
+    buf.extend(x.iter().map(|v| v.abs()));
+    // k-th largest == (n-k)-th smallest (0-based); total_cmp avoids the
+    // partial_cmp unwrap branch in the comparator
+    let idx = n - k;
+    let (_, kth, _) = buf.select_nth_unstable_by(idx, f32::total_cmp);
+    *kth
+}
+
+/// Dense-masked TopK: keep |x_i| >= thr(k), zero the rest. Returns (masked,
+/// threshold).
+pub fn topk_mask(x: &[f32], k: usize) -> (Vec<f32>, f32) {
+    let mut out = vec![0.0f32; x.len()];
+    let thr = topk_mask_into(x, k, &mut out);
+    (out, thr)
+}
+
+/// Allocation-free variant for the trainer hot loop; writes into `out`
+/// (must be the same length as `x`), returns the threshold.
+pub fn topk_mask_into(x: &[f32], k: usize, out: &mut [f32]) -> f32 {
+    debug_assert_eq!(x.len(), out.len());
+    let thr = kth_largest_abs(x, k);
+    mask_with_threshold(x, thr, out);
+    thr
+}
+
+/// Apply a precomputed threshold: out_i = x_i if |x_i| >= thr else 0.
+pub fn mask_with_threshold(x: &[f32], thr: f32, out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(x.iter()) {
+        *o = if v.abs() >= thr { v } else { 0.0 };
+    }
+}
+
+/// Split x at the threshold: `kept` gets the TopK part, `resid` gets the
+/// complement (kept + resid == x elementwise). The error-feedback hot path.
+pub fn split_with_threshold(x: &[f32], thr: f32, kept: &mut [f32], resid: &mut [f32]) {
+    debug_assert_eq!(x.len(), kept.len());
+    debug_assert_eq!(x.len(), resid.len());
+    for i in 0..x.len() {
+        let v = x[i];
+        if v.abs() >= thr {
+            kept[i] = v;
+            resid[i] = 0.0;
+        } else {
+            kept[i] = 0.0;
+            resid[i] = v;
+        }
+    }
+}
+
+/// Number of elements that survive a threshold.
+pub fn count_kept(x: &[f32], thr: f32) -> usize {
+    x.iter().filter(|v| v.abs() >= thr).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal_f32()).collect()
+    }
+
+    #[test]
+    fn kth_matches_sort() {
+        let x = randvec(257, 1);
+        for &k in &[1usize, 2, 16, 128, 256, 257] {
+            let mut mags: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+            mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let expect = mags[mags.len() - k];
+            assert_eq!(kth_largest_abs(&x, k), expect, "k={k}");
+        }
+    }
+
+    #[test]
+    fn k_zero_selects_nothing() {
+        let x = randvec(16, 2);
+        let (m, thr) = topk_mask(&x, 0);
+        assert!(thr.is_infinite());
+        assert!(m.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn k_full_selects_everything() {
+        let x = randvec(64, 3);
+        let (m, _) = topk_mask(&x, 64);
+        assert_eq!(m, x);
+        let (m2, _) = topk_mask(&x, 1000); // k > n clamps
+        assert_eq!(m2, x);
+    }
+
+    #[test]
+    fn keeps_at_least_k() {
+        let x = randvec(1024, 4);
+        for &k in &[1usize, 10, 100, 1000] {
+            let (m, _) = topk_mask(&x, k);
+            assert!(m.iter().filter(|&&v| v != 0.0).count() >= k);
+        }
+    }
+
+    #[test]
+    fn kept_dominates_dropped() {
+        let x = randvec(512, 5);
+        let (m, thr) = topk_mask(&x, 32);
+        for (i, &v) in x.iter().enumerate() {
+            if m[i] != 0.0 {
+                assert!(v.abs() >= thr);
+                assert_eq!(m[i], v);
+            } else {
+                assert!(v.abs() < thr);
+            }
+        }
+    }
+
+    #[test]
+    fn ties_all_kept() {
+        let x = vec![1.0f32, -1.0, 1.0, 0.5, -1.0];
+        let (m, thr) = topk_mask(&x, 2);
+        assert_eq!(thr, 1.0);
+        assert_eq!(m, vec![1.0, -1.0, 1.0, 0.0, -1.0]); // 4 kept (ties)
+    }
+
+    #[test]
+    fn split_conserves_mass() {
+        let x = randvec(300, 6);
+        let thr = kth_largest_abs(&x, 30);
+        let mut kept = vec![0.0; 300];
+        let mut resid = vec![0.0; 300];
+        split_with_threshold(&x, thr, &mut kept, &mut resid);
+        for i in 0..300 {
+            assert_eq!(kept[i] + resid[i], x[i]);
+            assert!(kept[i] == 0.0 || resid[i] == 0.0);
+        }
+        assert_eq!(count_kept(&x, thr), kept.iter().filter(|&&v| v != 0.0).count());
+    }
+
+    #[test]
+    fn empty_input() {
+        let (m, thr) = topk_mask(&[], 5);
+        assert!(m.is_empty());
+        assert!(thr.is_infinite());
+    }
+}

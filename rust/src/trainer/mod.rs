@@ -1,0 +1,430 @@
+//! The three distributed trainers the paper compares (Fig. 1):
+//!
+//! * **Dense-SGD** — full gradients, ring allreduce (numerically exact
+//!   data-parallel SGD).
+//! * **SLGS-SGD** — single-layer gradient sparsification: one global TopK
+//!   over the whole flat gradient with error feedback (Lin et al. 2018
+//!   style), aggregated once per iteration.
+//! * **LAGS-SGD** — Algorithm 1: per-layer TopK with error feedback,
+//!   aggregated layer by layer (backprop order), optionally with Eq. 18
+//!   adaptive per-layer ratios and the §5 merge buffer.
+//!
+//! All three share the same AOT `train_step` artifact, the same worker
+//! data shards and the same update rule `v ← v − (1/P)·agg` (momentum
+//! optional), so convergence differences isolate the sparsification
+//! scheme — the paper's Fig. 3 / Table 1 experiment design.
+
+mod report;
+
+pub use report::{MessageStats, TrainReport};
+
+use crate::adaptive::{self, RatioConfig};
+use crate::cluster::Cluster;
+use crate::collectives::{dense::ring_allreduce_mean, NetworkModel};
+use crate::config::TrainConfig;
+use crate::data::Synthetic;
+use crate::metrics::{CurveRecorder, DeltaMonitor};
+use crate::models::ModelProfile;
+use crate::pipeline::desim::{simulate, Schedule, SimParams};
+use crate::runtime::{Metric, ModelRuntime, Runtime};
+use crate::sparsify::CompressorKind;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Which distributed optimizer to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    Dense,
+    Slgs,
+    Lags,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Result<Algorithm> {
+        Ok(match s {
+            "dense" => Algorithm::Dense,
+            "slgs" => Algorithm::Slgs,
+            "lags" => Algorithm::Lags,
+            _ => anyhow::bail!("unknown algorithm {s:?} (dense|slgs|lags)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Dense => "dense",
+            Algorithm::Slgs => "slgs",
+            Algorithm::Lags => "lags",
+        }
+    }
+
+    pub fn schedule(&self) -> Schedule {
+        match self {
+            Algorithm::Dense => Schedule::DensePipelined,
+            Algorithm::Slgs => Schedule::Slgs,
+            Algorithm::Lags => Schedule::Lags,
+        }
+    }
+}
+
+/// Distributed trainer over the logical worker pool.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    model: ModelRuntime,
+    data: Synthetic,
+    cluster: Cluster,
+    /// replicated model parameters v_t
+    params: Vec<f32>,
+    /// momentum buffer over the aggregated update
+    momentum_buf: Vec<f32>,
+    /// per-layer k^(l) (manifest order)
+    ks: Vec<usize>,
+    /// per-layer c^(l) actually in use (manifest order)
+    ratios: Vec<f64>,
+    delta: Option<DeltaMonitor>,
+    /// scratch: aggregated update
+    agg: Vec<f32>,
+    /// scratch: per-worker dense grad buffers for the dense ring
+    ring_bufs: Vec<Vec<f32>>,
+    msg_stats: MessageStats,
+    step_idx: usize,
+}
+
+impl Trainer {
+    /// Load artifacts and build a trainer.
+    pub fn from_artifacts(dir: &str, cfg: TrainConfig) -> Result<Trainer> {
+        let rt = Arc::new(Runtime::load(dir)?);
+        Self::with_runtime(&rt, cfg)
+    }
+
+    pub fn with_runtime(rt: &Arc<Runtime>, cfg: TrainConfig) -> Result<Trainer> {
+        cfg.validate()?;
+        let model = rt.model_runtime(&cfg.model)?;
+        let mm = &model.mm;
+        let d = mm.d;
+        let max_layer = mm.layers.iter().map(|l| l.size).max().unwrap_or(0);
+        let data = Synthetic::for_model(mm, cfg.seed)?;
+        let cluster = Cluster::new(cfg.workers, d, max_layer, cfg.sample_stride);
+
+        // per-layer ratios: uniform c, or Eq. 18 adaptive selection over the
+        // live model's profile on the paper's 16-node 1GbE network model
+        let ratios: Vec<f64> = if cfg.adaptive && cfg.algorithm == Algorithm::Lags {
+            let profile = ModelProfile::from_manifest(mm, 1e12);
+            let net = NetworkModel::gige_16().with_workers(cfg.workers.max(2));
+            let rc = RatioConfig { c_max: cfg.c_max, ..RatioConfig::default() };
+            // select_ratios is backprop-ordered; map back to manifest order
+            let mut r = adaptive::select_ratios(&profile, &net, &rc);
+            r.reverse();
+            r
+        } else {
+            vec![cfg.compression; mm.layers.len()]
+        };
+        let ks: Vec<usize> = mm
+            .layers
+            .iter()
+            .zip(ratios.iter())
+            .map(|(l, &c)| ((l.size as f64 / c).ceil() as usize).clamp(1, l.size))
+            .collect();
+
+        let delta = if cfg.delta_every > 0 && cfg.algorithm == Algorithm::Lags {
+            Some(DeltaMonitor::new(mm.layers.len(), cfg.delta_every, false, cfg.seed ^ 0xde17a))
+        } else {
+            None
+        };
+
+        let params = model.init_params.clone();
+        let ring_bufs = vec![vec![0.0f32; d]; cfg.workers];
+        Ok(Trainer {
+            momentum_buf: vec![0.0; d],
+            agg: vec![0.0; d],
+            params,
+            ks,
+            ratios,
+            delta,
+            data,
+            cluster,
+            model,
+            ring_bufs,
+            msg_stats: MessageStats::default(),
+            step_idx: 0,
+            cfg,
+        })
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    pub fn layer_ks(&self) -> &[usize] {
+        &self.ks
+    }
+
+    /// Effective k for layer `li` at step `t`, honouring the warm-up
+    /// schedule (Lin et al. 2018): the compression ratio ramps
+    /// exponentially c_t = c^((t+1)/warmup) until `warmup_steps`.
+    fn k_at(&self, li: usize, t: usize) -> usize {
+        let size = self.model.mm.layers[li].size;
+        if self.cfg.warmup_steps == 0 || t + 1 >= self.cfg.warmup_steps {
+            return self.ks[li];
+        }
+        let frac = (t + 1) as f64 / self.cfg.warmup_steps as f64;
+        let c_eff = self.ratios[li].powf(frac).max(1.0);
+        ((size as f64 / c_eff).ceil() as usize).clamp(1, size)
+    }
+
+    pub fn ratios(&self) -> &[f64] {
+        &self.ratios
+    }
+
+    /// Run one synchronous iteration; returns the mean training loss.
+    pub fn step(&mut self) -> Result<f64> {
+        let t = self.step_idx;
+        let p = self.cluster.size();
+
+        // --- local gradient computation (the AOT train artifact), per
+        // worker. Params are replica-identical, so they are uploaded to the
+        // device ONCE and shared across the P executions (§Perf L3-2).
+        let params_dev = self.model.params_to_device(&self.params)?;
+        for w in 0..p {
+            let batch = self.data.batch(w, t);
+            let (loss, grad) = self.model.train_step_b(&params_dev, &batch.x, &batch.y)?;
+            self.cluster.workers[w].last_loss = loss;
+            self.cluster.workers[w].grad = grad;
+        }
+
+        // --- momentum correction (local, pre-sparsification) if enabled
+        if self.cfg.local_momentum > 0.0 && self.cfg.algorithm != Algorithm::Dense {
+            let mu = self.cfg.local_momentum as f32;
+            for w in 0..p {
+                self.cluster.workers[w].fold_local_momentum(mu);
+            }
+        }
+
+        // --- aggregate per algorithm
+        self.agg.iter_mut().for_each(|v| *v = 0.0);
+        match self.cfg.algorithm {
+            Algorithm::Dense => self.aggregate_dense()?,
+            Algorithm::Slgs => self.aggregate_slgs()?,
+            Algorithm::Lags => self.aggregate_lags()?,
+        }
+
+        // --- apply: v ← v − (mu·m + agg/P)
+        let inv_p = 1.0 / p as f32;
+        let mu = self.cfg.momentum as f32;
+        for i in 0..self.params.len() {
+            let upd = mu * self.momentum_buf[i] + self.agg[i] * inv_p;
+            self.momentum_buf[i] = upd;
+            self.params[i] -= upd;
+        }
+
+        self.step_idx += 1;
+        Ok(self.cluster.mean_loss())
+    }
+
+    /// Dense-SGD: real ring allreduce over the worker gradients.
+    fn aggregate_dense(&mut self) -> Result<()> {
+        let p = self.cluster.size();
+        let lr = self.cfg.lr as f32;
+        for w in 0..p {
+            self.ring_bufs[w].copy_from_slice(&self.cluster.workers[w].grad);
+        }
+        ring_allreduce_mean(&mut self.ring_bufs);
+        // agg = P * lr * mean  (apply divides by P again)
+        let scale = lr * p as f32;
+        for (a, &g) in self.agg.iter_mut().zip(self.ring_bufs[0].iter()) {
+            *a = scale * g;
+        }
+        self.msg_stats.record(self.model.mm.d * 4 * 2, 1); // dense allreduce traffic
+        Ok(())
+    }
+
+    /// SLGS-SGD: one global TopK over the whole flat accumulator per worker.
+    fn aggregate_slgs(&mut self) -> Result<()> {
+        let d = self.model.mm.d;
+        let t = self.step_idx;
+        let lr = self.cfg.lr as f32;
+        let k_total: usize =
+            (0..self.ks.len()).map(|li| self.k_at(li, t)).sum::<usize>().clamp(1, d);
+        let exact = !matches!(
+            self.cfg.compressor,
+            CompressorKind::HostSampled | CompressorKind::XlaSampled
+        );
+        let mut kept = vec![0.0f32; d];
+        for w in 0..self.cluster.size() {
+            let worker = &mut self.cluster.workers[w];
+            let grad = std::mem::take(&mut worker.grad);
+            let stats = worker.ef.compress_layer(0, &grad, lr, k_total, exact, &mut kept);
+            worker.grad = grad;
+            self.msg_stats.record(stats.kept * 8, 1);
+            for i in 0..d {
+                self.agg[i] += kept[i];
+            }
+        }
+        Ok(())
+    }
+
+    /// LAGS-SGD (Algorithm 1): per-layer TopK with error feedback, layer
+    /// loop in backprop order (L → 1 in the paper's indexing).
+    fn aggregate_lags(&mut self) -> Result<()> {
+        let lr = self.cfg.lr as f32;
+        let t = self.step_idx;
+        let layers = self.model.mm.layers.clone();
+        let sampled = matches!(
+            self.cfg.compressor,
+            CompressorKind::HostSampled | CompressorKind::XlaSampled
+        );
+        let sample_delta = self.delta.as_ref().map(|m| m.should_sample(t)).unwrap_or(false);
+
+        let mut messages_this_iter = 0usize;
+        let mut bytes_this_iter = 0usize;
+        for (li, layer) in layers.iter().enumerate().rev() {
+            let (off, n, k) = (layer.offset, layer.size, self.k_at(li, t));
+
+            // Fig. 2 instrumentation: collect all workers' accumulators
+            if sample_delta {
+                let accs: Vec<Vec<f32>> = (0..self.cluster.size())
+                    .map(|w| {
+                        let worker = &self.cluster.workers[w];
+                        worker.ef.peek_acc(off, &worker.grad[off..off + n], lr)
+                    })
+                    .collect();
+                if let Some(m) = self.delta.as_mut() {
+                    m.record(li, t, &accs, k);
+                }
+            }
+
+            for w in 0..self.cluster.size() {
+                let worker = &mut self.cluster.workers[w];
+                let grad = std::mem::take(&mut worker.grad);
+                let kept_n: usize;
+                match self.cfg.compressor {
+                    CompressorKind::HostExact | CompressorKind::HostSampled => {
+                        let kept = &mut worker.kept[..n];
+                        let stats = worker.ef.compress_layer(
+                            off,
+                            &grad[off..off + n],
+                            lr,
+                            k,
+                            !sampled,
+                            kept,
+                        );
+                        kept_n = stats.kept;
+                        for i in 0..n {
+                            self.agg[off + i] += kept[i];
+                        }
+                    }
+                    CompressorKind::XlaExact | CompressorKind::XlaSampled => {
+                        let resid = worker.ef.residual_slice(off, n).to_vec();
+                        let (sparse, new_resid, _thr) = self.model.compress_layer_xla(
+                            layer,
+                            &grad[off..off + n],
+                            &resid,
+                            lr,
+                            k,
+                            sampled,
+                        )?;
+                        worker.ef.write_residual(off, &new_resid);
+                        kept_n = sparse.iter().filter(|&&v| v != 0.0).count();
+                        for i in 0..n {
+                            self.agg[off + i] += sparse[i];
+                        }
+                    }
+                }
+                worker.grad = grad;
+                bytes_this_iter += kept_n * 8;
+                messages_this_iter += 1;
+            }
+        }
+        self.msg_stats.record(bytes_this_iter, messages_this_iter);
+        Ok(())
+    }
+
+    /// Held-out evaluation: mean (loss, metric) over `batches` eval batches.
+    pub fn evaluate(&self, batches: usize) -> Result<(f64, f64)> {
+        let mut tl = 0.0;
+        let mut tm = 0.0;
+        for i in 0..batches {
+            let b = self.data.eval_batch(i);
+            let (loss, metric) = self.model.eval_step(&self.params, &b.x, &b.y)?;
+            tl += loss as f64;
+            tm += metric as f64;
+        }
+        Ok((tl / batches as f64, tm / batches as f64))
+    }
+
+    /// Simulated per-iteration wall-clock on the paper's testbed (the DES
+    /// with this model's profile at the configured P and ratios).
+    pub fn simulated_iteration(&self) -> crate::pipeline::desim::IterationBreakdown {
+        let profile = ModelProfile::from_manifest(&self.model.mm, 1e12);
+        let net = NetworkModel::gige_16().with_workers(self.cfg.workers.max(2));
+        let params = match self.cfg.algorithm {
+            Algorithm::Dense => SimParams::dense(&profile),
+            _ => {
+                let mut p = SimParams::uniform(&profile, self.cfg.compression);
+                // backprop order = reversed manifest order
+                p.ratios = self.ratios.iter().rev().cloned().collect();
+                p.merge_bytes = self.cfg.merge_bytes as f64;
+                p
+            }
+        };
+        simulate(&profile, &net, self.cfg.algorithm.schedule(), &params)
+    }
+
+    /// Run the full configured training loop.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let mut curve = CurveRecorder::new(&["train_loss", "eval_loss", "metric"]);
+        let wall_start = std::time::Instant::now();
+        let mut final_eval = (f64::NAN, f64::NAN);
+        for s in 0..self.cfg.steps {
+            let loss = self.step()?;
+            let do_eval = self.cfg.eval_every > 0
+                && ((s + 1) % self.cfg.eval_every == 0 || s + 1 == self.cfg.steps);
+            if do_eval {
+                final_eval = self.evaluate(self.cfg.eval_batches)?;
+                curve.push(s + 1, &[loss, final_eval.0, final_eval.1]);
+            } else {
+                curve.push(s + 1, &[loss, f64::NAN, f64::NAN]);
+            }
+            if self.cfg.verbose && (s % 10 == 0 || s + 1 == self.cfg.steps) {
+                eprintln!(
+                    "[{}] step {:>5} loss {:.4} eval {:.4}/{:.4}",
+                    self.cfg.algorithm.name(),
+                    s + 1,
+                    loss,
+                    final_eval.0,
+                    final_eval.1
+                );
+            }
+        }
+        let wall = wall_start.elapsed().as_secs_f64();
+        let sim = self.simulated_iteration();
+        let metric_name = match self.model.mm.metric {
+            Metric::Accuracy => "accuracy",
+            Metric::PplLoss => "ppl_loss",
+        };
+        Ok(TrainReport {
+            algorithm: self.cfg.algorithm,
+            model: self.cfg.model.clone(),
+            steps: self.cfg.steps,
+            final_loss: curve.last("train_loss").unwrap_or(f64::NAN),
+            final_eval_loss: final_eval.0,
+            final_metric: final_eval.1,
+            metric_name: metric_name.to_string(),
+            curve,
+            delta_fraction_holding: self.delta.as_ref().map(|m| m.fraction_holding()),
+            delta_max: self.delta.as_ref().map(|m| m.max_delta()),
+            msg_stats: self.msg_stats.clone(),
+            wall_seconds: wall,
+            sim_iter_seconds: sim.iter_time,
+            sim_hidden_seconds: sim.hidden,
+        })
+    }
+
+    /// Access the delta monitor's per-layer series (Fig. 2 harness).
+    pub fn delta_series(&self) -> Option<&[Vec<(usize, f64)>]> {
+        self.delta.as_ref().map(|m| m.series.as_slice())
+    }
+
+    pub fn model_manifest(&self) -> &crate::runtime::ModelManifest {
+        &self.model.mm
+    }
+}

@@ -1,0 +1,155 @@
+//! Training run reports: everything the experiment harnesses print/save.
+
+use super::Algorithm;
+use crate::metrics::CurveRecorder;
+use crate::util::json::Json;
+
+/// Communication volume accounting (what crossed the simulated wire).
+#[derive(Debug, Clone, Default)]
+pub struct MessageStats {
+    pub total_bytes: usize,
+    pub total_messages: usize,
+    pub iterations: usize,
+}
+
+impl MessageStats {
+    pub fn record(&mut self, bytes: usize, messages: usize) {
+        self.total_bytes += bytes;
+        self.total_messages += messages;
+        self.iterations += 1;
+    }
+
+    pub fn bytes_per_iter(&self) -> f64 {
+        if self.iterations == 0 {
+            return 0.0;
+        }
+        self.total_bytes as f64 / self.iterations as f64
+    }
+
+    pub fn messages_per_iter(&self) -> f64 {
+        if self.iterations == 0 {
+            return 0.0;
+        }
+        self.total_messages as f64 / self.iterations as f64
+    }
+}
+
+/// Result of one full training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub algorithm: Algorithm,
+    pub model: String,
+    pub steps: usize,
+    pub final_loss: f64,
+    pub final_eval_loss: f64,
+    /// accuracy in [0,1] or LM loss (ppl = exp)
+    pub final_metric: f64,
+    pub metric_name: String,
+    pub curve: CurveRecorder,
+    /// fraction of delta^(l) samples <= 1 (None if not monitored)
+    pub delta_fraction_holding: Option<f64>,
+    pub delta_max: Option<f64>,
+    pub msg_stats: MessageStats,
+    /// actual wall-clock of this CPU run
+    pub wall_seconds: f64,
+    /// DES-simulated per-iteration time on the paper's 16-node 1GbE testbed
+    pub sim_iter_seconds: f64,
+    pub sim_hidden_seconds: f64,
+}
+
+impl TrainReport {
+    /// Human metric: accuracy as-is, perplexity = exp(loss) for LMs.
+    pub fn headline_metric(&self) -> f64 {
+        if self.metric_name == "ppl_loss" {
+            self.final_metric.exp()
+        } else {
+            self.final_metric
+        }
+    }
+
+    pub fn headline_name(&self) -> &'static str {
+        if self.metric_name == "ppl_loss" {
+            "perplexity"
+        } else {
+            "accuracy"
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("algorithm", Json::Str(self.algorithm.name().into())),
+            ("model", Json::Str(self.model.clone())),
+            ("steps", Json::Num(self.steps as f64)),
+            ("final_loss", Json::Num(self.final_loss)),
+            ("final_eval_loss", Json::Num(self.final_eval_loss)),
+            ("final_metric", Json::Num(self.final_metric)),
+            ("headline_metric", Json::Num(self.headline_metric())),
+            ("metric_name", Json::Str(self.metric_name.clone())),
+            (
+                "delta_fraction_holding",
+                self.delta_fraction_holding.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("delta_max", self.delta_max.map(Json::Num).unwrap_or(Json::Null)),
+            ("bytes_per_iter", Json::Num(self.msg_stats.bytes_per_iter())),
+            ("messages_per_iter", Json::Num(self.msg_stats.messages_per_iter())),
+            ("wall_seconds", Json::Num(self.wall_seconds)),
+            ("sim_iter_seconds", Json::Num(self.sim_iter_seconds)),
+            ("sim_hidden_seconds", Json::Num(self.sim_hidden_seconds)),
+        ])
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{:<6} {:<12} steps={:<5} loss={:.4} {}={:.4} bytes/iter={:.0} sim_iter={:.4}s",
+            self.algorithm.name(),
+            self.model,
+            self.steps,
+            self.final_loss,
+            self.headline_name(),
+            self.headline_metric(),
+            self.msg_stats.bytes_per_iter(),
+            self.sim_iter_seconds
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn message_stats_averages() {
+        let mut m = MessageStats::default();
+        m.record(100, 2);
+        m.record(300, 4);
+        assert_eq!(m.bytes_per_iter(), 200.0);
+        assert_eq!(m.messages_per_iter(), 3.0);
+        let empty = MessageStats::default();
+        assert_eq!(empty.bytes_per_iter(), 0.0);
+    }
+
+    #[test]
+    fn headline_metric_ppl() {
+        let r = TrainReport {
+            algorithm: Algorithm::Lags,
+            model: "m".into(),
+            steps: 1,
+            final_loss: 1.0,
+            final_eval_loss: 1.0,
+            final_metric: 2.0,
+            metric_name: "ppl_loss".into(),
+            curve: CurveRecorder::new(&["train_loss"]),
+            delta_fraction_holding: None,
+            delta_max: None,
+            msg_stats: MessageStats::default(),
+            wall_seconds: 0.0,
+            sim_iter_seconds: 0.0,
+            sim_hidden_seconds: 0.0,
+        };
+        assert!((r.headline_metric() - 2.0f64.exp()).abs() < 1e-12);
+        assert_eq!(r.headline_name(), "perplexity");
+        // json serializes
+        let j = r.to_json();
+        assert_eq!(j.get("algorithm").unwrap().as_str().unwrap(), "lags");
+    }
+}

@@ -1,0 +1,101 @@
+//! Micro-benchmark harness (criterion is not in the vendored crate set).
+//!
+//! Measures wall-clock over adaptive iteration counts, reports median /
+//! mean / p95 with outlier-robust statistics, and prints rows in a stable
+//! machine-grepable format:
+//!
+//! ```text
+//! bench <name> median=1.234ms mean=1.301ms p95=1.9ms iters=4096
+//! ```
+//!
+//! The `cargo bench` targets (`rust/benches/*.rs`, harness = false) use
+//! this to regenerate each paper table/figure.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box as bb;
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub median: f64,
+    pub mean: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub iters: usize,
+}
+
+impl Stats {
+    pub fn line(&self, name: &str) -> String {
+        format!(
+            "bench {name} median={} mean={} p95={} min={} iters={}",
+            super::fmt_secs(self.median),
+            super::fmt_secs(self.mean),
+            super::fmt_secs(self.p95),
+            super::fmt_secs(self.min),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark `f`, auto-scaling iteration count to fill ~`budget`.
+pub fn bench_with_budget<F: FnMut()>(budget: Duration, mut f: F) -> Stats {
+    // warm-up + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let per_sample = (once * 1.2).max(1e-6);
+    let samples = ((budget.as_secs_f64() / per_sample) as usize).clamp(5, 2000);
+
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let p95 = times[(times.len() * 95 / 100).min(times.len() - 1)];
+    Stats { median, mean, p95, min: times[0], iters: samples }
+}
+
+/// Benchmark with the default 1-second budget and print the stats line.
+pub fn run<F: FnMut()>(name: &str, f: F) -> Stats {
+    let s = bench_with_budget(Duration::from_secs(1), f);
+    println!("{}", s.line(name));
+    s
+}
+
+/// Benchmark a function returning a value (kept alive via black_box).
+pub fn run_val<T, F: FnMut() -> T>(name: &str, mut f: F) -> Stats {
+    run(name, move || {
+        black_box(f());
+    })
+}
+
+/// Print a markdown-style table row (used by the table benches to emit the
+/// same rows the paper reports).
+pub fn table_row(cols: &[String]) {
+    println!("| {} |", cols.join(" | "));
+}
+
+pub fn table_header(cols: &[&str]) {
+    println!("| {} |", cols.join(" | "));
+    println!("|{}|", cols.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_sane() {
+        let s = bench_with_budget(Duration::from_millis(50), || {
+            bb((0..1000).sum::<u64>());
+        });
+        assert!(s.iters >= 5);
+        assert!(s.min <= s.median && s.median <= s.p95);
+        assert!(s.mean > 0.0);
+    }
+}

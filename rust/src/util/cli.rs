@@ -1,0 +1,125 @@
+//! Tiny CLI argument parser (clap is not in the vendored crate set).
+//!
+//! Grammar: `lags <subcommand> [--flag] [--key value]...` — exactly what the
+//! coordinator binary and the examples need. Unknown keys are collected so
+//! callers can reject them with a helpful message.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]). `--key value` and
+    /// `--key=value` both work; a `--key` followed by another `--` token or
+    /// end-of-args is treated as boolean `true`.
+    pub fn parse_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    let is_val = iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                    if is_val {
+                        out.flags.insert(stripped.to_string(), iter.next().unwrap());
+                    } else {
+                        out.flags.insert(stripped.to_string(), "true".to_string());
+                    }
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error out if any flag is not in `known` (catches typos).
+    pub fn reject_unknown(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k}; known: {}", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn basic() {
+        let a = parse("train --model mlp --steps 100 --verbose --lr=0.05 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("model"), Some("mlp"));
+        assert_eq!(a.usize_or("steps", 1).unwrap(), 100);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.f64_or("lr", 0.1).unwrap(), 0.05);
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.usize_or("steps", 7).unwrap(), 7);
+        assert_eq!(a.str_or("model", "mlp"), "mlp");
+        assert!(!a.bool("verbose"));
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("x --steps abc");
+        assert!(a.usize_or("steps", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        let a = parse("x --good 1 --bad 2");
+        assert!(a.reject_unknown(&["good"]).is_err());
+        assert!(a.reject_unknown(&["good", "bad"]).is_ok());
+    }
+}

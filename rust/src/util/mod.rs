@@ -1,0 +1,77 @@
+//! Self-contained utilities (the image vendors only `xla` + `anyhow`, so
+//! JSON, PRNG, CLI parsing, the bench harness and the property-test harness
+//! live here instead of third-party crates).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Round `n` up to the next power of two (compress bucket sizing; must
+/// mirror `python/compile/aot.py::next_pow2`).
+pub fn next_pow2(n: usize) -> usize {
+    let mut p = 1;
+    while p < n {
+        p *= 2;
+    }
+    p
+}
+
+/// Round `n` up to a multiple of `align` (apply-artifact padding; must
+/// mirror `python/compile/aot.py::pad_to`).
+pub fn pad_to(n: usize, align: usize) -> usize {
+    n.div_ceil(align) * align
+}
+
+/// Human-readable byte count.
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.2} KB", b / 1e3)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Human-readable seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(1000), 1024);
+        assert_eq!(next_pow2(1024), 1024);
+        assert_eq!(next_pow2(1025), 2048);
+    }
+
+    #[test]
+    fn padding() {
+        assert_eq!(pad_to(1, 4096), 4096);
+        assert_eq!(pad_to(4096, 4096), 4096);
+        assert_eq!(pad_to(4097, 4096), 8192);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert_eq!(fmt_bytes(2.5e6), "2.50 MB");
+        assert_eq!(fmt_secs(0.0015), "1.500 ms");
+        assert_eq!(fmt_secs(2.0), "2.000 s");
+    }
+}

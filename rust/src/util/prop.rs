@@ -1,0 +1,92 @@
+//! Minimal property-testing harness (proptest is not in the vendored crate
+//! set). Runs a property over many seeded random cases; on failure it
+//! re-runs a simple shrink loop (halving sizes) and reports the smallest
+//! failing seed/size it found.
+//!
+//! Used by `rust/tests/proptest_invariants.rs` for the coordinator
+//! invariants: Top-k semantics, error-feedback conservation, sparse codec
+//! round-trips, Lemma 1, DES monotonicity.
+
+use super::rng::Rng;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, seed: 0xC0FFEE }
+    }
+}
+
+/// A generated case: seeded RNG plus a size hint in [min_size, max_size].
+pub struct Case {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+/// Run `prop` over `cfg.cases` random cases. `prop` returns Err(msg) to fail.
+/// Panics with diagnostics on the first failure (after shrinking the size).
+pub fn check<F>(name: &str, cfg: Config, min_size: usize, max_size: usize, mut prop: F)
+where
+    F: FnMut(&mut Case) -> Result<(), String>,
+{
+    let mut meta = Rng::new(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let case_seed = meta.next_u64();
+        let size = min_size + Rng::new(case_seed ^ 0x517E).below(max_size - min_size + 1);
+        let mut case = Case { rng: Rng::new(case_seed), size };
+        if let Err(msg) = prop(&mut case) {
+            // shrink: halve the size until it passes, report smallest failure
+            let mut failing_size = size;
+            let mut s = size / 2;
+            while s >= min_size.max(1) {
+                let mut c = Case { rng: Rng::new(case_seed), size: s };
+                if prop(&mut c).is_err() {
+                    failing_size = s;
+                }
+                if s == min_size { break; }
+                s = (s / 2).max(min_size);
+                if s == min_size && failing_size == min_size { break; }
+            }
+            panic!(
+                "property `{name}` failed: case #{case_idx} seed={case_seed:#x} \
+                 size={size} (smallest failing size {failing_size}): {msg}",
+            );
+        }
+    }
+}
+
+/// Convenience: check with default config.
+pub fn quick<F>(name: &str, min_size: usize, max_size: usize, prop: F)
+where
+    F: FnMut(&mut Case) -> Result<(), String>,
+{
+    check(name, Config::default(), min_size, max_size, prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        quick("sum-commutes", 1, 64, |c| {
+            count += 1;
+            let a = c.rng.uniform();
+            let b = c.rng.uniform();
+            if (a + b - (b + a)).abs() < 1e-15 { Ok(()) } else { Err("no".into()) }
+        });
+        assert_eq!(count, Config::default().cases);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics() {
+        quick("always-fails", 8, 64, |c| {
+            if c.size < 8 { Ok(()) } else { Err(format!("size {} >= 8", c.size)) }
+        });
+    }
+}

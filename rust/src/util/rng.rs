@@ -1,0 +1,177 @@
+//! Deterministic PRNG (SplitMix64 core) + distributions.
+//!
+//! Every stochastic component of the coordinator (data synthesis, shard
+//! sampling, RandK draws, property tests) goes through this module so runs
+//! are exactly reproducible from a single seed, independent of platform.
+
+/// SplitMix64: tiny, fast, passes BigCrush as a 64-bit mixer; ideal for
+/// seeding and for the modest statistical demands of workload synthesis.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    /// cached second Box-Muller sample
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9e3779b97f4a7c15), spare_normal: None }
+    }
+
+    /// Derive an independent stream (worker p, layer l, ...) from this one.
+    pub fn fork(&self, stream: u64) -> Self {
+        let mut mix = Rng::new(self.state ^ stream.wrapping_mul(0xff51afd7ed558ccd));
+        mix.next_u64();
+        mix
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // multiply-shift; bias is negligible for n << 2^64
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.uniform() * (hi - lo)
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        let (u1, u2) = (self.uniform().max(1e-300), self.uniform());
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.spare_normal = Some(r * s);
+        r * c
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Fill a slice with N(0, sigma^2) f32 samples.
+    pub fn fill_normal(&mut self, out: &mut [f32], sigma: f32) {
+        for x in out.iter_mut() {
+            *x = self.normal_f32() * sigma;
+        }
+    }
+
+    /// Sample k distinct indices from [0, n) (Floyd's algorithm, O(k)).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below(j + 1);
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        out
+    }
+
+    /// Sample from a categorical distribution given cumulative weights.
+    pub fn categorical(&mut self, cdf: &[f64]) -> usize {
+        let u = self.uniform() * cdf.last().copied().unwrap_or(1.0);
+        match cdf.binary_search_by(|w| w.partial_cmp(&u).unwrap()) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+        .min(cdf.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let base = Rng::new(7);
+        let mut a = base.fork(1);
+        let mut b = base.fork(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let n = 20000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn distinct_sampling() {
+        let mut r = Rng::new(3);
+        let s = r.sample_distinct(100, 30);
+        assert_eq!(s.len(), 30);
+        let set: std::collections::HashSet<_> = s.iter().collect();
+        assert_eq!(set.len(), 30);
+        assert!(s.iter().all(|&i| i < 100));
+        // full draw
+        let all = r.sample_distinct(10, 10);
+        let set: std::collections::HashSet<_> = all.iter().collect();
+        assert_eq!(set.len(), 10);
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(4);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(5);
+        let cdf = [0.1, 0.2, 1.0]; // heavy third bucket
+        let mut counts = [0usize; 3];
+        for _ in 0..3000 {
+            counts[r.categorical(&cdf)] += 1;
+        }
+        assert!(counts[2] > counts[0] + counts[1]);
+    }
+}

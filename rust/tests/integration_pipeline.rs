@@ -1,0 +1,194 @@
+//! Pipeline-level integration: DES reproductions of the paper's headline
+//! timing claims + merge buffer numerics + adaptive ratios end-to-end.
+
+use lags::adaptive::{perf_model, ratio, RatioConfig};
+use lags::collectives::NetworkModel;
+use lags::models::zoo;
+use lags::pipeline::desim::{simulate, Schedule, SimParams};
+use lags::pipeline::merge::MergeBuffer;
+use lags::sparsify::sparse::SparseVec;
+use lags::util::rng::Rng;
+
+fn net16() -> NetworkModel {
+    NetworkModel::gige_16()
+}
+
+/// Paper headline: LAGS-SGD speedup over Dense-SGD between 2.86x and 8.52x
+/// on the tested models (Table 2, S1 column).
+#[test]
+fn table2_s1_speedups_in_paper_band() {
+    for m in zoo::table2_models() {
+        let c = if m.name == "lstm_ptb" { 250.0 } else { 1000.0 };
+        let sp = SimParams::uniform(&m, c);
+        let dense = simulate(&m, &net16(), Schedule::DensePipelined, &SimParams::dense(&m));
+        let lags = simulate(&m, &net16(), Schedule::Lags, &sp);
+        let s1 = dense.iter_time / lags.iter_time;
+        assert!(
+            (1.8..12.0).contains(&s1),
+            "{}: S1 = {s1} outside the plausible band",
+            m.name
+        );
+    }
+}
+
+/// Paper headline: LAGS achieves a meaningful fraction of S_max, and the
+/// LSTM (unbalanced layers) achieves the LOWEST fraction of the three.
+#[test]
+fn table2_smax_fraction_ordering() {
+    let mut fractions = std::collections::BTreeMap::new();
+    for m in zoo::table2_models() {
+        let c = if m.name == "lstm_ptb" { 250.0 } else { 1000.0 };
+        let sp = SimParams::uniform(&m, c);
+        let slgs = simulate(&m, &net16(), Schedule::Slgs, &sp);
+        let lags = simulate(&m, &net16(), Schedule::Lags, &sp);
+        let s2 = slgs.iter_time / lags.iter_time;
+        let smax = perf_model::smax(m.t_f, m.t_b(), slgs.t_comm);
+        let frac = (s2 - 1.0) / (smax - 1.0);
+        assert!(frac > 0.2, "{}: fraction {frac} too low", m.name);
+        fractions.insert(m.name.clone(), frac);
+    }
+    let lstm = fractions["lstm_ptb"];
+    assert!(
+        lstm <= fractions["inception_v4"],
+        "lstm fraction {lstm} should be the lowest (paper: 39.3% vs 96.5%)"
+    );
+}
+
+/// SLGS calibration anchors (how the zoo profiles were fit): simulated
+/// SLGS times must reproduce the paper's measured SLGS column.
+#[test]
+fn table2_slgs_calibration_anchors() {
+    let paper = [("resnet50", 0.67), ("inception_v4", 1.60), ("lstm_ptb", 1.02)];
+    for (name, expect) in paper {
+        let m = zoo::by_name(name).unwrap();
+        let c = if name == "lstm_ptb" { 250.0 } else { 1000.0 };
+        let b = simulate(&m, &net16(), Schedule::Slgs, &SimParams::uniform(&m, c));
+        let rel = (b.iter_time - expect).abs() / expect;
+        assert!(rel < 0.10, "{name}: SLGS {:.3}s vs paper {expect}s", b.iter_time);
+    }
+}
+
+/// Eq. 18 + DES composition: adaptive per-layer ratios must hide at least
+/// as much communication as the paper's flat c_u on the conv profiles.
+#[test]
+fn adaptive_ratios_hide_more_than_uniform() {
+    for name in ["resnet50", "inception_v4"] {
+        let m = zoo::by_name(name).unwrap();
+        let cfg = RatioConfig::default();
+        let rs = ratio::select_ratios(&m, &net16(), &cfg);
+        let mut p_adaptive = SimParams::uniform(&m, 1000.0);
+        p_adaptive.ratios = rs;
+        let uni = simulate(&m, &net16(), Schedule::Lags, &SimParams::uniform(&m, 1000.0));
+        let ada = simulate(&m, &net16(), Schedule::Lags, &p_adaptive);
+        // adaptive sends MORE data (lower c where it fits)...
+        let uni_bytes: f64 = uni.events.iter().map(|e| e.wire_bytes).sum();
+        let ada_bytes: f64 = ada.events.iter().map(|e| e.wire_bytes).sum();
+        assert!(ada_bytes >= uni_bytes, "{name}: adaptive sent less than uniform");
+        // ...while keeping the iteration within 10% of the uniform-c one
+        assert!(
+            ada.iter_time <= uni.iter_time * 1.10 + 1e-9,
+            "{name}: adaptive iter {} vs uniform {}",
+            ada.iter_time,
+            uni.iter_time
+        );
+    }
+}
+
+/// Numeric merge buffer: grouped payloads must decode to exactly the same
+/// aggregate as ungrouped, regardless of capacity.
+#[test]
+fn merge_buffer_numerics_invariant_under_capacity() {
+    let mut rng = Rng::new(5);
+    let n_layers = 12;
+    let payloads: Vec<SparseVec> = (0..n_layers)
+        .map(|_| {
+            let mut d = vec![0.0f32; 400];
+            for i in rng.sample_distinct(400, 25) {
+                d[i] = rng.normal_f32();
+            }
+            SparseVec::from_dense(&d)
+        })
+        .collect();
+
+    let collect = |capacity: usize| -> (usize, Vec<f32>) {
+        let mut buf = MergeBuffer::new(capacity);
+        for (i, p) in payloads.iter().enumerate() {
+            buf.push(i, p.clone());
+        }
+        buf.flush();
+        let groups = buf.take_groups();
+        let n_groups = groups.len();
+        // order-preserving decode
+        let mut seen = Vec::new();
+        for g in &groups {
+            for (li, p) in g.layer_indices.iter().zip(g.payloads.iter()) {
+                seen.push((*li, p.clone()));
+            }
+        }
+        let mut agg = vec![0.0f32; 400 * n_layers];
+        for (li, p) in seen {
+            p.add_into(&mut agg[li * 400..(li + 1) * 400]);
+        }
+        (n_groups, agg)
+    };
+
+    let (g0, a0) = collect(0); // no merging
+    let (g1, a1) = collect(600); // some merging
+    let (g2, a2) = collect(usize::MAX); // single flush
+    assert_eq!(g0, n_layers);
+    assert!(g1 < g0);
+    assert_eq!(g2, 1);
+    assert_eq!(a0, a1);
+    assert_eq!(a0, a2);
+}
+
+/// Eq. 19 sweep: S_max peaks at r = 1 and the peak equals 1 + t_b/(t_f+t_b).
+#[test]
+fn smax_sweep_shape() {
+    let (t_f, t_b) = (0.18, 0.353); // resnet50 calibration
+    let peak = 1.0 + t_b / (t_f + t_b);
+    let mut max_seen: f64 = 0.0;
+    for i in 0..=40 {
+        let r = 0.05 * (i as f64 + 1.0);
+        let s = perf_model::smax(t_f, t_b, r * t_b);
+        assert!(s <= peak + 1e-9);
+        max_seen = max_seen.max(s);
+    }
+    assert!((max_seen - peak).abs() < 1e-6, "peak {max_seen} vs bound {peak}");
+}
+
+/// Fig 1 qualitative shapes: LAGS starts communicating before backprop
+/// ends; SLGS strictly after.
+#[test]
+fn fig1_comm_start_ordering() {
+    let m = zoo::resnet50();
+    let p = SimParams::uniform(&m, 1000.0);
+    let comp_end = m.t_comp();
+    let lags = simulate(&m, &net16(), Schedule::Lags, &p);
+    let slgs = simulate(&m, &net16(), Schedule::Slgs, &p);
+    assert!(lags.events.first().unwrap().start < comp_end, "LAGS did not overlap");
+    assert!(slgs.events.first().unwrap().start >= comp_end - 1e-12);
+    // dense pipelined also overlaps
+    let dense = simulate(&m, &net16(), Schedule::DensePipelined, &SimParams::dense(&m));
+    assert!(dense.events.first().unwrap().start < comp_end);
+}
+
+/// The bound 1 + t_b/(t_f+t_b) from the paper's §Bound discussion caps all
+/// achievable S2 values in the DES.
+#[test]
+fn s2_never_exceeds_upper_bound() {
+    for m in zoo::table2_models() {
+        let bound = 1.0 + m.t_b() / (m.t_f + m.t_b());
+        for c in [100.0, 250.0, 1000.0] {
+            let sp = SimParams::uniform(&m, c);
+            let slgs = simulate(&m, &net16(), Schedule::Slgs, &sp);
+            let lags = simulate(&m, &net16(), Schedule::Lags, &sp);
+            let s2 = slgs.iter_time / lags.iter_time;
+            assert!(
+                s2 <= bound + 0.35,
+                "{} c={c}: S2 {s2} way above bound {bound}",
+                m.name
+            );
+        }
+    }
+}

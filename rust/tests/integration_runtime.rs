@@ -1,0 +1,221 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These close the three-layer loop: the Pallas kernels were verified
+//! against ref.py in pytest; here the SAME artifacts are executed from
+//! rust and checked against the rust host implementations, proving the
+//! host/XLA compressor paths are interchangeable and the train/eval/apply
+//! artifacts have the contracted signatures.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use lags::runtime::{BatchData, Runtime};
+use lags::sparsify::{topk, ErrorFeedback};
+use lags::util::rng::Rng;
+use std::sync::Arc;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(Runtime::load("artifacts").expect("load artifacts")))
+}
+
+fn randvec(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal_f32() * scale).collect()
+}
+
+#[test]
+fn manifest_models_all_load() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.manifest.models.contains_key("mlp"));
+    assert!(rt.manifest.models.contains_key("translm_e2e"));
+    for m in rt.manifest.models.values() {
+        m.validate().unwrap();
+        assert_eq!(rt.manifest.load_init_params(m).unwrap().len(), m.d);
+    }
+}
+
+#[test]
+fn train_step_runs_and_grad_is_finite() {
+    let Some(rt) = runtime() else { return };
+    let mr = rt.model_runtime("mlp").unwrap();
+    let mm = &mr.mm;
+    let x = BatchData::F32(randvec(mm.x.elements(), 1, 1.0));
+    let y = BatchData::I32(vec![0; mm.y.elements()]);
+    let (loss, grad) = mr.train_step(&mr.init_params, &x, &y).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert_eq!(grad.len(), mm.d);
+    assert!(grad.iter().all(|g| g.is_finite()));
+    // gradient must be nonzero somewhere
+    assert!(grad.iter().any(|&g| g != 0.0));
+}
+
+#[test]
+fn train_step_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let mr = rt.model_runtime("cnn").unwrap();
+    let mm = &mr.mm;
+    let x = BatchData::F32(randvec(mm.x.elements(), 2, 1.0));
+    let y = BatchData::I32(vec![1; mm.y.elements()]);
+    let (l1, g1) = mr.train_step(&mr.init_params, &x, &y).unwrap();
+    let (l2, g2) = mr.train_step(&mr.init_params, &x, &y).unwrap();
+    assert_eq!(l1, l2);
+    assert_eq!(g1, g2);
+}
+
+#[test]
+fn eval_step_metric_contract() {
+    let Some(rt) = runtime() else { return };
+    // classifier: metric is accuracy in [0,1]
+    let mr = rt.model_runtime("mlp").unwrap();
+    let x = BatchData::F32(randvec(mr.mm.x.elements(), 3, 1.0));
+    let y = BatchData::I32(vec![2; mr.mm.y.elements()]);
+    let (loss, acc) = mr.eval_step(&mr.init_params, &x, &y).unwrap();
+    assert!(loss.is_finite());
+    assert!((0.0..=1.0).contains(&acc));
+    // LM: metric == loss
+    let lm = rt.model_runtime("grulm").unwrap();
+    let x = BatchData::I32(vec![1; lm.mm.x.elements()]);
+    let y = BatchData::I32(vec![2; lm.mm.y.elements()]);
+    let (loss, metric) = lm.eval_step(&lm.init_params, &x, &y).unwrap();
+    assert!((loss - metric).abs() < 1e-5);
+}
+
+#[test]
+fn xla_compress_matches_host_exact() {
+    let Some(rt) = runtime() else { return };
+    let mr = rt.model_runtime("mlp").unwrap();
+    let lr = 0.07f32;
+    for layer in &mr.mm.layers {
+        let n = layer.size;
+        let k = (n / 50).max(1);
+        let grad = randvec(n, 10 + layer.offset as u64, 1.0);
+        let resid = randvec(n, 11 + layer.offset as u64, 0.2);
+
+        // host reference
+        let mut ef = ErrorFeedback::new(n, 64);
+        ef.write_residual(0, &resid);
+        let mut kept = vec![0.0f32; n];
+        ef.compress_layer(0, &grad, lr, k, true, &mut kept);
+
+        // XLA Pallas artifact
+        let (sparse, new_resid, thr) =
+            mr.compress_layer_xla(layer, &grad, &resid, lr, k, false).unwrap();
+
+        assert!(thr.is_finite());
+        for i in 0..n {
+            assert!(
+                (sparse[i] - kept[i]).abs() < 1e-5,
+                "layer {} i {}: xla {} host {}",
+                layer.name,
+                i,
+                sparse[i],
+                kept[i]
+            );
+            assert!((new_resid[i] - ef.residual()[i]).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn xla_compress_error_feedback_conserves_mass() {
+    let Some(rt) = runtime() else { return };
+    let mr = rt.model_runtime("cnn").unwrap();
+    let layer = mr.mm.layers.iter().max_by_key(|l| l.size).unwrap();
+    let n = layer.size;
+    let grad = randvec(n, 20, 1.0);
+    let resid = randvec(n, 21, 0.3);
+    let lr = 0.1f32;
+    let (sparse, new_resid, _) =
+        mr.compress_layer_xla(layer, &grad, &resid, lr, n / 100 + 1, false).unwrap();
+    for i in 0..n {
+        let acc = resid[i] + lr * grad[i];
+        assert!((sparse[i] + new_resid[i] - acc).abs() < 1e-5, "i={i}");
+    }
+}
+
+#[test]
+fn xla_compress_sampled_keeps_roughly_k() {
+    let Some(rt) = runtime() else { return };
+    let mr = rt.model_runtime("mlp").unwrap();
+    let layer = mr.mm.layers.iter().max_by_key(|l| l.size).unwrap();
+    let n = layer.size;
+    let k = n / 100;
+    let grad = randvec(n, 30, 1.0);
+    let resid = vec![0.0f32; n];
+    let (sparse, _, _) = mr.compress_layer_xla(layer, &grad, &resid, 1.0, k, true).unwrap();
+    let nnz = sparse.iter().filter(|&&v| v != 0.0).count();
+    assert!(nnz >= k / 4 && nnz <= k * 4, "nnz={nnz} k={k}");
+}
+
+#[test]
+fn xla_apply_matches_host() {
+    let Some(rt) = runtime() else { return };
+    let mr = rt.model_runtime("cnn").unwrap();
+    let dp = mr.mm.d_padded;
+    let params = randvec(dp, 40, 1.0);
+    let mom = randvec(dp, 41, 0.05);
+    let agg = randvec(dp, 42, 0.01);
+    let mu = 0.9f32;
+    let (p2, m2) = mr.apply_update(&params, &mom, &agg, mu).unwrap();
+    for i in 0..dp {
+        let m_expect = mu * mom[i] + agg[i];
+        assert!((m2[i] - m_expect).abs() < 1e-5, "mom i={i}");
+        assert!((p2[i] - (params[i] - m_expect)).abs() < 1e-5, "param i={i}");
+    }
+}
+
+#[test]
+fn sgd_on_artifact_reduces_loss() {
+    // pure-runtime sanity: repeated (train_step; apply) must overfit a
+    // fixed batch through the AOT artifacts alone (no trainer involved)
+    let Some(rt) = runtime() else { return };
+    let mr = rt.model_runtime("mlp").unwrap();
+    let mm = mr.mm.clone();
+    let x = BatchData::F32(randvec(mm.x.elements(), 50, 1.0));
+    let mut yv = vec![0i32; mm.y.elements()];
+    let mut rng = Rng::new(51);
+    for v in yv.iter_mut() {
+        *v = rng.below(mm.classes) as i32;
+    }
+    let y = BatchData::I32(yv);
+
+    let mut params = mr.init_params.clone();
+    let mut mom = vec![0.0f32; mm.d_padded];
+    let (loss0, _) = mr.train_step(&params, &x, &y).unwrap();
+    let mut last = loss0;
+    for _ in 0..25 {
+        let (loss, grad) = mr.train_step(&params, &x, &y).unwrap();
+        last = loss;
+        // agg = lr * grad, padded; apply via the Pallas artifact
+        let mut agg = vec![0.0f32; mm.d_padded];
+        for (a, g) in agg.iter_mut().zip(grad.iter()) {
+            *a = 0.3 * g;
+        }
+        let mut ppad = vec![0.0f32; mm.d_padded];
+        ppad[..mm.d].copy_from_slice(&params);
+        let (p2, m2) = mr.apply_update(&ppad, &mom, &agg, 0.0).unwrap();
+        params.copy_from_slice(&p2[..mm.d]);
+        mom = m2;
+    }
+    assert!(last < 0.6 * loss0, "loss {loss0} -> {last}");
+}
+
+#[test]
+fn topk_threshold_stability_across_layers() {
+    // host threshold on padded bucket == threshold on raw layer (zeros pad)
+    let Some(rt) = runtime() else { return };
+    let mr = rt.model_runtime("grulm").unwrap();
+    for layer in &mr.mm.layers {
+        let n = layer.size;
+        let k = (n / 20).max(1);
+        let x = randvec(n, 60 + layer.offset as u64, 1.0);
+        let mut padded = vec![0.0f32; layer.bucket];
+        padded[..n].copy_from_slice(&x);
+        let t1 = topk::kth_largest_abs(&x, k);
+        let t2 = topk::kth_largest_abs(&padded, k);
+        assert_eq!(t1, t2, "layer {}", layer.name);
+    }
+}

@@ -1,0 +1,394 @@
+//! Property-based tests over the coordinator invariants, using the
+//! in-crate harness (`lags::util::prop`) — randomized cases with seeded
+//! shrinking, proptest-style.
+//!
+//! Invariant groups:
+//!   1. Top-k semantics (Eq. 4)
+//!   2. Error-feedback mass conservation (Alg. 1 l.7-8)
+//!   3. Sparse codec round trips + merge associativity
+//!   4. Ring allreduce == naive mean (collective correctness)
+//!   5. Lemma 1 on gaussian ensembles (the convergence keystone)
+//!   6. DES sanity: monotonicity + bounds
+//!   7. Eq. 18/19 model coherence
+
+use lags::adaptive::{perf_model, ratio, RatioConfig};
+use lags::collectives::{dense, sparse_agg, NetworkModel};
+use lags::models::{zoo, LayerProfile, ModelProfile};
+use lags::pipeline::desim::{simulate, Schedule, SimParams};
+use lags::sparsify::{randk, sparse::SparseVec, topk, ErrorFeedback};
+use lags::util::prop::{quick, Case};
+use lags::util::rng::Rng;
+
+fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// 1. Top-k semantics
+// ---------------------------------------------------------------------------
+#[test]
+fn prop_topk_keeps_largest_magnitudes() {
+    quick("topk-largest", 2, 2048, |c: &mut Case| {
+        let x = randvec(&mut c.rng, c.size);
+        let k = 1 + c.rng.below(c.size);
+        let (m, thr) = topk::topk_mask(&x, k);
+        let kept: Vec<f32> = m.iter().filter(|&&v| v != 0.0).map(|v| v.abs()).collect();
+        if kept.len() < k {
+            return Err(format!("kept {} < k {}", kept.len(), k));
+        }
+        let min_kept = kept.iter().cloned().fold(f32::INFINITY, f32::min);
+        for (i, &v) in x.iter().enumerate() {
+            if m[i] == 0.0 && v.abs() > min_kept {
+                return Err(format!("dropped |{v}| > min kept {min_kept}"));
+            }
+            if m[i] != 0.0 && v.abs() < thr {
+                return Err("kept below threshold".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topk_error_beats_randk_expectation() {
+    // single-vector Assumption-1 precursor: TopK error <= E[RandK error]
+    quick("topk-vs-randk", 8, 1024, |c: &mut Case| {
+        let x = randvec(&mut c.rng, c.size);
+        let k = 1 + c.rng.below(c.size);
+        let (m, _) = topk::topk_mask(&x, k);
+        let err: f64 = x.iter().zip(m.iter()).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
+        let rand_err = randk::randk_expected_error_sq(&x, k);
+        if err <= rand_err + 1e-9 {
+            Ok(())
+        } else {
+            Err(format!("topk err {err} > randk {rand_err}"))
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 2. Error feedback
+// ---------------------------------------------------------------------------
+#[test]
+fn prop_error_feedback_mass_conservation() {
+    quick("ef-conservation", 4, 512, |c: &mut Case| {
+        let n = c.size;
+        let mut ef = ErrorFeedback::new(n, 1 + c.rng.below(16));
+        let lr = c.rng.range_f64(1e-3, 1.0) as f32;
+        let mut kept = vec![0.0f32; n];
+        for _ in 0..5 {
+            let g = randvec(&mut c.rng, n);
+            let k = 1 + c.rng.below(n);
+            let exact = c.rng.below(2) == 0;
+            let before = ef.peek_acc(0, &g, lr);
+            ef.compress_layer(0, &g, lr, k, exact, &mut kept);
+            for i in 0..n {
+                let total = kept[i] + ef.residual()[i];
+                if (total - before[i]).abs() > 1e-5 {
+                    return Err(format!("mass leak at {i}: {} vs {}", total, before[i]));
+                }
+                if kept[i] != 0.0 && ef.residual()[i] != 0.0 {
+                    return Err(format!("element {i} in both kept and residual"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 3. Sparse codec
+// ---------------------------------------------------------------------------
+#[test]
+fn prop_sparse_round_trip() {
+    quick("sparse-round-trip", 1, 2048, |c: &mut Case| {
+        let n = c.size;
+        let mut dense = vec![0.0f32; n];
+        let nnz = c.rng.below(n + 1);
+        for i in c.rng.sample_distinct(n, nnz) {
+            dense[i] = c.rng.normal_f32();
+        }
+        let s = SparseVec::from_dense(&dense);
+        if s.to_dense() != dense {
+            return Err("dense round trip".into());
+        }
+        let s2 = SparseVec::from_bytes(&s.to_bytes()).map_err(|e| e.to_string())?;
+        if s2 != s {
+            return Err("bytes round trip".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_merge_is_associative_sum() {
+    quick("merge-assoc", 4, 512, |c: &mut Case| {
+        let n = c.size;
+        let mk = |c: &mut Case| {
+            let mut d = vec![0.0f32; n];
+            let nnz = c.rng.below(n / 2 + 1);
+            for i in c.rng.sample_distinct(n, nnz) {
+                d[i] = c.rng.normal_f32();
+            }
+            SparseVec::from_dense(&d)
+        };
+        let (a, b, z) = (mk(c), mk(c), mk(c));
+        let left = a.merge(&b).merge(&z).to_dense();
+        let right = a.merge(&b.merge(&z)).to_dense();
+        for i in 0..n {
+            if (left[i] - right[i]).abs() > 1e-4 {
+                return Err(format!("assoc mismatch at {i}"));
+            }
+        }
+        // and equals the flat allgather sum
+        let mut flat = vec![0.0f32; n];
+        sparse_agg::sparse_allgather_sum(&[a, b, z], &mut flat);
+        for i in 0..n {
+            if (left[i] - flat[i]).abs() > 1e-4 {
+                return Err(format!("flat mismatch at {i}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 4. Ring allreduce
+// ---------------------------------------------------------------------------
+#[test]
+fn prop_ring_allreduce_matches_naive() {
+    quick("ring-allreduce", 1, 300, |c: &mut Case| {
+        let p = 1 + c.rng.below(9);
+        let n = c.size;
+        let mut bufs: Vec<Vec<f32>> = (0..p).map(|_| randvec(&mut c.rng, n)).collect();
+        let expect = dense::naive_mean(&bufs);
+        dense::ring_allreduce_mean(&mut bufs);
+        for r in 0..p {
+            if bufs[r] != bufs[0] {
+                return Err(format!("rank {r} diverged"));
+            }
+            for i in 0..n {
+                if (bufs[r][i] - expect[i]).abs() > 1e-4 {
+                    return Err(format!("p={p} rank {r} i {i}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 5. Lemma 1
+// ---------------------------------------------------------------------------
+#[test]
+fn prop_lemma1_gaussian_ensembles() {
+    // layer-wise TopK aggregation error <= (1 - 1/c_max) ||sum x||^2
+    // on gaussian ensembles (the regime Fig. 2 verifies empirically)
+    quick("lemma1", 32, 512, |c: &mut Case| {
+        let p = 2 + c.rng.below(7);
+        // random layer partition of the flat dim
+        let n_layers = 1 + c.rng.below(4);
+        let sizes: Vec<usize> = (0..n_layers).map(|_| 16 + c.rng.below(c.size)).collect();
+        let d: usize = sizes.iter().sum();
+        let ks: Vec<usize> = sizes.iter().map(|&s| 1 + c.rng.below(s / 2 + 1)).collect();
+        let xs: Vec<Vec<f32>> = (0..p).map(|_| randvec(&mut c.rng, d)).collect();
+
+        let mut agg = vec![0.0f32; d];
+        let mut agg_topk = vec![0.0f32; d];
+        for x in &xs {
+            for i in 0..d {
+                agg[i] += x[i];
+            }
+            let mut off = 0;
+            for (li, &sz) in sizes.iter().enumerate() {
+                let (m, _) = topk::topk_mask(&x[off..off + sz], ks[li]);
+                for i in 0..sz {
+                    agg_topk[off + i] += m[i];
+                }
+                off += sz;
+            }
+        }
+        let lhs: f64 =
+            agg.iter().zip(agg_topk.iter()).map(|(&a, &s)| ((a - s) as f64).powi(2)).sum();
+        let cmax = sizes
+            .iter()
+            .zip(ks.iter())
+            .map(|(&s, &k)| s as f64 / k as f64)
+            .fold(1.0f64, f64::max);
+        let norm: f64 = agg.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let rhs = (1.0 - 1.0 / cmax) * norm;
+        if lhs <= rhs + 1e-6 {
+            Ok(())
+        } else {
+            Err(format!("Lemma1 violated: lhs={lhs} rhs={rhs} cmax={cmax}"))
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 6. DES sanity
+// ---------------------------------------------------------------------------
+fn random_profile(c: &mut Case) -> ModelProfile {
+    let l = 2 + c.rng.below(12);
+    let layers = (0..l)
+        .map(|i| LayerProfile {
+            name: format!("l{i}"),
+            params: 1000 + c.rng.below(1_000_000),
+            t_b: c.rng.range_f64(1e-4, 0.05),
+        })
+        .collect();
+    ModelProfile { name: "rand".into(), t_f: c.rng.range_f64(1e-3, 0.1), layers }
+}
+
+#[test]
+fn prop_des_lags_never_slower_than_slgs() {
+    quick("des-lags-le-slgs", 1, 100, |c: &mut Case| {
+        let m = random_profile(c);
+        let net = NetworkModel {
+            alpha: c.rng.range_f64(1e-5, 2e-3),
+            bandwidth: c.rng.range_f64(1e7, 1e10),
+            workers: 2 + c.rng.below(31),
+        };
+        let cr = c.rng.range_f64(1.0, 2000.0);
+        let p = SimParams::uniform(&m, cr);
+        let lags = simulate(&m, &net, Schedule::Lags, &p);
+        let slgs = simulate(&m, &net, Schedule::Slgs, &p);
+        // LAGS launches one sparsification per layer where SLGS launches
+        // one total, so per-layer FIXED costs (spar_fixed, and per-group
+        // alpha latencies beyond the first) are LAGS overhead that overlap
+        // may or may not recover — the §5 small-message trade-off. The
+        // invariant is: LAGS never loses by more than those fixed costs.
+        let l = m.layers.len() as f64;
+        let groups = lags.events.len() as f64;
+        let p_minus_1 = (net.workers.max(1) - 1) as f64;
+        let slack = (l - 1.0) * p.spar_fixed + (groups - 1.0) * p_minus_1 * net.alpha;
+        if lags.iter_time <= slgs.iter_time + slack + 1e-9 {
+            Ok(())
+        } else {
+            Err(format!(
+                "lags {} > slgs {} + slack {}",
+                lags.iter_time, slgs.iter_time, slack
+            ))
+        }
+    });
+}
+
+#[test]
+fn prop_des_iter_bounds() {
+    quick("des-bounds", 1, 100, |c: &mut Case| {
+        let m = random_profile(c);
+        let net = NetworkModel {
+            alpha: c.rng.range_f64(1e-5, 2e-3),
+            bandwidth: c.rng.range_f64(1e7, 1e10),
+            workers: 1 + c.rng.below(32),
+        };
+        for sched in [
+            Schedule::DensePipelined,
+            Schedule::DenseSingle,
+            Schedule::Slgs,
+            Schedule::Lags,
+        ] {
+            let params = match sched {
+                Schedule::DensePipelined | Schedule::DenseSingle => SimParams::dense(&m),
+                _ => SimParams::uniform(&m, c.rng.range_f64(1.0, 1000.0)),
+            };
+            let b = simulate(&m, &net, sched, &params);
+            let comp = b.t_f + b.t_b;
+            if b.iter_time < comp - 1e-9 {
+                return Err(format!("{sched:?} iter below compute"));
+            }
+            if b.iter_time < b.t_comm - 1e-9 {
+                return Err(format!("{sched:?} iter below comm"));
+            }
+            if b.iter_time > comp + b.t_comm + 1e-6 {
+                return Err(format!("{sched:?} iter above serial sum"));
+            }
+            if b.hidden < -1e-12 || b.hidden > b.t_comm + 1e-9 {
+                return Err(format!("{sched:?} hidden out of range"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_des_monotone_in_bandwidth() {
+    quick("des-bandwidth-monotone", 1, 50, |c: &mut Case| {
+        let m = random_profile(c);
+        let base = NetworkModel {
+            alpha: 5e-4,
+            bandwidth: c.rng.range_f64(1e7, 1e9),
+            workers: 2 + c.rng.below(15),
+        };
+        let fast = NetworkModel { bandwidth: base.bandwidth * 4.0, ..base };
+        let p = SimParams::uniform(&m, 100.0);
+        let slow_t = simulate(&m, &base, Schedule::Lags, &p).iter_time;
+        let fast_t = simulate(&m, &fast, Schedule::Lags, &p).iter_time;
+        if fast_t <= slow_t + 1e-9 {
+            Ok(())
+        } else {
+            Err(format!("faster net slower: {fast_t} > {slow_t}"))
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 7. Eq. 18 / Eq. 19 coherence
+// ---------------------------------------------------------------------------
+#[test]
+fn prop_smax_equals_direct_form() {
+    quick("smax-direct", 1, 100, |c: &mut Case| {
+        let t_f = c.rng.range_f64(0.0, 1.0);
+        let t_b = c.rng.range_f64(1e-3, 1.0);
+        let t_c = c.rng.range_f64(1e-6, 2.0);
+        let a = perf_model::smax(t_f, t_b, t_c);
+        let total = t_f + t_b + t_c;
+        let direct = total / (total - t_b.min(t_c));
+        if (a - direct).abs() < 1e-9 {
+            Ok(())
+        } else {
+            Err(format!("smax {a} != direct {direct}"))
+        }
+    });
+}
+
+#[test]
+fn prop_ratio_selection_fits_or_caps() {
+    quick("eq18-fits", 1, 30, |c: &mut Case| {
+        let m = random_profile(c);
+        let net = NetworkModel {
+            alpha: c.rng.range_f64(1e-6, 1e-3),
+            bandwidth: c.rng.range_f64(1e7, 1e10),
+            workers: 2 + c.rng.below(31),
+        };
+        let cfg = RatioConfig::default();
+        let rs = ratio::select_ratios(&m, &net, &cfg);
+        for (i, &cr) in rs.iter().enumerate() {
+            if !(cfg.c_min..=cfg.c_max).contains(&cr) {
+                return Err(format!("c out of bounds: {cr}"));
+            }
+            // interior solutions must satisfy the Eq. 18 constraint
+            if i + 1 < m.layers.len() && cr < cfg.c_max - 1e-6 && cr > cfg.c_min + 1e-6 {
+                let d = m.layers[i].params;
+                let spar = cfg.spar_fixed + cfg.spar_per_elem * d as f64;
+                let t = net.layer_comm_time(d, cr) + spar;
+                if t > m.layers[i + 1].t_b + 1e-9 {
+                    return Err(format!("layer {i} does not fit: {t}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// sanity anchor: the published zoo profiles obey the same invariants
+#[test]
+fn zoo_profiles_pass_des_invariants() {
+    let net = NetworkModel::gige_16();
+    for m in zoo::table2_models() {
+        let p = SimParams::uniform(&m, 1000.0);
+        let b = simulate(&m, &net, Schedule::Lags, &p);
+        assert!(b.iter_time >= m.t_comp() - 1e-9);
+        assert!(b.hidden <= b.t_comm);
+    }
+}
