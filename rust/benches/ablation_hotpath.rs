@@ -4,7 +4,12 @@
 //!   * host compress vs XLA/Pallas compress artifact (ablation_compress_path)
 //!   * sparse codec encode/decode/merge throughput
 //!   * ring allreduce throughput
-//!   * full LAGS trainer iteration (the end-to-end hot loop)
+//!   * sequential-vs-parallel trainer iteration over the native runtime
+//!     at P ∈ {4, 8, 16} (the `--threads` worker fan-out speedup)
+//!   * full LAGS trainer iteration over artifacts (when present)
+//!
+//! Results are also written to `BENCH_hotpath.json` (name, ns/iter,
+//! throughput) so the perf trajectory is trackable across PRs.
 //!
 //!     cargo bench --bench ablation_hotpath
 
@@ -58,9 +63,13 @@ fn main() {
     };
     let sv = SparseVec::from_dense(&x);
     let thr = topk::kth_largest_abs(&x, n / 100);
-    bench::run_val("sparse_encode_1M_1pct", || SparseVec::from_dense_threshold(&x, thr));
+    bench::run_items("sparse_encode_1M_1pct", n, || {
+        bb(SparseVec::from_dense_threshold(&x, thr));
+    });
     let mut out = vec![0.0f32; n];
-    bench::run(&format!("sparse_decode_add_nnz{}", sv.nnz()), || sv.add_into(bb(&mut out)));
+    bench::run_items(&format!("sparse_decode_add_nnz{}", sv.nnz()), sv.nnz(), || {
+        sv.add_into(bb(&mut out))
+    });
     let sv2 = SparseVec::from_dense_threshold(&randvec(n, 4), thr);
     bench::run_val("sparse_merge", || sv.merge(&sv2));
 
@@ -68,48 +77,101 @@ fn main() {
     for n in [65_536usize, 1 << 20] {
         let base: Vec<Vec<f32>> = (0..8).map(|p| randvec(n, 100 + p as u64)).collect();
         let mut bufs = base.clone();
-        bench::run(&format!("ring_allreduce_P8_n{n}"), || {
+        bench::run_items(&format!("ring_allreduce_P8_n{n}"), 8 * n, || {
             bufs.clone_from(&base);
             ring_allreduce_mean(bb(&mut bufs));
         });
     }
 
-    // end-to-end trainer iterations need artifacts
-    if std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("\n# full trainer iteration (mlp, P=4, c=100) — host vs xla compress");
-        let rt = Arc::new(Runtime::load("artifacts").unwrap());
-        for (label, comp) in [
-            ("host", lags::sparsify::CompressorKind::HostExact),
-            ("host-sampled", lags::sparsify::CompressorKind::HostSampled),
-            ("xla", lags::sparsify::CompressorKind::XlaExact),
-            ("xla-sampled", lags::sparsify::CompressorKind::XlaSampled),
-        ] {
-            let mut cfg = TrainConfig::default_for("mlp");
+    // --- sequential vs parallel worker hot loop (native runtime, always
+    // runs). The acceptance bar: >= 2x on trainer_iter_lags at P=8 with
+    // threads >= 4 on a multi-core machine.
+    println!("\n# parallel worker hot loop (native runtime, mlp_deep, c=100)");
+    let nrt = Arc::new(Runtime::native(42));
+    for p in [4usize, 8, 16] {
+        let mut seq_median = f64::NAN;
+        for threads in [1usize, 4, 8] {
+            let mut cfg = TrainConfig::default_for("mlp_deep");
             cfg.algorithm = Algorithm::Lags;
-            cfg.workers = 4;
-            cfg.steps = 1;
-            cfg.compression = 100.0;
-            cfg.compressor = comp;
-            cfg.eval_every = 0;
-            let mut t = Trainer::with_runtime(&rt, cfg).unwrap();
-            bench::run(&format!("trainer_iter_lags_{label}"), || {
-                t.step().unwrap();
-            });
-        }
-        // algorithm comparison at the same settings
-        for alg in [Algorithm::Dense, Algorithm::Slgs, Algorithm::Lags] {
-            let mut cfg = TrainConfig::default_for("mlp");
-            cfg.algorithm = alg;
-            cfg.workers = 4;
+            cfg.workers = p;
+            cfg.threads = threads;
             cfg.steps = 1;
             cfg.compression = 100.0;
             cfg.eval_every = 0;
-            let mut t = Trainer::with_runtime(&rt, cfg).unwrap();
-            bench::run(&format!("trainer_iter_{}", alg.name()), || {
+            let mut t = Trainer::with_runtime(&nrt, cfg).unwrap();
+            let s = bench::run(&format!("trainer_iter_lags_P{p}_threads{threads}"), || {
                 t.step().unwrap();
             });
+            if threads == 1 {
+                seq_median = s.median;
+            } else {
+                println!(
+                    "  speedup trainer_iter_lags P={p} threads={threads}: {:.2}x",
+                    seq_median / s.median
+                );
+            }
         }
-    } else {
-        println!("\n(skipping trainer benches: run `make artifacts` first)");
     }
+    // algorithm comparison at P=8, sequential vs 8 threads
+    for alg in [Algorithm::Dense, Algorithm::Slgs, Algorithm::Lags] {
+        for threads in [1usize, 8] {
+            let mut cfg = TrainConfig::default_for("mlp_deep");
+            cfg.algorithm = alg;
+            cfg.workers = 8;
+            cfg.threads = threads;
+            cfg.steps = 1;
+            cfg.compression = 100.0;
+            cfg.eval_every = 0;
+            let mut t = Trainer::with_runtime(&nrt, cfg).unwrap();
+            bench::run(&format!("trainer_iter_{}_P8_threads{threads}", alg.name()), || {
+                t.step().unwrap();
+            });
+        }
+    }
+
+    // end-to-end trainer iterations over artifacts (PJRT builds only)
+    let artifacts_rt = if std::path::Path::new("artifacts/manifest.json").exists() {
+        Runtime::load("artifacts").map(Arc::new).map_err(|e| e.to_string())
+    } else {
+        Err("run `make artifacts` first".to_string())
+    };
+    match artifacts_rt {
+        Ok(rt) => {
+            println!("\n# full trainer iteration (mlp, P=4, c=100) — host vs xla compress");
+            for (label, comp) in [
+                ("host", lags::sparsify::CompressorKind::HostExact),
+                ("host-sampled", lags::sparsify::CompressorKind::HostSampled),
+                ("xla", lags::sparsify::CompressorKind::XlaExact),
+                ("xla-sampled", lags::sparsify::CompressorKind::XlaSampled),
+            ] {
+                let mut cfg = TrainConfig::default_for("mlp");
+                cfg.algorithm = Algorithm::Lags;
+                cfg.workers = 4;
+                cfg.steps = 1;
+                cfg.compression = 100.0;
+                cfg.compressor = comp;
+                cfg.eval_every = 0;
+                let mut t = Trainer::with_runtime(&rt, cfg).unwrap();
+                bench::run(&format!("trainer_iter_lags_{label}"), || {
+                    t.step().unwrap();
+                });
+            }
+            // algorithm comparison at the same settings
+            for alg in [Algorithm::Dense, Algorithm::Slgs, Algorithm::Lags] {
+                let mut cfg = TrainConfig::default_for("mlp");
+                cfg.algorithm = alg;
+                cfg.workers = 4;
+                cfg.steps = 1;
+                cfg.compression = 100.0;
+                cfg.eval_every = 0;
+                let mut t = Trainer::with_runtime(&rt, cfg).unwrap();
+                bench::run(&format!("trainer_iter_{}", alg.name()), || {
+                    t.step().unwrap();
+                });
+            }
+        }
+        Err(e) => println!("\n(skipping artifact trainer benches: {e})"),
+    }
+
+    bench::write_json("BENCH_hotpath.json").expect("write BENCH_hotpath.json");
 }

@@ -48,4 +48,6 @@ fn main() {
             simulate(&m, &net_p, Schedule::Lags, &sp).iter_time
         });
     }
+
+    bench::write_json("BENCH_table2.json").expect("write BENCH_table2.json");
 }

@@ -8,17 +8,26 @@
 //! deployment; only the wall-clock comes from the DES instead of a real
 //! NIC (DESIGN.md §Hardware-Adaptation).
 
-use crate::sparsify::ErrorFeedback;
+use crate::sparsify::{ErrorFeedback, SparseVec};
 
 /// Per-replica state.
+///
+/// The worker is the unit of parallelism in the trainer hot loop: gradient
+/// compute, momentum correction and error-feedback compression all operate
+/// on state owned here, so the P workers can run on separate threads with
+/// no shared mutable aggregation inside the parallel region (the
+/// rank-ordered reduction over `msgs` happens afterwards, sequentially).
 pub struct Worker {
     pub id: usize,
     /// error-feedback residuals over the flat parameter vector
     pub ef: ErrorFeedback,
     /// scratch: last computed gradient (flat)
     pub grad: Vec<f32>,
-    /// scratch: per-layer kept (TopK) buffer, sized to the largest layer
-    pub kept: Vec<f32>,
+    /// scratch: per-layer outgoing sparse messages (LAGS wire format,
+    /// indices local to the layer slice); buffers reused across steps
+    pub msgs: Vec<SparseVec>,
+    /// scratch: whole-flat-vector sparse message (SLGS wire format)
+    pub msg_flat: SparseVec,
     /// local momentum u_t for momentum correction (Lin et al. 2018);
     /// allocated lazily on first use
     pub local_mom: Vec<f32>,
@@ -41,15 +50,23 @@ impl Worker {
 }
 
 impl Worker {
-    pub fn new(id: usize, d: usize, max_layer: usize, sample_stride: usize) -> Worker {
+    pub fn new(id: usize, d: usize, sample_stride: usize) -> Worker {
         Worker {
             id,
             ef: ErrorFeedback::new(d, sample_stride),
             grad: vec![0.0; d],
-            kept: vec![0.0; max_layer],
+            msgs: Vec::new(),
+            msg_flat: SparseVec::new(d),
             local_mom: Vec::new(),
             last_loss: f32::NAN,
         }
+    }
+
+    /// Size the per-layer message scratch for a model's layer table. Called
+    /// once by the trainer; after the first step the message buffers reach
+    /// their steady-state capacity and the hot loop stops allocating.
+    pub fn ensure_message_scratch(&mut self, layer_sizes: &[usize]) {
+        self.msgs = layer_sizes.iter().map(|&n| SparseVec::new(n)).collect();
     }
 }
 
@@ -59,8 +76,8 @@ pub struct Cluster {
 }
 
 impl Cluster {
-    pub fn new(p: usize, d: usize, max_layer: usize, sample_stride: usize) -> Cluster {
-        Cluster { workers: (0..p).map(|i| Worker::new(i, d, max_layer, sample_stride)).collect() }
+    pub fn new(p: usize, d: usize, sample_stride: usize) -> Cluster {
+        Cluster { workers: (0..p).map(|i| Worker::new(i, d, sample_stride)).collect() }
     }
 
     pub fn size(&self) -> usize {
@@ -85,17 +102,29 @@ mod tests {
 
     #[test]
     fn construction() {
-        let c = Cluster::new(4, 100, 60, 16);
+        let c = Cluster::new(4, 100, 16);
         assert_eq!(c.size(), 4);
         assert_eq!(c.workers[3].id, 3);
         assert_eq!(c.workers[0].ef.dim(), 100);
-        assert_eq!(c.workers[0].kept.len(), 60);
+        assert_eq!(c.workers[0].msg_flat.len, 100);
         assert_eq!(c.total_residual_norm_sq(), 0.0);
     }
 
     #[test]
+    fn message_scratch_sized_per_layer() {
+        let mut c = Cluster::new(2, 100, 16);
+        for w in &mut c.workers {
+            w.ensure_message_scratch(&[40, 60]);
+        }
+        assert_eq!(c.workers[1].msgs.len(), 2);
+        assert_eq!(c.workers[1].msgs[0].len, 40);
+        assert_eq!(c.workers[1].msgs[1].len, 60);
+        assert_eq!(c.workers[1].msgs[1].nnz(), 0);
+    }
+
+    #[test]
     fn mean_loss() {
-        let mut c = Cluster::new(2, 10, 10, 1);
+        let mut c = Cluster::new(2, 10, 1);
         c.workers[0].last_loss = 1.0;
         c.workers[1].last_loss = 3.0;
         assert_eq!(c.mean_loss(), 2.0);

@@ -16,6 +16,23 @@ use crate::sparsify::sparse::SparseVec;
 /// Deterministic: the sum order is rank 0, 1, ..., P-1 for every replica.
 pub fn sparse_allgather_sum(messages: &[SparseVec], out: &mut [f32]) {
     out.iter_mut().for_each(|v| *v = 0.0);
+    sparse_add_rank_ordered(messages, out);
+}
+
+/// The trainer hot-path variant: reduce rank-ordered messages into an
+/// accumulator that the caller already zeroed (the trainer zeroes its
+/// dense `agg` once per iteration, so re-clearing every layer slice would
+/// reintroduce an O(d) dense pass per layer). Accepts any iterator over
+/// message refs so per-worker-owned messages can be reduced without
+/// collecting them into a contiguous slice. Cost is O(Σ nnz) — the O(P·k)
+/// aggregation Algorithm 1 line 9 calls for. The sum order is exactly the
+/// iteration order; pass ranks 0..P-1 to stay bit-identical to
+/// [`sparse_allgather_sum`], which every replica of an AllGather-based
+/// sparse S-SGD performs locally.
+pub fn sparse_add_rank_ordered<'a, I>(messages: I, out: &mut [f32])
+where
+    I: IntoIterator<Item = &'a SparseVec>,
+{
     for m in messages {
         m.add_into(out);
     }

@@ -17,6 +17,11 @@ pub struct TrainConfig {
     pub algorithm: Algorithm,
     /// logical data-parallel workers P
     pub workers: usize,
+    /// OS threads for the per-worker hot loop (gradient compute + error
+    /// feedback compression). 1 = sequential baseline; 0 = one per core.
+    /// Results are bit-identical for every value — the reduction stays
+    /// rank-ordered outside the parallel region (DESIGN.md §Threading).
+    pub threads: usize,
     pub steps: usize,
     pub lr: f64,
     /// momentum on the aggregated update (0 = plain Algorithm 1)
@@ -57,6 +62,7 @@ impl TrainConfig {
             model: model.to_string(),
             algorithm: Algorithm::Lags,
             workers: 4,
+            threads: 1,
             steps: 200,
             lr: 0.05,
             momentum: 0.0,
@@ -83,6 +89,7 @@ impl TrainConfig {
                 "model" => self.model = val.as_str()?.to_string(),
                 "algorithm" => self.algorithm = Algorithm::parse(val.as_str()?)?,
                 "workers" => self.workers = val.as_usize()?,
+                "threads" => self.threads = val.as_usize()?,
                 "steps" => self.steps = val.as_usize()?,
                 "lr" => self.lr = val.as_f64()?,
                 "momentum" => self.momentum = val.as_f64()?,
@@ -119,6 +126,7 @@ impl TrainConfig {
             self.algorithm = Algorithm::parse(a)?;
         }
         self.workers = args.usize_or("workers", self.workers)?;
+        self.threads = args.usize_or("threads", self.threads)?;
         self.steps = args.usize_or("steps", self.steps)?;
         self.lr = args.f64_or("lr", self.lr)?;
         self.momentum = args.f64_or("momentum", self.momentum)?;
@@ -180,6 +188,7 @@ impl TrainConfig {
             ("model", Json::Str(self.model.clone())),
             ("algorithm", Json::Str(self.algorithm.name().into())),
             ("workers", Json::Num(self.workers as f64)),
+            ("threads", Json::Num(self.threads as f64)),
             ("steps", Json::Num(self.steps as f64)),
             ("lr", Json::Num(self.lr)),
             ("momentum", Json::Num(self.momentum)),
@@ -225,13 +234,14 @@ mod tests {
     fn cli_overrides() {
         let mut cfg = TrainConfig::default_for("mlp");
         let args = Args::parse(
-            "train --workers 2 --steps 7 --algorithm dense --verbose"
+            "train --workers 2 --steps 7 --threads 8 --algorithm dense --verbose"
                 .split_whitespace()
                 .map(String::from),
         );
         cfg.apply_args(&args).unwrap();
         assert_eq!(cfg.workers, 2);
         assert_eq!(cfg.steps, 7);
+        assert_eq!(cfg.threads, 8);
         assert_eq!(cfg.algorithm, Algorithm::Dense);
         assert!(cfg.verbose);
     }

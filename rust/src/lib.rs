@@ -16,7 +16,11 @@
 //!   artifacts; [`sparsify`] contains the bit-equivalent host fallbacks.
 //!
 //! Python never runs on the training path: `make artifacts` is the only
-//! compile step, after which the `lags` binary is self-contained.
+//! compile step, after which the `lags` binary is self-contained. A
+//! pure-rust [`runtime::native`] backend (artifacts dir `"native"`) serves
+//! a built-in model zoo when no artifacts/PJRT are available, and the
+//! per-worker hot loop fans out over OS threads (`--threads`, DESIGN.md)
+//! with bit-identical results.
 //!
 //! ## Quick start
 //!
@@ -27,8 +31,9 @@
 //! let mut cfg = TrainConfig::default_for("mlp");
 //! cfg.steps = 100;
 //! cfg.workers = 4;
+//! cfg.threads = 4; // parallel hot loop, bit-identical to threads = 1
 //! cfg.algorithm = Algorithm::Lags;
-//! let mut t = Trainer::from_artifacts("artifacts", cfg).unwrap();
+//! let mut t = Trainer::from_artifacts("native", cfg).unwrap();
 //! let report = t.run().unwrap();
 //! println!("final loss {:.4}", report.final_loss);
 //! ```

@@ -29,11 +29,17 @@ USAGE: lags <subcommand> [flags]
 
   info     [--artifacts DIR] [--layers]
   train    [--artifacts DIR] [--model M] [--algorithm dense|slgs|lags]
-           [--workers P] [--steps N] [--lr F] [--momentum F]
+           [--workers P] [--threads T] [--steps N] [--lr F] [--momentum F]
            [--compression C] [--adaptive] [--c-max C]
            [--compressor host|host-sampled|xla|xla-sampled]
            [--delta-every N] [--eval-every N] [--seed S] [--verbose]
            [--config FILE.json] [--out DIR]
+
+           --artifacts native  selects the built-in pure-rust model zoo
+                               (no `make artifacts` needed)
+           --threads T         fans the per-worker hot loop over T OS
+                               threads (0 = one per core); results are
+                               bit-identical to --threads 1
   compare  same flags as train (runs dense, slgs, lags) [--out DIR]
   delta    [--model M] [--workers P] [--steps N] [--every N] [--out DIR]
   table2   [--alpha F] [--bandwidth F] [--workers P] [--out DIR]
@@ -78,7 +84,14 @@ fn artifacts_dir(args: &Args) -> String {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let man = lags::runtime::Manifest::load(artifacts_dir(args))?;
+    // info only inspects the manifest, so real artifact dirs work even in
+    // a non-pjrt build; Runtime::open handles the "native" magic dir
+    let dir = artifacts_dir(args);
+    let man = if dir == "native" {
+        lags::runtime::Runtime::open(&dir, args.usize_or("seed", 42)? as u64)?.manifest
+    } else {
+        lags::runtime::Manifest::load(&dir)?
+    };
     println!("artifacts: {:?} (seed {})", man.dir, man.seed);
     println!("compress buckets: {:?}", man.compress_buckets);
     for (name, m) in &man.models {
@@ -125,7 +138,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_compare(args: &Args) -> Result<()> {
     let base = train_config(args)?;
-    let rt = std::sync::Arc::new(lags::runtime::Runtime::load(artifacts_dir(args))?);
+    let rt = std::sync::Arc::new(lags::runtime::Runtime::open(artifacts_dir(args), base.seed)?);
     let mut rows = Vec::new();
     for alg in [Algorithm::Dense, Algorithm::Slgs, Algorithm::Lags] {
         let mut cfg = base.clone();

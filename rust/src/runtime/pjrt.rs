@@ -1,0 +1,266 @@
+//! PJRT backend: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the vendored `xla` crate (xla_extension 0.5.1 CPU):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. One compiled executable per artifact;
+//! compress-bucket executables are compiled lazily and cached.
+//!
+//! All artifacts were lowered with `return_tuple=True`, so every execution
+//! returns a single tuple literal that is decomposed here.
+//!
+//! PJRT objects wrap raw C++ pointers and are not `Sync`, so this backend
+//! executes the P workers' gradient steps **sequentially in rank order**
+//! (with a single host→device params upload per iteration, §Perf L3-2);
+//! the host-side compression/aggregation around it still parallelises.
+
+use super::manifest::{LayerInfo, Manifest, ModelManifest};
+use super::BatchData;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+impl BatchData {
+    fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&s| s as i64).collect();
+        let lit = match self {
+            BatchData::F32(v) => xla::Literal::vec1(v),
+            BatchData::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn to_device(&self, client: &xla::PjRtClient, shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(match self {
+            BatchData::F32(v) => client.buffer_from_host_buffer(v, shape, None)?,
+            BatchData::I32(v) => client.buffer_from_host_buffer(v, shape, None)?,
+        })
+    }
+}
+
+/// Shared PJRT client + compress-executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    /// (bucket, sampled) -> compiled compress executable
+    compress_cache: Mutex<BTreeMap<(usize, bool), Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtRuntime {
+    pub fn new() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client, compress_cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile_file(&self, manifest: &Manifest, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = manifest.artifact_path(file);
+        let path_str = path.to_str().context("non-utf8 path")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).with_context(|| format!("compiling {file}"))
+    }
+
+    /// Lazily compile + cache the compress executable for a bucket.
+    pub fn compress_exe(
+        &self,
+        manifest: &Manifest,
+        bucket: usize,
+        sampled: bool,
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.compress_cache.lock().unwrap();
+            if let Some(e) = cache.get(&(bucket, sampled)) {
+                return Ok(e.clone());
+            }
+        }
+        let (exact_f, sampled_f) = manifest
+            .compress_files
+            .get(&bucket)
+            .with_context(|| format!("no compress artifact for bucket {bucket}"))?;
+        let file = if sampled { sampled_f } else { exact_f };
+        let exe = Arc::new(self.compile_file(manifest, file)?);
+        self.compress_cache.lock().unwrap().insert((bucket, sampled), exe.clone());
+        Ok(exe)
+    }
+
+    /// Run a compress artifact: (grad[n], resid[n], lr, k) -> (sparse,
+    /// resid', thr). Inputs must already be padded to the bucket length.
+    pub fn run_compress(
+        &self,
+        manifest: &Manifest,
+        bucket: usize,
+        sampled: bool,
+        grad: &[f32],
+        resid: &[f32],
+        lr: f32,
+        k: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        anyhow::ensure!(grad.len() == bucket && resid.len() == bucket, "pad to bucket first");
+        let exe = self.compress_exe(manifest, bucket, sampled)?;
+        let g = xla::Literal::vec1(grad);
+        let r = xla::Literal::vec1(resid);
+        let lr_l = xla::Literal::scalar(lr);
+        let k_l = xla::Literal::scalar(k as i32);
+        let result = exe.execute::<xla::Literal>(&[g, r, lr_l, k_l])?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 3, "compress artifact returned {} outputs", parts.len());
+        let sparse = parts[0].to_vec::<f32>()?;
+        let new_resid = parts[1].to_vec::<f32>()?;
+        let thr = parts[2].to_vec::<f32>()?[0];
+        Ok((sparse, new_resid, thr))
+    }
+}
+
+/// Compiled executables for one model (plus a manifest copy for the lazy
+/// compress-bucket lookups).
+pub struct PjrtModel {
+    rt: Arc<PjrtRuntime>,
+    manifest: Manifest,
+    train: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    apply: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtModel {
+    /// Compile train + eval + apply eagerly (compress buckets stay lazy).
+    pub fn compile(
+        rt: Arc<PjrtRuntime>,
+        manifest: &Manifest,
+        mm: &ModelManifest,
+    ) -> Result<PjrtModel> {
+        let train = rt.compile_file(manifest, mm.file("train")?)?;
+        let eval = rt.compile_file(manifest, mm.file("eval")?)?;
+        let apply = rt.compile_file(manifest, mm.file("apply")?)?;
+        Ok(PjrtModel { rt, manifest: manifest.clone(), train, eval, apply })
+    }
+
+    fn exec_step(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        mm: &ModelManifest,
+        params: &[f32],
+        x: &BatchData,
+        y: &BatchData,
+    ) -> Result<(f32, xla::Literal)> {
+        anyhow::ensure!(params.len() == mm.d, "params dim mismatch");
+        anyhow::ensure!(x.len() == mm.x.elements(), "x batch shape mismatch");
+        anyhow::ensure!(y.len() == mm.y.elements(), "y batch shape mismatch");
+        let p = xla::Literal::vec1(params);
+        let xl = x.to_literal(&mm.x.shape)?;
+        let yl = y.to_literal(&mm.y.shape)?;
+        let result = exe.execute::<xla::Literal>(&[p, xl, yl])?[0][0].to_literal_sync()?;
+        let (loss_l, second) = result.to_tuple2()?;
+        let loss = loss_l.to_vec::<f32>()?[0];
+        Ok((loss, second))
+    }
+
+    /// Run the train artifact: returns (loss, flat gradient[d]).
+    pub fn train_step(
+        &self,
+        mm: &ModelManifest,
+        params: &[f32],
+        x: &BatchData,
+        y: &BatchData,
+    ) -> Result<(f32, Vec<f32>)> {
+        let (loss, grad_l) = self.exec_step(&self.train, mm, params, x, y)?;
+        let grad = grad_l.to_vec::<f32>()?;
+        anyhow::ensure!(grad.len() == mm.d, "grad dim mismatch");
+        Ok((loss, grad))
+    }
+
+    /// Upload the (replica-shared) parameter vector to the device once;
+    /// reuse the returned buffer across all P workers' [`Self::train_step_b`]
+    /// calls in an iteration (§Perf L3-2: saves P-1 host→device copies of
+    /// d floats per step).
+    pub fn params_to_device(&self, mm: &ModelManifest, params: &[f32]) -> Result<xla::PjRtBuffer> {
+        anyhow::ensure!(params.len() == mm.d, "params dim mismatch");
+        Ok(self.rt.client.buffer_from_host_buffer(params, &[mm.d], None)?)
+    }
+
+    /// Buffered train step: params already on device.
+    pub fn train_step_b(
+        &self,
+        mm: &ModelManifest,
+        params_dev: &xla::PjRtBuffer,
+        x: &BatchData,
+        y: &BatchData,
+    ) -> Result<(f32, Vec<f32>)> {
+        anyhow::ensure!(x.len() == mm.x.elements(), "x batch shape mismatch");
+        anyhow::ensure!(y.len() == mm.y.elements(), "y batch shape mismatch");
+        let xb = x.to_device(&self.rt.client, &mm.x.shape)?;
+        let yb = y.to_device(&self.rt.client, &mm.y.shape)?;
+        let result = self.train.execute_b::<&xla::PjRtBuffer>(&[params_dev, &xb, &yb])?[0][0]
+            .to_literal_sync()?;
+        let (loss_l, grad_l) = result.to_tuple2()?;
+        let loss = loss_l.to_vec::<f32>()?[0];
+        let grad = grad_l.to_vec::<f32>()?;
+        anyhow::ensure!(grad.len() == mm.d, "grad dim mismatch");
+        Ok((loss, grad))
+    }
+
+    /// Run the eval artifact: returns (loss, metric).
+    pub fn eval_step(
+        &self,
+        mm: &ModelManifest,
+        params: &[f32],
+        x: &BatchData,
+        y: &BatchData,
+    ) -> Result<(f32, f32)> {
+        let (loss, metric_l) = self.exec_step(&self.eval, mm, params, x, y)?;
+        Ok((loss, metric_l.to_vec::<f32>()?[0]))
+    }
+
+    /// Run the fused momentum-SGD apply artifact over padded buffers:
+    /// (params[dp], mom[dp], agg[dp], mu) -> (params', mom').
+    pub fn apply_update(
+        &self,
+        mm: &ModelManifest,
+        params_pad: &[f32],
+        mom_pad: &[f32],
+        agg_pad: &[f32],
+        mu: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let dp = mm.d_padded;
+        anyhow::ensure!(
+            params_pad.len() == dp && mom_pad.len() == dp && agg_pad.len() == dp,
+            "apply buffers must be padded to d_padded"
+        );
+        let p = xla::Literal::vec1(params_pad);
+        let m = xla::Literal::vec1(mom_pad);
+        let a = xla::Literal::vec1(agg_pad);
+        let mu_l = xla::Literal::scalar(mu);
+        let result =
+            self.apply.execute::<xla::Literal>(&[p, m, a, mu_l])?[0][0].to_literal_sync()?;
+        let (p2, m2) = result.to_tuple2()?;
+        Ok((p2.to_vec::<f32>()?, m2.to_vec::<f32>()?))
+    }
+
+    /// Compress one layer through the AOT Pallas artifact. Handles padding
+    /// to the layer's bucket; returns (sparse[n], resid'[n], thr) trimmed
+    /// back to the layer size.
+    pub fn compress_layer_xla_by_bucket(
+        &self,
+        layer: &LayerInfo,
+        grad: &[f32],
+        resid: &[f32],
+        lr: f32,
+        k: usize,
+        sampled: bool,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let n = layer.size;
+        anyhow::ensure!(grad.len() == n && resid.len() == n, "layer slice mismatch");
+        let b = layer.bucket;
+        let mut gp = vec![0.0f32; b];
+        let mut rp = vec![0.0f32; b];
+        gp[..n].copy_from_slice(grad);
+        rp[..n].copy_from_slice(resid);
+        let (mut s, mut r, thr) =
+            self.rt.run_compress(&self.manifest, b, sampled, &gp, &rp, lr, k)?;
+        s.truncate(n);
+        r.truncate(n);
+        Ok((s, r, thr))
+    }
+}

@@ -12,6 +12,7 @@
 //! the split only moves elements, never rounds.
 
 use super::topk;
+use crate::sparsify::sparse::SparseVec;
 use crate::sparsify::threshold::SampledThreshold;
 
 /// Residual state for one worker across the whole flat parameter vector,
@@ -95,6 +96,51 @@ impl ErrorFeedback {
         CompressStats { threshold: thr, kept: topk::count_kept(&self.acc, thr) }
     }
 
+    /// Like [`Self::compress_layer`], but emits the TopK part directly as a
+    /// sparse `(index, value)` message instead of a dense masked buffer —
+    /// the Algorithm 1 line 9 wire format. One pass over the accumulator
+    /// splits it: coordinates at or above the threshold go into `msg`
+    /// (indices local to the layer slice), the rest become the new
+    /// residual. `msg`'s buffers are reused, so the steady-state hot loop
+    /// performs no allocation. The kept set (and therefore `msg.nnz()`)
+    /// matches the dense variant exactly, including ties at the threshold.
+    pub fn compress_layer_sparse(
+        &mut self,
+        off: usize,
+        grad: &[f32],
+        lr: f32,
+        k: usize,
+        exact: bool,
+        msg: &mut SparseVec,
+    ) -> CompressStats {
+        let n = grad.len();
+        let resid = &mut self.resid[off..off + n];
+
+        // acc = resid + lr * grad (scratch)
+        self.acc.clear();
+        self.acc.extend(resid.iter().zip(grad.iter()).map(|(&r, &g)| r + lr * g));
+
+        let thr = if exact {
+            topk::kth_largest_abs_with_buf(&self.acc, k, &mut self.mags)
+        } else {
+            self.sampler.estimate(&self.acc, k)
+        };
+
+        msg.len = n;
+        msg.idx.clear();
+        msg.val.clear();
+        for (i, (&v, r)) in self.acc.iter().zip(resid.iter_mut()).enumerate() {
+            if v.abs() >= thr {
+                msg.idx.push(i as u32);
+                msg.val.push(v);
+                *r = 0.0;
+            } else {
+                *r = v;
+            }
+        }
+        CompressStats { threshold: thr, kept: msg.nnz() }
+    }
+
     /// The accumulator (resid + lr*grad) for a layer WITHOUT updating state.
     /// Used by the delta^(l) measurement (Eq. 20), which needs x^{p,(l)} =
     /// G^p + eps^p before compression.
@@ -174,6 +220,53 @@ mod tests {
         ef.compress_layer(0, &grad, 0.5, 40, false, &mut kept);
         for i in 0..n {
             assert!((kept[i] + ef.residual()[i] - before[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sparse_variant_matches_dense_variant() {
+        // compress_layer_sparse must produce the same residuals, kept set
+        // and values as compress_layer — bit-identical, for both the exact
+        // and sampled threshold paths, across repeated (stateful) steps.
+        let mut rng = Rng::new(7);
+        let n = 512;
+        for exact in [true, false] {
+            let mut dense_ef = ErrorFeedback::new(n, 8);
+            let mut sparse_ef = ErrorFeedback::new(n, 8);
+            let mut kept = vec![0.0f32; n];
+            let mut msg = SparseVec::new(n);
+            for step in 0..10 {
+                let grad: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+                let sd = dense_ef.compress_layer(0, &grad, 0.1, 24, exact, &mut kept);
+                let ss = sparse_ef.compress_layer_sparse(0, &grad, 0.1, 24, exact, &mut msg);
+                assert_eq!(sd.threshold, ss.threshold, "exact={exact} step={step}");
+                assert_eq!(sd.kept, ss.kept, "exact={exact} step={step}");
+                assert_eq!(msg.to_dense(), kept, "exact={exact} step={step}");
+                assert_eq!(dense_ef.residual(), sparse_ef.residual());
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_variant_reuses_buffers_per_layer() {
+        let mut rng = Rng::new(8);
+        let mut ef = ErrorFeedback::new(100, 4);
+        let g1: Vec<f32> = (0..40).map(|_| rng.normal_f32()).collect();
+        let g2: Vec<f32> = (0..60).map(|_| rng.normal_f32()).collect();
+        let mut msg = SparseVec::new(0);
+        ef.compress_layer_sparse(0, &g1, 1.0, 4, true, &mut msg);
+        assert_eq!(msg.len, 40);
+        assert!(msg.nnz() >= 4);
+        assert!(msg.idx.iter().all(|&i| (i as usize) < 40));
+        // reuse the same message buffer for a second layer slice
+        ef.compress_layer_sparse(40, &g2, 1.0, 6, true, &mut msg);
+        assert_eq!(msg.len, 60);
+        assert!(msg.nnz() >= 6);
+        // kept + residual reconstruct the accumulator on the second layer
+        let dense = msg.to_dense();
+        for i in 0..60 {
+            let total = dense[i] + ef.residual()[40 + i];
+            assert!((total - g2[i]).abs() < 1e-6, "i={i}");
         }
     }
 

@@ -9,10 +9,30 @@
 //!   aggregated layer by layer (backprop order), optionally with Eq. 18
 //!   adaptive per-layer ratios and the §5 merge buffer.
 //!
-//! All three share the same AOT `train_step` artifact, the same worker
-//! data shards and the same update rule `v ← v − (1/P)·agg` (momentum
+//! All three share the same `train_step` backend, the same worker data
+//! shards and the same update rule `v ← v − (1/P)·agg` (momentum
 //! optional), so convergence differences isolate the sparsification
 //! scheme — the paper's Fig. 3 / Table 1 experiment design.
+//!
+//! ## Hot-loop structure (DESIGN.md §Threading-model)
+//!
+//! Each iteration is three phases:
+//!
+//! 1. **Parallel per-worker phase** — gradient compute, momentum
+//!    correction and error-feedback compression fan out over the
+//!    [`ParallelExecutor`] (`--threads`). Every worker owns its residuals,
+//!    momentum and `SparseVec` message scratch, so the region has no
+//!    shared mutable state and its results are independent of scheduling.
+//! 2. **Rank-ordered reduction** — the workers' sparse messages are
+//!    reduced into the dense `agg` via
+//!    [`crate::collectives::sparse_agg::sparse_add_rank_ordered`] in rank
+//!    order 0..P-1, layer-major in backprop order: O(P·k) sparse adds,
+//!    bit-identical to the sequential dense baseline.
+//! 3. **Sequential apply** — `v ← v − (mu·m + agg/P)`.
+//!
+//! Because phase 1 is per-worker pure and phases 2–3 are sequential,
+//! `--threads N` produces bit-identical params, losses and message stats
+//! for every N (asserted by `rust/tests/integration_parallel.rs`).
 
 mod report;
 
@@ -20,14 +40,15 @@ pub use report::{MessageStats, TrainReport};
 
 use crate::adaptive::{self, RatioConfig};
 use crate::cluster::Cluster;
-use crate::collectives::{dense::ring_allreduce_mean, NetworkModel};
+use crate::collectives::{dense::ring_allreduce_mean, sparse_agg, NetworkModel};
 use crate::config::TrainConfig;
 use crate::data::Synthetic;
 use crate::metrics::{CurveRecorder, DeltaMonitor};
 use crate::models::ModelProfile;
 use crate::pipeline::desim::{simulate, Schedule, SimParams};
-use crate::runtime::{Metric, ModelRuntime, Runtime};
+use crate::runtime::{GradJob, Metric, ModelRuntime, Runtime};
 use crate::sparsify::CompressorKind;
+use crate::util::ParallelExecutor;
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -72,6 +93,8 @@ pub struct Trainer {
     model: ModelRuntime,
     data: Synthetic,
     cluster: Cluster,
+    /// fork/join pool for the per-worker phases (`cfg.threads`)
+    exec: ParallelExecutor,
     /// replicated model parameters v_t
     params: Vec<f32>,
     /// momentum buffer over the aggregated update
@@ -80,6 +103,11 @@ pub struct Trainer {
     ks: Vec<usize>,
     /// per-layer c^(l) actually in use (manifest order)
     ratios: Vec<f64>,
+    /// per-layer (offset, size) in manifest order — the hot loop walks
+    /// this instead of cloning the manifest's layer table every step
+    layer_meta: Vec<(usize, usize)>,
+    /// scratch: per-layer effective k at the current step (warm-up aware)
+    ks_t: Vec<usize>,
     delta: Option<DeltaMonitor>,
     /// scratch: aggregated update
     agg: Vec<f32>,
@@ -90,9 +118,10 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    /// Load artifacts and build a trainer.
+    /// Load artifacts and build a trainer. The magic dir `"native"`
+    /// selects the built-in native model zoo seeded with `cfg.seed`.
     pub fn from_artifacts(dir: &str, cfg: TrainConfig) -> Result<Trainer> {
-        let rt = Arc::new(Runtime::load(dir)?);
+        let rt = Arc::new(Runtime::open(dir, cfg.seed)?);
         Self::with_runtime(&rt, cfg)
     }
 
@@ -101,9 +130,12 @@ impl Trainer {
         let model = rt.model_runtime(&cfg.model)?;
         let mm = &model.mm;
         let d = mm.d;
-        let max_layer = mm.layers.iter().map(|l| l.size).max().unwrap_or(0);
         let data = Synthetic::for_model(mm, cfg.seed)?;
-        let cluster = Cluster::new(cfg.workers, d, max_layer, cfg.sample_stride);
+        let mut cluster = Cluster::new(cfg.workers, d, cfg.sample_stride);
+        let layer_sizes: Vec<usize> = mm.layers.iter().map(|l| l.size).collect();
+        for w in &mut cluster.workers {
+            w.ensure_message_scratch(&layer_sizes);
+        }
 
         // per-layer ratios: uniform c, or Eq. 18 adaptive selection over the
         // live model's profile on the paper's 16-node 1GbE network model
@@ -124,6 +156,7 @@ impl Trainer {
             .zip(ratios.iter())
             .map(|(l, &c)| ((l.size as f64 / c).ceil() as usize).clamp(1, l.size))
             .collect();
+        let layer_meta: Vec<(usize, usize)> = mm.layers.iter().map(|l| (l.offset, l.size)).collect();
 
         let delta = if cfg.delta_every > 0 && cfg.algorithm == Algorithm::Lags {
             Some(DeltaMonitor::new(mm.layers.len(), cfg.delta_every, false, cfg.seed ^ 0xde17a))
@@ -136,9 +169,12 @@ impl Trainer {
         Ok(Trainer {
             momentum_buf: vec![0.0; d],
             agg: vec![0.0; d],
+            exec: ParallelExecutor::new(cfg.threads),
+            ks_t: vec![0; ks.len()],
             params,
             ks,
             ratios,
+            layer_meta,
             delta,
             data,
             cluster,
@@ -156,6 +192,11 @@ impl Trainer {
 
     pub fn layer_ks(&self) -> &[usize] {
         &self.ks
+    }
+
+    /// The executor's resolved thread count (0 in the config = per-core).
+    pub fn threads(&self) -> usize {
+        self.exec.threads()
     }
 
     /// Effective k for layer `li` at step `t`, honouring the warm-up
@@ -178,25 +219,27 @@ impl Trainer {
     /// Run one synchronous iteration; returns the mean training loss.
     pub fn step(&mut self) -> Result<f64> {
         let t = self.step_idx;
-        let p = self.cluster.size();
 
-        // --- local gradient computation (the AOT train artifact), per
-        // worker. Params are replica-identical, so they are uploaded to the
-        // device ONCE and shared across the P executions (§Perf L3-2).
-        let params_dev = self.model.params_to_device(&self.params)?;
-        for w in 0..p {
-            let batch = self.data.batch(w, t);
-            let (loss, grad) = self.model.train_step_b(&params_dev, &batch.x, &batch.y)?;
-            self.cluster.workers[w].last_loss = loss;
-            self.cluster.workers[w].grad = grad;
+        // --- local gradient computation, fanned over the worker pool.
+        // Each job fills only worker-owned slots; the native backend runs
+        // jobs on the executor's threads, PJRT runs them in rank order
+        // with one shared params upload (§Perf L3-2). Either way the
+        // per-worker results are identical.
+        let mut jobs = Vec::with_capacity(self.cluster.size());
+        for w in &mut self.cluster.workers {
+            let batch = self.data.batch(w.id, t);
+            jobs.push(GradJob { x: batch.x, y: batch.y, loss: &mut w.last_loss, grad: &mut w.grad });
         }
+        self.model.grad_many(&self.exec, &self.params, &mut jobs)?;
+        drop(jobs);
 
         // --- momentum correction (local, pre-sparsification) if enabled
         if self.cfg.local_momentum > 0.0 && self.cfg.algorithm != Algorithm::Dense {
             let mu = self.cfg.local_momentum as f32;
-            for w in 0..p {
-                self.cluster.workers[w].fold_local_momentum(mu);
-            }
+            self.exec.run(&mut self.cluster.workers, |_, w| {
+                w.fold_local_momentum(mu);
+                Ok(())
+            })?;
         }
 
         // --- aggregate per algorithm
@@ -208,7 +251,7 @@ impl Trainer {
         }
 
         // --- apply: v ← v − (mu·m + agg/P)
-        let inv_p = 1.0 / p as f32;
+        let inv_p = 1.0 / self.cluster.size() as f32;
         let mu = self.cfg.momentum as f32;
         for i in 0..self.params.len() {
             let upd = mu * self.momentum_buf[i] + self.agg[i] * inv_p;
@@ -237,7 +280,10 @@ impl Trainer {
         Ok(())
     }
 
-    /// SLGS-SGD: one global TopK over the whole flat accumulator per worker.
+    /// SLGS-SGD: one global TopK over the whole flat accumulator per
+    /// worker. Compression fans out over the executor into worker-owned
+    /// sparse messages (no per-step allocation); the reduction is the
+    /// rank-ordered sparse sum.
     fn aggregate_slgs(&mut self) -> Result<()> {
         let d = self.model.mm.d;
         let t = self.step_idx;
@@ -248,93 +294,132 @@ impl Trainer {
             self.cfg.compressor,
             CompressorKind::HostSampled | CompressorKind::XlaSampled
         );
-        let mut kept = vec![0.0f32; d];
-        for w in 0..self.cluster.size() {
-            let worker = &mut self.cluster.workers[w];
-            let grad = std::mem::take(&mut worker.grad);
-            let stats = worker.ef.compress_layer(0, &grad, lr, k_total, exact, &mut kept);
-            worker.grad = grad;
-            self.msg_stats.record(stats.kept * 8, 1);
-            for i in 0..d {
-                self.agg[i] += kept[i];
-            }
-        }
+        self.exec.run(&mut self.cluster.workers, |_, worker| {
+            worker.ef.compress_layer_sparse(
+                0,
+                &worker.grad,
+                lr,
+                k_total,
+                exact,
+                &mut worker.msg_flat,
+            );
+            Ok(())
+        })?;
+        sparse_agg::sparse_add_rank_ordered(
+            self.cluster.workers.iter().map(|w| &w.msg_flat),
+            &mut self.agg,
+        );
+        let bytes: usize = self.cluster.workers.iter().map(|w| w.msg_flat.wire_bytes()).sum();
+        self.msg_stats.record(bytes, self.cluster.size());
         Ok(())
     }
 
-    /// LAGS-SGD (Algorithm 1): per-layer TopK with error feedback, layer
-    /// loop in backprop order (L → 1 in the paper's indexing).
+    /// LAGS-SGD (Algorithm 1): per-layer TopK with error feedback. The
+    /// compression loop is worker-major — each worker (thread) walks its
+    /// own layers in backprop order (L → 1 in the paper's indexing) —
+    /// and the aggregation is the layer-major rank-ordered sparse
+    /// reduction, so results stay bit-identical to the sequential
+    /// layer-major baseline while the accumulation cost drops from
+    /// O(P·d) dense adds to O(P·k) sparse adds.
     fn aggregate_lags(&mut self) -> Result<()> {
         let lr = self.cfg.lr as f32;
         let t = self.step_idx;
-        let layers = self.model.mm.layers.clone();
+        let nl = self.layer_meta.len();
+        for li in 0..nl {
+            self.ks_t[li] = self.k_at(li, t);
+        }
         let sampled = matches!(
             self.cfg.compressor,
             CompressorKind::HostSampled | CompressorKind::XlaSampled
         );
-        let sample_delta = self.delta.as_ref().map(|m| m.should_sample(t)).unwrap_or(false);
 
-        let mut messages_this_iter = 0usize;
-        let mut bytes_this_iter = 0usize;
-        for (li, layer) in layers.iter().enumerate().rev() {
-            let (off, n, k) = (layer.offset, layer.size, self.k_at(li, t));
-
-            // Fig. 2 instrumentation: collect all workers' accumulators
-            if sample_delta {
-                let accs: Vec<Vec<f32>> = (0..self.cluster.size())
-                    .map(|w| {
-                        let worker = &self.cluster.workers[w];
-                        worker.ef.peek_acc(off, &worker.grad[off..off + n], lr)
-                    })
+        // Fig. 2 instrumentation pre-pass: peek_acc only reads this
+        // layer's residual slice and compression of other layers never
+        // touches it, so collecting all layers before any compression
+        // sees the same accumulators the interleaved loop saw — and the
+        // monitor's RNG stays on the sequential path.
+        if self.delta.as_ref().map(|m| m.should_sample(t)).unwrap_or(false) {
+            for li in (0..nl).rev() {
+                let (off, n) = self.layer_meta[li];
+                let accs: Vec<Vec<f32>> = self
+                    .cluster
+                    .workers
+                    .iter()
+                    .map(|w| w.ef.peek_acc(off, &w.grad[off..off + n], lr))
                     .collect();
                 if let Some(m) = self.delta.as_mut() {
-                    m.record(li, t, &accs, k);
+                    m.record(li, t, &accs, self.ks_t[li]);
                 }
-            }
-
-            for w in 0..self.cluster.size() {
-                let worker = &mut self.cluster.workers[w];
-                let grad = std::mem::take(&mut worker.grad);
-                let kept_n: usize;
-                match self.cfg.compressor {
-                    CompressorKind::HostExact | CompressorKind::HostSampled => {
-                        let kept = &mut worker.kept[..n];
-                        let stats = worker.ef.compress_layer(
-                            off,
-                            &grad[off..off + n],
-                            lr,
-                            k,
-                            !sampled,
-                            kept,
-                        );
-                        kept_n = stats.kept;
-                        for i in 0..n {
-                            self.agg[off + i] += kept[i];
-                        }
-                    }
-                    CompressorKind::XlaExact | CompressorKind::XlaSampled => {
-                        let resid = worker.ef.residual_slice(off, n).to_vec();
-                        let (sparse, new_resid, _thr) = self.model.compress_layer_xla(
-                            layer,
-                            &grad[off..off + n],
-                            &resid,
-                            lr,
-                            k,
-                            sampled,
-                        )?;
-                        worker.ef.write_residual(off, &new_resid);
-                        kept_n = sparse.iter().filter(|&&v| v != 0.0).count();
-                        for i in 0..n {
-                            self.agg[off + i] += sparse[i];
-                        }
-                    }
-                }
-                worker.grad = grad;
-                bytes_this_iter += kept_n * 8;
-                messages_this_iter += 1;
             }
         }
-        self.msg_stats.record(bytes_this_iter, messages_this_iter);
+
+        // worker-major compression into worker-owned per-layer messages
+        if self.cfg.compressor.is_xla() {
+            // the XLA compress executables are not Sync — rank order
+            for worker in self.cluster.workers.iter_mut() {
+                for li in (0..nl).rev() {
+                    let (off, n) = self.layer_meta[li];
+                    let layer = &self.model.mm.layers[li];
+                    let resid = worker.ef.residual_slice(off, n).to_vec();
+                    let (sparse, new_resid, _thr) = self.model.compress_layer_xla(
+                        layer,
+                        &worker.grad[off..off + n],
+                        &resid,
+                        lr,
+                        self.ks_t[li],
+                        sampled,
+                    )?;
+                    worker.ef.write_residual(off, &new_resid);
+                    let msg = &mut worker.msgs[li];
+                    msg.len = n;
+                    msg.idx.clear();
+                    msg.val.clear();
+                    for (i, &v) in sparse.iter().enumerate() {
+                        if v != 0.0 {
+                            msg.idx.push(i as u32);
+                            msg.val.push(v);
+                        }
+                    }
+                }
+            }
+        } else {
+            let meta = &self.layer_meta;
+            let ks_t = &self.ks_t;
+            let exact = !sampled;
+            self.exec.run(&mut self.cluster.workers, |_, worker| {
+                for li in (0..meta.len()).rev() {
+                    let (off, n) = meta[li];
+                    worker.ef.compress_layer_sparse(
+                        off,
+                        &worker.grad[off..off + n],
+                        lr,
+                        ks_t[li],
+                        exact,
+                        &mut worker.msgs[li],
+                    );
+                }
+                Ok(())
+            })?;
+        }
+
+        // rank-ordered reduction (Alg. 1 line 9), layer-major in backprop
+        // order: the same values hit the same coordinates in the same
+        // rank order as the dense per-worker adds did, so the aggregate
+        // is bit-identical — at O(Σ_l P·k^(l)) cost.
+        let mut bytes = 0usize;
+        let mut messages = 0usize;
+        for li in (0..nl).rev() {
+            let (off, n) = self.layer_meta[li];
+            sparse_agg::sparse_add_rank_ordered(
+                self.cluster.workers.iter().map(|w| &w.msgs[li]),
+                &mut self.agg[off..off + n],
+            );
+            for w in &self.cluster.workers {
+                bytes += w.msgs[li].wire_bytes();
+                messages += 1;
+            }
+        }
+        self.msg_stats.record(bytes, messages);
         Ok(())
     }
 
@@ -426,5 +511,10 @@ impl Trainer {
 
     pub fn model_manifest(&self) -> &crate::runtime::ModelManifest {
         &self.model.mm
+    }
+
+    /// The per-run message statistics (test/bench introspection).
+    pub fn msg_stats(&self) -> &MessageStats {
+        &self.msg_stats
     }
 }

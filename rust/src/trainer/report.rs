@@ -5,7 +5,7 @@ use crate::metrics::CurveRecorder;
 use crate::util::json::Json;
 
 /// Communication volume accounting (what crossed the simulated wire).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct MessageStats {
     pub total_bytes: usize,
     pub total_messages: usize,

@@ -11,7 +11,9 @@
 //! The `cargo bench` targets (`rust/benches/*.rs`, harness = false) use
 //! this to regenerate each paper table/figure.
 
+use crate::util::json::Json;
 use std::hint::black_box;
+use std::sync::{Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 pub use std::hint::black_box as bb;
@@ -60,10 +62,12 @@ pub fn bench_with_budget<F: FnMut()>(budget: Duration, mut f: F) -> Stats {
     Stats { median, mean, p95, min: times[0], iters: samples }
 }
 
-/// Benchmark with the default 1-second budget and print the stats line.
+/// Benchmark with the default 1-second budget, print the stats line, and
+/// record the result into the process-wide registry for [`write_json`].
 pub fn run<F: FnMut()>(name: &str, f: F) -> Stats {
     let s = bench_with_budget(Duration::from_secs(1), f);
     println!("{}", s.line(name));
+    record(name, &s, None);
     s
 }
 
@@ -72,6 +76,71 @@ pub fn run_val<T, F: FnMut() -> T>(name: &str, mut f: F) -> Stats {
     run(name, move || {
         black_box(f());
     })
+}
+
+/// Like [`run`], but tags the result with a work size (elements processed
+/// per call) so [`write_json`] can report throughput (items/s).
+pub fn run_items<F: FnMut()>(name: &str, items_per_iter: usize, f: F) -> Stats {
+    let s = bench_with_budget(Duration::from_secs(1), f);
+    println!("{}", s.line(name));
+    record(name, &s, Some(items_per_iter as f64));
+    s
+}
+
+struct Recorded {
+    name: String,
+    stats: Stats,
+    items_per_iter: Option<f64>,
+}
+
+fn registry() -> &'static Mutex<Vec<Recorded>> {
+    static REG: OnceLock<Mutex<Vec<Recorded>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn record(name: &str, stats: &Stats, items_per_iter: Option<f64>) {
+    registry()
+        .lock()
+        .unwrap()
+        .push(Recorded { name: name.to_string(), stats: stats.clone(), items_per_iter });
+}
+
+/// Snapshot every result recorded so far as a JSON document:
+///
+/// ```json
+/// {"benches": [{"name": ..., "ns_per_iter": ..., "throughput_items_per_sec": ...}]}
+/// ```
+pub fn results_json() -> Json {
+    let reg = registry().lock().unwrap();
+    let rows = reg
+        .iter()
+        .map(|r| {
+            let mut fields = vec![
+                ("name", Json::Str(r.name.clone())),
+                ("ns_per_iter", Json::Num(r.stats.median * 1e9)),
+                ("mean_ns", Json::Num(r.stats.mean * 1e9)),
+                ("p95_ns", Json::Num(r.stats.p95 * 1e9)),
+                ("min_ns", Json::Num(r.stats.min * 1e9)),
+                ("iters", Json::Num(r.stats.iters as f64)),
+            ];
+            if let Some(items) = r.items_per_iter {
+                fields.push((
+                    "throughput_items_per_sec",
+                    Json::Num(items / r.stats.median.max(1e-12)),
+                ));
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    Json::obj(vec![("benches", Json::Arr(rows))])
+}
+
+/// Write the recorded results as machine-readable JSON (e.g.
+/// `BENCH_hotpath.json`) so the perf trajectory is trackable across PRs.
+pub fn write_json(path: &str) -> std::io::Result<()> {
+    std::fs::write(path, results_json().to_string_pretty())?;
+    println!("wrote {path} ({} benches)", registry().lock().unwrap().len());
+    Ok(())
 }
 
 /// Print a markdown-style table row (used by the table benches to emit the
@@ -88,6 +157,22 @@ pub fn table_header(cols: &[&str]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn registry_records_and_serializes() {
+        let s = bench_with_budget(Duration::from_millis(10), || {
+            bb((0..100).sum::<u64>());
+        });
+        record("unit_test_bench", &s, Some(100.0));
+        let j = results_json();
+        let rows = j.get("benches").unwrap().as_arr().unwrap();
+        let row = rows
+            .iter()
+            .find(|r| r.get("name").unwrap().as_str().unwrap() == "unit_test_bench")
+            .expect("recorded bench present");
+        assert!(row.get("ns_per_iter").unwrap().as_f64().unwrap() > 0.0);
+        assert!(row.get("throughput_items_per_sec").unwrap().as_f64().unwrap() > 0.0);
+    }
 
     #[test]
     fn stats_sane() {

@@ -1,0 +1,177 @@
+//! Deterministic fork/join execution over per-worker state.
+//!
+//! The LAGS/SLGS hot loop is "embarrassingly parallel per worker, then a
+//! rank-ordered reduction": every logical worker owns its residuals,
+//! momentum and message scratch, so gradient compute and error-feedback
+//! compression can fan out across OS threads with **no shared mutable
+//! state inside the parallel region**. Determinism therefore does not
+//! depend on scheduling: each worker's math is a pure function of its own
+//! state, and everything order-sensitive (the f32 reduction, instrument
+//! RNGs, the parameter update) stays outside, in rank order 0..P-1
+//! (DESIGN.md §Threading-model).
+//!
+//! `std::thread::scope` is used instead of a persistent pool: scoped
+//! threads borrow the worker slice directly (no Arc/channel plumbing), and
+//! spawn cost (~10µs/thread) is negligible against a trainer iteration.
+
+use anyhow::{anyhow, Result};
+
+/// Fans work over the `Worker` pool. `threads == 1` degenerates to the
+/// sequential loop (the baseline every parallel run must bit-match).
+#[derive(Debug, Clone)]
+pub struct ParallelExecutor {
+    threads: usize,
+}
+
+impl ParallelExecutor {
+    /// `threads == 0` selects the machine's available parallelism.
+    pub fn new(threads: usize) -> ParallelExecutor {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        ParallelExecutor { threads }
+    }
+
+    pub fn sequential() -> ParallelExecutor {
+        ParallelExecutor { threads: 1 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(index, &mut items[index])` for every item, fanning contiguous
+    /// chunks over up to `threads` scoped threads. Each invocation gets
+    /// exclusive access to its item; `f` must not rely on cross-item
+    /// ordering. Errors are reported in rank order (the failure a
+    /// sequential run would hit first), so error behaviour is also
+    /// deterministic.
+    pub fn run<W, F>(&self, items: &mut [W], f: F) -> Result<()>
+    where
+        W: Send,
+        F: Fn(usize, &mut W) -> Result<()> + Sync,
+    {
+        let n = items.len();
+        let t = self.threads.min(n);
+        if t <= 1 {
+            for (i, w) in items.iter_mut().enumerate() {
+                f(i, w)?;
+            }
+            return Ok(());
+        }
+        let chunk = n.div_ceil(t);
+        let results: Vec<Result<()>> = std::thread::scope(|s| {
+            let f = &f;
+            let handles: Vec<_> = items
+                .chunks_mut(chunk)
+                .enumerate()
+                .map(|(ci, part)| {
+                    s.spawn(move || {
+                        for (j, w) in part.iter_mut().enumerate() {
+                            f(ci * chunk + j, w)?;
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| Err(anyhow!("worker thread panicked")))
+                })
+                .collect()
+        });
+        for r in results {
+            r?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn visits_every_index_exactly_once() {
+        for threads in [1usize, 2, 3, 4, 7, 16] {
+            let exec = ParallelExecutor::new(threads);
+            let mut items = vec![0usize; 13];
+            exec.run(&mut items, |i, v| {
+                *v += i + 1;
+                Ok(())
+            })
+            .unwrap();
+            let expect: Vec<usize> = (1..=13).collect();
+            assert_eq!(items, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_writes() {
+        let mut seq = vec![0.0f64; 100];
+        ParallelExecutor::sequential()
+            .run(&mut seq, |i, v| {
+                *v = (i as f64).sqrt();
+                Ok(())
+            })
+            .unwrap();
+        let mut par = vec![0.0f64; 100];
+        ParallelExecutor::new(8)
+            .run(&mut par, |i, v| {
+                *v = (i as f64).sqrt();
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn counts_calls_once_each() {
+        let calls = AtomicUsize::new(0);
+        let mut items = vec![(); 37];
+        ParallelExecutor::new(5)
+            .run(&mut items, |_, _| {
+                calls.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(calls.load(Ordering::SeqCst), 37);
+    }
+
+    #[test]
+    fn error_propagates_lowest_rank_first() {
+        let mut items = vec![0usize; 10];
+        let err = ParallelExecutor::new(4)
+            .run(&mut items, |i, _| {
+                if i == 3 || i == 7 {
+                    anyhow::bail!("rank {i} failed")
+                }
+                Ok(())
+            })
+            .unwrap_err();
+        assert_eq!(err.to_string(), "rank 3 failed");
+    }
+
+    #[test]
+    fn auto_threads_is_at_least_one() {
+        assert!(ParallelExecutor::new(0).threads() >= 1);
+    }
+
+    #[test]
+    fn empty_and_undersized_pools() {
+        let exec = ParallelExecutor::new(8);
+        let mut none: Vec<usize> = vec![];
+        exec.run(&mut none, |_, _| Ok(())).unwrap();
+        let mut one = vec![5usize];
+        exec.run(&mut one, |i, v| {
+            *v += i;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(one, vec![5]);
+    }
+}

@@ -4,9 +4,12 @@
 
 pub mod bench;
 pub mod cli;
+pub mod executor;
 pub mod json;
 pub mod prop;
 pub mod rng;
+
+pub use executor::ParallelExecutor;
 
 /// Round `n` up to the next power of two (compress bucket sizing; must
 /// mirror `python/compile/aot.py::next_pow2`).

@@ -1,0 +1,185 @@
+//! Parallel-vs-sequential equivalence over the native runtime.
+//!
+//! The trainer's `--threads` fan-out must be a pure performance knob:
+//! same seed → bit-identical params, per-step losses and message stats,
+//! for every algorithm, compressor and thread count. These tests run
+//! unconditionally (the native backend needs no artifacts), so the
+//! determinism contract is enforced on every `cargo test`.
+
+use lags::config::TrainConfig;
+use lags::runtime::Runtime;
+use lags::sparsify::CompressorKind;
+use lags::trainer::{Algorithm, MessageStats, Trainer};
+use std::sync::Arc;
+
+fn cfg(model: &str, alg: Algorithm, steps: usize, workers: usize, threads: usize) -> TrainConfig {
+    let mut c = TrainConfig::default_for(model);
+    c.algorithm = alg;
+    c.steps = steps;
+    c.workers = workers;
+    c.threads = threads;
+    c.lr = 0.1;
+    c.compression = 20.0;
+    c.eval_every = 0;
+    c
+}
+
+/// Run the full loop step-by-step, returning (per-step losses, final
+/// params, message stats).
+fn run_traced(rt: &Arc<Runtime>, cfg: TrainConfig) -> (Vec<f64>, Vec<f32>, MessageStats) {
+    let steps = cfg.steps;
+    let mut t = Trainer::with_runtime(rt, cfg).expect("build trainer");
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        losses.push(t.step().expect("step"));
+    }
+    (losses, t.params().to_vec(), t.msg_stats().clone())
+}
+
+#[test]
+fn parallel_bit_identical_all_algorithms() {
+    let rt = Arc::new(Runtime::native(42));
+    for alg in [Algorithm::Dense, Algorithm::Slgs, Algorithm::Lags] {
+        let (l1, p1, s1) = run_traced(&rt, cfg("mlp", alg, 6, 8, 1));
+        for threads in [2usize, 3, 8] {
+            let (l2, p2, s2) = run_traced(&rt, cfg("mlp", alg, 6, 8, threads));
+            assert_eq!(l1, l2, "{} losses diverged at threads={threads}", alg.name());
+            assert_eq!(p1, p2, "{} params diverged at threads={threads}", alg.name());
+            assert_eq!(s1, s2, "{} msg stats diverged at threads={threads}", alg.name());
+        }
+    }
+}
+
+#[test]
+fn parallel_bit_identical_deep_model_uneven_chunks() {
+    // 6 workers over 4 threads: uneven chunk sizes must not matter
+    let rt = Arc::new(Runtime::native(7));
+    let (l1, p1, s1) = run_traced(&rt, cfg("mlp_deep", Algorithm::Lags, 4, 6, 1));
+    let (l2, p2, s2) = run_traced(&rt, cfg("mlp_deep", Algorithm::Lags, 4, 6, 4));
+    assert_eq!(l1, l2);
+    assert_eq!(p1, p2);
+    assert_eq!(s1, s2);
+}
+
+#[test]
+fn parallel_bit_identical_with_training_tricks() {
+    // sampled threshold + warm-up + momentum correction, the stateful path
+    let rt = Arc::new(Runtime::native(9));
+    let make = |threads| {
+        let mut c = cfg("mlp", Algorithm::Lags, 8, 4, threads);
+        c.compressor = CompressorKind::HostSampled;
+        c.warmup_steps = 5;
+        c.local_momentum = 0.5;
+        c
+    };
+    let (l1, p1, s1) = run_traced(&rt, make(1));
+    let (l2, p2, s2) = run_traced(&rt, make(4));
+    assert_eq!(l1, l2);
+    assert_eq!(p1, p2);
+    assert_eq!(s1, s2);
+}
+
+#[test]
+fn parallel_bit_identical_xla_emulated_compressor() {
+    // the Xla* compressor path compresses sequentially but grads still fan
+    // out; the whole run must stay bit-identical
+    let rt = Arc::new(Runtime::native(11));
+    let make = |threads| {
+        let mut c = cfg("mlp", Algorithm::Lags, 4, 4, threads);
+        c.compressor = CompressorKind::XlaExact;
+        c
+    };
+    let (l1, p1, s1) = run_traced(&rt, make(1));
+    let (l2, p2, s2) = run_traced(&rt, make(8));
+    assert_eq!(l1, l2);
+    assert_eq!(p1, p2);
+    assert_eq!(s1, s2);
+}
+
+#[test]
+fn parallel_bit_identical_delta_monitor_series() {
+    let rt = Arc::new(Runtime::native(13));
+    let run = |threads: usize| {
+        let mut c = cfg("mlp", Algorithm::Lags, 6, 4, threads);
+        c.delta_every = 2;
+        let mut t = Trainer::with_runtime(&rt, c).unwrap();
+        for _ in 0..6 {
+            t.step().unwrap();
+        }
+        let series = t.delta_series().unwrap().to_vec();
+        (series, t.params().to_vec())
+    };
+    let (d1, p1) = run(1);
+    let (d2, p2) = run(4);
+    assert_eq!(d1, d2, "delta series diverged");
+    assert_eq!(p1, p2);
+}
+
+#[test]
+fn threads_zero_resolves_to_cores_and_stays_identical() {
+    let rt = Arc::new(Runtime::native(17));
+    let mut c0 = cfg("mlp", Algorithm::Lags, 3, 4, 0);
+    c0.eval_every = 0;
+    let t = Trainer::with_runtime(&rt, c0.clone()).unwrap();
+    assert!(t.threads() >= 1);
+    let (l1, p1, _) = run_traced(&rt, cfg("mlp", Algorithm::Lags, 3, 4, 1));
+    let (l2, p2, _) = run_traced(&rt, c0);
+    assert_eq!(l1, l2);
+    assert_eq!(p1, p2);
+}
+
+#[test]
+fn native_lags_training_reduces_loss_end_to_end() {
+    // full trainer loop over the native backend — the convergence sanity
+    // check that previously needed `make artifacts`
+    let rt = Arc::new(Runtime::native(42));
+    for alg in [Algorithm::Dense, Algorithm::Slgs, Algorithm::Lags] {
+        let mut c = cfg("mlp", alg, 40, 2, 2);
+        c.eval_every = 40;
+        c.eval_batches = 2;
+        let mut t = Trainer::with_runtime(&rt, c).unwrap();
+        let first = t.step().unwrap();
+        let r = t.run().unwrap();
+        assert!(
+            r.final_loss < first,
+            "{}: loss did not drop ({first} -> {})",
+            alg.name(),
+            r.final_loss
+        );
+        assert!(r.final_metric.is_finite());
+    }
+}
+
+#[test]
+fn lags_message_volume_matches_compression_native() {
+    // the sparse aggregation really ships ~P·(d/c) coordinates per iter
+    let rt = Arc::new(Runtime::native(42));
+    let mut c = cfg("mlp_deep", Algorithm::Lags, 5, 2, 2);
+    c.compression = 100.0;
+    let mut t = Trainer::with_runtime(&rt, c).unwrap();
+    for _ in 0..5 {
+        t.step().unwrap();
+    }
+    let d = t.model_manifest().d as f64;
+    let expect = 2.0 * (d / 100.0) * 8.0;
+    let got = t.msg_stats().bytes_per_iter();
+    assert!(
+        got > 0.5 * expect && got < 3.0 * expect,
+        "bytes/iter {got} vs expected ~{expect}"
+    );
+}
+
+#[test]
+fn adaptive_ratios_run_parallel_identical() {
+    let rt = Arc::new(Runtime::native(23));
+    let make = |threads| {
+        let mut c = cfg("mlp_deep", Algorithm::Lags, 3, 4, threads);
+        c.adaptive = true;
+        c.c_max = 500.0;
+        c
+    };
+    let (l1, p1, _) = run_traced(&rt, make(1));
+    let (l2, p2, _) = run_traced(&rt, make(3));
+    assert_eq!(l1, l2);
+    assert_eq!(p1, p2);
+}

@@ -18,7 +18,14 @@ fn runtime() -> Option<Arc<Runtime>> {
         eprintln!("skipping: run `make artifacts` first");
         return None;
     }
-    Some(Arc::new(Runtime::load("artifacts").expect("load artifacts")))
+    match Runtime::load("artifacts") {
+        Ok(rt) => Some(Arc::new(rt)),
+        // e.g. a non-pjrt build with artifacts present — skip, don't panic
+        Err(e) => {
+            eprintln!("skipping: {e:#}");
+            None
+        }
+    }
 }
 
 fn randvec(n: usize, seed: u64, scale: f32) -> Vec<f32> {

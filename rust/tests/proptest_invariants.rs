@@ -18,6 +18,7 @@ use lags::pipeline::desim::{simulate, Schedule, SimParams};
 use lags::sparsify::{randk, sparse::SparseVec, topk, ErrorFeedback};
 use lags::util::prop::{quick, Case};
 use lags::util::rng::Rng;
+use lags::util::ParallelExecutor;
 
 fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.normal_f32()).collect()
@@ -96,6 +97,41 @@ fn prop_error_feedback_mass_conservation() {
     });
 }
 
+#[test]
+fn prop_sparse_compress_matches_dense_compress() {
+    // compress_layer_sparse (the parallel trainer's wire path) must be
+    // bit-equivalent to the dense-masked compress_layer it replaced
+    quick("ef-sparse-equiv", 4, 512, |c: &mut Case| {
+        let n = c.size;
+        let stride = 1 + c.rng.below(16);
+        let mut dense_ef = ErrorFeedback::new(n, stride);
+        let mut sparse_ef = ErrorFeedback::new(n, stride);
+        let lr = c.rng.range_f64(1e-3, 1.0) as f32;
+        let mut kept = vec![0.0f32; n];
+        let mut msg = SparseVec::new(n);
+        for _ in 0..4 {
+            let g = randvec(&mut c.rng, n);
+            let k = 1 + c.rng.below(n);
+            let exact = c.rng.below(2) == 0;
+            let sd = dense_ef.compress_layer(0, &g, lr, k, exact, &mut kept);
+            let ss = sparse_ef.compress_layer_sparse(0, &g, lr, k, exact, &mut msg);
+            if sd.threshold != ss.threshold || sd.kept != ss.kept {
+                return Err(format!(
+                    "stats diverged: thr {} vs {}, kept {} vs {}",
+                    sd.threshold, ss.threshold, sd.kept, ss.kept
+                ));
+            }
+            if msg.to_dense() != kept {
+                return Err("kept values diverged".into());
+            }
+            if dense_ef.residual() != sparse_ef.residual() {
+                return Err("residuals diverged".into());
+            }
+        }
+        Ok(())
+    });
+}
+
 // ---------------------------------------------------------------------------
 // 3. Sparse codec
 // ---------------------------------------------------------------------------
@@ -147,6 +183,52 @@ fn prop_merge_is_associative_sum() {
             if (left[i] - flat[i]).abs() > 1e-4 {
                 return Err(format!("flat mismatch at {i}"));
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allgather_invariant_to_producer_thread() {
+    // the parallel trainer's contract: it does not matter WHICH thread
+    // produced each rank's message — the reduction consumes rank-indexed
+    // slots in rank order, so any executor fan-out yields bitwise the
+    // same messages and the same aggregate as sequential production
+    quick("allgather-thread-invariant", 4, 512, |c: &mut Case| {
+        let n = c.size;
+        let p = 2 + c.rng.below(15); // 2..=16 ranks
+        let threads = 1 + c.rng.below(8);
+        let dense_in: Vec<Vec<f32>> = (0..p).map(|_| randvec(&mut c.rng, n)).collect();
+        let ks: Vec<usize> = (0..p).map(|_| 1 + c.rng.below(n)).collect();
+        let encode = |rank: usize| {
+            let thr = topk::kth_largest_abs(&dense_in[rank], ks[rank]);
+            SparseVec::from_dense_threshold(&dense_in[rank], thr)
+        };
+
+        let seq: Vec<SparseVec> = (0..p).map(&encode).collect();
+        let mut par: Vec<SparseVec> = vec![SparseVec::default(); p];
+        ParallelExecutor::new(threads)
+            .run(&mut par, |rank, slot| {
+                *slot = encode(rank);
+                Ok(())
+            })
+            .map_err(|e| e.to_string())?;
+        if par != seq {
+            return Err(format!("messages diverged under {threads} threads"));
+        }
+
+        let mut a = vec![0.0f32; n];
+        let mut b = vec![0.0f32; n];
+        sparse_agg::sparse_allgather_sum(&seq, &mut a);
+        sparse_agg::sparse_allgather_sum(&par, &mut b);
+        if a != b {
+            return Err("aggregates diverged bitwise".into());
+        }
+        // the non-zeroing hot-path variant agrees when `out` starts zeroed
+        let mut c2 = vec![0.0f32; n];
+        sparse_agg::sparse_add_rank_ordered(par.iter(), &mut c2);
+        if a != c2 {
+            return Err("sparse_add_rank_ordered diverged from allgather".into());
         }
         Ok(())
     });
