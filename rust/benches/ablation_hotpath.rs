@@ -27,6 +27,28 @@ fn randvec(n: usize, seed: u64) -> Vec<f32> {
     (0..n).map(|_| rng.normal_f32()).collect()
 }
 
+/// The pre-branchless `mask_with_threshold` (scalar branch per element) —
+/// kept here as the before/after baseline for the `kernels` case.
+fn mask_with_threshold_branchy(x: &[f32], thr: f32, out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(x.iter()) {
+        *o = if v.abs() >= thr { v } else { 0.0 };
+    }
+}
+
+/// The pre-branchless `split_with_threshold`.
+fn split_with_threshold_branchy(x: &[f32], thr: f32, kept: &mut [f32], resid: &mut [f32]) {
+    for i in 0..x.len() {
+        let v = x[i];
+        if v.abs() >= thr {
+            kept[i] = v;
+            resid[i] = 0.0;
+        } else {
+            kept[i] = 0.0;
+            resid[i] = v;
+        }
+    }
+}
+
 fn main() {
     println!("# threshold selection: exact O(n) vs double-sampling (stride 64)");
     for n in [65_536usize, 1 << 20, 1 << 22] {
@@ -48,6 +70,27 @@ fn main() {
         let mut ef2 = ErrorFeedback::new(n, 64);
         bench::run(&format!("ef_compress_sampled_n{n}"), || {
             bb(ef2.compress_layer(0, &g, 0.05, n / 1000, false, &mut kept));
+        });
+    }
+
+    println!("\n# kernels: branchy vs branchless threshold mask/split");
+    for n in [131_072usize, 1 << 20] {
+        let x = randvec(n, 7);
+        let thr = topk::kth_largest_abs(&x, n / 100);
+        let mut out = vec![0.0f32; n];
+        bench::run_items(&format!("kernels_mask_branchy_n{n}"), n, || {
+            mask_with_threshold_branchy(bb(&x), thr, &mut out);
+        });
+        bench::run_items(&format!("kernels_mask_branchless_n{n}"), n, || {
+            topk::mask_with_threshold(bb(&x), thr, &mut out);
+        });
+        let mut kept = vec![0.0f32; n];
+        let mut resid = vec![0.0f32; n];
+        bench::run_items(&format!("kernels_split_branchy_n{n}"), n, || {
+            split_with_threshold_branchy(bb(&x), thr, &mut kept, &mut resid);
+        });
+        bench::run_items(&format!("kernels_split_branchless_n{n}"), n, || {
+            topk::split_with_threshold(bb(&x), thr, &mut kept, &mut resid);
         });
     }
 
@@ -95,6 +138,9 @@ fn main() {
             cfg.algorithm = Algorithm::Lags;
             cfg.workers = p;
             cfg.threads = threads;
+            // barrier isolates the worker fan-out speedup; the
+            // barrier-vs-overlap comparison lives in fig1_pipeline
+            cfg.pipeline = lags::collectives::PipelineMode::Barrier;
             cfg.steps = 1;
             cfg.compression = 100.0;
             cfg.eval_every = 0;
@@ -119,6 +165,7 @@ fn main() {
             cfg.algorithm = alg;
             cfg.workers = 8;
             cfg.threads = threads;
+            cfg.pipeline = lags::collectives::PipelineMode::Barrier;
             cfg.steps = 1;
             cfg.compression = 100.0;
             cfg.eval_every = 0;

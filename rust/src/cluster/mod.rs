@@ -8,7 +8,11 @@
 //! deployment; only the wall-clock comes from the DES instead of a real
 //! NIC (DESIGN.md §Hardware-Adaptation).
 
+use crate::collectives::pipeline::LayerMsg;
+use crate::runtime::native::{CompressScratch, GradScratch};
 use crate::sparsify::{ErrorFeedback, SparseVec};
+use std::sync::mpsc::Sender;
+use std::time::Instant;
 
 /// Per-replica state.
 ///
@@ -33,6 +37,12 @@ pub struct Worker {
     pub local_mom: Vec<f32>,
     /// last training loss this worker observed
     pub last_loss: f32,
+    /// scratch for the native backward pass (activations, δ buffers, the
+    /// per-layer Wᵀ cache) — reused across steps
+    pub grad_scratch: GradScratch,
+    /// scratch for the bucket-padded compress path (`CompressorKind::Xla*`
+    /// host emulation): accumulator + selection buffers
+    pub compress_scratch: CompressScratch,
 }
 
 impl Worker {
@@ -59,7 +69,28 @@ impl Worker {
             msg_flat: SparseVec::new(d),
             local_mom: Vec::new(),
             last_loss: f32::NAN,
+            grad_scratch: GradScratch::default(),
+            compress_scratch: CompressScratch::default(),
         }
+    }
+
+    /// Publish layer `li`'s freshly compressed message into the streaming
+    /// sink, stamping production time (the overlap accounting's notion of
+    /// "compute was still running here"). The buffer is moved out and
+    /// cycles back via the trainer's post-phase reclaim, so steady-state
+    /// capacity is preserved and the hot loop stays allocation-free.
+    pub fn publish_layer(&mut self, li: usize, sink: &Sender<LayerMsg>) {
+        let msg = std::mem::take(&mut self.msgs[li]);
+        // send can only fail if the aggregator died, in which case the
+        // executor surfaces that error; dropping the message here is fine
+        let _ = sink.send(LayerMsg { rank: self.id, layer: li, msg, sent: Instant::now() });
+    }
+
+    /// SLGS variant: publish the whole-flat-vector message as layer 0 of a
+    /// single-layer stream.
+    pub fn publish_flat(&mut self, sink: &Sender<LayerMsg>) {
+        let msg = std::mem::take(&mut self.msg_flat);
+        let _ = sink.send(LayerMsg { rank: self.id, layer: 0, msg, sent: Instant::now() });
     }
 
     /// Size the per-layer message scratch for a model's layer table. Called
@@ -120,6 +151,28 @@ mod tests {
         assert_eq!(c.workers[1].msgs[0].len, 40);
         assert_eq!(c.workers[1].msgs[1].len, 60);
         assert_eq!(c.workers[1].msgs[1].nnz(), 0);
+    }
+
+    #[test]
+    fn publish_moves_message_and_stamps_rank() {
+        use std::sync::mpsc;
+        let mut c = Cluster::new(2, 10, 1);
+        for w in &mut c.workers {
+            w.ensure_message_scratch(&[4, 6]);
+        }
+        let (tx, rx) = mpsc::channel();
+        c.workers[1].msgs[0].len = 4;
+        c.workers[1].msgs[0].idx.push(2);
+        c.workers[1].msgs[0].val.push(1.5);
+        c.workers[1].publish_layer(0, &tx);
+        c.workers[0].publish_flat(&tx);
+        drop(tx);
+        let m1 = rx.recv().unwrap();
+        assert_eq!((m1.rank, m1.layer, m1.msg.nnz()), (1, 0, 1));
+        let m2 = rx.recv().unwrap();
+        assert_eq!((m2.rank, m2.layer, m2.msg.len), (0, 0, 10));
+        // the buffer was moved out (capacity cycles back via reclaim)
+        assert_eq!(c.workers[1].msgs[0].len, 0);
     }
 
     #[test]

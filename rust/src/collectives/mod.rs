@@ -11,10 +11,17 @@
 //!   SparCML; Li et al., Pipe-SGD). The DES (`pipeline::desim`) consumes
 //!   these costs to regenerate Table 2 / Fig 1 wall-clock numbers.
 
+//! * **Streaming** ([`pipeline`]): the per-layer readiness table +
+//!   overlap accounting that lets the trainer reduce layer `l` while
+//!   layers `< l` are still computing (`--pipeline overlap`), without
+//!   giving up the rank-ordered determinism contract.
+
 pub mod cost;
 pub mod dense;
+pub mod pipeline;
 pub mod sparse_agg;
 
 pub use cost::{CollectiveCost, NetworkModel};
 pub use dense::ring_allreduce_mean;
+pub use pipeline::{LayerMsg, OverlapMeasure, PipelineMode, StreamAggregator};
 pub use sparse_agg::{sparse_allgather_sum, tree_merge_sum};

@@ -1,0 +1,332 @@
+//! Streaming per-layer reduction pipeline (the paper's Fig. 1(c) dataflow
+//! realised in the real trainer, not just the DES).
+//!
+//! In barrier mode the trainer runs `compute-all → reduce-all`, so wall
+//! clock is `T_compute + T_reduce`. Here each worker publishes layer `l`'s
+//! [`SparseVec`] message the moment that layer's compression finishes
+//! ([`LayerMsg`] through an `mpsc` sink), and the aggregator — the calling
+//! thread of [`crate::util::ParallelExecutor::run_with_sink`] — consumes
+//! layers in backprop order as soon as all `P` messages for a layer have
+//! landed, reducing (and applying) them **concurrently** with workers that
+//! are still compressing earlier layers: `max(T_compute, T_reduce)`.
+//!
+//! Determinism survives the overlap (DESIGN.md §Streaming-overlap):
+//!
+//! * within a layer the reduction stays rank-ordered 0..P-1 — messages
+//!   land in rank-indexed slots, and a layer is reduced only once all P
+//!   slots are full, in slot order;
+//! * across layers the aggregate slices are disjoint, so the (arbitrary)
+//!   completion order cannot change any f32 sum;
+//! * the apply `v ← v − (μ·m + agg/P)` is elementwise, so applying it
+//!   per-layer as each slice completes is bit-identical to the dense
+//!   end-of-step pass.
+//!
+//! `--pipeline {barrier,overlap}` is therefore a pure performance knob,
+//! enforced bit-for-bit by `rust/tests/integration_parallel.rs`.
+
+use crate::sparsify::sparse::SparseVec;
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+/// Which hot-loop schedule the trainer runs (`--pipeline`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// Fork-join: all workers finish compressing, then one rank-ordered
+    /// reduction pass, then one dense apply pass.
+    Barrier,
+    /// Streaming: per-layer publish, reduce + apply each layer as soon as
+    /// its P messages land, overlapped with the remaining compute.
+    Overlap,
+}
+
+impl PipelineMode {
+    pub fn parse(s: &str) -> Result<PipelineMode> {
+        Ok(match s {
+            "barrier" => PipelineMode::Barrier,
+            "overlap" => PipelineMode::Overlap,
+            _ => anyhow::bail!("unknown pipeline mode {s:?} (barrier|overlap)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PipelineMode::Barrier => "barrier",
+            PipelineMode::Overlap => "overlap",
+        }
+    }
+}
+
+/// One layer's sparse message from one worker rank, published the moment
+/// that layer's compression finished. `sent` is stamped on the producing
+/// thread, so the aggregator can tell overlapped work from tail work.
+pub struct LayerMsg {
+    pub rank: usize,
+    pub layer: usize,
+    pub msg: SparseVec,
+    pub sent: Instant,
+}
+
+/// Measured overlap of the streamed reduction phase: how much of the
+/// aggregator's busy time was hidden under still-running compute. The
+/// real-trainer counterpart of the DES's `hidden` / `t_comm` split.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OverlapMeasure {
+    /// total aggregator busy time (zero + reduce + apply), seconds
+    pub busy_seconds: f64,
+    /// busy time hidden under compute (spent before the last publish)
+    pub hidden_seconds: f64,
+}
+
+impl OverlapMeasure {
+    /// The un-hidden tail — busy time after the last worker published.
+    pub fn tail_seconds(&self) -> f64 {
+        (self.busy_seconds - self.hidden_seconds).max(0.0)
+    }
+
+    /// hidden / busy in [0, 1]; 0 when nothing was streamed (barrier runs).
+    pub fn efficiency(&self) -> f64 {
+        if self.busy_seconds > 0.0 {
+            self.hidden_seconds / self.busy_seconds
+        } else {
+            0.0
+        }
+    }
+
+    pub fn accumulate(&mut self, other: &OverlapMeasure) {
+        self.busy_seconds += other.busy_seconds;
+        self.hidden_seconds += other.hidden_seconds;
+    }
+}
+
+/// Wall-clock bookkeeping for one streamed phase. Busy intervals are
+/// recorded per reduced layer; the portion of each interval that lies
+/// before the **last send timestamp** counts as hidden (compute was still
+/// producing messages), mirroring `desim`'s `hidden = t_comm − tail`.
+/// Timestamps are production-side (`LayerMsg::sent`), so a degenerate
+/// sequential run — where every message is produced before draining
+/// starts — correctly measures zero hidden time.
+#[derive(Debug)]
+pub struct OverlapTimer {
+    last_sent: Option<Instant>,
+    intervals: Vec<(Instant, Instant)>,
+}
+
+impl OverlapTimer {
+    pub fn new() -> OverlapTimer {
+        OverlapTimer { last_sent: None, intervals: Vec::new() }
+    }
+
+    pub fn note_sent(&mut self, sent: Instant) {
+        self.last_sent = Some(match self.last_sent {
+            Some(t) => t.max(sent),
+            None => sent,
+        });
+    }
+
+    pub fn note_busy(&mut self, start: Instant, end: Instant) {
+        self.intervals.push((start, end));
+    }
+
+    pub fn finish(&self) -> OverlapMeasure {
+        let mut busy = Duration::ZERO;
+        let mut hidden = Duration::ZERO;
+        for &(s, e) in &self.intervals {
+            busy += e.saturating_duration_since(s);
+            if let Some(ls) = self.last_sent {
+                hidden += e.min(ls).saturating_duration_since(s);
+            }
+        }
+        OverlapMeasure {
+            busy_seconds: busy.as_secs_f64(),
+            hidden_seconds: hidden.as_secs_f64(),
+        }
+    }
+}
+
+impl Default for OverlapTimer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Rank-indexed readiness table for the streamed reduction.
+///
+/// Messages arrive in any interleaving (each worker publishes its own
+/// layers in backprop order, but workers race each other); [`Self::push`]
+/// buffers them in `[layer][rank]` slots and fires the completion callback
+/// for each layer **in strict backprop order** (layer L-1 first,
+/// descending) once all `P` ranks have landed — the order Algorithm 2
+/// consumes layers, and the order the NIC stream of the DES transmits
+/// them. The callback receives the rank-ordered slot slice, so the
+/// per-layer f32 reduction is independent of arrival order (asserted by
+/// `prop_stream_aggregator_arrival_order_invariant`).
+pub struct StreamAggregator {
+    /// arrived messages, `slots[layer][rank]`; `None` until published
+    slots: Vec<Vec<Option<SparseVec>>>,
+    /// per-layer arrival count
+    arrived: Vec<usize>,
+    /// next layer to fire, walking L-1 → 0; `None` once all fired
+    cursor: Option<usize>,
+    workers: usize,
+}
+
+impl StreamAggregator {
+    pub fn new(layers: usize, workers: usize) -> StreamAggregator {
+        assert!(layers > 0 && workers > 0);
+        StreamAggregator {
+            slots: (0..layers).map(|_| (0..workers).map(|_| None).collect()).collect(),
+            arrived: vec![0; layers],
+            cursor: Some(layers - 1),
+            workers,
+        }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Arm for a new step: counts reset, cursor back to the last layer.
+    /// Slots are normally already empty (the trainer reclaims buffers
+    /// after each step); leftovers from an aborted step are dropped.
+    pub fn reset(&mut self) {
+        for layer in &mut self.slots {
+            for slot in layer.iter_mut() {
+                *slot = None;
+            }
+        }
+        self.arrived.iter_mut().for_each(|a| *a = 0);
+        self.cursor = Some(self.slots.len() - 1);
+    }
+
+    /// All layers fired?
+    pub fn finished(&self) -> bool {
+        self.cursor.is_none()
+    }
+
+    /// Land one message; fire `on_layer(layer, rank_ordered_slots)` for
+    /// every layer that becomes consumable, in backprop order.
+    pub fn push<F>(&mut self, m: LayerMsg, mut on_layer: F)
+    where
+        F: FnMut(usize, &[Option<SparseVec>]),
+    {
+        debug_assert!(m.layer < self.slots.len() && m.rank < self.workers);
+        debug_assert!(self.slots[m.layer][m.rank].is_none(), "duplicate publish");
+        self.slots[m.layer][m.rank] = Some(m.msg);
+        self.arrived[m.layer] += 1;
+        while let Some(next) = self.cursor {
+            if self.arrived[next] < self.workers {
+                break;
+            }
+            on_layer(next, &self.slots[next]);
+            self.cursor = next.checked_sub(1);
+        }
+    }
+
+    /// Take back the message buffer for `(layer, rank)` so the trainer can
+    /// return it to its owning worker — the steady-state loop keeps zero
+    /// allocation because buffers cycle worker → channel → table → worker.
+    pub fn take(&mut self, layer: usize, rank: usize) -> Option<SparseVec> {
+        self.slots[layer][rank].take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::sparse_agg;
+    use crate::util::rng::Rng;
+
+    fn msg(rank: usize, layer: usize, n: usize, seed: u64) -> LayerMsg {
+        let mut rng = Rng::new(seed);
+        let mut dense = vec![0.0f32; n];
+        for i in rng.sample_distinct(n, (n / 3).max(1)) {
+            dense[i] = rng.normal_f32();
+        }
+        LayerMsg { rank, layer, msg: SparseVec::from_dense(&dense), sent: Instant::now() }
+    }
+
+    #[test]
+    fn fires_layers_in_backprop_order() {
+        let (layers, workers, n) = (3usize, 2usize, 16usize);
+        let mut agg = StreamAggregator::new(layers, workers);
+        let mut fired = Vec::new();
+        // arrival order deliberately front-to-back: layer 0 completes first
+        for layer in 0..layers {
+            for rank in 0..workers {
+                agg.push(msg(rank, layer, n, (layer * 7 + rank) as u64), |l, slots| {
+                    assert!(slots.iter().all(|s| s.is_some()));
+                    fired.push(l);
+                });
+            }
+        }
+        assert_eq!(fired, vec![2, 1, 0], "strict backprop order");
+        assert!(agg.finished());
+    }
+
+    #[test]
+    fn reduction_matches_rank_order_regardless_of_arrival() {
+        let (layers, workers, n) = (4usize, 3usize, 32usize);
+        // reference: rank-ordered reduction per layer
+        let mut expect = vec![vec![0.0f32; n]; layers];
+        let mut msgs = Vec::new();
+        for layer in 0..layers {
+            for rank in 0..workers {
+                let m = msg(rank, layer, n, (layer * 100 + rank) as u64);
+                m.msg.add_into(&mut expect[layer]);
+                msgs.push(m);
+            }
+        }
+        // adversarial arrival: reverse rank order, layers interleaved
+        msgs.reverse();
+        let mut agg = StreamAggregator::new(layers, workers);
+        let mut out = vec![vec![0.0f32; n]; layers];
+        for m in msgs {
+            agg.push(m, |l, slots| {
+                sparse_agg::sparse_add_rank_ordered(
+                    slots.iter().map(|s| s.as_ref().unwrap()),
+                    &mut out[l],
+                );
+            });
+        }
+        assert!(agg.finished());
+        assert_eq!(out, expect);
+        // buffers are reclaimable and reset re-arms
+        for layer in 0..layers {
+            for rank in 0..workers {
+                assert!(agg.take(layer, rank).is_some());
+            }
+        }
+        agg.reset();
+        assert!(!agg.finished());
+    }
+
+    #[test]
+    fn overlap_timer_counts_hidden_before_last_send() {
+        let t0 = Instant::now();
+        let mut timer = OverlapTimer::new();
+        let ms = Duration::from_millis(1);
+        // busy interval entirely before the last send → fully hidden
+        timer.note_busy(t0, t0 + ms);
+        // busy interval entirely after the last send → pure tail
+        timer.note_busy(t0 + 3 * ms, t0 + 5 * ms);
+        timer.note_sent(t0 + 2 * ms);
+        let m = timer.finish();
+        assert!((m.busy_seconds - 0.003).abs() < 1e-9);
+        assert!((m.hidden_seconds - 0.001).abs() < 1e-9);
+        assert!((m.tail_seconds() - 0.002).abs() < 1e-9);
+        assert!(m.efficiency() > 0.3 && m.efficiency() < 0.34);
+    }
+
+    #[test]
+    fn pipeline_mode_parses() {
+        assert_eq!(PipelineMode::parse("barrier").unwrap(), PipelineMode::Barrier);
+        assert_eq!(PipelineMode::parse("overlap").unwrap(), PipelineMode::Overlap);
+        assert!(PipelineMode::parse("nope").is_err());
+        assert_eq!(PipelineMode::Overlap.name(), "overlap");
+    }
+
+    #[test]
+    fn empty_measure_efficiency_zero() {
+        assert_eq!(OverlapTimer::new().finish().efficiency(), 0.0);
+    }
+}

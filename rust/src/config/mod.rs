@@ -4,6 +4,7 @@
 //! Precedence (lowest to highest): built-in defaults → `--config file.json`
 //! → individual `--key value` CLI flags.
 
+use crate::collectives::PipelineMode;
 use crate::sparsify::CompressorKind;
 use crate::trainer::Algorithm;
 use crate::util::cli::Args;
@@ -42,6 +43,12 @@ pub struct TrainConfig {
     /// cap c_u for adaptive selection
     pub c_max: f64,
     pub compressor: CompressorKind,
+    /// hot-loop schedule: `overlap` streams each layer's rank-ordered
+    /// reduction (and its slice of the apply) concurrently with workers
+    /// still compressing earlier layers; `barrier` is the fork-join
+    /// baseline. Bit-identical either way (DESIGN.md §Streaming-overlap);
+    /// XLA compressors force barrier aggregation (PJRT is not Sync).
+    pub pipeline: PipelineMode,
     /// sampled-threshold stride for host/xla sampled compressors
     pub sample_stride: usize,
     /// eval every N steps (0 = never)
@@ -72,6 +79,7 @@ impl TrainConfig {
             adaptive: false,
             c_max: 1000.0,
             compressor: CompressorKind::HostExact,
+            pipeline: PipelineMode::Overlap,
             sample_stride: 64,
             eval_every: 50,
             eval_batches: 4,
@@ -99,6 +107,7 @@ impl TrainConfig {
                 "adaptive" => self.adaptive = val.as_bool()?,
                 "c_max" => self.c_max = val.as_f64()?,
                 "compressor" => self.compressor = CompressorKind::parse(val.as_str()?)?,
+                "pipeline" => self.pipeline = PipelineMode::parse(val.as_str()?)?,
                 "sample_stride" => self.sample_stride = val.as_usize()?,
                 "eval_every" => self.eval_every = val.as_usize()?,
                 "eval_batches" => self.eval_batches = val.as_usize()?,
@@ -139,6 +148,9 @@ impl TrainConfig {
         self.c_max = args.f64_or("c-max", self.c_max)?;
         if let Some(c) = args.get("compressor") {
             self.compressor = CompressorKind::parse(c)?;
+        }
+        if let Some(p) = args.get("pipeline") {
+            self.pipeline = PipelineMode::parse(p)?;
         }
         self.sample_stride = args.usize_or("sample-stride", self.sample_stride)?;
         self.eval_every = args.usize_or("eval-every", self.eval_every)?;
@@ -194,6 +206,7 @@ impl TrainConfig {
             ("momentum", Json::Num(self.momentum)),
             ("compression", Json::Num(self.compression)),
             ("adaptive", Json::Bool(self.adaptive)),
+            ("pipeline", Json::Str(self.pipeline.name().into())),
             ("c_max", Json::Num(self.c_max)),
             ("seed", Json::Num(self.seed as f64)),
         ])
@@ -234,7 +247,7 @@ mod tests {
     fn cli_overrides() {
         let mut cfg = TrainConfig::default_for("mlp");
         let args = Args::parse(
-            "train --workers 2 --steps 7 --threads 8 --algorithm dense --verbose"
+            "train --workers 2 --steps 7 --threads 8 --algorithm dense --pipeline barrier --verbose"
                 .split_whitespace()
                 .map(String::from),
         );
@@ -243,7 +256,18 @@ mod tests {
         assert_eq!(cfg.steps, 7);
         assert_eq!(cfg.threads, 8);
         assert_eq!(cfg.algorithm, Algorithm::Dense);
+        assert_eq!(cfg.pipeline, PipelineMode::Barrier);
         assert!(cfg.verbose);
+    }
+
+    #[test]
+    fn pipeline_mode_json_and_default() {
+        let mut cfg = TrainConfig::default_for("mlp");
+        assert_eq!(cfg.pipeline, PipelineMode::Overlap);
+        cfg.apply_json(&Json::parse(r#"{"pipeline": "barrier"}"#).unwrap()).unwrap();
+        assert_eq!(cfg.pipeline, PipelineMode::Barrier);
+        assert!(cfg.apply_json(&Json::parse(r#"{"pipeline": "wat"}"#).unwrap()).is_err());
+        assert_eq!(cfg.to_json().get("pipeline").unwrap().as_str().unwrap(), "barrier");
     }
 
     #[test]

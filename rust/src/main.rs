@@ -29,7 +29,8 @@ USAGE: lags <subcommand> [flags]
 
   info     [--artifacts DIR] [--layers]
   train    [--artifacts DIR] [--model M] [--algorithm dense|slgs|lags]
-           [--workers P] [--threads T] [--steps N] [--lr F] [--momentum F]
+           [--workers P] [--threads T] [--pipeline barrier|overlap]
+           [--steps N] [--lr F] [--momentum F]
            [--compression C] [--adaptive] [--c-max C]
            [--compressor host|host-sampled|xla|xla-sampled]
            [--delta-every N] [--eval-every N] [--seed S] [--verbose]
@@ -40,6 +41,13 @@ USAGE: lags <subcommand> [flags]
            --threads T         fans the per-worker hot loop over T OS
                                threads (0 = one per core); results are
                                bit-identical to --threads 1
+           --pipeline MODE     overlap (default) streams each layer's
+                               rank-ordered reduction + apply concurrently
+                               with workers still compressing earlier
+                               layers; barrier is the fork-join baseline.
+                               Bit-identical either way — a pure perf knob
+                               (report.json carries the measured
+                               overlap_efficiency)
   compare  same flags as train (runs dense, slgs, lags) [--out DIR]
   delta    [--model M] [--workers P] [--steps N] [--every N] [--out DIR]
   table2   [--alpha F] [--bandwidth F] [--workers P] [--out DIR]

@@ -60,6 +60,21 @@ pub struct IterationBreakdown {
     pub events: Vec<CommEvent>,
 }
 
+impl IterationBreakdown {
+    /// Fraction of pure communication time hidden under compute, in
+    /// [0, 1]. The prediction the real trainer's measured
+    /// `overlap_efficiency` (streamed-reduction hidden / busy time) is
+    /// compared against — the DES's answer to "how much should
+    /// `--pipeline overlap` be able to hide for this schedule?".
+    pub fn overlap_efficiency(&self) -> f64 {
+        if self.t_comm > 0.0 {
+            self.hidden / self.t_comm
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Simulation parameters beyond the model/network.
 ///
 /// Sparsification overhead runs on the COMPRESSION+COMM pipeline (the
@@ -359,9 +374,12 @@ mod tests {
         let b = simulate(&m, &net(), Schedule::Lags, &p);
         assert!(b.hidden >= 0.0);
         assert!(b.hidden <= b.t_comm + 1e-12);
+        assert!((0.0..=1.0).contains(&b.overlap_efficiency()));
+        assert!(b.overlap_efficiency() > 0.0, "LAGS must hide something");
         // SLGS hides nothing: its single message starts at comp_done
         let s = simulate(&m, &net(), Schedule::Slgs, &p);
         assert!(s.hidden < 1e-12);
+        assert!(s.overlap_efficiency() < 1e-9);
     }
 
     #[test]

@@ -52,12 +52,15 @@ impl BatchData {
 /// batch to run and the worker-owned output slots to fill. Holding `&mut`
 /// slots (rather than returning fresh vectors) keeps the hot loop free of
 /// per-step gradient allocations and lets jobs fan out across threads
-/// with no shared mutable state.
+/// with no shared mutable state. `scratch` is the worker-owned backward
+/// scratch (activations, δ buffers, Wᵀ cache) the native backend reuses
+/// across steps; the PJRT backend ignores it.
 pub struct GradJob<'a> {
     pub x: BatchData,
     pub y: BatchData,
     pub loss: &'a mut f32,
     pub grad: &'a mut Vec<f32>,
+    pub scratch: &'a mut native::GradScratch,
 }
 
 /// Default seed for the native zoo when loaded via the `"native"` magic
@@ -166,7 +169,8 @@ impl ModelRuntime {
         match &self.backend {
             ModelBackend::Native(m) => {
                 let mut grad = Vec::new();
-                let loss = m.train_step_into(params, x, y, &mut grad)?;
+                let mut scratch = native::GradScratch::default();
+                let loss = m.train_step_into(params, x, y, &mut grad, &mut scratch)?;
                 Ok((loss, grad))
             }
             #[cfg(feature = "pjrt")]
@@ -190,7 +194,7 @@ impl ModelRuntime {
     ) -> Result<()> {
         match &self.backend {
             ModelBackend::Native(m) => exec.run(jobs, |_, job| {
-                *job.loss = m.train_step_into(params, &job.x, &job.y, job.grad)?;
+                *job.loss = m.train_step_into(params, &job.x, &job.y, job.grad, job.scratch)?;
                 Ok(())
             }),
             #[cfg(feature = "pjrt")]
@@ -240,7 +244,9 @@ impl ModelRuntime {
 
     /// Compress one layer through the compress artifact (PJRT) or its
     /// bit-faithful host emulation (native). Returns (sparse[n],
-    /// resid'[n], thr) trimmed back to the layer size.
+    /// resid'[n], thr) trimmed back to the layer size. `scratch` is
+    /// worker-owned selection scratch for the native emulation; PJRT runs
+    /// the selection on-device and ignores it.
     pub fn compress_layer_xla(
         &self,
         layer: &LayerInfo,
@@ -249,13 +255,15 @@ impl ModelRuntime {
         lr: f32,
         k: usize,
         sampled: bool,
+        scratch: &mut native::CompressScratch,
     ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
         match &self.backend {
             ModelBackend::Native(_) => {
-                native::compress_layer_bucket(layer, grad, resid, lr, k, sampled)
+                native::compress_layer_bucket_into(layer, grad, resid, lr, k, sampled, scratch)
             }
             #[cfg(feature = "pjrt")]
             ModelBackend::Pjrt(m) => {
+                let _ = scratch;
                 // the facade has no manifest handle here; compress artifacts
                 // are keyed by bucket, which LayerInfo carries
                 m.compress_layer_xla_by_bucket(layer, grad, resid, lr, k, sampled)

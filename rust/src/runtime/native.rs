@@ -111,6 +111,33 @@ pub fn native_manifest(seed: u64) -> Manifest {
     }
 }
 
+/// Worker-owned scratch for the native forward/backward pass, reused
+/// across steps: per-layer activations, the two δ buffers, and the
+/// per-layer Wᵀ cache for the dX walk. Every buffer reaches steady-state
+/// capacity after the first step, so the hot loop stops allocating; the
+/// Wᵀ cache additionally turns the per-sample `Σ_j W[i,j]·δ[j]` column
+/// reduction into contiguous row-walk axpys (one strided transpose per
+/// layer instead of `batch` strided reads).
+#[derive(Debug, Clone, Default)]
+pub struct GradScratch {
+    acts: Vec<Vec<f32>>,
+    delta: Vec<f32>,
+    prev: Vec<f32>,
+    wt: Vec<f32>,
+}
+
+/// Reusable scratch for [`compress_layer_bucket_into`]: the bucket-padded
+/// accumulator plus the selection buffers, so the per-layer-per-worker
+/// XLA-emulation compress path performs no allocation for the threshold
+/// search (the returned sparse/residual vectors stay owned — they are the
+/// artifact contract's outputs).
+#[derive(Debug, Clone, Default)]
+pub struct CompressScratch {
+    acc: Vec<f32>,
+    sample: Vec<f32>,
+    mags: Vec<f32>,
+}
+
 impl NativeMlp {
     /// Reconstruct the MLP shape from a manifest layer table (validates
     /// the alternating w/b structure this backend requires).
@@ -153,20 +180,23 @@ impl NativeMlp {
         Ok((b, in_dim))
     }
 
-    /// Forward pass; returns per-layer post-activations (`acts[l]` has
-    /// shape [batch, dims[l+1]]; the last entry holds raw logits).
-    fn forward(&self, params: &[f32], x: &[f32]) -> Vec<Vec<f32>> {
+    /// Forward pass into reusable per-layer activation buffers (`acts[l]`
+    /// has shape [batch, dims[l+1]]; the last entry holds raw logits).
+    /// Every element is overwritten, so stale contents don't matter.
+    fn forward_into(&self, params: &[f32], x: &[f32], acts: &mut Vec<Vec<f32>>) {
         let nl = self.dims.len() - 1;
         let b = self.batch;
-        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nl);
+        acts.resize_with(nl, Vec::new);
         let mut off = 0;
         for l in 0..nl {
             let (fan_in, fan_out) = (self.dims[l], self.dims[l + 1]);
             let w = &params[off..off + fan_in * fan_out];
             let bias = &params[off + fan_in * fan_out..off + fan_in * fan_out + fan_out];
             off += fan_in * fan_out + fan_out;
-            let input: &[f32] = if l == 0 { x } else { &acts[l - 1] };
-            let mut out = vec![0.0f32; b * fan_out];
+            let (done, rest) = acts.split_at_mut(l);
+            let input: &[f32] = if l == 0 { x } else { &done[l - 1] };
+            let out = &mut rest[0];
+            out.resize(b * fan_out, 0.0);
             for n in 0..b {
                 let row = &input[n * fan_in..(n + 1) * fan_in];
                 let orow = &mut out[n * fan_out..(n + 1) * fan_out];
@@ -185,9 +215,7 @@ impl NativeMlp {
                     }
                 }
             }
-            acts.push(out);
         }
-        acts
     }
 
     /// Mean softmax cross-entropy + per-logit gradient (∂loss/∂logits).
@@ -215,12 +243,15 @@ impl NativeMlp {
 
     /// One train step: loss + flat gradient written into `grad` (resized
     /// to d; the caller owns the buffer so repeated steps don't allocate).
+    /// `scratch` is worker-owned and reused across steps — after the first
+    /// call the step performs no heap allocation.
     pub fn train_step_into(
         &self,
         params: &[f32],
         x: &BatchData,
         y: &BatchData,
         grad: &mut Vec<f32>,
+        scratch: &mut GradScratch,
     ) -> Result<f32> {
         ensure!(params.len() == self.d, "params dim mismatch");
         let (b, _) = self.check_batch(x, y)?;
@@ -231,10 +262,12 @@ impl NativeMlp {
         }
 
         let nl = self.dims.len() - 1;
-        let acts = self.forward(params, xv);
+        let GradScratch { acts, delta, prev, wt } = scratch;
+        self.forward_into(params, xv, acts);
         let c = self.dims[nl];
-        let mut delta = vec![0.0f32; b * c];
-        let loss = self.softmax_xent(&acts[nl - 1], yv, &mut delta);
+        delta.clear();
+        delta.resize(b * c, 0.0);
+        let loss = self.softmax_xent(&acts[nl - 1], yv, delta);
 
         grad.clear();
         grad.resize(self.d, 0.0);
@@ -270,26 +303,43 @@ impl NativeMlp {
                 }
             }
 
-            // δ_prev[n,i] = relu'(a[n,i]) · Σ_j W[i,j]·δ[n,j]
+            // δ_prev[n,i] = relu'(a[n,i]) · Σ_j W[i,j]·δ[n,j]. W is cached
+            // transposed once per layer so the per-sample inner walk is a
+            // contiguous axpy over Wᵀ rows (length fan_in) instead of b
+            // strided column reductions; the j-ascending accumulation
+            // order — and therefore every f32 sum — is unchanged.
             if l > 0 {
                 let w = &params[woff..woff + fan_in * fan_out];
-                let mut prev = vec![0.0f32; b * fan_in];
+                wt.clear();
+                wt.resize(fan_out * fan_in, 0.0);
+                for i in 0..fan_in {
+                    let wrow = &w[i * fan_out..(i + 1) * fan_out];
+                    for (j, &wij) in wrow.iter().enumerate() {
+                        wt[j * fan_in + i] = wij;
+                    }
+                }
+                prev.clear();
+                prev.resize(b * fan_in, 0.0);
                 for n in 0..b {
-                    let arow = &input[n * fan_in..(n + 1) * fan_in];
                     let drow = &delta[n * fan_out..(n + 1) * fan_out];
                     let prow = &mut prev[n * fan_in..(n + 1) * fan_in];
-                    for (i, p) in prow.iter_mut().enumerate() {
-                        if arow[i] > 0.0 {
-                            let wrow = &w[i * fan_out..(i + 1) * fan_out];
-                            let mut acc = 0.0f32;
-                            for (wij, &dj) in wrow.iter().zip(drow.iter()) {
-                                acc += *wij * dj;
-                            }
-                            *p = acc;
+                    for (j, &dj) in drow.iter().enumerate() {
+                        let wtrow = &wt[j * fan_in..(j + 1) * fan_in];
+                        for (p, &wji) in prow.iter_mut().zip(wtrow.iter()) {
+                            *p += wji * dj;
+                        }
+                    }
+                    // relu' mask: zero where the forward activation was
+                    // clamped (matches the branchy reference, which never
+                    // accumulated those entries)
+                    let arow = &input[n * fan_in..(n + 1) * fan_in];
+                    for (p, &ai) in prow.iter_mut().zip(arow.iter()) {
+                        if ai <= 0.0 {
+                            *p = 0.0;
                         }
                     }
                 }
-                delta = prev;
+                std::mem::swap(&mut *delta, &mut *prev);
             }
         }
         Ok(loss)
@@ -305,7 +355,8 @@ impl NativeMlp {
             ensure!((label as usize) < *self.dims.last().unwrap(), "label out of range");
         }
         let nl = self.dims.len() - 1;
-        let acts = self.forward(params, xv);
+        let mut acts = Vec::new();
+        self.forward_into(params, xv, &mut acts);
         let logits = &acts[nl - 1];
         let c = self.dims[nl];
         let mut scratch = vec![0.0f32; b * c];
@@ -358,16 +409,41 @@ pub fn compress_layer_bucket(
     k: usize,
     sampled: bool,
 ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+    compress_layer_bucket_into(layer, grad, resid, lr, k, sampled, &mut CompressScratch::default())
+}
+
+/// Allocation-free (for the threshold search) form of
+/// [`compress_layer_bucket`]: the accumulator and the quickselect/sample
+/// buffers come from worker-owned `scratch`, so the trainer's per-layer
+/// per-worker cadence stops paying a `kth_largest_abs` allocation per call
+/// (§Perf L3-1 applied to the XLA-emulation path).
+pub fn compress_layer_bucket_into(
+    layer: &LayerInfo,
+    grad: &[f32],
+    resid: &[f32],
+    lr: f32,
+    k: usize,
+    sampled: bool,
+    scratch: &mut CompressScratch,
+) -> Result<(Vec<f32>, Vec<f32>, f32)> {
     let n = layer.size;
     ensure!(grad.len() == n && resid.len() == n, "layer slice mismatch");
-    let mut acc = vec![0.0f32; layer.bucket];
+    let acc = &mut scratch.acc;
+    acc.clear();
+    acc.resize(layer.bucket, 0.0); // zero-pad the bucket tail every call
     for i in 0..n {
         acc[i] = resid[i] + lr * grad[i];
     }
     let thr = if sampled {
-        threshold::sampled_threshold(&acc, k, XLA_SAMPLE_STRIDE)
+        threshold::sampled_threshold_with_buf(
+            acc,
+            k,
+            XLA_SAMPLE_STRIDE,
+            &mut scratch.sample,
+            &mut scratch.mags,
+        )
     } else {
-        topk::kth_largest_abs(&acc, k)
+        topk::kth_largest_abs_with_buf(acc, k, &mut scratch.mags)
     };
     let mut sparse = vec![0.0f32; n];
     let mut new_resid = vec![0.0f32; n];
@@ -409,7 +485,8 @@ mod tests {
         let params = m.init_params(1);
         let (x, y) = toy_batch(&mm, 2);
         let mut grad = Vec::new();
-        let loss0 = m.train_step_into(&params, &x, &y, &mut grad).unwrap();
+        let mut gs = GradScratch::default();
+        let loss0 = m.train_step_into(&params, &x, &y, &mut grad, &mut gs).unwrap();
         assert!(loss0.is_finite());
         // central differences on a few coordinates, f64-refined via eps
         let mut rng = Rng::new(3);
@@ -419,9 +496,9 @@ mod tests {
             let mut pp = params.clone();
             pp[i] += eps;
             let mut scratch = Vec::new();
-            let lp = m.train_step_into(&pp, &x, &y, &mut scratch).unwrap();
+            let lp = m.train_step_into(&pp, &x, &y, &mut scratch, &mut gs).unwrap();
             pp[i] -= 2.0 * eps;
-            let lm = m.train_step_into(&pp, &x, &y, &mut scratch).unwrap();
+            let lm = m.train_step_into(&pp, &x, &y, &mut scratch, &mut gs).unwrap();
             let fd = (lp as f64 - lm as f64) / (2.0 * eps as f64);
             let an = grad[i] as f64;
             assert!(
@@ -438,8 +515,12 @@ mod tests {
         let (x, y) = toy_batch(&mm, 5);
         let mut g1 = Vec::new();
         let mut g2 = vec![9.0f32; 3]; // wrong-size buffer must be fixed up
-        let l1 = m.train_step_into(&params, &x, &y, &mut g1).unwrap();
-        let l2 = m.train_step_into(&params, &x, &y, &mut g2).unwrap();
+        // fresh vs reused (dirty) scratch must not change a single bit
+        let mut gs1 = GradScratch::default();
+        let mut gs2 = GradScratch::default();
+        m.train_step_into(&params, &x, &y, &mut g2, &mut gs2).unwrap();
+        let l1 = m.train_step_into(&params, &x, &y, &mut g1, &mut gs1).unwrap();
+        let l2 = m.train_step_into(&params, &x, &y, &mut g2, &mut gs2).unwrap();
         assert_eq!(l1, l2);
         assert_eq!(g1, g2);
         assert!(g1.iter().any(|&g| g != 0.0));
@@ -452,10 +533,11 @@ mod tests {
         let mut params = m.init_params(6);
         let (x, y) = toy_batch(&mm, 7);
         let mut grad = Vec::new();
-        let first = m.train_step_into(&params, &x, &y, &mut grad).unwrap();
+        let mut gs = GradScratch::default();
+        let first = m.train_step_into(&params, &x, &y, &mut grad, &mut gs).unwrap();
         let mut last = first;
         for _ in 0..60 {
-            last = m.train_step_into(&params, &x, &y, &mut grad).unwrap();
+            last = m.train_step_into(&params, &x, &y, &mut grad, &mut gs).unwrap();
             for (p, g) in params.iter_mut().zip(grad.iter()) {
                 *p -= 0.2 * g;
             }
@@ -483,6 +565,27 @@ mod tests {
             let expect_m = 0.9 * m[i] + a[i];
             assert_eq!(m2[i], expect_m);
             assert_eq!(p2[i], p[i] - expect_m);
+        }
+    }
+
+    #[test]
+    fn bucket_compress_scratch_reuse_bit_identical() {
+        // one dirty scratch across layers with different bucket sizes must
+        // match the fresh-allocation form exactly (tail re-zeroing)
+        let (_, mm) = toy();
+        let mut scratch = CompressScratch::default();
+        let mut rng = Rng::new(11);
+        for (li, layer) in mm.layers.iter().enumerate() {
+            let n = layer.size;
+            let grad: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let resid: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 0.3).collect();
+            let k = (n / 4).max(1);
+            for sampled in [false, true] {
+                let a = compress_layer_bucket(layer, &grad, &resid, 0.2, k, sampled).unwrap();
+                let b = compress_layer_bucket_into(layer, &grad, &resid, 0.2, k, sampled, &mut scratch)
+                    .unwrap();
+                assert_eq!(a, b, "layer {li} sampled={sampled}");
+            }
         }
     }
 

@@ -6,23 +6,36 @@
 //! selection cost from O(n) over the full layer to O(s) over the sample,
 //! which matters for the biggest layers of the DES profiles.
 
-use super::topk::kth_largest_abs;
+use super::topk::{kth_largest_abs, kth_largest_abs_with_buf};
 use crate::util::rng::Rng;
 
 /// Strided deterministic sampling — mirrors the Pallas artifact
 /// (`compress_sampled` with `sample_idx = arange(0, n, stride)`), so the
 /// host and XLA paths produce identical thresholds.
 pub fn sampled_threshold(x: &[f32], k: usize, stride: usize) -> f32 {
+    sampled_threshold_with_buf(x, k, stride, &mut Vec::new(), &mut Vec::new())
+}
+
+/// Allocation-free form of [`sampled_threshold`] for hot loops: `sample`
+/// and `mags` are reusable scratch vectors (cleared and refilled).
+pub fn sampled_threshold_with_buf(
+    x: &[f32],
+    k: usize,
+    stride: usize,
+    sample: &mut Vec<f32>,
+    mags: &mut Vec<f32>,
+) -> f32 {
     let n = x.len();
     if n == 0 || k == 0 {
         return f32::INFINITY;
     }
     let stride = stride.max(1);
-    let sample: Vec<f32> = x.iter().step_by(stride).copied().collect();
+    sample.clear();
+    sample.extend(x.iter().step_by(stride).copied());
     let s = sample.len();
     // ceil(k * s / n), clamped to [1, s] — matches ref.sampled_threshold_ref
     let ks = ((k * s + n - 1) / n).clamp(1, s);
-    kth_largest_abs(&sample, ks)
+    kth_largest_abs_with_buf(sample, ks, mags)
 }
 
 /// PRNG-sampled variant (what a GPU implementation would do); statistically
@@ -38,29 +51,23 @@ pub fn sampled_threshold_random(x: &[f32], k: usize, s: usize, rng: &mut Rng) ->
     kth_largest_abs(&sample, ks)
 }
 
-/// Reusable sampled-threshold state (avoids re-allocating the sample buffer
-/// in the trainer hot loop).
+/// Reusable sampled-threshold state (avoids re-allocating the sample and
+/// quickselect buffers in the trainer hot loop — the non-buf
+/// `kth_largest_abs` allocates per call, §Perf L3-1).
 #[derive(Debug, Clone)]
 pub struct SampledThreshold {
     stride: usize,
     sample: Vec<f32>,
+    mags: Vec<f32>,
 }
 
 impl SampledThreshold {
     pub fn new(stride: usize) -> Self {
-        SampledThreshold { stride: stride.max(1), sample: Vec::new() }
+        SampledThreshold { stride: stride.max(1), sample: Vec::new(), mags: Vec::new() }
     }
 
     pub fn estimate(&mut self, x: &[f32], k: usize) -> f32 {
-        let n = x.len();
-        if n == 0 || k == 0 {
-            return f32::INFINITY;
-        }
-        self.sample.clear();
-        self.sample.extend(x.iter().step_by(self.stride).copied());
-        let s = self.sample.len();
-        let ks = ((k * s + n - 1) / n).clamp(1, s);
-        kth_largest_abs(&self.sample, ks)
+        sampled_threshold_with_buf(x, k, self.stride, &mut self.sample, &mut self.mags)
     }
 }
 

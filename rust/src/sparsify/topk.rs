@@ -50,27 +50,60 @@ pub fn topk_mask_into(x: &[f32], k: usize, out: &mut [f32]) -> f32 {
     thr
 }
 
+/// All-ones bitmask when `|v| >= thr`, zero otherwise (NaN `v` or NaN
+/// `thr` select zero, matching the branchy `if v.abs() >= thr` form).
+#[inline(always)]
+fn keep_mask(v: f32, thr: f32) -> u32 {
+    ((v.abs() >= thr) as u32).wrapping_neg()
+}
+
+const LANES: usize = 8;
+
 /// Apply a precomputed threshold: out_i = x_i if |x_i| >= thr else 0.
+///
+/// Branchless (bitmask select) and chunk-unrolled by [`LANES`] so the loop
+/// autovectorizes — this runs per layer per worker per step (the masked
+/// compress path and the XLA host emulation). Semantics are identical to
+/// the branchy form, including NaN/±inf handling and the literal `+0.0`
+/// written for dropped elements.
 pub fn mask_with_threshold(x: &[f32], thr: f32, out: &mut [f32]) {
-    for (o, &v) in out.iter_mut().zip(x.iter()) {
-        *o = if v.abs() >= thr { v } else { 0.0 };
+    debug_assert_eq!(x.len(), out.len());
+    let mut xc = x.chunks_exact(LANES);
+    let mut oc = out.chunks_exact_mut(LANES);
+    for (xs, os) in (&mut xc).zip(&mut oc) {
+        for i in 0..LANES {
+            let v = xs[i];
+            os[i] = f32::from_bits(v.to_bits() & keep_mask(v, thr));
+        }
+    }
+    for (o, &v) in oc.into_remainder().iter_mut().zip(xc.remainder().iter()) {
+        *o = f32::from_bits(v.to_bits() & keep_mask(v, thr));
     }
 }
 
 /// Split x at the threshold: `kept` gets the TopK part, `resid` gets the
-/// complement (kept + resid == x elementwise). The error-feedback hot path.
+/// complement (kept + resid == x elementwise). The error-feedback hot
+/// path; branchless + chunk-unrolled like [`mask_with_threshold`].
 pub fn split_with_threshold(x: &[f32], thr: f32, kept: &mut [f32], resid: &mut [f32]) {
     debug_assert_eq!(x.len(), kept.len());
     debug_assert_eq!(x.len(), resid.len());
-    for i in 0..x.len() {
-        let v = x[i];
-        if v.abs() >= thr {
-            kept[i] = v;
-            resid[i] = 0.0;
-        } else {
-            kept[i] = 0.0;
-            resid[i] = v;
+    let mut xc = x.chunks_exact(LANES);
+    let mut kc = kept.chunks_exact_mut(LANES);
+    let mut rc = resid.chunks_exact_mut(LANES);
+    for ((xs, ks), rs) in (&mut xc).zip(&mut kc).zip(&mut rc) {
+        for i in 0..LANES {
+            let v = xs[i];
+            let m = keep_mask(v, thr);
+            ks[i] = f32::from_bits(v.to_bits() & m);
+            rs[i] = f32::from_bits(v.to_bits() & !m);
         }
+    }
+    let (xt, kt, rt) = (xc.remainder(), kc.into_remainder(), rc.into_remainder());
+    for i in 0..xt.len() {
+        let v = xt[i];
+        let m = keep_mask(v, thr);
+        kt[i] = f32::from_bits(v.to_bits() & m);
+        rt[i] = f32::from_bits(v.to_bits() & !m);
     }
 }
 
@@ -167,5 +200,34 @@ mod tests {
         let (m, thr) = topk_mask(&[], 5);
         assert!(m.is_empty());
         assert!(thr.is_infinite());
+    }
+
+    #[test]
+    fn branchless_kernels_match_branchy_reference() {
+        // every remainder length around the unroll width, plus specials
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 63, 250] {
+            let mut x = randvec(n, 40 + n as u64);
+            if n >= 4 {
+                x[0] = f32::NAN;
+                x[1] = f32::INFINITY;
+                x[2] = -0.0;
+                x[3] = 0.0;
+            }
+            for thr in [0.0f32, 0.5, f32::INFINITY, f32::NAN] {
+                let mut masked = vec![9.0f32; n];
+                mask_with_threshold(&x, thr, &mut masked);
+                let mut kept = vec![9.0f32; n];
+                let mut resid = vec![9.0f32; n];
+                split_with_threshold(&x, thr, &mut kept, &mut resid);
+                for i in 0..n {
+                    let keep = x[i].abs() >= thr;
+                    let expect_mask = if keep { x[i] } else { 0.0 };
+                    assert_eq!(masked[i].to_bits(), expect_mask.to_bits(), "mask n={n} i={i}");
+                    let (ek, er) = if keep { (x[i], 0.0) } else { (0.0, x[i]) };
+                    assert_eq!(kept[i].to_bits(), ek.to_bits(), "kept n={n} i={i}");
+                    assert_eq!(resid[i].to_bits(), er.to_bits(), "resid n={n} i={i}");
+                }
+            }
+        }
     }
 }

@@ -14,9 +14,9 @@
 //! optional), so convergence differences isolate the sparsification
 //! scheme — the paper's Fig. 3 / Table 1 experiment design.
 //!
-//! ## Hot-loop structure (DESIGN.md §Threading-model)
+//! ## Hot-loop structure (DESIGN.md §Threading-model, §Streaming-overlap)
 //!
-//! Each iteration is three phases:
+//! Each iteration runs three logical phases:
 //!
 //! 1. **Parallel per-worker phase** — gradient compute, momentum
 //!    correction and error-feedback compression fan out over the
@@ -28,11 +28,19 @@
 //!    [`crate::collectives::sparse_agg::sparse_add_rank_ordered`] in rank
 //!    order 0..P-1, layer-major in backprop order: O(P·k) sparse adds,
 //!    bit-identical to the sequential dense baseline.
-//! 3. **Sequential apply** — `v ← v − (mu·m + agg/P)`.
+//! 3. **Apply** — `v ← v − (mu·m + agg/P)`.
 //!
-//! Because phase 1 is per-worker pure and phases 2–3 are sequential,
-//! `--threads N` produces bit-identical params, losses and message stats
-//! for every N (asserted by `rust/tests/integration_parallel.rs`).
+//! Under `--pipeline barrier` the phases run back-to-back (fork-join).
+//! Under `--pipeline overlap` (the default) phases 2–3 **stream**: each
+//! worker publishes layer `l`'s message the moment its compression
+//! finishes, and the calling thread reduces + applies every layer whose P
+//! messages have landed — in backprop order, rank-ordered within the
+//! layer — while workers are still compressing earlier layers. Because
+//! phase 1 is per-worker pure, layers occupy disjoint `agg`/param slices,
+//! and each layer's reduction stays rank-ordered, `--pipeline` and
+//! `--threads` are pure performance knobs: bit-identical params, losses
+//! and message stats for every setting (asserted by
+//! `rust/tests/integration_parallel.rs`).
 
 mod report;
 
@@ -40,6 +48,9 @@ pub use report::{MessageStats, TrainReport};
 
 use crate::adaptive::{self, RatioConfig};
 use crate::cluster::Cluster;
+use crate::collectives::pipeline::{
+    LayerMsg, OverlapMeasure, OverlapTimer, PipelineMode, StreamAggregator,
+};
 use crate::collectives::{dense::ring_allreduce_mean, sparse_agg, NetworkModel};
 use crate::config::TrainConfig;
 use crate::data::Synthetic;
@@ -50,7 +61,9 @@ use crate::runtime::{GradJob, Metric, ModelRuntime, Runtime};
 use crate::sparsify::CompressorKind;
 use crate::util::ParallelExecutor;
 use anyhow::Result;
+use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Which distributed optimizer to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -87,13 +100,76 @@ impl Algorithm {
     }
 }
 
+/// Phase 3 over one slice: v ← v − (μ·m + agg/P) for i in [off, off+n).
+/// The update is elementwise, so the barrier paths call it once over the
+/// whole vector and the streaming path calls it per completed layer —
+/// bit-identical either way.
+fn apply_update_range(
+    params: &mut [f32],
+    momentum: &mut [f32],
+    agg: &[f32],
+    mu: f32,
+    inv_p: f32,
+    off: usize,
+    n: usize,
+) {
+    for i in off..off + n {
+        let upd = mu * momentum[i] + agg[i] * inv_p;
+        momentum[i] = upd;
+        params[i] -= upd;
+    }
+}
+
+/// Drain one streamed phase on the aggregator (calling) thread: land
+/// each published [`LayerMsg`], and for every layer that completes — in
+/// backprop order, all P ranks present — zero its `agg` slice, reduce the
+/// rank-ordered messages into it, and apply that slice's update, all
+/// while workers are still compressing earlier layers. Returns (wire
+/// bytes, message count, measured overlap).
+fn drain_stream(
+    rx: mpsc::Receiver<LayerMsg>,
+    stream: &mut StreamAggregator,
+    spans: &[(usize, usize)],
+    agg: &mut [f32],
+    params: &mut [f32],
+    momentum: &mut [f32],
+    mu: f32,
+    inv_p: f32,
+) -> (usize, usize, OverlapMeasure) {
+    let mut timer = OverlapTimer::new();
+    let mut bytes = 0usize;
+    let mut messages = 0usize;
+    while let Ok(m) = rx.recv() {
+        timer.note_sent(m.sent);
+        stream.push(m, |li, slots| {
+            let begin = Instant::now();
+            let (off, n) = spans[li];
+            {
+                let dst = &mut agg[off..off + n];
+                dst.iter_mut().for_each(|v| *v = 0.0);
+                sparse_agg::sparse_add_rank_ordered(
+                    slots.iter().map(|s| s.as_ref().expect("complete layer")),
+                    dst,
+                );
+            }
+            for s in slots {
+                bytes += s.as_ref().expect("complete layer").wire_bytes();
+                messages += 1;
+            }
+            apply_update_range(&mut *params, &mut *momentum, &*agg, mu, inv_p, off, n);
+            timer.note_busy(begin, Instant::now());
+        });
+    }
+    (bytes, messages, timer.finish())
+}
+
 /// Distributed trainer over the logical worker pool.
 pub struct Trainer {
     pub cfg: TrainConfig,
     model: ModelRuntime,
     data: Synthetic,
     cluster: Cluster,
-    /// fork/join pool for the per-worker phases (`cfg.threads`)
+    /// fork/join + streaming pool for the per-worker phases (`cfg.threads`)
     exec: ParallelExecutor,
     /// replicated model parameters v_t
     params: Vec<f32>,
@@ -113,6 +189,12 @@ pub struct Trainer {
     agg: Vec<f32>,
     /// scratch: per-worker dense grad buffers for the dense ring
     ring_bufs: Vec<Vec<f32>>,
+    /// readiness table for the streamed per-layer reduction (`overlap`);
+    /// SLGS streams its flat message as a single-span table
+    stream: StreamAggregator,
+    /// measured overlap accumulated across steps (stays zero in barrier
+    /// mode) — the real-trainer counterpart of the DES `hidden` time
+    overlap: OverlapMeasure,
     msg_stats: MessageStats,
     step_idx: usize,
 }
@@ -164,6 +246,14 @@ impl Trainer {
             None
         };
 
+        // SLGS streams its single whole-vector message; LAGS/Dense size
+        // the table per layer (Dense never uses it)
+        let stream_layers = match cfg.algorithm {
+            Algorithm::Slgs => 1,
+            _ => mm.layers.len().max(1),
+        };
+        let stream = StreamAggregator::new(stream_layers, cfg.workers);
+
         let params = model.init_params.clone();
         let ring_bufs = vec![vec![0.0f32; d]; cfg.workers];
         Ok(Trainer {
@@ -180,6 +270,8 @@ impl Trainer {
             cluster,
             model,
             ring_bufs,
+            stream,
+            overlap: OverlapMeasure::default(),
             msg_stats: MessageStats::default(),
             step_idx: 0,
             cfg,
@@ -197,6 +289,12 @@ impl Trainer {
     /// The executor's resolved thread count (0 in the config = per-core).
     pub fn threads(&self) -> usize {
         self.exec.threads()
+    }
+
+    /// Measured streaming-overlap statistics accumulated across the steps
+    /// run so far (all-zero under `--pipeline barrier` and for Dense).
+    pub fn overlap_stats(&self) -> &OverlapMeasure {
+        &self.overlap
     }
 
     /// Effective k for layer `li` at step `t`, honouring the warm-up
@@ -228,7 +326,13 @@ impl Trainer {
         let mut jobs = Vec::with_capacity(self.cluster.size());
         for w in &mut self.cluster.workers {
             let batch = self.data.batch(w.id, t);
-            jobs.push(GradJob { x: batch.x, y: batch.y, loss: &mut w.last_loss, grad: &mut w.grad });
+            jobs.push(GradJob {
+                x: batch.x,
+                y: batch.y,
+                loss: &mut w.last_loss,
+                grad: &mut w.grad,
+                scratch: &mut w.grad_scratch,
+            });
         }
         self.model.grad_many(&self.exec, &self.params, &mut jobs)?;
         drop(jobs);
@@ -242,28 +346,28 @@ impl Trainer {
             })?;
         }
 
-        // --- aggregate per algorithm
-        self.agg.iter_mut().for_each(|v| *v = 0.0);
+        // --- aggregate + apply per algorithm (the streaming paths fold
+        // phase 3 into the per-layer completion callback)
         match self.cfg.algorithm {
             Algorithm::Dense => self.aggregate_dense()?,
             Algorithm::Slgs => self.aggregate_slgs()?,
             Algorithm::Lags => self.aggregate_lags()?,
         }
 
-        // --- apply: v ← v − (mu·m + agg/P)
-        let inv_p = 1.0 / self.cluster.size() as f32;
-        let mu = self.cfg.momentum as f32;
-        for i in 0..self.params.len() {
-            let upd = mu * self.momentum_buf[i] + self.agg[i] * inv_p;
-            self.momentum_buf[i] = upd;
-            self.params[i] -= upd;
-        }
-
         self.step_idx += 1;
         Ok(self.cluster.mean_loss())
     }
 
-    /// Dense-SGD: real ring allreduce over the worker gradients.
+    /// Barrier phase 3: one whole-vector apply pass.
+    fn apply_full(&mut self) {
+        let inv_p = 1.0 / self.cluster.size() as f32;
+        let mu = self.cfg.momentum as f32;
+        let d = self.params.len();
+        apply_update_range(&mut self.params, &mut self.momentum_buf, &self.agg, mu, inv_p, 0, d);
+    }
+
+    /// Dense-SGD: real ring allreduce over the worker gradients (always a
+    /// barrier — the ring needs every rank's full gradient).
     fn aggregate_dense(&mut self) -> Result<()> {
         let p = self.cluster.size();
         let lr = self.cfg.lr as f32;
@@ -271,19 +375,25 @@ impl Trainer {
             self.ring_bufs[w].copy_from_slice(&self.cluster.workers[w].grad);
         }
         ring_allreduce_mean(&mut self.ring_bufs);
-        // agg = P * lr * mean  (apply divides by P again)
+        // agg = P * lr * mean (apply divides by P again); every element is
+        // overwritten, so no zeroing pass is needed
         let scale = lr * p as f32;
         for (a, &g) in self.agg.iter_mut().zip(self.ring_bufs[0].iter()) {
             *a = scale * g;
         }
         self.msg_stats.record(self.model.mm.d * 4 * 2, 1); // dense allreduce traffic
+        self.apply_full();
         Ok(())
     }
 
     /// SLGS-SGD: one global TopK over the whole flat accumulator per
     /// worker. Compression fans out over the executor into worker-owned
     /// sparse messages (no per-step allocation); the reduction is the
-    /// rank-ordered sparse sum.
+    /// rank-ordered sparse sum. Under `overlap` the flat messages stream
+    /// through a single-span table — the reduction still cannot start
+    /// before the slowest worker publishes (the paper's Fig. 1(b) point:
+    /// single-shot sparsification has nothing to hide behind), so the
+    /// measured overlap stays ≈ 0 while LAGS's is substantial.
     fn aggregate_slgs(&mut self) -> Result<()> {
         let d = self.model.mm.d;
         let t = self.step_idx;
@@ -294,33 +404,104 @@ impl Trainer {
             self.cfg.compressor,
             CompressorKind::HostSampled | CompressorKind::XlaSampled
         );
-        self.exec.run(&mut self.cluster.workers, |_, worker| {
-            worker.ef.compress_layer_sparse(
-                0,
-                &worker.grad,
-                lr,
-                k_total,
-                exact,
-                &mut worker.msg_flat,
-            );
-            Ok(())
-        })?;
-        sparse_agg::sparse_add_rank_ordered(
-            self.cluster.workers.iter().map(|w| &w.msg_flat),
-            &mut self.agg,
-        );
-        let bytes: usize = self.cluster.workers.iter().map(|w| w.msg_flat.wire_bytes()).sum();
-        self.msg_stats.record(bytes, self.cluster.size());
+        match self.cfg.pipeline {
+            PipelineMode::Barrier => {
+                self.exec.run(&mut self.cluster.workers, |_, worker| {
+                    worker.ef.compress_layer_sparse(
+                        0,
+                        &worker.grad,
+                        lr,
+                        k_total,
+                        exact,
+                        &mut worker.msg_flat,
+                    );
+                    Ok(())
+                })?;
+                self.agg.iter_mut().for_each(|v| *v = 0.0);
+                sparse_agg::sparse_add_rank_ordered(
+                    self.cluster.workers.iter().map(|w| &w.msg_flat),
+                    &mut self.agg,
+                );
+                let bytes: usize =
+                    self.cluster.workers.iter().map(|w| w.msg_flat.wire_bytes()).sum();
+                self.msg_stats.record(bytes, self.cluster.size());
+                self.apply_full();
+            }
+            PipelineMode::Overlap => {
+                self.stream.reset();
+                let p = self.cluster.size();
+                let inv_p = 1.0 / p as f32;
+                let mu = self.cfg.momentum as f32;
+                let flat_span = [(0usize, d)];
+                let spans = &flat_span[..];
+                let stream = &mut self.stream;
+                let agg = &mut self.agg[..];
+                let params = &mut self.params[..];
+                let momentum = &mut self.momentum_buf[..];
+                let (tx, rx) = mpsc::channel::<LayerMsg>();
+                let (bytes, messages, overlap) = self.exec.run_with_sink(
+                    &mut self.cluster.workers,
+                    tx,
+                    |_, worker, tx| {
+                        worker.ef.compress_layer_sparse(
+                            0,
+                            &worker.grad,
+                            lr,
+                            k_total,
+                            exact,
+                            &mut worker.msg_flat,
+                        );
+                        worker.publish_flat(tx);
+                        Ok(())
+                    },
+                    move || drain_stream(rx, stream, spans, agg, params, momentum, mu, inv_p),
+                )?;
+                anyhow::ensure!(self.stream.finished(), "streamed SLGS reduction incomplete");
+                self.msg_stats.record(bytes, messages);
+                self.overlap.accumulate(&overlap);
+                for rank in 0..p {
+                    if let Some(m) = self.stream.take(0, rank) {
+                        self.cluster.workers[rank].msg_flat = m;
+                    }
+                }
+            }
+        }
         Ok(())
+    }
+
+    /// Barrier phases 2+3 for LAGS: zero, rank-ordered layer-major
+    /// reduction (Alg. 1 line 9) in backprop order, message accounting,
+    /// whole-vector apply. The same values hit the same coordinates in
+    /// the same rank order as the dense per-worker adds did, so the
+    /// aggregate is bit-identical — at O(Σ_l P·k^(l)) cost.
+    fn reduce_apply_barrier_lags(&mut self) {
+        let nl = self.layer_meta.len();
+        self.agg.iter_mut().for_each(|v| *v = 0.0);
+        let mut bytes = 0usize;
+        let mut messages = 0usize;
+        for li in (0..nl).rev() {
+            let (off, n) = self.layer_meta[li];
+            sparse_agg::sparse_add_rank_ordered(
+                self.cluster.workers.iter().map(|w| &w.msgs[li]),
+                &mut self.agg[off..off + n],
+            );
+            for w in &self.cluster.workers {
+                bytes += w.msgs[li].wire_bytes();
+                messages += 1;
+            }
+        }
+        self.msg_stats.record(bytes, messages);
+        self.apply_full();
     }
 
     /// LAGS-SGD (Algorithm 1): per-layer TopK with error feedback. The
     /// compression loop is worker-major — each worker (thread) walks its
-    /// own layers in backprop order (L → 1 in the paper's indexing) —
-    /// and the aggregation is the layer-major rank-ordered sparse
-    /// reduction, so results stay bit-identical to the sequential
-    /// layer-major baseline while the accumulation cost drops from
-    /// O(P·d) dense adds to O(P·k) sparse adds.
+    /// own layers in backprop order (L → 1 in the paper's indexing).
+    /// Under `barrier` the aggregation is the layer-major rank-ordered
+    /// sparse reduction after all workers finish; under `overlap` each
+    /// layer is published, reduced and applied as soon as its P messages
+    /// land, concurrent with the remaining compression — Algorithm 2's
+    /// wait-free pipelining realised in the actual hot loop.
     fn aggregate_lags(&mut self) -> Result<()> {
         let lr = self.cfg.lr as f32;
         let t = self.step_idx;
@@ -337,7 +518,8 @@ impl Trainer {
         // layer's residual slice and compression of other layers never
         // touches it, so collecting all layers before any compression
         // sees the same accumulators the interleaved loop saw — and the
-        // monitor's RNG stays on the sequential path.
+        // monitor's RNG stays on the sequential path (in both pipeline
+        // modes).
         if self.delta.as_ref().map(|m| m.should_sample(t)).unwrap_or(false) {
             for li in (0..nl).rev() {
                 let (off, n) = self.layer_meta[li];
@@ -353,9 +535,10 @@ impl Trainer {
             }
         }
 
-        // worker-major compression into worker-owned per-layer messages
         if self.cfg.compressor.is_xla() {
-            // the XLA compress executables are not Sync — rank order
+            // the XLA compress executables are not Sync — compression runs
+            // sequentially in rank order, and aggregation stays a barrier
+            // even under `--pipeline overlap` (bit-identical regardless)
             for worker in self.cluster.workers.iter_mut() {
                 for li in (0..nl).rev() {
                     let (off, n) = self.layer_meta[li];
@@ -368,6 +551,7 @@ impl Trainer {
                         lr,
                         self.ks_t[li],
                         sampled,
+                        &mut worker.compress_scratch,
                     )?;
                     worker.ef.write_residual(off, &new_resid);
                     let msg = &mut worker.msgs[li];
@@ -382,44 +566,77 @@ impl Trainer {
                     }
                 }
             }
-        } else {
-            let meta = &self.layer_meta;
-            let ks_t = &self.ks_t;
-            let exact = !sampled;
-            self.exec.run(&mut self.cluster.workers, |_, worker| {
-                for li in (0..meta.len()).rev() {
-                    let (off, n) = meta[li];
-                    worker.ef.compress_layer_sparse(
-                        off,
-                        &worker.grad[off..off + n],
-                        lr,
-                        ks_t[li],
-                        exact,
-                        &mut worker.msgs[li],
-                    );
-                }
-                Ok(())
-            })?;
+            self.reduce_apply_barrier_lags();
+            return Ok(());
         }
 
-        // rank-ordered reduction (Alg. 1 line 9), layer-major in backprop
-        // order: the same values hit the same coordinates in the same
-        // rank order as the dense per-worker adds did, so the aggregate
-        // is bit-identical — at O(Σ_l P·k^(l)) cost.
-        let mut bytes = 0usize;
-        let mut messages = 0usize;
-        for li in (0..nl).rev() {
-            let (off, n) = self.layer_meta[li];
-            sparse_agg::sparse_add_rank_ordered(
-                self.cluster.workers.iter().map(|w| &w.msgs[li]),
-                &mut self.agg[off..off + n],
-            );
-            for w in &self.cluster.workers {
-                bytes += w.msgs[li].wire_bytes();
-                messages += 1;
+        let exact = !sampled;
+        match self.cfg.pipeline {
+            PipelineMode::Barrier => {
+                // worker-major compression into worker-owned per-layer
+                // messages, then the fork-join reduction
+                let meta = &self.layer_meta;
+                let ks_t = &self.ks_t;
+                self.exec.run(&mut self.cluster.workers, |_, worker| {
+                    for li in (0..meta.len()).rev() {
+                        let (off, n) = meta[li];
+                        worker.ef.compress_layer_sparse(
+                            off,
+                            &worker.grad[off..off + n],
+                            lr,
+                            ks_t[li],
+                            exact,
+                            &mut worker.msgs[li],
+                        );
+                    }
+                    Ok(())
+                })?;
+                self.reduce_apply_barrier_lags();
+            }
+            PipelineMode::Overlap => {
+                self.stream.reset();
+                let p = self.cluster.size();
+                let inv_p = 1.0 / p as f32;
+                let mu = self.cfg.momentum as f32;
+                let meta = &self.layer_meta;
+                let ks_t = &self.ks_t;
+                let stream = &mut self.stream;
+                let agg = &mut self.agg[..];
+                let params = &mut self.params[..];
+                let momentum = &mut self.momentum_buf[..];
+                let (tx, rx) = mpsc::channel::<LayerMsg>();
+                let (bytes, messages, overlap) = self.exec.run_with_sink(
+                    &mut self.cluster.workers,
+                    tx,
+                    |_, worker, tx| {
+                        for li in (0..meta.len()).rev() {
+                            let (off, n) = meta[li];
+                            worker.ef.compress_layer_sparse(
+                                off,
+                                &worker.grad[off..off + n],
+                                lr,
+                                ks_t[li],
+                                exact,
+                                &mut worker.msgs[li],
+                            );
+                            worker.publish_layer(li, tx);
+                        }
+                        Ok(())
+                    },
+                    move || drain_stream(rx, stream, meta, agg, params, momentum, mu, inv_p),
+                )?;
+                anyhow::ensure!(self.stream.finished(), "streamed LAGS reduction incomplete");
+                self.msg_stats.record(bytes, messages);
+                self.overlap.accumulate(&overlap);
+                for li in 0..nl {
+                    for rank in 0..p {
+                        if let Some(m) = self.stream.take(li, rank) {
+                            self.cluster.workers[rank].msgs[li] = m;
+                        }
+                    }
+                }
             }
         }
-        self.msg_stats.record(bytes, messages);
         Ok(())
     }
 
@@ -499,8 +716,13 @@ impl Trainer {
             delta_max: self.delta.as_ref().map(|m| m.max_delta()),
             msg_stats: self.msg_stats.clone(),
             wall_seconds: wall,
+            pipeline: self.cfg.pipeline.name().to_string(),
+            measured_comm_seconds: self.overlap.busy_seconds,
+            measured_hidden_seconds: self.overlap.hidden_seconds,
+            overlap_efficiency: self.overlap.efficiency(),
             sim_iter_seconds: sim.iter_time,
             sim_hidden_seconds: sim.hidden,
+            sim_overlap_efficiency: sim.overlap_efficiency(),
         })
     }
 

@@ -52,9 +52,20 @@ pub struct TrainReport {
     pub msg_stats: MessageStats,
     /// actual wall-clock of this CPU run
     pub wall_seconds: f64,
+    /// hot-loop schedule this run used ("barrier" | "overlap")
+    pub pipeline: String,
+    /// measured aggregator busy time across the run (zero + reduce +
+    /// apply), the real-trainer analogue of the DES's t_comm
+    pub measured_comm_seconds: f64,
+    /// measured busy time hidden under still-running compute
+    pub measured_hidden_seconds: f64,
+    /// measured hidden / busy in [0,1] (0 for barrier runs)
+    pub overlap_efficiency: f64,
     /// DES-simulated per-iteration time on the paper's 16-node 1GbE testbed
     pub sim_iter_seconds: f64,
     pub sim_hidden_seconds: f64,
+    /// DES-predicted hidden / t_comm — compare against `overlap_efficiency`
+    pub sim_overlap_efficiency: f64,
 }
 
 impl TrainReport {
@@ -93,8 +104,13 @@ impl TrainReport {
             ("bytes_per_iter", Json::Num(self.msg_stats.bytes_per_iter())),
             ("messages_per_iter", Json::Num(self.msg_stats.messages_per_iter())),
             ("wall_seconds", Json::Num(self.wall_seconds)),
+            ("pipeline", Json::Str(self.pipeline.clone())),
+            ("measured_comm_seconds", Json::Num(self.measured_comm_seconds)),
+            ("measured_hidden_seconds", Json::Num(self.measured_hidden_seconds)),
+            ("overlap_efficiency", Json::Num(self.overlap_efficiency)),
             ("sim_iter_seconds", Json::Num(self.sim_iter_seconds)),
             ("sim_hidden_seconds", Json::Num(self.sim_hidden_seconds)),
+            ("sim_overlap_efficiency", Json::Num(self.sim_overlap_efficiency)),
         ])
     }
 
@@ -143,8 +159,13 @@ mod tests {
             delta_max: None,
             msg_stats: MessageStats::default(),
             wall_seconds: 0.0,
+            pipeline: "overlap".into(),
+            measured_comm_seconds: 0.0,
+            measured_hidden_seconds: 0.0,
+            overlap_efficiency: 0.0,
             sim_iter_seconds: 0.0,
             sim_hidden_seconds: 0.0,
+            sim_overlap_efficiency: 0.0,
         };
         assert!((r.headline_metric() - 2.0f64.exp()).abs() < 1e-12);
         assert_eq!(r.headline_name(), "perplexity");

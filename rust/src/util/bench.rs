@@ -91,6 +91,9 @@ struct Recorded {
     name: String,
     stats: Stats,
     items_per_iter: Option<f64>,
+    /// extra numeric fields attached via [`annotate`] (e.g. a bench's
+    /// measured overlap_efficiency), serialized alongside the timing row
+    extra: Vec<(String, f64)>,
 }
 
 fn registry() -> &'static Mutex<Vec<Recorded>> {
@@ -102,7 +105,17 @@ fn record(name: &str, stats: &Stats, items_per_iter: Option<f64>) {
     registry()
         .lock()
         .unwrap()
-        .push(Recorded { name: name.to_string(), stats: stats.clone(), items_per_iter });
+        .push(Recorded { name: name.to_string(), stats: stats.clone(), items_per_iter, extra: Vec::new() });
+}
+
+/// Attach an extra numeric field to an already-recorded bench row (most
+/// recent row with that name), e.g. `overlap_efficiency` on a trainer
+/// iteration bench. No-op if the name was never recorded.
+pub fn annotate(name: &str, key: &str, value: f64) {
+    let mut reg = registry().lock().unwrap();
+    if let Some(r) = reg.iter_mut().rev().find(|r| r.name == name) {
+        r.extra.push((key.to_string(), value));
+    }
 }
 
 /// Snapshot every result recorded so far as a JSON document:
@@ -128,6 +141,9 @@ pub fn results_json() -> Json {
                     "throughput_items_per_sec",
                     Json::Num(items / r.stats.median.max(1e-12)),
                 ));
+            }
+            for (k, v) in &r.extra {
+                fields.push((k.as_str(), Json::Num(*v)));
             }
             Json::obj(fields)
         })
@@ -164,6 +180,8 @@ mod tests {
             bb((0..100).sum::<u64>());
         });
         record("unit_test_bench", &s, Some(100.0));
+        annotate("unit_test_bench", "overlap_efficiency", 0.5);
+        annotate("no_such_bench", "ignored", 1.0); // silently dropped
         let j = results_json();
         let rows = j.get("benches").unwrap().as_arr().unwrap();
         let row = rows
@@ -172,6 +190,7 @@ mod tests {
             .expect("recorded bench present");
         assert!(row.get("ns_per_iter").unwrap().as_f64().unwrap() > 0.0);
         assert!(row.get("throughput_items_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(row.get("overlap_efficiency").unwrap().as_f64().unwrap(), 0.5);
     }
 
     #[test]

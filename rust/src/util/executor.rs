@@ -88,6 +88,70 @@ impl ParallelExecutor {
         }
         Ok(())
     }
+
+    /// Streaming variant of [`Self::run`]: fan `f(index, &mut items[index],
+    /// &mut sink)` over worker threads while the **calling thread** runs
+    /// `drain` concurrently. Each spawned thread gets its own clone of
+    /// `sink` (typically an `mpsc::Sender`); the original is dropped after
+    /// spawning, so once every worker thread finishes, a channel-backed
+    /// drain sees disconnection and terminates.
+    ///
+    /// Unlike `run`, `threads == 1` still spawns one worker thread — the
+    /// point of the streaming shape is that the caller's drain (the
+    /// rank-ordered reduction) overlaps item processing, which needs the
+    /// calling thread free. Items are processed in rank order within each
+    /// chunk, and errors are reported in rank order, exactly as in `run`.
+    pub fn run_with_sink<W, S, F, D, R>(
+        &self,
+        items: &mut [W],
+        sink: S,
+        f: F,
+        drain: D,
+    ) -> Result<R>
+    where
+        W: Send,
+        S: Clone + Send,
+        F: Fn(usize, &mut W, &mut S) -> Result<()> + Sync,
+        D: FnOnce() -> R,
+    {
+        let n = items.len();
+        if n == 0 {
+            drop(sink);
+            return Ok(drain());
+        }
+        let t = self.threads.min(n).max(1);
+        let chunk = n.div_ceil(t);
+        let (results, out) = std::thread::scope(|s| {
+            let f = &f;
+            let handles: Vec<_> = items
+                .chunks_mut(chunk)
+                .enumerate()
+                .map(|(ci, part)| {
+                    let mut sink = sink.clone();
+                    s.spawn(move || {
+                        for (j, w) in part.iter_mut().enumerate() {
+                            f(ci * chunk + j, w, &mut sink)?;
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            // the worker threads now hold the only sink clones
+            drop(sink);
+            let out = drain();
+            let results: Vec<Result<()>> = handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| Err(anyhow!("worker thread panicked")))
+                })
+                .collect();
+            (results, out)
+        });
+        for r in results {
+            r?;
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -159,6 +223,69 @@ mod tests {
     #[test]
     fn auto_threads_is_at_least_one() {
         assert!(ParallelExecutor::new(0).threads() >= 1);
+    }
+
+    #[test]
+    fn sink_streams_every_item_and_drain_overlaps() {
+        use std::sync::mpsc;
+        for threads in [1usize, 2, 3, 8] {
+            let exec = ParallelExecutor::new(threads);
+            let mut items: Vec<usize> = (0..17).collect();
+            let (tx, rx) = mpsc::channel();
+            let total = exec
+                .run_with_sink(
+                    &mut items,
+                    tx,
+                    |i, v, tx| {
+                        *v *= 2;
+                        tx.send(i).unwrap();
+                        Ok(())
+                    },
+                    move || {
+                        let mut seen: Vec<usize> = rx.iter().collect();
+                        seen.sort_unstable();
+                        seen
+                    },
+                )
+                .unwrap();
+            assert_eq!(total, (0..17).collect::<Vec<_>>(), "threads={threads}");
+            assert_eq!(items, (0..17).map(|i| i * 2).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn sink_error_propagates_and_drain_terminates() {
+        use std::sync::mpsc;
+        let exec = ParallelExecutor::new(4);
+        let mut items = vec![0usize; 12];
+        let (tx, rx) = mpsc::channel::<usize>();
+        let err = exec
+            .run_with_sink(
+                &mut items,
+                tx,
+                |i, _, tx| {
+                    if i == 5 {
+                        anyhow::bail!("rank {i} failed");
+                    }
+                    tx.send(i).unwrap();
+                    Ok(())
+                },
+                move || rx.iter().count(),
+            )
+            .unwrap_err();
+        assert_eq!(err.to_string(), "rank 5 failed");
+    }
+
+    #[test]
+    fn sink_empty_items_still_drains() {
+        use std::sync::mpsc;
+        let exec = ParallelExecutor::new(4);
+        let mut none: Vec<usize> = vec![];
+        let (tx, rx) = mpsc::channel::<usize>();
+        let n = exec
+            .run_with_sink(&mut none, tx, |_, _, _| Ok(()), move || rx.iter().count())
+            .unwrap();
+        assert_eq!(n, 0);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! unconditionally (the native backend needs no artifacts), so the
 //! determinism contract is enforced on every `cargo test`.
 
+use lags::collectives::PipelineMode;
 use lags::config::TrainConfig;
 use lags::runtime::Runtime;
 use lags::sparsify::CompressorKind;
@@ -126,6 +127,123 @@ fn threads_zero_resolves_to_cores_and_stays_identical() {
     let (l2, p2, _) = run_traced(&rt, c0);
     assert_eq!(l1, l2);
     assert_eq!(p1, p2);
+}
+
+#[test]
+fn overlap_bit_identical_to_barrier_all_algorithms_and_compressors() {
+    // `--pipeline` must be a pure performance knob: overlap ≡ barrier
+    // bitwise (params, per-step losses, message stats) for every
+    // algorithm × compressor × thread count. The barrier sequential run
+    // is the reference every combination must match.
+    let rt = Arc::new(Runtime::native(42));
+    for alg in [Algorithm::Dense, Algorithm::Slgs, Algorithm::Lags] {
+        let compressors: &[CompressorKind] = if alg == Algorithm::Dense {
+            &[CompressorKind::HostExact] // dense ignores the compressor
+        } else {
+            &[
+                CompressorKind::HostExact,
+                CompressorKind::HostSampled,
+                CompressorKind::XlaExact,
+                CompressorKind::XlaSampled,
+            ]
+        };
+        for &comp in compressors {
+            let make = |mode: PipelineMode, threads: usize| {
+                let mut c = cfg("mlp", alg, 5, 5, threads);
+                c.compressor = comp;
+                c.pipeline = mode;
+                c
+            };
+            let (l0, p0, s0) = run_traced(&rt, make(PipelineMode::Barrier, 1));
+            for threads in [1usize, 3, 8] {
+                for mode in [PipelineMode::Barrier, PipelineMode::Overlap] {
+                    let (l, p, s) = run_traced(&rt, make(mode, threads));
+                    let tag = format!(
+                        "{} {:?} {} threads={threads}",
+                        alg.name(),
+                        comp,
+                        mode.name()
+                    );
+                    assert_eq!(l0, l, "losses diverged: {tag}");
+                    assert_eq!(p0, p, "params diverged: {tag}");
+                    assert_eq!(s0, s, "msg stats diverged: {tag}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn overlap_bit_identical_deep_model_with_tricks() {
+    // the stateful path (warm-up ramp + momentum correction + sampled
+    // threshold) on the deep model, barrier vs overlap across threads
+    let rt = Arc::new(Runtime::native(29));
+    let make = |mode: PipelineMode, threads: usize| {
+        let mut c = cfg("mlp_deep", Algorithm::Lags, 6, 6, threads);
+        c.compressor = CompressorKind::HostSampled;
+        c.warmup_steps = 4;
+        c.local_momentum = 0.4;
+        c.pipeline = mode;
+        c
+    };
+    let (l0, p0, s0) = run_traced(&rt, make(PipelineMode::Barrier, 1));
+    for threads in [2usize, 4] {
+        let (l, p, s) = run_traced(&rt, make(PipelineMode::Overlap, threads));
+        assert_eq!(l0, l, "threads={threads}");
+        assert_eq!(p0, p, "threads={threads}");
+        assert_eq!(s0, s, "threads={threads}");
+    }
+}
+
+#[test]
+fn overlap_bit_identical_delta_series_and_global_momentum() {
+    // δ-monitor sampling + global momentum exercise the order-sensitive
+    // instrumentation and the streamed per-layer apply
+    let rt = Arc::new(Runtime::native(31));
+    let run = |mode: PipelineMode, threads: usize| {
+        let mut c = cfg("mlp", Algorithm::Lags, 6, 4, threads);
+        c.delta_every = 2;
+        c.momentum = 0.9;
+        c.lr = 0.02;
+        c.pipeline = mode;
+        let mut t = Trainer::with_runtime(&rt, c).unwrap();
+        for _ in 0..6 {
+            t.step().unwrap();
+        }
+        let series = t.delta_series().unwrap().to_vec();
+        (series, t.params().to_vec())
+    };
+    let (d0, p0) = run(PipelineMode::Barrier, 1);
+    for threads in [1usize, 4] {
+        let (d, p) = run(PipelineMode::Overlap, threads);
+        assert_eq!(d0, d, "delta series diverged at threads={threads}");
+        assert_eq!(p0, p, "params diverged at threads={threads}");
+    }
+}
+
+#[test]
+fn overlap_measures_hidden_time_only_when_streaming() {
+    let rt = Arc::new(Runtime::native(37));
+    // barrier mode never touches the stream table → zero overlap stats
+    let mut c = cfg("mlp_deep", Algorithm::Lags, 3, 4, 2);
+    c.pipeline = PipelineMode::Barrier;
+    let mut t = Trainer::with_runtime(&rt, c).unwrap();
+    for _ in 0..3 {
+        t.step().unwrap();
+    }
+    assert_eq!(t.overlap_stats().busy_seconds, 0.0);
+    assert_eq!(t.overlap_stats().efficiency(), 0.0);
+    // overlap mode accumulates busy time and reports it in the run report
+    let mut c = cfg("mlp_deep", Algorithm::Lags, 3, 4, 2);
+    c.pipeline = PipelineMode::Overlap;
+    let mut t = Trainer::with_runtime(&rt, c).unwrap();
+    let report = t.run().unwrap();
+    assert!(t.overlap_stats().busy_seconds > 0.0);
+    assert!(t.overlap_stats().hidden_seconds <= t.overlap_stats().busy_seconds);
+    assert_eq!(report.pipeline, "overlap");
+    assert!(report.measured_comm_seconds > 0.0);
+    assert!((0.0..=1.0).contains(&report.overlap_efficiency));
+    assert!((0.0..=1.0).contains(&report.sim_overlap_efficiency));
 }
 
 #[test]

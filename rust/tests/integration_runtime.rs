@@ -8,6 +8,7 @@
 //!
 //! Requires `make artifacts` (skipped with a message otherwise).
 
+use lags::runtime::native::CompressScratch;
 use lags::runtime::{BatchData, Runtime};
 use lags::sparsify::{topk, ErrorFeedback};
 use lags::util::rng::Rng;
@@ -109,7 +110,8 @@ fn xla_compress_matches_host_exact() {
 
         // XLA Pallas artifact
         let (sparse, new_resid, thr) =
-            mr.compress_layer_xla(layer, &grad, &resid, lr, k, false).unwrap();
+            mr.compress_layer_xla(layer, &grad, &resid, lr, k, false, &mut CompressScratch::default())
+                .unwrap();
 
         assert!(thr.is_finite());
         for i in 0..n {
@@ -136,7 +138,8 @@ fn xla_compress_error_feedback_conserves_mass() {
     let resid = randvec(n, 21, 0.3);
     let lr = 0.1f32;
     let (sparse, new_resid, _) =
-        mr.compress_layer_xla(layer, &grad, &resid, lr, n / 100 + 1, false).unwrap();
+        mr.compress_layer_xla(layer, &grad, &resid, lr, n / 100 + 1, false, &mut CompressScratch::default())
+            .unwrap();
     for i in 0..n {
         let acc = resid[i] + lr * grad[i];
         assert!((sparse[i] + new_resid[i] - acc).abs() < 1e-5, "i={i}");
@@ -152,7 +155,7 @@ fn xla_compress_sampled_keeps_roughly_k() {
     let k = n / 100;
     let grad = randvec(n, 30, 1.0);
     let resid = vec![0.0f32; n];
-    let (sparse, _, _) = mr.compress_layer_xla(layer, &grad, &resid, 1.0, k, true).unwrap();
+    let (sparse, _, _) = mr.compress_layer_xla(layer, &grad, &resid, 1.0, k, true, &mut CompressScratch::default()).unwrap();
     let nnz = sparse.iter().filter(|&&v| v != 0.0).count();
     assert!(nnz >= k / 4 && nnz <= k * 4, "nnz={nnz} k={k}");
 }

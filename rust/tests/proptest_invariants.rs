@@ -234,6 +234,92 @@ fn prop_allgather_invariant_to_producer_thread() {
     });
 }
 
+#[test]
+fn prop_stream_aggregator_arrival_order_invariant() {
+    // the streaming pipeline's contract: per-layer completion order —
+    // any interleaving of worker publishes — cannot change the reduced
+    // aggregate, because messages land in rank-indexed slots and each
+    // layer is reduced rank-ordered once complete. Reference: the
+    // layer-major rank-ordered barrier reduction.
+    use lags::collectives::pipeline::{LayerMsg, StreamAggregator};
+    use std::time::Instant;
+    quick("stream-arrival-invariant", 4, 256, |c: &mut Case| {
+        let layers = 1 + c.rng.below(6);
+        let p = 1 + c.rng.below(8);
+        // random layer spans laid out back to back
+        let sizes: Vec<usize> = (0..layers).map(|_| 1 + c.rng.below(c.size)).collect();
+        let mut spans = Vec::with_capacity(layers);
+        let mut off = 0;
+        for &n in &sizes {
+            spans.push((off, n));
+            off += n;
+        }
+        let d = off;
+
+        // per (rank, layer) sparse messages + the barrier reference
+        let mut msgs_table: Vec<Vec<SparseVec>> = Vec::with_capacity(p);
+        for _ in 0..p {
+            let row: Vec<SparseVec> = sizes
+                .iter()
+                .map(|&n| {
+                    let dense = randvec(&mut c.rng, n);
+                    let k = 1 + c.rng.below(n);
+                    let thr = topk::kth_largest_abs(&dense, k);
+                    SparseVec::from_dense_threshold(&dense, thr)
+                })
+                .collect();
+            msgs_table.push(row);
+        }
+        let mut reference = vec![0.0f32; d];
+        for li in (0..layers).rev() {
+            let (o, n) = spans[li];
+            sparse_agg::sparse_add_rank_ordered(
+                msgs_table.iter().map(|row| &row[li]),
+                &mut reference[o..o + n],
+            );
+        }
+
+        // shuffled arrival (Fisher-Yates over all (rank, layer) pairs)
+        let mut order: Vec<(usize, usize)> =
+            (0..p).flat_map(|r| (0..layers).map(move |l| (r, l))).collect();
+        for i in (1..order.len()).rev() {
+            let j = c.rng.below(i + 1);
+            order.swap(i, j);
+        }
+        let mut agg = StreamAggregator::new(layers, p);
+        let mut out = vec![0.0f32; d];
+        let mut fired = Vec::new();
+        for (rank, layer) in order {
+            let msg = LayerMsg {
+                rank,
+                layer,
+                msg: msgs_table[rank][layer].clone(),
+                sent: Instant::now(),
+            };
+            agg.push(msg, |li, slots| {
+                let (o, n) = spans[li];
+                sparse_agg::sparse_add_rank_ordered(
+                    slots.iter().map(|s| s.as_ref().unwrap()),
+                    &mut out[o..o + n],
+                );
+                fired.push(li);
+            });
+        }
+        if !agg.finished() {
+            return Err("aggregator did not finish".into());
+        }
+        // strict backprop firing order
+        let expect_order: Vec<usize> = (0..layers).rev().collect();
+        if fired != expect_order {
+            return Err(format!("fired {fired:?} != backprop order"));
+        }
+        if out != reference {
+            return Err("streamed aggregate diverged bitwise from barrier".into());
+        }
+        Ok(())
+    });
+}
+
 // ---------------------------------------------------------------------------
 // 4. Ring allreduce
 // ---------------------------------------------------------------------------
