@@ -109,6 +109,37 @@ fn main() {
             }
         }
     }
+    // --- real-trainer §5 merge ablation: the same trade-off the DES
+    // sweep above predicts, now measured in the actual hot loop — bigger
+    // groups mean fewer messages but defer reduction past the last
+    // publish (overlap_efficiency sinks toward 0 as capacity grows)
+    println!("\n# real trainer: merge-buffer ablation (mlp_deep, c=4, P=8)");
+    bench::table_header(&["merge_bytes", "msgs/iter", "bytes/iter", "overlap_eff"]);
+    for cap in [0usize, 4096, 32 * 1024, 1 << 20] {
+        let mut cfg = TrainConfig::default_for("mlp_deep");
+        cfg.algorithm = Algorithm::Lags;
+        cfg.workers = 8;
+        cfg.threads = 1;
+        cfg.pipeline = PipelineMode::Overlap;
+        cfg.steps = 1;
+        cfg.compression = 4.0;
+        cfg.eval_every = 0;
+        cfg.merge_bytes = cap;
+        let mut t = Trainer::with_runtime(&nrt, cfg).unwrap();
+        let name = format!("trainer_iter_lags_P8_merge{cap}");
+        bench::run(&name, || {
+            t.step().unwrap();
+        });
+        bench::annotate(&name, "overlap_efficiency", t.overlap_stats().efficiency());
+        bench::annotate(&name, "messages_per_iter", t.msg_stats().messages_per_iter());
+        bench::table_row(&[
+            format!("{cap}"),
+            format!("{:.0}", t.msg_stats().messages_per_iter()),
+            format!("{:.0}", t.msg_stats().bytes_per_iter()),
+            format!("{:.3}", t.overlap_stats().efficiency()),
+        ]);
+    }
+
     // SLGS counterpoint: single-shot sparsification has nothing to hide
     // behind, so its measured overlap_efficiency stays ≈ 0 (Fig. 1b)
     for (alg, label) in [(Algorithm::Slgs, "slgs"), (Algorithm::Lags, "lags")] {

@@ -4,10 +4,18 @@
 //! * [`ratio`] — choose c^(l) so each layer's communication (plus its
 //!   sparsification overhead) hides under the next layer's backward
 //!   computation, capped at c_u.
+//! * [`online`] — the measurement-driven half: EWMA accumulation of
+//!   per-layer hot-loop timings so the trainer can re-run Eq. 18 from
+//!   MEASURED inputs every `--reselect-every` steps.
 //! * [`perf_model`] — Eq. 19's S_max and the r = t_c/t_b analysis.
 
+pub mod online;
 pub mod perf_model;
 pub mod ratio;
 
+pub use online::MeasuredProfile;
 pub use perf_model::{smax, smax_components};
-pub use ratio::{select_ratios, RatioConfig};
+pub use ratio::{
+    ks_from_ratios, select_ratios, select_ratios_manifest, select_ratios_measured,
+    select_ratios_measured_manifest, RatioConfig,
+};

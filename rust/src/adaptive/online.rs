@@ -1,0 +1,226 @@
+//! Online measurement-driven ratio re-selection — the "A" in LAGS made
+//! real.
+//!
+//! The startup selection prices Eq. 18 with a synthetic device profile
+//! (manifest flops at [`crate::models::DEVICE_FLOPS`]). This module
+//! replaces that guess with MEASURED hot-loop timings: every step the
+//! trainer feeds
+//!
+//! * the wall-clock of the forward+backward fan-out (the compute
+//!   stream; the backward share is 2/3 by the bwd ≈ 2×fwd flops ratio),
+//! * each layer's error-feedback compression time (mean across ranks),
+//! * each layer's rank-ordered reduction time (from the same per-layer
+//!   busy intervals the [`crate::collectives::pipeline::OverlapTimer`]
+//!   accounting observes),
+//!
+//! into an EWMA [`MeasuredProfile`]; every `--reselect-every N` steps the
+//! trainer re-runs Eq. 18 over the measured profile and swaps in the new
+//! `ks`/`ratios` — strictly BETWEEN steps, so a fixed schedule
+//! (`reselect_every = 0`) is bit-for-bit untouched and the
+//! barrier ≡ overlap determinism contract holds per schedule.
+//!
+//! The network stays a CONFIGURED α–β model (`--net*` / `NetConfig`): the
+//! logical cluster has no real NIC to clock, so communication is priced
+//! while computation and sparsification are measured.
+
+use crate::models::{LayerProfile, ModelProfile};
+
+/// EWMA weight of the newest sample: s ← β·x + (1−β)·s. Small enough to
+/// ride out scheduler noise, large enough to track a phase change within
+/// a few tens of steps.
+const EWMA_BETA: f64 = 0.2;
+
+/// EWMA-accumulated measured per-layer timings (stored in MANIFEST
+/// order; Eq. 18 consumers read them out in backprop order).
+#[derive(Debug, Clone)]
+pub struct MeasuredProfile {
+    /// layer names, manifest order
+    names: Vec<String>,
+    /// parameter counts, manifest order
+    params: Vec<usize>,
+    /// each layer's share of total backward flops, manifest order — the
+    /// backward runs as one fused pass per worker, so the measured total
+    /// is attributed per layer by flops weight rather than clocked per
+    /// layer
+    flops_frac: Vec<f64>,
+    /// EWMA of the COMPUTE (forward + backward) fan-out wall-clock per
+    /// step (s) — the trainer's grad call runs both passes, so the
+    /// backward share is derived via the bwd ≈ 2×fwd flops ratio
+    t_comp: f64,
+    /// EWMA per-layer compression seconds, manifest order
+    t_compress: Vec<f64>,
+    /// EWMA per-layer reduction seconds, manifest order
+    t_reduce: Vec<f64>,
+    /// steps observed so far
+    steps: usize,
+}
+
+impl MeasuredProfile {
+    /// `names`/`params`/`fwd_flops` come straight from the model manifest
+    /// (manifest order).
+    pub fn new(names: Vec<String>, params: Vec<usize>, fwd_flops: Vec<f64>) -> MeasuredProfile {
+        let n = names.len();
+        assert!(n > 0 && params.len() == n && fwd_flops.len() == n);
+        let total: f64 = fwd_flops.iter().sum();
+        let flops_frac = if total > 0.0 {
+            fwd_flops.iter().map(|f| f / total).collect()
+        } else {
+            vec![1.0 / n as f64; n]
+        };
+        MeasuredProfile {
+            names,
+            params,
+            flops_frac,
+            t_comp: 0.0,
+            t_compress: vec![0.0; n],
+            t_reduce: vec![0.0; n],
+            steps: 0,
+        }
+    }
+
+    fn fold(prev: f64, x: f64, first: bool) -> f64 {
+        if first {
+            x
+        } else {
+            EWMA_BETA * x + (1.0 - EWMA_BETA) * prev
+        }
+    }
+
+    /// Feed one step's measurements (slices in manifest order;
+    /// `comp_secs` is the forward+backward fan-out wall-clock). The
+    /// first observation seeds the EWMA directly.
+    pub fn observe_step(&mut self, comp_secs: f64, compress_secs: &[f64], reduce_secs: &[f64]) {
+        debug_assert_eq!(compress_secs.len(), self.t_compress.len());
+        debug_assert_eq!(reduce_secs.len(), self.t_reduce.len());
+        let first = self.steps == 0;
+        self.t_comp = Self::fold(self.t_comp, comp_secs.max(0.0), first);
+        for (t, &x) in self.t_compress.iter_mut().zip(compress_secs) {
+            *t = Self::fold(*t, x.max(0.0), first);
+        }
+        for (t, &x) in self.t_reduce.iter_mut().zip(reduce_secs) {
+            *t = Self::fold(*t, x.max(0.0), first);
+        }
+        self.steps += 1;
+    }
+
+    /// Number of steps folded in so far (0 = nothing measured yet).
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Smoothed forward+backward compute wall-clock (s).
+    pub fn compute_seconds(&self) -> f64 {
+        self.t_comp
+    }
+
+    /// Smoothed per-layer reduction seconds, manifest order (diagnostics).
+    pub fn reduce_seconds(&self) -> &[f64] {
+        &self.t_reduce
+    }
+
+    /// Measured model profile in BACKPROP order for Eq. 18. The clocked
+    /// compute covers forward + backward; with bwd ≈ 2×fwd flops, the
+    /// backward share is 2/3 of the measurement, apportioned per layer
+    /// by flops fraction (t_f — the remaining 1/3 — is not consumed by
+    /// the selection, only carried for reporting).
+    pub fn profile(&self, model_name: &str) -> ModelProfile {
+        let t_b_total = self.t_comp * 2.0 / 3.0;
+        let layers: Vec<LayerProfile> = self
+            .names
+            .iter()
+            .zip(self.params.iter())
+            .zip(self.flops_frac.iter())
+            .rev()
+            .map(|((name, &params), &frac)| LayerProfile {
+                name: name.clone(),
+                params,
+                t_b: t_b_total * frac,
+            })
+            .collect();
+        ModelProfile { name: model_name.to_string(), t_f: self.t_comp / 3.0, layers }
+    }
+
+    /// Measured per-layer pipeline overhead (compression + reduction
+    /// seconds) in BACKPROP order — the `t_spar` Eq. 18 charges against
+    /// each layer's overlap budget
+    /// ([`crate::adaptive::select_ratios_measured`]).
+    pub fn overhead_backprop(&self) -> Vec<f64> {
+        self.t_compress
+            .iter()
+            .zip(self.t_reduce.iter())
+            .rev()
+            .map(|(&c, &r)| c + r)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mp() -> MeasuredProfile {
+        MeasuredProfile::new(
+            vec!["a".into(), "b".into(), "c".into()],
+            vec![100, 200, 300],
+            vec![1e6, 2e6, 1e6],
+        )
+    }
+
+    #[test]
+    fn first_observation_seeds_ewma() {
+        let mut m = mp();
+        assert_eq!(m.steps(), 0);
+        m.observe_step(0.4, &[0.01, 0.02, 0.03], &[0.001, 0.002, 0.003]);
+        assert_eq!(m.steps(), 1);
+        assert_eq!(m.compute_seconds(), 0.4);
+        assert_eq!(m.reduce_seconds(), &[0.001, 0.002, 0.003]);
+    }
+
+    #[test]
+    fn ewma_moves_toward_new_samples() {
+        let mut m = mp();
+        m.observe_step(0.4, &[0.01; 3], &[0.0; 3]);
+        m.observe_step(0.8, &[0.03; 3], &[0.0; 3]);
+        // β = 0.2: 0.2·0.8 + 0.8·0.4 = 0.48
+        assert!((m.compute_seconds() - 0.48).abs() < 1e-12);
+        for _ in 0..200 {
+            m.observe_step(0.8, &[0.03; 3], &[0.0; 3]);
+        }
+        assert!((m.compute_seconds() - 0.8).abs() < 1e-6, "converges to the plateau");
+    }
+
+    #[test]
+    fn profile_is_backprop_ordered_and_flops_weighted() {
+        let mut m = mp();
+        m.observe_step(0.6, &[0.0; 3], &[0.0; 3]);
+        let p = m.profile("t");
+        assert_eq!(p.layers.len(), 3);
+        // backprop order: manifest layer "c" (output side) first
+        assert_eq!(p.layers[0].name, "c");
+        assert_eq!(p.layers[2].name, "a");
+        assert_eq!(p.layers[0].params, 300);
+        // backward share = 2/3 of the 0.6s compute = 0.4s, split by the
+        // flops fractions 0.25 / 0.5 / 0.25; forward gets the last 1/3
+        assert!((p.layers[0].t_b - 0.1).abs() < 1e-12);
+        assert!((p.layers[1].t_b - 0.2).abs() < 1e-12);
+        assert!((p.t_b() - 0.4).abs() < 1e-12);
+        assert!((p.t_f - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overhead_sums_compress_and_reduce_in_backprop_order() {
+        let mut m = mp();
+        m.observe_step(0.4, &[0.01, 0.02, 0.03], &[0.001, 0.002, 0.003]);
+        let o = m.overhead_backprop();
+        assert_eq!(o.len(), 3);
+        assert!((o[0] - 0.033).abs() < 1e-12); // layer "c"
+        assert!((o[2] - 0.011).abs() < 1e-12); // layer "a"
+    }
+
+    #[test]
+    fn negative_samples_clamped() {
+        let mut m = mp();
+        m.observe_step(-1.0, &[-0.5; 3], &[-0.5; 3]);
+        assert_eq!(m.compute_seconds(), 0.0);
+    }
+}

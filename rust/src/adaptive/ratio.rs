@@ -16,6 +16,7 @@
 
 use crate::collectives::NetworkModel;
 use crate::models::ModelProfile;
+use crate::runtime::ModelManifest;
 
 #[derive(Debug, Clone)]
 pub struct RatioConfig {
@@ -50,23 +51,100 @@ fn smallest_fitting_c(net: &NetworkModel, d: usize, t_spar: f64, budget: f64) ->
     Some(c.max(1.0))
 }
 
-/// Select c^(l) for every layer of `model` (backprop order). Layer l's
-/// budget is the backward time of layer l+1 (the next to compute); the last
-/// layer gets no overlap budget and is capped at c_max.
-pub fn select_ratios(model: &ModelProfile, net: &NetworkModel, cfg: &RatioConfig) -> Vec<f64> {
+/// Core of Eq. 18: select c^(l) for every layer of `model` (backprop
+/// order), pricing layer i's sparsification overhead with `t_spar(i)`.
+fn select_with<F: Fn(usize) -> f64>(
+    model: &ModelProfile,
+    net: &NetworkModel,
+    cfg: &RatioConfig,
+    t_spar: F,
+) -> Vec<f64> {
     let l = model.layers.len();
     let mut out = Vec::with_capacity(l);
     for i in 0..l {
         let d = model.layers[i].params;
-        let t_spar = cfg.spar_fixed + cfg.spar_per_elem * d as f64;
         let budget = if i + 1 < l { model.layers[i + 1].t_b } else { 0.0 };
-        let c = match smallest_fitting_c(net, d, t_spar, budget) {
+        let c = match smallest_fitting_c(net, d, t_spar(i), budget) {
             Some(c) => c.clamp(cfg.c_min, cfg.c_max),
             None => cfg.c_max,
         };
         out.push(c);
     }
     out
+}
+
+/// Select c^(l) for every layer of `model` (backprop order). Layer l's
+/// budget is the backward time of layer l+1 (the next to compute); the last
+/// layer gets no overlap budget and is capped at c_max. Sparsification
+/// overhead comes from the analytic `spar_fixed + spar_per_elem·d` model.
+pub fn select_ratios(model: &ModelProfile, net: &NetworkModel, cfg: &RatioConfig) -> Vec<f64> {
+    select_with(model, net, cfg, |i| {
+        cfg.spar_fixed + cfg.spar_per_elem * model.layers[i].params as f64
+    })
+}
+
+/// Eq. 18 with MEASURED per-layer sparsification/aggregation overheads
+/// (seconds, backprop order) in place of the analytic spar model — the
+/// online adaptive path's entry point (`adaptive::online`).
+pub fn select_ratios_measured(
+    model: &ModelProfile,
+    net: &NetworkModel,
+    cfg: &RatioConfig,
+    t_spar: &[f64],
+) -> Vec<f64> {
+    assert_eq!(t_spar.len(), model.layers.len(), "one overhead per layer");
+    select_with(model, net, cfg, |i| t_spar[i])
+}
+
+/// Per-layer kept-coordinate counts for manifest-order `ratios`:
+/// k^(l) = ceil(d_l / c^(l)), clamped to [1, d_l]. The single source of
+/// the ks-from-ratios convention (startup selection AND online
+/// re-selection go through here).
+pub fn ks_from_ratios(sizes: &[usize], ratios: &[f64]) -> Vec<usize> {
+    assert_eq!(sizes.len(), ratios.len());
+    sizes
+        .iter()
+        .zip(ratios.iter())
+        .map(|(&d, &c)| ((d as f64 / c).ceil() as usize).clamp(1, d))
+        .collect()
+}
+
+/// Manifest-order wrapper over [`select_ratios_measured`] applying the
+/// same P ≤ 1 all-dense rule as [`select_ratios_manifest`] — the online
+/// re-selection entry point (`model` in backprop order).
+pub fn select_ratios_measured_manifest(
+    model: &ModelProfile,
+    net: &NetworkModel,
+    cfg: &RatioConfig,
+    t_spar: &[f64],
+) -> Vec<f64> {
+    if net.workers <= 1 {
+        return vec![1.0; model.layers.len()];
+    }
+    let mut r = select_ratios_measured(model, net, cfg, t_spar);
+    r.reverse();
+    r
+}
+
+/// The selection the trainer makes at startup, shared with `lags ratios`
+/// so the CLI report and `Trainer::ratios()` agree on the same inputs:
+/// Eq. 18 over the live manifest's profile at `device_flops`, returned in
+/// MANIFEST order. P ≤ 1 explicitly selects all-dense (c = 1 everywhere):
+/// a single worker has no communication to hide, so sparsifying would
+/// only add compression error — no phantom 2-worker cluster.
+pub fn select_ratios_manifest(
+    mm: &ModelManifest,
+    device_flops: f64,
+    net: &NetworkModel,
+    cfg: &RatioConfig,
+) -> Vec<f64> {
+    if net.workers <= 1 {
+        return vec![1.0; mm.layers.len()];
+    }
+    let profile = ModelProfile::from_manifest(mm, device_flops);
+    let mut r = select_ratios(&profile, net, cfg);
+    r.reverse();
+    r
 }
 
 /// Effective global compression c_max over the selection (drives the
@@ -142,5 +220,43 @@ mod tests {
     #[test]
     fn effective_cmax_is_max() {
         assert_eq!(effective_cmax(&[1.0, 250.0, 10.0]), 250.0);
+    }
+
+    #[test]
+    fn measured_spar_matches_analytic_when_equal() {
+        let m = zoo::resnet50();
+        let net = NetworkModel::gige_16();
+        let cfg = RatioConfig::default();
+        let spar: Vec<f64> = m
+            .layers
+            .iter()
+            .map(|l| cfg.spar_fixed + cfg.spar_per_elem * l.params as f64)
+            .collect();
+        assert_eq!(select_ratios_measured(&m, &net, &cfg, &spar), select_ratios(&m, &net, &cfg));
+        // larger measured overheads can only demand more compression
+        let spar2: Vec<f64> = spar.iter().map(|s| s * 10.0).collect();
+        let r1 = select_ratios_measured(&m, &net, &cfg, &spar);
+        let r2 = select_ratios_measured(&m, &net, &cfg, &spar2);
+        for (a, b) in r1.iter().zip(r2.iter()) {
+            assert!(b >= a, "{b} < {a}");
+        }
+    }
+
+    #[test]
+    fn manifest_selection_is_manifest_ordered_and_dense_at_p1() {
+        let man = crate::runtime::native::native_manifest(1);
+        let mm = man.models.values().next().unwrap();
+        let cfg = RatioConfig::default();
+        let net = NetworkModel::gige_16().with_workers(4);
+        let rs = select_ratios_manifest(mm, 1e12, &net, &cfg);
+        assert_eq!(rs.len(), mm.layers.len());
+        // manifest order = reversed backprop order of the profile selection
+        let profile = crate::models::ModelProfile::from_manifest(mm, 1e12);
+        let mut expect = select_ratios(&profile, &net, &cfg);
+        expect.reverse();
+        assert_eq!(rs, expect);
+        // P = 1: explicitly all-dense, no phantom cluster
+        let rs1 = select_ratios_manifest(mm, 1e12, &net.with_workers(1), &cfg);
+        assert!(rs1.iter().all(|&c| c == 1.0));
     }
 }

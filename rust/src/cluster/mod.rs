@@ -43,6 +43,11 @@ pub struct Worker {
     /// scratch for the bucket-padded compress path (`CompressorKind::Xla*`
     /// host emulation): accumulator + selection buffers
     pub compress_scratch: CompressScratch,
+    /// scratch: this step's per-layer compression wall-clock (s), written
+    /// only when the trainer's online adaptive measurement is active
+    /// (`adaptive::online`); manifest order, sized with the message
+    /// scratch
+    pub compress_secs: Vec<f64>,
 }
 
 impl Worker {
@@ -71,6 +76,7 @@ impl Worker {
             last_loss: f32::NAN,
             grad_scratch: GradScratch::default(),
             compress_scratch: CompressScratch::default(),
+            compress_secs: Vec::new(),
         }
     }
 
@@ -98,6 +104,7 @@ impl Worker {
     /// their steady-state capacity and the hot loop stops allocating.
     pub fn ensure_message_scratch(&mut self, layer_sizes: &[usize]) {
         self.msgs = layer_sizes.iter().map(|&n| SparseVec::new(n)).collect();
+        self.compress_secs = vec![0.0; layer_sizes.len()];
     }
 }
 

@@ -33,6 +33,17 @@ impl NetworkModel {
         NetworkModel { alpha: 5e-4, bandwidth: 111e6, workers: 16 }
     }
 
+    /// 10 GbE: ~1.11 GB/s effective TCP bandwidth; α dominated by the
+    /// same software launch overhead, mildly reduced (~0.1 ms).
+    pub fn tengige_16() -> Self {
+        NetworkModel { alpha: 1e-4, bandwidth: 1.11e9, workers: 16 }
+    }
+
+    /// 100 Gbps-class InfiniBand with RDMA: ~12 GB/s, ~5 µs per message.
+    pub fn infiniband_16() -> Self {
+        NetworkModel { alpha: 5e-6, bandwidth: 1.2e10, workers: 16 }
+    }
+
     pub fn with_workers(mut self, p: usize) -> Self {
         self.workers = p;
         self

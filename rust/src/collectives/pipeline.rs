@@ -185,6 +185,19 @@ impl StreamAggregator {
         self.slots.len()
     }
 
+    /// Rank (worker) count of the table.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Rank-indexed slots of `layer` — all `Some` once the layer has
+    /// fired. The trainer's merged-group reduction reads payloads from
+    /// here after the completion callback recorded the layer, so buffers
+    /// stay in the table for the post-step reclaim.
+    pub fn layer_slots(&self, layer: usize) -> &[Option<SparseVec>] {
+        &self.slots[layer]
+    }
+
     /// Arm for a new step: counts reset, cursor back to the last layer.
     /// Slots are normally already empty (the trainer reclaims buffers
     /// after each step); leftovers from an aborted step are dropped.

@@ -4,15 +4,62 @@
 //! Precedence (lowest to highest): built-in defaults → `--config file.json`
 //! → individual `--key value` CLI flags.
 
-use crate::collectives::PipelineMode;
+use crate::collectives::{NetworkModel, PipelineMode};
 use crate::sparsify::CompressorKind;
 use crate::trainer::Algorithm;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 
+/// The simulated interconnect the run prices communication with: the α–β
+/// parameters Eq. 18 ratio selection and the DES consume. The worker count
+/// comes from [`TrainConfig::workers`]; `--net gige16|tengige|infiniband`
+/// picks a preset, `--net-alpha`/`--net-bandwidth` override it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetConfig {
+    /// per-message latency (s) — wire latency + software launch overhead
+    pub alpha: f64,
+    /// bandwidth (bytes/s)
+    pub bandwidth: f64,
+}
+
+impl NetConfig {
+    fn of(m: NetworkModel) -> NetConfig {
+        NetConfig { alpha: m.alpha, bandwidth: m.bandwidth }
+    }
+
+    /// The paper's testbed: 1 Gbps Ethernet (the default).
+    pub fn gige16() -> NetConfig {
+        NetConfig::of(NetworkModel::gige_16())
+    }
+
+    /// 10 Gbps Ethernet.
+    pub fn tengige() -> NetConfig {
+        NetConfig::of(NetworkModel::tengige_16())
+    }
+
+    /// 100 Gbps-class InfiniBand/RDMA.
+    pub fn infiniband() -> NetConfig {
+        NetConfig::of(NetworkModel::infiniband_16())
+    }
+
+    pub fn preset(name: &str) -> Result<NetConfig> {
+        Ok(match name {
+            "gige16" => NetConfig::gige16(),
+            "tengige" => NetConfig::tengige(),
+            "infiniband" => NetConfig::infiniband(),
+            _ => bail!("unknown network preset {name:?} (gige16|tengige|infiniband)"),
+        })
+    }
+
+    /// The full α–β model at a concrete worker count.
+    pub fn model(&self, workers: usize) -> NetworkModel {
+        NetworkModel { alpha: self.alpha, bandwidth: self.bandwidth, workers }
+    }
+}
+
 /// Full configuration of a numeric training run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TrainConfig {
     pub model: String,
     pub algorithm: Algorithm,
@@ -38,10 +85,21 @@ pub struct TrainConfig {
     /// uniform compression ratio c (LAGS per-layer k = ceil(d_l / c));
     /// ignored by Dense
     pub compression: f64,
-    /// use Eq. 18 adaptive per-layer ratios instead of the uniform c
+    /// use Eq. 18 adaptive per-layer ratios instead of the uniform c.
+    /// P = 1 explicitly selects all-dense (c = 1 everywhere): a single
+    /// worker has no communication to hide, so no phantom cluster is
+    /// substituted.
     pub adaptive: bool,
     /// cap c_u for adaptive selection
     pub c_max: f64,
+    /// online adaptive re-selection period: every N steps the trainer
+    /// re-runs Eq. 18 over the MEASURED (EWMA) per-layer timing profile
+    /// and swaps in the new ratios at the step boundary. 0 = select once
+    /// at startup (the fixed-schedule baseline). Requires `adaptive` and
+    /// the LAGS algorithm; re-selection starts after `warmup_steps`.
+    pub reselect_every: usize,
+    /// the α–β interconnect Eq. 18 and the DES price communication with
+    pub net: NetConfig,
     pub compressor: CompressorKind,
     /// hot-loop schedule: `overlap` streams each layer's rank-ordered
     /// reduction (and its slice of the apply) concurrently with workers
@@ -56,7 +114,13 @@ pub struct TrainConfig {
     pub eval_batches: usize,
     /// record delta^(l) every N steps (0 = never)
     pub delta_every: usize,
-    /// merge-buffer capacity in bytes for LAGS aggregation granularity
+    /// §5 merge-buffer capacity in wire bytes per rank: consecutive layer
+    /// messages are grouped up to this size before reduction (real
+    /// trainer AND the DES prediction). 0 (the default) = per-layer
+    /// flushing — on the small built-in models a large buffer would
+    /// swallow a whole step's traffic and defer every reduction past the
+    /// last publish, erasing the streaming overlap, so merging is the
+    /// opt-in ablation knob, not the default.
     pub merge_bytes: usize,
     pub seed: u64,
     /// print progress lines
@@ -78,13 +142,15 @@ impl TrainConfig {
             compression: 100.0,
             adaptive: false,
             c_max: 1000.0,
+            reselect_every: 0,
+            net: NetConfig::gige16(),
             compressor: CompressorKind::HostExact,
             pipeline: PipelineMode::Overlap,
             sample_stride: 64,
             eval_every: 50,
             eval_batches: 4,
             delta_every: 0,
-            merge_bytes: 128 * 1024,
+            merge_bytes: 0,
             seed: 42,
             verbose: false,
         }
@@ -106,6 +172,12 @@ impl TrainConfig {
                 "compression" => self.compression = val.as_f64()?,
                 "adaptive" => self.adaptive = val.as_bool()?,
                 "c_max" => self.c_max = val.as_f64()?,
+                // BTreeMap iterates keys alphabetically, so a "net" preset
+                // is applied before "net_alpha"/"net_bandwidth" overrides
+                "net" => self.net = NetConfig::preset(val.as_str()?)?,
+                "net_alpha" => self.net.alpha = val.as_f64()?,
+                "net_bandwidth" => self.net.bandwidth = val.as_f64()?,
+                "reselect_every" => self.reselect_every = val.as_usize()?,
                 "compressor" => self.compressor = CompressorKind::parse(val.as_str()?)?,
                 "pipeline" => self.pipeline = PipelineMode::parse(val.as_str()?)?,
                 "sample_stride" => self.sample_stride = val.as_usize()?,
@@ -146,6 +218,12 @@ impl TrainConfig {
             self.adaptive = true;
         }
         self.c_max = args.f64_or("c-max", self.c_max)?;
+        self.reselect_every = args.usize_or("reselect-every", self.reselect_every)?;
+        if let Some(p) = args.get("net") {
+            self.net = NetConfig::preset(p)?;
+        }
+        self.net.alpha = args.f64_or("net-alpha", self.net.alpha)?;
+        self.net.bandwidth = args.f64_or("net-bandwidth", self.net.bandwidth)?;
         if let Some(c) = args.get("compressor") {
             self.compressor = CompressorKind::parse(c)?;
         }
@@ -192,9 +270,22 @@ impl TrainConfig {
         if self.sample_stride == 0 {
             bail!("sample_stride must be >= 1");
         }
+        if self.reselect_every > 0 && (!self.adaptive || self.algorithm != Algorithm::Lags) {
+            bail!("reselect_every requires --adaptive and the lags algorithm");
+        }
+        if !(self.net.alpha >= 0.0 && self.net.alpha.is_finite()) {
+            bail!("net alpha must be finite and >= 0");
+        }
+        if !(self.net.bandwidth > 0.0 && self.net.bandwidth.is_finite()) {
+            bail!("net bandwidth must be positive");
+        }
         Ok(())
     }
 
+    /// Serialize EVERY config field, so a saved report config round-trips
+    /// through [`Self::apply_json`] (asserted by `to_json_round_trips`).
+    /// The net config is emitted as its `net_alpha`/`net_bandwidth` values
+    /// (a preset is just shorthand for those two numbers).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("model", Json::Str(self.model.clone())),
@@ -204,11 +295,23 @@ impl TrainConfig {
             ("steps", Json::Num(self.steps as f64)),
             ("lr", Json::Num(self.lr)),
             ("momentum", Json::Num(self.momentum)),
+            ("local_momentum", Json::Num(self.local_momentum)),
+            ("warmup_steps", Json::Num(self.warmup_steps as f64)),
             ("compression", Json::Num(self.compression)),
             ("adaptive", Json::Bool(self.adaptive)),
-            ("pipeline", Json::Str(self.pipeline.name().into())),
             ("c_max", Json::Num(self.c_max)),
+            ("reselect_every", Json::Num(self.reselect_every as f64)),
+            ("net_alpha", Json::Num(self.net.alpha)),
+            ("net_bandwidth", Json::Num(self.net.bandwidth)),
+            ("compressor", Json::Str(self.compressor.name().into())),
+            ("pipeline", Json::Str(self.pipeline.name().into())),
+            ("sample_stride", Json::Num(self.sample_stride as f64)),
+            ("eval_every", Json::Num(self.eval_every as f64)),
+            ("eval_batches", Json::Num(self.eval_batches as f64)),
+            ("delta_every", Json::Num(self.delta_every as f64)),
+            ("merge_bytes", Json::Num(self.merge_bytes as f64)),
             ("seed", Json::Num(self.seed as f64)),
+            ("verbose", Json::Bool(self.verbose)),
         ])
     }
 }
@@ -271,6 +374,72 @@ mod tests {
     }
 
     #[test]
+    fn to_json_round_trips_every_field() {
+        // non-default value in every field; to_json → apply_json must
+        // reproduce the config exactly (the bug: to_json used to drop
+        // local_momentum, warmup_steps, compressor, sample_stride,
+        // eval_every, eval_batches, delta_every, merge_bytes, threads and
+        // verbose)
+        let mut cfg = TrainConfig::default_for("cnn");
+        cfg.algorithm = Algorithm::Slgs;
+        cfg.workers = 7;
+        cfg.threads = 3;
+        cfg.steps = 11;
+        cfg.lr = 0.125;
+        cfg.momentum = 0.0;
+        cfg.local_momentum = 0.25;
+        cfg.warmup_steps = 9;
+        cfg.compression = 50.0;
+        cfg.adaptive = true;
+        cfg.c_max = 321.0;
+        cfg.reselect_every = 25;
+        cfg.net = NetConfig { alpha: 1e-4, bandwidth: 2e9 };
+        cfg.compressor = CompressorKind::HostSampled;
+        cfg.pipeline = PipelineMode::Barrier;
+        cfg.sample_stride = 17;
+        cfg.eval_every = 13;
+        cfg.eval_batches = 3;
+        cfg.delta_every = 4;
+        cfg.merge_bytes = 4096;
+        cfg.seed = 7;
+        cfg.verbose = true;
+        let mut back = TrainConfig::default_for("other");
+        back.apply_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // and the serialized text form parses back to the same object
+        let reparsed = Json::parse(&cfg.to_json().to_string_compact()).unwrap();
+        let mut back2 = TrainConfig::default_for("other");
+        back2.apply_json(&reparsed).unwrap();
+        assert_eq!(cfg.model, back2.model);
+        assert_eq!(cfg.compressor, back2.compressor);
+        assert_eq!(cfg.merge_bytes, back2.merge_bytes);
+    }
+
+    #[test]
+    fn net_presets_and_overrides() {
+        let mut cfg = TrainConfig::default_for("mlp");
+        assert_eq!(cfg.net, NetConfig::gige16());
+        let args = Args::parse(
+            "train --net infiniband --net-alpha 1e-5"
+                .split_whitespace()
+                .map(String::from),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.net.alpha, 1e-5); // override wins over the preset
+        assert_eq!(cfg.net.bandwidth, NetConfig::infiniband().bandwidth);
+        // JSON spelling: preset then field overrides (alphabetical keys)
+        let mut cfg = TrainConfig::default_for("mlp");
+        cfg.apply_json(&Json::parse(r#"{"net": "tengige", "net_bandwidth": 5e8}"#).unwrap())
+            .unwrap();
+        assert_eq!(cfg.net.alpha, NetConfig::tengige().alpha);
+        assert_eq!(cfg.net.bandwidth, 5e8);
+        assert!(NetConfig::preset("wat").is_err());
+        // presets get faster left to right
+        assert!(NetConfig::gige16().bandwidth < NetConfig::tengige().bandwidth);
+        assert!(NetConfig::tengige().bandwidth < NetConfig::infiniband().bandwidth);
+    }
+
+    #[test]
     fn validation_catches_bad_values() {
         let mut cfg = TrainConfig::default_for("mlp");
         cfg.workers = 0;
@@ -280,6 +449,15 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = TrainConfig::default_for("mlp");
         cfg.compression = 0.5;
+        assert!(cfg.validate().is_err());
+        // --reselect-every without --adaptive (or off the LAGS path)
+        // would be a silent no-op otherwise
+        let mut cfg = TrainConfig::default_for("mlp");
+        cfg.reselect_every = 50;
+        assert!(cfg.validate().is_err());
+        cfg.adaptive = true;
+        cfg.validate().unwrap();
+        cfg.algorithm = Algorithm::Slgs;
         assert!(cfg.validate().is_err());
     }
 }

@@ -13,7 +13,7 @@
 use anyhow::Result;
 use lags::adaptive::{self, perf_model, RatioConfig};
 use lags::collectives::NetworkModel;
-use lags::config::TrainConfig;
+use lags::config::{NetConfig, TrainConfig};
 use lags::metrics::{CurveRecorder, ResultWriter};
 use lags::models::zoo;
 use lags::pipeline::desim::{simulate, Schedule, SimParams};
@@ -30,14 +30,18 @@ USAGE: lags <subcommand> [flags]
   info     [--artifacts DIR] [--layers]
   train    [--artifacts DIR] [--model M] [--algorithm dense|slgs|lags]
            [--workers P] [--threads T] [--pipeline barrier|overlap]
-           [--steps N] [--lr F] [--momentum F]
-           [--compression C] [--adaptive] [--c-max C]
+           [--steps N] [--lr F] [--momentum F] [--local-momentum F]
+           [--warmup-steps N] [--compression C]
+           [--adaptive] [--c-max C] [--reselect-every N]
+           [--net gige16|tengige|infiniband] [--net-alpha F]
+           [--net-bandwidth F] [--merge-bytes B]
            [--compressor host|host-sampled|xla|xla-sampled]
            [--delta-every N] [--eval-every N] [--seed S] [--verbose]
            [--config FILE.json] [--out DIR]
 
            --artifacts native  selects the built-in pure-rust model zoo
-                               (no `make artifacts` needed)
+                               (no `make artifacts` needed; also the
+                               fallback when ./artifacts is absent)
            --threads T         fans the per-worker hot loop over T OS
                                threads (0 = one per core); results are
                                bit-identical to --threads 1
@@ -48,13 +52,36 @@ USAGE: lags <subcommand> [flags]
                                Bit-identical either way — a pure perf knob
                                (report.json carries the measured
                                overlap_efficiency)
+           --adaptive          Eq. 18 per-layer ratios over the configured
+                               --net* interconnect at the real --workers P.
+                               P=1 explicitly selects all-dense (c=1):
+                               one worker has nothing to hide comm behind,
+                               so no phantom cluster is substituted
+           --reselect-every N  with --adaptive: every N steps re-run the
+                               Eq. 18 selection from MEASURED (EWMA)
+                               backward/compress/reduce timings, at a step
+                               boundary, after warm-up; report.json
+                               carries the selection history
+           --merge-bytes B     §5 merge buffer: group consecutive layer
+                               messages up to B wire bytes per rank before
+                               reduction. Default 0 = flush every layer
+                               (a large buffer can defer all reduction
+                               past the last publish, trading overlap for
+                               fewer messages — the §5 ablation)
   compare  same flags as train (runs dense, slgs, lags) [--out DIR]
   delta    [--model M] [--workers P] [--steps N] [--every N] [--out DIR]
-  table2   [--alpha F] [--bandwidth F] [--workers P] [--out DIR]
+  table2   [--net PRESET] [--net-alpha F] [--net-bandwidth F] [--workers P]
+           [--out DIR]
   timeline [--profile resnet50|inception_v4|vgg16|lstm_ptb] [--compression C]
-  ratios   [--profile NAME] [--c-max C] [--alpha F] [--bandwidth F]
+  ratios   [--profile NAME | --model M [--artifacts DIR]] [--workers P]
+           [--c-max C] [--net PRESET] [--net-alpha F] [--net-bandwidth F]
+
+           without --profile, selects over the LIVE model exactly as
+           `train --adaptive` does (same manifest profile, same device
+           speed, same worker count) — the printed table IS the trainer's
+           initial selection for the same flags
   smax     [--tf F] [--tb F]
-  sweep    [--profile NAME] [--compression C] [--workers P]
+  sweep    [--profile NAME] [--compression C] [--workers P] [--net-alpha F]
 ";
 
 fn main() {
@@ -88,7 +115,17 @@ fn run(args: &Args) -> Result<()> {
 }
 
 fn artifacts_dir(args: &Args) -> String {
-    args.str_or("artifacts", "artifacts")
+    if let Some(dir) = args.get("artifacts") {
+        return dir.to_string();
+    }
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        "artifacts".into()
+    } else {
+        // no compiled artifacts around — fall back to the built-in zoo so
+        // train/compare/ratios work out of the box
+        eprintln!("note: no ./artifacts/manifest.json; using the built-in native zoo");
+        "native".into()
+    }
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -135,6 +172,19 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut t = Trainer::from_artifacts(&artifacts_dir(args), cfg)?;
     let report = t.run()?;
     println!("{}", report.summary_line());
+    if !report.selections.is_empty() {
+        let traj: Vec<String> = report
+            .selections
+            .iter()
+            .map(|s| format!("{:.0}@step{}", s.effective_cmax, s.step))
+            .collect();
+        println!(
+            "adaptive: {} Eq. 18 selection(s) ({} online); effective c_max: {}",
+            report.selections.len(),
+            report.selections.len() - 1,
+            traj.join(" -> ")
+        );
+    }
     if let Some(out) = args.get("out") {
         let w = ResultWriter::new(out)?;
         w.write_json("report.json", &report.to_json())?;
@@ -151,6 +201,11 @@ fn cmd_compare(args: &Args) -> Result<()> {
     for alg in [Algorithm::Dense, Algorithm::Slgs, Algorithm::Lags] {
         let mut cfg = base.clone();
         cfg.algorithm = alg;
+        if alg != Algorithm::Lags {
+            // online re-selection only exists on the LAGS path; the other
+            // legs of the comparison run their fixed schedules
+            cfg.reselect_every = 0;
+        }
         let mut t = Trainer::with_runtime(&rt, cfg)?;
         let r = t.run()?;
         println!("{}", r.summary_line());
@@ -204,12 +259,23 @@ fn cmd_delta(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// α–β parameters from the shared `--net*` surface: `--net PRESET` first,
+/// then `--net-alpha`/`--net-bandwidth` overrides (the legacy
+/// `--alpha`/`--bandwidth` spellings are still accepted).
+fn net_config_from_args(args: &Args) -> Result<NetConfig> {
+    let mut net = match args.get("net") {
+        Some(p) => NetConfig::preset(p)?,
+        None => NetConfig::gige16(),
+    };
+    net.alpha = args.f64_or("alpha", net.alpha)?;
+    net.alpha = args.f64_or("net-alpha", net.alpha)?;
+    net.bandwidth = args.f64_or("bandwidth", net.bandwidth)?;
+    net.bandwidth = args.f64_or("net-bandwidth", net.bandwidth)?;
+    Ok(net)
+}
+
 fn network_from_args(args: &Args) -> Result<NetworkModel> {
-    Ok(NetworkModel {
-        alpha: args.f64_or("alpha", 5e-4)?,
-        bandwidth: args.f64_or("bandwidth", 111e6)?,
-        workers: args.usize_or("workers", 16)?,
-    })
+    Ok(net_config_from_args(args)?.model(args.usize_or("workers", 16)?))
 }
 
 fn cmd_table2(args: &Args) -> Result<()> {
@@ -293,29 +359,87 @@ fn cmd_timeline(args: &Args) -> Result<()> {
 }
 
 fn cmd_ratios(args: &Args) -> Result<()> {
-    let name = args.str_or("profile", "resnet50");
-    let m = zoo::by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown profile {name}"))?;
-    let net = network_from_args(args)?;
-    let cfg = RatioConfig { c_max: args.f64_or("c-max", 1000.0)?, ..RatioConfig::default() };
-    let ratios = adaptive::select_ratios(&m, &net, &cfg);
-    println!("Eq. 18 adaptive ratios for {name} (c_u = {}):", cfg.c_max);
+    if let Some(name) = args.get("profile") {
+        // DES zoo profile mode (the paper's published evaluation models)
+        let m = zoo::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown profile {name}"))?;
+        let net = network_from_args(args)?;
+        let c_max = args.f64_or("c-max", 1000.0)?;
+        anyhow::ensure!(c_max >= 1.0 && c_max.is_finite(), "--c-max must be >= 1");
+        let cfg = RatioConfig { c_max, ..RatioConfig::default() };
+        let ratios = adaptive::select_ratios(&m, &net, &cfg);
+        println!(
+            "Eq. 18 adaptive ratios for {name} (P={}, alpha={}, B={}/s, c_u = {}):",
+            net.workers,
+            fmt_secs(net.alpha),
+            fmt_bytes(net.bandwidth),
+            cfg.c_max
+        );
+        print_ratio_table(m.layers.iter().map(|l| (l.name.as_str(), l.params)), &ratios, &net);
+        println!("effective c_max = {:.1}", adaptive::ratio::effective_cmax(&ratios));
+        return Ok(());
+    }
+    // Live-model mode: EXACTLY the initial selection `train --adaptive`
+    // makes for the same flags — same manifest profile, same synthetic
+    // device speed, same network, same worker count (train_config applies
+    // the identical --workers/--c-max/--net* defaults and overrides).
+    let mut tc = train_config(args)?;
+    // honour the legacy --alpha/--bandwidth spellings here too (the
+    // --profile mode accepts them via net_config_from_args); the --net-*
+    // spellings, already applied by train_config, take precedence
+    if args.get("net-alpha").is_none() {
+        tc.net.alpha = args.f64_or("alpha", tc.net.alpha)?;
+    }
+    if args.get("net-bandwidth").is_none() {
+        tc.net.bandwidth = args.f64_or("bandwidth", tc.net.bandwidth)?;
+    }
+    let rt = lags::runtime::Runtime::open(artifacts_dir(args), tc.seed)?;
+    let mm = rt.manifest.model(&tc.model)?;
+    let net = tc.net.model(tc.workers);
+    let rc = RatioConfig { c_max: tc.c_max, ..RatioConfig::default() };
+    let ratios = adaptive::select_ratios_manifest(mm, lags::models::DEVICE_FLOPS, &net, &rc);
+    println!(
+        "Eq. 18 initial selection for model {} (P={}, alpha={}, B={}/s, c_u = {}):",
+        tc.model,
+        tc.workers,
+        fmt_secs(net.alpha),
+        fmt_bytes(net.bandwidth),
+        rc.c_max
+    );
+    if tc.workers <= 1 {
+        println!("(P = 1: no communication to hide — all layers dense, c = 1)");
+    }
+    print_ratio_table(mm.layers.iter().map(|l| (l.name.as_str(), l.size)), &ratios, &net);
+    println!("effective c_max = {:.1}", adaptive::ratio::effective_cmax(&ratios));
+    println!("(this is the selection `lags train --adaptive` starts from with the same flags;");
+    println!(" add --reselect-every N to re-run it online from measured timings)");
+    Ok(())
+}
+
+/// Shared `lags ratios` table body (layers in the iterator's order). The
+/// k column comes from `adaptive::ks_from_ratios` — the exact convention
+/// the trainer uses — so the printed k^(l) IS the trainer's k^(l).
+fn print_ratio_table<'a, I: Iterator<Item = (&'a str, usize)>>(
+    layers: I,
+    ratios: &[f64],
+    net: &NetworkModel,
+) {
+    let rows: Vec<(&str, usize)> = layers.collect();
+    let sizes: Vec<usize> = rows.iter().map(|&(_, d)| d).collect();
+    let ks = adaptive::ks_from_ratios(&sizes, ratios);
     println!(
         "| {:<22} | {:>9} | {:>8} | {:>9} | {:>9} |",
         "layer", "d^(l)", "c^(l)", "k^(l)", "t_comm"
     );
-    for (l, &c) in m.layers.iter().zip(ratios.iter()) {
-        let k = (l.params as f64 / c).max(1.0);
+    for ((&(name, d), &c), &k) in rows.iter().zip(ratios.iter()).zip(ks.iter()) {
         println!(
-            "| {:<22} | {:>9} | {:>8.1} | {:>9.0} | {:>9} |",
-            l.name,
-            l.params,
+            "| {:<22} | {:>9} | {:>8.1} | {:>9} | {:>9} |",
+            name,
+            d,
             c,
             k,
-            fmt_secs(net.allgather_sparse(k))
+            fmt_secs(net.allgather_sparse(k as f64))
         );
     }
-    println!("effective c_max = {:.1}", adaptive::ratio::effective_cmax(&ratios));
-    Ok(())
 }
 
 /// Bandwidth-sensitivity sweep: at which interconnect speed does each
@@ -326,7 +450,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let m = zoo::by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown profile {name}"))?;
     let c = args.f64_or("compression", 1000.0)?;
     let workers = args.usize_or("workers", 16)?;
-    println!("bandwidth sweep for {name} (P={workers}, c={c}):");
+    let alpha = net_config_from_args(args)?.alpha;
+    println!("bandwidth sweep for {name} (P={workers}, c={c}, alpha={}):", fmt_secs(alpha));
     println!(
         "| {:>10} | {:>8} | {:>8} | {:>8} | {:>6} | {:>6} |",
         "bandwidth", "dense", "slgs", "lags", "S1", "S2"
@@ -334,7 +459,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     for exp in 0..=8 {
         // 12.5 MB/s (100 Mb) .. 3.2 GB/s (25 Gb), x2 steps
         let bw = 12.5e6 * (2f64).powi(exp);
-        let net = NetworkModel { alpha: 5e-4, bandwidth: bw, workers };
+        let net = NetworkModel { alpha, bandwidth: bw, workers };
         let sp = SimParams::uniform(&m, c);
         let dense = simulate(&m, &net, Schedule::DensePipelined, &SimParams::dense(&m));
         let slgs = simulate(&m, &net, Schedule::Slgs, &sp);

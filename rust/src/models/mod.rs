@@ -13,6 +13,13 @@ pub mod zoo;
 
 use crate::runtime::ModelManifest;
 
+/// Synthetic device speed (flops/s) used to turn a live manifest's flop
+/// counts into the startup timing profile — shared by the trainer's
+/// `--adaptive` selection, its DES pricing, and `lags ratios`, so all
+/// three agree on the same inputs until measured timings take over
+/// (`adaptive::online`).
+pub const DEVICE_FLOPS: f64 = 1e12;
+
 /// A layer as the timing model sees it: parameter count + backprop compute
 /// time share. Order follows the BACKPROP schedule: index 0 is the OUTPUT
 /// layer (gradient ready first), last index is the input layer (Fig. 1).

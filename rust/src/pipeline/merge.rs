@@ -3,43 +3,53 @@
 //! a buffer and flushed as one combined message when the buffer fills or
 //! the last layer (backprop order) arrives.
 //!
-//! Used by the LAGS trainer so its aggregation granularity matches what a
-//! real network transport would see, and by the merge-buffer ablation.
+//! Two consumers:
+//!
+//! * the LAGS trainer's per-layer reduction (both `--pipeline` modes):
+//!   completed layers are staged by WIRE SIZE (`MergeBuffer<usize>`; the
+//!   payloads themselves stay in the `StreamAggregator`'s rank slots) and
+//!   each flushed group is reduced + applied as one unit, with one merged
+//!   message per rank accounted in `MessageStats` — so the merge-vs-no-
+//!   merge ablation runs in the real trainer, not just the DES;
+//! * the DES/ablation harnesses, which stage whole [`SparseVec`]
+//!   payloads (`MergeBuffer<SparseVec>`, the default).
 
 use crate::sparsify::sparse::SparseVec;
 
-/// A group of per-layer sparse messages flushed together.
+/// A group of per-layer payloads flushed together.
 #[derive(Debug, Clone)]
-pub struct MergedGroup {
+pub struct MergedGroup<T = SparseVec> {
     /// backprop-order layer indices contained in this flush
     pub layer_indices: Vec<usize>,
-    /// per-layer sparse payloads, same order as layer_indices
-    pub payloads: Vec<SparseVec>,
+    /// per-layer staged payloads, same order as layer_indices
+    pub payloads: Vec<T>,
 }
 
-impl MergedGroup {
+impl MergedGroup<SparseVec> {
     pub fn wire_bytes(&self) -> usize {
         self.payloads.iter().map(|p| p.wire_bytes()).sum()
     }
 }
 
-/// Staging buffer: push per-layer messages, get groups out.
-pub struct MergeBuffer {
+/// Staging buffer: push per-layer payloads, get groups out.
+pub struct MergeBuffer<T = SparseVec> {
     capacity_bytes: usize,
-    staged: Vec<(usize, SparseVec)>,
+    staged: Vec<(usize, T)>,
     staged_bytes: usize,
-    flushed: Vec<MergedGroup>,
+    flushed: Vec<MergedGroup<T>>,
 }
 
-impl MergeBuffer {
+impl<T> MergeBuffer<T> {
     /// capacity 0 disables merging (every layer flushes immediately).
     pub fn new(capacity_bytes: usize) -> Self {
         MergeBuffer { capacity_bytes, staged: Vec::new(), staged_bytes: 0, flushed: Vec::new() }
     }
 
-    pub fn push(&mut self, layer_idx: usize, msg: SparseVec) {
-        self.staged_bytes += msg.wire_bytes();
-        self.staged.push((layer_idx, msg));
+    /// Stage `payload` for `layer_idx`, accounting `bytes` against the
+    /// capacity; flushes when the buffer fills.
+    pub fn push_with(&mut self, layer_idx: usize, bytes: usize, payload: T) {
+        self.staged_bytes += bytes;
+        self.staged.push((layer_idx, payload));
         if self.capacity_bytes == 0 || self.staged_bytes >= self.capacity_bytes {
             self.flush();
         }
@@ -62,12 +72,20 @@ impl MergeBuffer {
     }
 
     /// Drain all completed groups.
-    pub fn take_groups(&mut self) -> Vec<MergedGroup> {
+    pub fn take_groups(&mut self) -> Vec<MergedGroup<T>> {
         std::mem::take(&mut self.flushed)
     }
 
     pub fn pending_bytes(&self) -> usize {
         self.staged_bytes
+    }
+}
+
+impl MergeBuffer<SparseVec> {
+    /// Stage a sparse message, accounting its wire bytes.
+    pub fn push(&mut self, layer_idx: usize, msg: SparseVec) {
+        let bytes = msg.wire_bytes();
+        self.push_with(layer_idx, bytes, msg);
     }
 }
 

@@ -51,6 +51,17 @@ impl CompressorKind {
         })
     }
 
+    /// Canonical spelling accepted back by [`Self::parse`] (config
+    /// round-trip).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::HostExact => "host",
+            Self::HostSampled => "host-sampled",
+            Self::XlaExact => "xla",
+            Self::XlaSampled => "xla-sampled",
+        }
+    }
+
     pub fn is_xla(self) -> bool {
         matches!(self, Self::XlaExact | Self::XlaSampled)
     }

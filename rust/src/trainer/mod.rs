@@ -44,9 +44,9 @@
 
 mod report;
 
-pub use report::{MessageStats, TrainReport};
+pub use report::{MessageStats, RatioSelection, TrainReport};
 
-use crate::adaptive::{self, RatioConfig};
+use crate::adaptive::{self, MeasuredProfile, RatioConfig};
 use crate::cluster::Cluster;
 use crate::collectives::pipeline::{
     LayerMsg, OverlapMeasure, OverlapTimer, PipelineMode, StreamAggregator,
@@ -55,8 +55,9 @@ use crate::collectives::{dense::ring_allreduce_mean, sparse_agg, NetworkModel};
 use crate::config::TrainConfig;
 use crate::data::Synthetic;
 use crate::metrics::{CurveRecorder, DeltaMonitor};
-use crate::models::ModelProfile;
+use crate::models::{ModelProfile, DEVICE_FLOPS};
 use crate::pipeline::desim::{simulate, Schedule, SimParams};
+use crate::pipeline::merge::{MergeBuffer, MergedGroup};
 use crate::runtime::{GradJob, Metric, ModelRuntime, Runtime};
 use crate::sparsify::CompressorKind;
 use crate::util::ParallelExecutor;
@@ -120,45 +121,103 @@ fn apply_update_range(
     }
 }
 
-/// Drain one streamed phase on the aggregator (calling) thread: land
-/// each published [`LayerMsg`], and for every layer that completes — in
-/// backprop order, all P ranks present — zero its `agg` slice, reduce the
-/// rank-ordered messages into it, and apply that slice's update, all
-/// while workers are still compressing earlier layers. Returns (wire
-/// bytes, message count, measured overlap).
-fn drain_stream(
-    rx: mpsc::Receiver<LayerMsg>,
-    stream: &mut StreamAggregator,
+/// Reduce + apply one flushed §5 merge group on the aggregator thread:
+/// for each layer of the group — in backprop order, all P rank slots
+/// present in `stream` — zero its `agg` slice, reduce the rank-ordered
+/// messages into it, and apply that slice's update. Each layer's
+/// rank-ordered reduction is individually clocked into `reduce_secs`
+/// when `measure` is on (the online adaptive profile). Returns the
+/// group's total wire bytes.
+#[allow(clippy::too_many_arguments)]
+fn fire_group(
+    group: &MergedGroup<usize>,
+    stream: &StreamAggregator,
     spans: &[(usize, usize)],
     agg: &mut [f32],
     params: &mut [f32],
     momentum: &mut [f32],
     mu: f32,
     inv_p: f32,
+    timer: &mut OverlapTimer,
+    reduce_secs: &mut [f64],
+    measure: bool,
+) -> usize {
+    for &li in &group.layer_indices {
+        let begin = Instant::now();
+        let (off, n) = spans[li];
+        {
+            let dst = &mut agg[off..off + n];
+            dst.iter_mut().for_each(|v| *v = 0.0);
+            let r0 = measure.then(Instant::now);
+            sparse_agg::sparse_add_rank_ordered(
+                stream.layer_slots(li).iter().map(|s| s.as_ref().expect("complete layer")),
+                dst,
+            );
+            if let Some(r0) = r0 {
+                reduce_secs[li] = r0.elapsed().as_secs_f64();
+            }
+        }
+        apply_update_range(&mut *params, &mut *momentum, &*agg, mu, inv_p, off, n);
+        timer.note_busy(begin, Instant::now());
+    }
+    group.payloads.iter().sum()
+}
+
+/// Drain one streamed phase on the aggregator (calling) thread: land
+/// each published [`LayerMsg`]; every layer that completes — in backprop
+/// order, all P ranks present — is staged in the §5 `merge` buffer by
+/// wire size, and each flushed group is reduced + applied (per layer,
+/// rank-ordered) while workers are still compressing earlier layers. One
+/// merged message per rank is accounted per group, so `merge_bytes`
+/// shapes the real trainer's message granularity exactly like the DES's.
+/// Returns (wire bytes, message count, measured overlap).
+#[allow(clippy::too_many_arguments)]
+fn drain_stream(
+    rx: mpsc::Receiver<LayerMsg>,
+    stream: &mut StreamAggregator,
+    merge: &mut MergeBuffer<usize>,
+    spans: &[(usize, usize)],
+    agg: &mut [f32],
+    params: &mut [f32],
+    momentum: &mut [f32],
+    mu: f32,
+    inv_p: f32,
+    reduce_secs: &mut [f64],
+    measure: bool,
 ) -> (usize, usize, OverlapMeasure) {
     let mut timer = OverlapTimer::new();
     let mut bytes = 0usize;
     let mut messages = 0usize;
-    while let Ok(m) = rx.recv() {
-        timer.note_sent(m.sent);
-        stream.push(m, |li, slots| {
-            let begin = Instant::now();
-            let (off, n) = spans[li];
-            {
-                let dst = &mut agg[off..off + n];
-                dst.iter_mut().for_each(|v| *v = 0.0);
-                sparse_agg::sparse_add_rank_ordered(
-                    slots.iter().map(|s| s.as_ref().expect("complete layer")),
-                    dst,
-                );
+    let p = stream.workers();
+    let mut completed: Vec<usize> = Vec::new();
+    let mut done = false;
+    while !done {
+        match rx.recv() {
+            Ok(m) => {
+                timer.note_sent(m.sent);
+                stream.push(m, |li, _slots| completed.push(li));
+                for li in completed.drain(..) {
+                    let layer_bytes: usize = stream
+                        .layer_slots(li)
+                        .iter()
+                        .map(|s| s.as_ref().expect("complete layer").wire_bytes())
+                        .sum();
+                    merge.push_with(li, layer_bytes, layer_bytes);
+                }
             }
-            for s in slots {
-                bytes += s.as_ref().expect("complete layer").wire_bytes();
-                messages += 1;
+            Err(_) => {
+                // channel closed: end of backprop, flush the partial group
+                merge.flush();
+                done = true;
             }
-            apply_update_range(&mut *params, &mut *momentum, &*agg, mu, inv_p, off, n);
-            timer.note_busy(begin, Instant::now());
-        });
+        }
+        for g in merge.take_groups() {
+            bytes += fire_group(
+                &g, stream, spans, agg, params, momentum, mu, inv_p, &mut timer, reduce_secs,
+                measure,
+            );
+            messages += p;
+        }
     }
     (bytes, messages, timer.finish())
 }
@@ -192,6 +251,27 @@ pub struct Trainer {
     /// readiness table for the streamed per-layer reduction (`overlap`);
     /// SLGS streams its flat message as a single-span table
     stream: StreamAggregator,
+    /// §5 merge buffer shaping the reduction/accounting granularity of
+    /// the sparse paths in BOTH pipeline modes; capacity is
+    /// `merge_bytes × P` because layers are staged by their TOTAL wire
+    /// bytes across ranks (≡ per-rank mean vs `merge_bytes`, in exact
+    /// integer arithmetic)
+    merge: MergeBuffer<usize>,
+    /// the configured α–β interconnect at `cfg.workers` — prices Eq. 18
+    /// selection and the DES, replacing the old hard-coded `gige_16()`
+    net: NetworkModel,
+    /// online measured-timing accumulator; `Some` only on the adaptive
+    /// LAGS path with `--reselect-every N > 0`
+    online: Option<MeasuredProfile>,
+    /// Eq. 18 selection history (startup + online re-selections)
+    selections: Vec<RatioSelection>,
+    /// scratch: this step's per-layer reduction seconds (manifest order),
+    /// written only while `online` measurement is active
+    reduce_secs: Vec<f64>,
+    /// scratch: per-layer compression seconds, mean across ranks
+    compress_mean: Vec<f64>,
+    /// wall-clock of this step's forward+backward fan-out
+    last_comp_secs: f64,
     /// measured overlap accumulated across steps (stays zero in barrier
     /// mode) — the real-trainer counterpart of the DES `hidden` time
     overlap: OverlapMeasure,
@@ -219,25 +299,40 @@ impl Trainer {
             w.ensure_message_scratch(&layer_sizes);
         }
 
-        // per-layer ratios: uniform c, or Eq. 18 adaptive selection over the
-        // live model's profile on the paper's 16-node 1GbE network model
+        // per-layer ratios: uniform c, or Eq. 18 adaptive selection over
+        // the live model's profile on the CONFIGURED network at the REAL
+        // worker count (P = 1 explicitly selects all-dense — see
+        // select_ratios_manifest). lags ratios runs the same call, so the
+        // CLI report and this selection always agree.
+        let net = cfg.net.model(cfg.workers);
         let ratios: Vec<f64> = if cfg.adaptive && cfg.algorithm == Algorithm::Lags {
-            let profile = ModelProfile::from_manifest(mm, 1e12);
-            let net = NetworkModel::gige_16().with_workers(cfg.workers.max(2));
             let rc = RatioConfig { c_max: cfg.c_max, ..RatioConfig::default() };
-            // select_ratios is backprop-ordered; map back to manifest order
-            let mut r = adaptive::select_ratios(&profile, &net, &rc);
-            r.reverse();
-            r
+            adaptive::select_ratios_manifest(mm, DEVICE_FLOPS, &net, &rc)
         } else {
             vec![cfg.compression; mm.layers.len()]
         };
-        let ks: Vec<usize> = mm
-            .layers
-            .iter()
-            .zip(ratios.iter())
-            .map(|(l, &c)| ((l.size as f64 / c).ceil() as usize).clamp(1, l.size))
-            .collect();
+        let selections = if cfg.adaptive && cfg.algorithm == Algorithm::Lags {
+            vec![RatioSelection {
+                step: 0,
+                effective_cmax: adaptive::ratio::effective_cmax(&ratios),
+                ratios: ratios.clone(),
+            }]
+        } else {
+            Vec::new()
+        };
+        // online measurement only on the adaptive LAGS path with a
+        // re-selection period; everything else keeps its fixed schedule
+        let online = if cfg.adaptive && cfg.algorithm == Algorithm::Lags && cfg.reselect_every > 0
+        {
+            Some(MeasuredProfile::new(
+                mm.layers.iter().map(|l| l.name.clone()).collect(),
+                mm.layers.iter().map(|l| l.size).collect(),
+                mm.layers.iter().map(|l| l.fwd_flops).collect(),
+            ))
+        } else {
+            None
+        };
+        let ks = adaptive::ks_from_ratios(&layer_sizes, &ratios);
         let layer_meta: Vec<(usize, usize)> = mm.layers.iter().map(|l| (l.offset, l.size)).collect();
 
         let delta = if cfg.delta_every > 0 && cfg.algorithm == Algorithm::Lags {
@@ -256,11 +351,12 @@ impl Trainer {
 
         let params = model.init_params.clone();
         let ring_bufs = vec![vec![0.0f32; d]; cfg.workers];
+        let nl = ks.len();
         Ok(Trainer {
             momentum_buf: vec![0.0; d],
             agg: vec![0.0; d],
             exec: ParallelExecutor::new(cfg.threads),
-            ks_t: vec![0; ks.len()],
+            ks_t: vec![0; nl],
             params,
             ks,
             ratios,
@@ -271,6 +367,13 @@ impl Trainer {
             model,
             ring_bufs,
             stream,
+            merge: MergeBuffer::new(cfg.merge_bytes.saturating_mul(cfg.workers)),
+            net,
+            online,
+            selections,
+            reduce_secs: vec![0.0; nl],
+            compress_mean: vec![0.0; nl],
+            last_comp_secs: 0.0,
             overlap: OverlapMeasure::default(),
             msg_stats: MessageStats::default(),
             step_idx: 0,
@@ -299,8 +402,11 @@ impl Trainer {
 
     /// Effective k for layer `li` at step `t`, honouring the warm-up
     /// schedule (Lin et al. 2018): the compression ratio ramps
-    /// exponentially c_t = c^((t+1)/warmup) until `warmup_steps`.
-    fn k_at(&self, li: usize, t: usize) -> usize {
+    /// exponentially c_t = c^((t+1)/warmup) until `warmup_steps`, landing
+    /// exactly on `ks[li]` at `t + 1 == warmup_steps`. Monotone
+    /// non-increasing over the ramp for any ratio vector ≥ 1 (asserted by
+    /// `prop_warmup_k_monotone_lands_on_ks`).
+    pub fn k_at(&self, li: usize, t: usize) -> usize {
         let size = self.model.mm.layers[li].size;
         if self.cfg.warmup_steps == 0 || t + 1 >= self.cfg.warmup_steps {
             return self.ks[li];
@@ -310,8 +416,20 @@ impl Trainer {
         ((size as f64 / c_eff).ceil() as usize).clamp(1, size)
     }
 
+    /// Per-layer compression ratios currently in effect (manifest order).
     pub fn ratios(&self) -> &[f64] {
         &self.ratios
+    }
+
+    /// Eq. 18 selection history: the startup selection plus every online
+    /// re-selection so far (empty for non-adaptive runs).
+    pub fn selections(&self) -> &[RatioSelection] {
+        &self.selections
+    }
+
+    /// The configured α–β interconnect at this run's worker count.
+    pub fn network(&self) -> &NetworkModel {
+        &self.net
     }
 
     /// Run one synchronous iteration; returns the mean training loss.
@@ -334,8 +452,12 @@ impl Trainer {
                 scratch: &mut w.grad_scratch,
             });
         }
+        let comp_start = self.measuring_at(t).then(Instant::now);
         self.model.grad_many(&self.exec, &self.params, &mut jobs)?;
         drop(jobs);
+        if let Some(s) = comp_start {
+            self.last_comp_secs = s.elapsed().as_secs_f64();
+        }
 
         // --- momentum correction (local, pre-sparsification) if enabled
         if self.cfg.local_momentum > 0.0 && self.cfg.algorithm != Algorithm::Dense {
@@ -355,7 +477,65 @@ impl Trainer {
         }
 
         self.step_idx += 1;
+        self.observe_and_reselect();
         Ok(self.cluster.mean_loss())
+    }
+
+    /// Measurement is active only on the online adaptive path and only
+    /// once warm-up has completed — ramp-phase steps run at artificially
+    /// low compression, so their compress/reduce timings would poison the
+    /// EWMA profile the first re-selection consumes. `t` is the step
+    /// about to run (`step_idx`).
+    fn measuring_at(&self, t: usize) -> bool {
+        self.online.is_some() && t + 1 >= self.cfg.warmup_steps
+    }
+
+    /// Online adaptive path: fold this step's measured timings into the
+    /// EWMA profile and, at `--reselect-every` boundaries, re-run Eq. 18
+    /// over the MEASURED profile and swap in the new `ks`/`ratios`. Runs
+    /// strictly BETWEEN steps, so any fixed schedule
+    /// (`reselect_every = 0`) is bit-for-bit untouched and the
+    /// barrier ≡ overlap determinism contract holds per schedule.
+    fn observe_and_reselect(&mut self) {
+        let done = self.step_idx; // steps completed; the last ran at t = done - 1
+        if !self.measuring_at(done - 1) {
+            return; // fixed schedule, or still ramping through warm-up
+        }
+        let nl = self.layer_meta.len();
+        let p = self.cluster.size() as f64;
+        for li in 0..nl {
+            let s: f64 = self.cluster.workers.iter().map(|w| w.compress_secs[li]).sum();
+            self.compress_mean[li] = s / p;
+        }
+        {
+            let mp = self.online.as_mut().expect("measuring implies online");
+            mp.observe_step(self.last_comp_secs, &self.compress_mean, &self.reduce_secs);
+        }
+        if done % self.cfg.reselect_every != 0 {
+            return;
+        }
+        let (profile, overhead) = {
+            let mp = self.online.as_ref().expect("measuring implies online");
+            (mp.profile(&self.cfg.model), mp.overhead_backprop())
+        };
+        let rc = RatioConfig { c_max: self.cfg.c_max, ..RatioConfig::default() };
+        self.ratios = adaptive::select_ratios_measured_manifest(&profile, &self.net, &rc, &overhead);
+        let sizes: Vec<usize> = self.layer_meta.iter().map(|&(_, n)| n).collect();
+        self.ks = adaptive::ks_from_ratios(&sizes, &self.ratios);
+        let cmax = adaptive::ratio::effective_cmax(&self.ratios);
+        self.selections.push(RatioSelection {
+            step: done,
+            effective_cmax: cmax,
+            ratios: self.ratios.clone(),
+        });
+        if self.cfg.verbose {
+            eprintln!(
+                "[{}] step {done}: re-selected ratios from measured profile \
+                 (compute {:.3}ms/step), effective c_max = {cmax:.1}",
+                self.cfg.algorithm.name(),
+                1e3 * self.online.as_ref().expect("measuring implies online").compute_seconds(),
+            );
+        }
     }
 
     /// Barrier phase 3: one whole-vector apply pass.
@@ -381,7 +561,11 @@ impl Trainer {
         for (a, &g) in self.agg.iter_mut().zip(self.ring_bufs[0].iter()) {
             *a = scale * g;
         }
-        self.msg_stats.record(self.model.mm.d * 4 * 2, 1); // dense allreduce traffic
+        // wire accounting follows cost::allreduce_dense and the sparse
+        // paths' per-worker counting: each rank's ring transfer is
+        // 2·(4d)·(P−1)/P bytes, so the P ranks together move 8·d·(P−1)
+        // bytes, one logical collective message per rank
+        self.msg_stats.record(8 * self.model.mm.d * (p - 1), p);
         self.apply_full();
         Ok(())
     }
@@ -435,9 +619,11 @@ impl Trainer {
                 let flat_span = [(0usize, d)];
                 let spans = &flat_span[..];
                 let stream = &mut self.stream;
+                let merge = &mut self.merge;
                 let agg = &mut self.agg[..];
                 let params = &mut self.params[..];
                 let momentum = &mut self.momentum_buf[..];
+                let reduce_secs = &mut self.reduce_secs[..1];
                 let (tx, rx) = mpsc::channel::<LayerMsg>();
                 let (bytes, messages, overlap) = self.exec.run_with_sink(
                     &mut self.cluster.workers,
@@ -454,7 +640,12 @@ impl Trainer {
                         worker.publish_flat(tx);
                         Ok(())
                     },
-                    move || drain_stream(rx, stream, spans, agg, params, momentum, mu, inv_p),
+                    move || {
+                        drain_stream(
+                            rx, stream, merge, spans, agg, params, momentum, mu, inv_p,
+                            reduce_secs, false,
+                        )
+                    },
                 )?;
                 anyhow::ensure!(self.stream.finished(), "streamed SLGS reduction incomplete");
                 self.msg_stats.record(bytes, messages);
@@ -470,25 +661,41 @@ impl Trainer {
     }
 
     /// Barrier phases 2+3 for LAGS: zero, rank-ordered layer-major
-    /// reduction (Alg. 1 line 9) in backprop order, message accounting,
-    /// whole-vector apply. The same values hit the same coordinates in
-    /// the same rank order as the dense per-worker adds did, so the
-    /// aggregate is bit-identical — at O(Σ_l P·k^(l)) cost.
+    /// reduction (Alg. 1 line 9) in backprop order, §5 merged-group
+    /// message accounting, whole-vector apply. The same values hit the
+    /// same coordinates in the same rank order as the dense per-worker
+    /// adds did, so the aggregate is bit-identical — at O(Σ_l P·k^(l))
+    /// cost. The merge grouping keys on the layers' total wire bytes —
+    /// identical across pipeline modes and thread counts because the
+    /// messages themselves are — so `MessageStats` stays a pure function
+    /// of the schedule.
     fn reduce_apply_barrier_lags(&mut self) {
         let nl = self.layer_meta.len();
+        let measure = self.measuring_at(self.step_idx);
+        let p = self.cluster.size();
         self.agg.iter_mut().for_each(|v| *v = 0.0);
         let mut bytes = 0usize;
         let mut messages = 0usize;
         for li in (0..nl).rev() {
             let (off, n) = self.layer_meta[li];
+            let r0 = measure.then(Instant::now);
             sparse_agg::sparse_add_rank_ordered(
                 self.cluster.workers.iter().map(|w| &w.msgs[li]),
                 &mut self.agg[off..off + n],
             );
-            for w in &self.cluster.workers {
-                bytes += w.msgs[li].wire_bytes();
-                messages += 1;
+            if let Some(r0) = r0 {
+                self.reduce_secs[li] = r0.elapsed().as_secs_f64();
             }
+            let layer_bytes: usize =
+                self.cluster.workers.iter().map(|w| w.msgs[li].wire_bytes()).sum();
+            self.merge.push_with(li, layer_bytes, layer_bytes);
+        }
+        // nothing observes intermediate flushes in the barrier path, so
+        // one end-of-backprop flush + drain accounts every group
+        self.merge.flush();
+        for g in self.merge.take_groups() {
+            bytes += g.payloads.iter().sum::<usize>();
+            messages += p;
         }
         self.msg_stats.record(bytes, messages);
         self.apply_full();
@@ -535,6 +742,7 @@ impl Trainer {
             }
         }
 
+        let measure = self.measuring_at(t);
         if self.cfg.compressor.is_xla() {
             // the XLA compress executables are not Sync — compression runs
             // sequentially in rank order, and aggregation stays a barrier
@@ -543,6 +751,7 @@ impl Trainer {
                 for li in (0..nl).rev() {
                     let (off, n) = self.layer_meta[li];
                     let layer = &self.model.mm.layers[li];
+                    let c0 = measure.then(Instant::now);
                     let resid = worker.ef.residual_slice(off, n).to_vec();
                     let (sparse, new_resid, _thr) = self.model.compress_layer_xla(
                         layer,
@@ -553,6 +762,9 @@ impl Trainer {
                         sampled,
                         &mut worker.compress_scratch,
                     )?;
+                    if let Some(c0) = c0 {
+                        worker.compress_secs[li] = c0.elapsed().as_secs_f64();
+                    }
                     worker.ef.write_residual(off, &new_resid);
                     let msg = &mut worker.msgs[li];
                     msg.len = n;
@@ -580,6 +792,7 @@ impl Trainer {
                 self.exec.run(&mut self.cluster.workers, |_, worker| {
                     for li in (0..meta.len()).rev() {
                         let (off, n) = meta[li];
+                        let c0 = measure.then(Instant::now);
                         worker.ef.compress_layer_sparse(
                             off,
                             &worker.grad[off..off + n],
@@ -588,6 +801,9 @@ impl Trainer {
                             exact,
                             &mut worker.msgs[li],
                         );
+                        if let Some(c0) = c0 {
+                            worker.compress_secs[li] = c0.elapsed().as_secs_f64();
+                        }
                     }
                     Ok(())
                 })?;
@@ -601,9 +817,11 @@ impl Trainer {
                 let meta = &self.layer_meta;
                 let ks_t = &self.ks_t;
                 let stream = &mut self.stream;
+                let merge = &mut self.merge;
                 let agg = &mut self.agg[..];
                 let params = &mut self.params[..];
                 let momentum = &mut self.momentum_buf[..];
+                let reduce_secs = &mut self.reduce_secs[..];
                 let (tx, rx) = mpsc::channel::<LayerMsg>();
                 let (bytes, messages, overlap) = self.exec.run_with_sink(
                     &mut self.cluster.workers,
@@ -611,6 +829,7 @@ impl Trainer {
                     |_, worker, tx| {
                         for li in (0..meta.len()).rev() {
                             let (off, n) = meta[li];
+                            let c0 = measure.then(Instant::now);
                             worker.ef.compress_layer_sparse(
                                 off,
                                 &worker.grad[off..off + n],
@@ -619,11 +838,19 @@ impl Trainer {
                                 exact,
                                 &mut worker.msgs[li],
                             );
+                            if let Some(c0) = c0 {
+                                worker.compress_secs[li] = c0.elapsed().as_secs_f64();
+                            }
                             worker.publish_layer(li, tx);
                         }
                         Ok(())
                     },
-                    move || drain_stream(rx, stream, meta, agg, params, momentum, mu, inv_p),
+                    move || {
+                        drain_stream(
+                            rx, stream, merge, meta, agg, params, momentum, mu, inv_p,
+                            reduce_secs, measure,
+                        )
+                    },
                 )?;
                 anyhow::ensure!(self.stream.finished(), "streamed LAGS reduction incomplete");
                 self.msg_stats.record(bytes, messages);
@@ -653,11 +880,12 @@ impl Trainer {
         Ok((tl / batches as f64, tm / batches as f64))
     }
 
-    /// Simulated per-iteration wall-clock on the paper's testbed (the DES
-    /// with this model's profile at the configured P and ratios).
+    /// Simulated per-iteration wall-clock (the DES with this model's
+    /// profile, the CONFIGURED network and the real worker count —
+    /// P = 1 honestly simulates with zero communication).
     pub fn simulated_iteration(&self) -> crate::pipeline::desim::IterationBreakdown {
-        let profile = ModelProfile::from_manifest(&self.model.mm, 1e12);
-        let net = NetworkModel::gige_16().with_workers(self.cfg.workers.max(2));
+        let profile = ModelProfile::from_manifest(&self.model.mm, DEVICE_FLOPS);
+        let net = self.net;
         let params = match self.cfg.algorithm {
             Algorithm::Dense => SimParams::dense(&profile),
             _ => {
@@ -696,6 +924,17 @@ impl Trainer {
                     final_eval.1
                 );
             }
+            // adaptive runs report the effective c_max (Corollary 2's
+            // convergence knob) once per eval epoch
+            if self.cfg.verbose && do_eval && !self.selections.is_empty() {
+                eprintln!(
+                    "[{}] step {:>5} effective c_max = {:.1} ({} selection(s) so far)",
+                    self.cfg.algorithm.name(),
+                    s + 1,
+                    adaptive::ratio::effective_cmax(&self.ratios),
+                    self.selections.len(),
+                );
+            }
         }
         let wall = wall_start.elapsed().as_secs_f64();
         let sim = self.simulated_iteration();
@@ -723,6 +962,9 @@ impl Trainer {
             sim_iter_seconds: sim.iter_time,
             sim_hidden_seconds: sim.hidden,
             sim_overlap_efficiency: sim.overlap_efficiency(),
+            net_alpha: self.cfg.net.alpha,
+            net_bandwidth: self.cfg.net.bandwidth,
+            selections: self.selections.clone(),
         })
     }
 

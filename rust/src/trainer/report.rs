@@ -34,6 +34,30 @@ impl MessageStats {
     }
 }
 
+/// One Eq. 18 ratio-selection event: the initial startup selection
+/// (step 0) plus every online re-selection from the measured profile
+/// (`--adaptive --reselect-every N`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RatioSelection {
+    /// steps completed when the selection took effect (0 = startup)
+    pub step: usize,
+    /// max over the per-layer ratios — Corollary 2's effective global
+    /// compression
+    pub effective_cmax: f64,
+    /// per-layer ratios, manifest order
+    pub ratios: Vec<f64>,
+}
+
+impl RatioSelection {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("step", Json::Num(self.step as f64)),
+            ("effective_cmax", Json::Num(self.effective_cmax)),
+            ("ratios", Json::Arr(self.ratios.iter().map(|&r| Json::Num(r)).collect())),
+        ])
+    }
+}
+
 /// Result of one full training run.
 #[derive(Debug, Clone)]
 pub struct TrainReport {
@@ -61,11 +85,19 @@ pub struct TrainReport {
     pub measured_hidden_seconds: f64,
     /// measured hidden / busy in [0,1] (0 for barrier runs)
     pub overlap_efficiency: f64,
-    /// DES-simulated per-iteration time on the paper's 16-node 1GbE testbed
+    /// DES-simulated per-iteration time on the configured network at the
+    /// configured worker count
     pub sim_iter_seconds: f64,
     pub sim_hidden_seconds: f64,
     /// DES-predicted hidden / t_comm — compare against `overlap_efficiency`
     pub sim_overlap_efficiency: f64,
+    /// α of the configured interconnect this run priced comm with
+    pub net_alpha: f64,
+    /// bandwidth (bytes/s) of the configured interconnect
+    pub net_bandwidth: f64,
+    /// Eq. 18 selection history: startup selection + every online
+    /// re-selection (empty for non-adaptive runs)
+    pub selections: Vec<RatioSelection>,
 }
 
 impl TrainReport {
@@ -111,6 +143,17 @@ impl TrainReport {
             ("sim_iter_seconds", Json::Num(self.sim_iter_seconds)),
             ("sim_hidden_seconds", Json::Num(self.sim_hidden_seconds)),
             ("sim_overlap_efficiency", Json::Num(self.sim_overlap_efficiency)),
+            (
+                "net",
+                Json::obj(vec![
+                    ("alpha", Json::Num(self.net_alpha)),
+                    ("bandwidth", Json::Num(self.net_bandwidth)),
+                ]),
+            ),
+            (
+                "ratio_selections",
+                Json::Arr(self.selections.iter().map(RatioSelection::to_json).collect()),
+            ),
         ])
     }
 
@@ -166,11 +209,22 @@ mod tests {
             sim_iter_seconds: 0.0,
             sim_hidden_seconds: 0.0,
             sim_overlap_efficiency: 0.0,
+            net_alpha: 5e-4,
+            net_bandwidth: 111e6,
+            selections: vec![RatioSelection {
+                step: 0,
+                effective_cmax: 250.0,
+                ratios: vec![1.0, 250.0],
+            }],
         };
         assert!((r.headline_metric() - 2.0f64.exp()).abs() < 1e-12);
         assert_eq!(r.headline_name(), "perplexity");
-        // json serializes
+        // json serializes, with the net config + selection history aboard
         let j = r.to_json();
         assert_eq!(j.get("algorithm").unwrap().as_str().unwrap(), "lags");
+        assert_eq!(j.get("net").unwrap().get("alpha").unwrap().as_f64().unwrap(), 5e-4);
+        let sels = j.get("ratio_selections").unwrap().as_arr().unwrap();
+        assert_eq!(sels.len(), 1);
+        assert_eq!(sels[0].get("effective_cmax").unwrap().as_f64().unwrap(), 250.0);
     }
 }

@@ -6,8 +6,9 @@
 //! unconditionally (the native backend needs no artifacts), so the
 //! determinism contract is enforced on every `cargo test`.
 
-use lags::collectives::PipelineMode;
-use lags::config::TrainConfig;
+use lags::adaptive::{self, RatioConfig};
+use lags::collectives::{NetworkModel, PipelineMode};
+use lags::config::{NetConfig, TrainConfig};
 use lags::runtime::Runtime;
 use lags::sparsify::CompressorKind;
 use lags::trainer::{Algorithm, MessageStats, Trainer};
@@ -285,6 +286,165 @@ fn lags_message_volume_matches_compression_native() {
         got > 0.5 * expect && got < 3.0 * expect,
         "bytes/iter {got} vs expected ~{expect}"
     );
+}
+
+#[test]
+fn merge_buffer_groups_messages_and_preserves_bytes() {
+    // §5 merge buffer in the REAL trainer: grouping changes only message
+    // granularity — wire bytes, losses and params are bit-identical for
+    // every capacity, and merge_bytes = 0 reproduces per-layer flushing
+    // (P messages per layer per iteration) exactly
+    let rt = Arc::new(Runtime::native(51));
+    let workers = 4usize;
+    let make = |merge_bytes: usize, mode: PipelineMode| {
+        let mut c = cfg("mlp_deep", Algorithm::Lags, 4, workers, 2);
+        c.merge_bytes = merge_bytes;
+        c.pipeline = mode;
+        c
+    };
+    let nl = Trainer::with_runtime(&rt, make(0, PipelineMode::Overlap))
+        .unwrap()
+        .model_manifest()
+        .layers
+        .len();
+    let (l0, p0, s0) = run_traced(&rt, make(0, PipelineMode::Overlap));
+    assert_eq!(s0.messages_per_iter(), (workers * nl) as f64, "per-layer flush at capacity 0");
+    // capacity bigger than all traffic: one merged group per iteration
+    let (l1, p1, s1) = run_traced(&rt, make(usize::MAX / 8, PipelineMode::Overlap));
+    assert_eq!(s1.messages_per_iter(), workers as f64, "single group per iter");
+    assert_eq!(l0, l1, "losses must not depend on merge grouping");
+    assert_eq!(p0, p1, "params must not depend on merge grouping");
+    // merged-group wire bytes equal the per-layer sum
+    assert_eq!(s0.total_bytes, s1.total_bytes);
+    // intermediate capacity: strictly between the two extremes, and
+    // barrier groups exactly like overlap (same schedule → same stats)
+    let (lb, pb, sb) = run_traced(&rt, make(2048, PipelineMode::Barrier));
+    let (lo, po, so) = run_traced(&rt, make(2048, PipelineMode::Overlap));
+    assert_eq!(lb, lo);
+    assert_eq!(pb, po);
+    assert_eq!(sb, so, "merge grouping diverged between pipeline modes");
+    assert_eq!(sb.total_bytes, s0.total_bytes);
+    assert!(
+        sb.total_messages <= s0.total_messages && sb.total_messages >= s1.total_messages,
+        "grouping between the extremes: {} vs [{}, {}]",
+        sb.total_messages,
+        s1.total_messages,
+        s0.total_messages
+    );
+}
+
+#[test]
+fn overlap_bit_identical_to_barrier_with_merge_enabled() {
+    // the full bit-identity contract with the merge buffer active at a
+    // capacity that actually groups: every thread count, both modes
+    let rt = Arc::new(Runtime::native(53));
+    let make = |mode: PipelineMode, threads: usize| {
+        let mut c = cfg("mlp_deep", Algorithm::Lags, 5, 5, threads);
+        c.merge_bytes = 4096;
+        c.pipeline = mode;
+        c
+    };
+    let (l0, p0, s0) = run_traced(&rt, make(PipelineMode::Barrier, 1));
+    for threads in [1usize, 3, 8] {
+        for mode in [PipelineMode::Barrier, PipelineMode::Overlap] {
+            let (l, p, s) = run_traced(&rt, make(mode, threads));
+            let tag = format!("{} threads={threads}", mode.name());
+            assert_eq!(l0, l, "losses diverged: {tag}");
+            assert_eq!(p0, p, "params diverged: {tag}");
+            assert_eq!(s0, s, "msg stats diverged: {tag}");
+        }
+    }
+}
+
+#[test]
+fn dense_message_stats_follow_cost_model() {
+    // aggregate_dense used to record d·4·2 bytes and 1 message regardless
+    // of P; the convention is now cost::allreduce_dense's transfer
+    // (2·bytes·(P−1)/P per rank, summed over ranks) with per-worker
+    // message counting
+    let rt = Arc::new(Runtime::native(61));
+    for p in [1usize, 2, 5] {
+        let mut t = Trainer::with_runtime(&rt, cfg("mlp", Algorithm::Dense, 3, p, 1)).unwrap();
+        for _ in 0..3 {
+            t.step().unwrap();
+        }
+        let d = t.model_manifest().d;
+        let s = t.msg_stats();
+        assert_eq!(s.bytes_per_iter(), (8 * d * (p - 1)) as f64, "P={p}");
+        assert_eq!(s.messages_per_iter(), p as f64, "P={p}");
+        // consistent with the α–β model: recorded bytes over the P NICs
+        // equal the cost model's transfer seconds × bandwidth
+        let net = NetworkModel { alpha: 0.0, bandwidth: 1e9, workers: p };
+        let transfer_secs = net.allreduce_dense((d * 4) as f64);
+        let implied = s.bytes_per_iter() / (p as f64 * 1e9);
+        assert!((transfer_secs - implied).abs() < 1e-12, "P={p}: {transfer_secs} vs {implied}");
+    }
+}
+
+#[test]
+fn online_reselection_updates_ratios_from_measured_timings() {
+    // --adaptive --reselect-every N: the trainer re-runs Eq. 18 from the
+    // measured EWMA profile at step boundaries and records the history
+    let rt = Arc::new(Runtime::native(71));
+    let mut c = cfg("mlp_deep", Algorithm::Lags, 9, 4, 2);
+    c.adaptive = true;
+    c.c_max = 400.0;
+    c.reselect_every = 3;
+    let mut t = Trainer::with_runtime(&rt, c).unwrap();
+    let initial = t.ratios().to_vec();
+    let r = t.run().unwrap();
+    // history: startup + re-selections at steps 3, 6, 9
+    assert_eq!(t.selections().len(), 4, "selection history: {:?}", t.selections());
+    assert_eq!(t.selections()[0].step, 0);
+    assert_eq!(t.selections()[0].ratios, initial);
+    assert_eq!(t.selections()[1].step, 3);
+    for sel in t.selections() {
+        assert!(
+            sel.ratios.iter().all(|&c| (1.0..=400.0).contains(&c)),
+            "ratios out of bounds: {:?}",
+            sel.ratios
+        );
+        let cmax = sel.ratios.iter().cloned().fold(1.0, f64::max);
+        assert_eq!(sel.effective_cmax, cmax);
+    }
+    // ks stay consistent with the ratios in effect
+    for ((k, &ratio), l) in
+        t.layer_ks().iter().zip(t.ratios().iter()).zip(t.model_manifest().layers.iter())
+    {
+        assert_eq!(*k, ((l.size as f64 / ratio).ceil() as usize).clamp(1, l.size));
+    }
+    // the report carries the history and the net config
+    assert_eq!(r.selections.len(), t.selections().len());
+    assert_eq!(r.net_alpha, NetConfig::gige16().alpha);
+    assert_eq!(r.net_bandwidth, NetConfig::gige16().bandwidth);
+}
+
+#[test]
+fn trainer_initial_selection_matches_select_ratios_manifest() {
+    // `lags ratios` (live-model mode) calls select_ratios_manifest with
+    // the trainer's own inputs — assert they agree, per the acceptance
+    // criterion that the CLI prints the trainer's initial selection
+    let rt = Arc::new(Runtime::native(81));
+    let mut c = cfg("mlp_deep", Algorithm::Lags, 1, 6, 1);
+    c.adaptive = true;
+    c.c_max = 777.0;
+    c.net = NetConfig { alpha: 2e-4, bandwidth: 5e8 };
+    let net = c.net.model(c.workers);
+    let t = Trainer::with_runtime(&rt, c).unwrap();
+    let rc = RatioConfig { c_max: 777.0, ..RatioConfig::default() };
+    let expect =
+        adaptive::select_ratios_manifest(t.model_manifest(), lags::models::DEVICE_FLOPS, &net, &rc);
+    assert_eq!(t.ratios(), &expect[..]);
+    assert_eq!(t.selections().len(), 1, "startup selection recorded");
+    // P = 1 adaptively selects all-dense (c = 1), not a phantom 2-worker
+    // cluster
+    let mut c1 = cfg("mlp_deep", Algorithm::Lags, 1, 1, 1);
+    c1.adaptive = true;
+    let t1 = Trainer::with_runtime(&rt, c1).unwrap();
+    assert!(t1.ratios().iter().all(|&c| c == 1.0), "{:?}", t1.ratios());
+    let d = t1.model_manifest().d;
+    let k_total: usize = t1.layer_ks().iter().sum();
+    assert_eq!(k_total, d, "all-dense keeps every coordinate");
 }
 
 #[test]

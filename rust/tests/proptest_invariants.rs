@@ -13,12 +13,16 @@
 
 use lags::adaptive::{perf_model, ratio, RatioConfig};
 use lags::collectives::{dense, sparse_agg, NetworkModel};
+use lags::config::TrainConfig;
 use lags::models::{zoo, LayerProfile, ModelProfile};
 use lags::pipeline::desim::{simulate, Schedule, SimParams};
+use lags::runtime::Runtime;
 use lags::sparsify::{randk, sparse::SparseVec, topk, ErrorFeedback};
-use lags::util::prop::{quick, Case};
+use lags::trainer::{Algorithm, Trainer};
+use lags::util::prop::{check, quick, Case, Config};
 use lags::util::rng::Rng;
 use lags::util::ParallelExecutor;
+use std::sync::Arc;
 
 fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.normal_f32()).collect()
@@ -543,6 +547,52 @@ fn prop_ratio_selection_fits_or_caps() {
                 if t > m.layers[i + 1].t_b + 1e-9 {
                     return Err(format!("layer {i} does not fit: {t}"));
                 }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_warmup_k_monotone_lands_on_ks() {
+    // the Lin et al. warm-up ramp: for every layer, k_at is monotone
+    // NON-INCREASING over the warm-up window and lands exactly on ks[li]
+    // at t + 1 == warmup_steps — for uniform AND adaptive ratio vectors
+    let rt = Arc::new(Runtime::native(5));
+    let cases = Config { cases: 24, ..Config::default() };
+    check("warmup-k-monotone", cases, 2, 40, |c: &mut Case| {
+        let warmup = 1 + c.rng.below(c.size);
+        let mut cfg = TrainConfig::default_for("mlp_deep");
+        cfg.algorithm = Algorithm::Lags;
+        cfg.workers = 2 + c.rng.below(4);
+        cfg.warmup_steps = warmup;
+        cfg.compression = 1.0 + c.rng.range_f64(0.0, 400.0);
+        cfg.adaptive = c.rng.below(2) == 1;
+        cfg.c_max = 1.0 + c.rng.range_f64(0.0, 900.0);
+        cfg.eval_every = 0;
+        let t = Trainer::with_runtime(&rt, cfg)
+            .map_err(|e| format!("trainer build failed: {e:#}"))?;
+        for li in 0..t.layer_ks().len() {
+            let mut last = usize::MAX;
+            for step in 0..warmup + 2 {
+                let k = t.k_at(li, step);
+                if k == 0 {
+                    return Err(format!("layer {li} step {step}: k = 0"));
+                }
+                if k > last {
+                    return Err(format!(
+                        "layer {li} step {step}: k grew {last} -> {k} (warmup {warmup})"
+                    ));
+                }
+                last = k;
+            }
+            // t + 1 == warmup_steps: exactly the post-warm-up k
+            let k_land = t.k_at(li, warmup - 1);
+            if k_land != t.layer_ks()[li] {
+                return Err(format!(
+                    "layer {li}: k_at landed on {k_land}, ks[li] = {} (warmup {warmup})",
+                    t.layer_ks()[li]
+                ));
             }
         }
         Ok(())
