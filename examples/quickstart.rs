@@ -1,9 +1,11 @@
 //! Quickstart: train a small MLP with LAGS-SGD on 4 logical workers.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 //!
 //! Demonstrates the minimal public-API path: load artifacts → configure →
-//! train → inspect the report.
+//! train → inspect the report. Runs against `make artifacts` output when
+//! present, otherwise against the built-in native zoo (same contract) —
+//! so this example doubles as the CI smoke test.
 
 use lags::config::TrainConfig;
 use lags::trainer::{Algorithm, Trainer};
@@ -19,8 +21,14 @@ fn main() -> anyhow::Result<()> {
     cfg.eval_every = 25;
     cfg.verbose = true;
 
-    // 2. load the AOT artifacts (train/eval/apply/compress executables)
-    let mut trainer = Trainer::from_artifacts("artifacts", cfg)?;
+    // 2. load the AOT artifacts (train/eval/apply/compress executables),
+    //    or the pure-rust native zoo when none are compiled — the same
+    //    probe the CLI uses
+    let dir = lags::runtime::default_artifacts_dir();
+    if dir == "native" {
+        eprintln!("note: no ./artifacts/manifest.json; using the built-in native zoo");
+    }
+    let mut trainer = Trainer::from_artifacts(dir, cfg)?;
 
     // 3. train
     let report = trainer.run()?;

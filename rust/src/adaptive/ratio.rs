@@ -243,6 +243,80 @@ mod tests {
     }
 
     #[test]
+    fn convnet_conv_vs_dense_head_ratios_differ_under_gige16() {
+        // The heterogeneous-zoo acceptance criterion: `lags ratios --model
+        // convnet --net gige16 --adaptive` (defaults: P = 4, device =
+        // DEVICE_FLOPS) must report a NON-uniform vector where a conv
+        // layer's ratio differs from the dense head's by more than 2×.
+        // Structure: the head's small transfer hides entirely under the
+        // conv stack's long backward (c = 1), while the first-computed
+        // conv has nothing left to overlap with (c = c_max).
+        let man = crate::runtime::native::native_manifest(42);
+        let mm = &man.models["convnet"];
+        let net = NetworkModel::gige_16().with_workers(4);
+        let cfg = RatioConfig::default();
+        let rs = select_ratios_manifest(mm, crate::models::DEVICE_FLOPS, &net, &cfg);
+        let head = mm.layers.iter().position(|l| l.name == "head").expect("head layer");
+        let conv_max = mm
+            .layers
+            .iter()
+            .zip(rs.iter())
+            .filter(|(l, _)| l.name.starts_with("conv"))
+            .map(|(_, &c)| c)
+            .fold(0.0f64, f64::max);
+        assert!(
+            conv_max > 2.0 * rs[head],
+            "conv max {conv_max} vs head {} not >2x apart: {rs:?}",
+            rs[head]
+        );
+        let (lo, hi) = rs.iter().fold((f64::INFINITY, 0.0f64), |(lo, hi), &c| {
+            (lo.min(c), hi.max(c))
+        });
+        assert!(hi > lo, "selection degenerated to uniform: {rs:?}");
+        // ... while the MLP family, with its near-identical layer shapes,
+        // still selects a uniform vector on the same network — the very
+        // degeneracy that motivated the conv/rnn zoo
+        let mlp = &man.models["mlp"];
+        let rs_mlp = select_ratios_manifest(mlp, crate::models::DEVICE_FLOPS, &net, &cfg);
+        assert!(rs_mlp.iter().all(|&c| c == rs_mlp[0]), "{rs_mlp:?}");
+    }
+
+    #[test]
+    fn convnet_deep_selects_all_three_regimes() {
+        // dense (c_min), fractional (in between) and capped (c_max) must
+        // all appear at once on the deep conv model — the selection is a
+        // real function of the layer table, not a binary switch
+        let man = crate::runtime::native::native_manifest(42);
+        let mm = &man.models["convnet_deep"];
+        let net = NetworkModel::gige_16().with_workers(4);
+        let cfg = RatioConfig::default();
+        let rs = select_ratios_manifest(mm, crate::models::DEVICE_FLOPS, &net, &cfg);
+        assert!(rs.iter().any(|&c| c <= cfg.c_min + 1e-9), "no dense layer: {rs:?}");
+        assert!(rs.iter().any(|&c| c >= cfg.c_max - 1e-9), "no capped layer: {rs:?}");
+        assert!(
+            rs.iter().any(|&c| c > cfg.c_min + 1e-9 && c < cfg.c_max - 1e-9),
+            "no fractional layer: {rs:?}"
+        );
+    }
+
+    #[test]
+    fn rnn_head_dense_recurrent_capped_under_gige16() {
+        // LM shape: the head's allgather hides under the BPTT backward
+        // (c = 1); the embedding is the last gradient produced, with
+        // nothing to overlap (c = c_max) — the paper's LSTM story
+        let man = crate::runtime::native::native_manifest(42);
+        let mm = &man.models["rnn"];
+        let net = NetworkModel::gige_16().with_workers(4);
+        let cfg = RatioConfig::default();
+        let rs = select_ratios_manifest(mm, crate::models::DEVICE_FLOPS, &net, &cfg);
+        let by_name = |n: &str| {
+            mm.layers.iter().position(|l| l.name == n).map(|i| rs[i]).expect("layer")
+        };
+        assert!(by_name("embed") > 2.0 * by_name("head"), "{rs:?}");
+        assert!(by_name("head") < 2.0, "head should ride the BPTT budget: {rs:?}");
+    }
+
+    #[test]
     fn manifest_selection_is_manifest_ordered_and_dense_at_p1() {
         let man = crate::runtime::native::native_manifest(1);
         let mm = man.models.values().next().unwrap();

@@ -38,7 +38,9 @@ pub struct Worker {
     /// last training loss this worker observed
     pub last_loss: f32,
     /// scratch for the native backward pass (activations, δ buffers, the
-    /// per-layer Wᵀ cache) — reused across steps
+    /// per-layer Wᵀ cache, im2col col/dcol matrices and BPTT carry rows)
+    /// — reused across steps, one set per worker so conv/recurrent
+    /// models fan out with no shared mutable state
     pub grad_scratch: GradScratch,
     /// scratch for the bucket-padded compress path (`CompressorKind::Xla*`
     /// host emulation): accumulator + selection buffers

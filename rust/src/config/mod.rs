@@ -128,14 +128,30 @@ pub struct TrainConfig {
 }
 
 impl TrainConfig {
+    /// Built-in defaults, lightly specialised per zoo model: the conv and
+    /// recurrent native-zoo models cost ~10× more compute per step than
+    /// the MLPs, so their default runs are shorter, and LM-metric zoo
+    /// models (the markov task) converge faster with a slightly larger
+    /// step size. Specialisation keys off the native zoo spec registry
+    /// (`runtime::native::zoo_spec`) rather than a second hardcoded name
+    /// list; unknown names keep the generic defaults. Caveat: the config
+    /// layer has no backend in scope, so an ARTIFACT model that shares a
+    /// zoo spec name (`convnet`/`convnet_deep`/`rnn`) inherits these
+    /// defaults too — defaults only; explicit flags always win.
     pub fn default_for(model: &str) -> TrainConfig {
+        let spec = crate::runtime::native::zoo_spec(model);
+        let steps = if spec.is_some() { 120 } else { 200 };
+        let lr = match &spec {
+            Some(s) if s.metric == crate::runtime::Metric::PplLoss => 0.1,
+            _ => 0.05,
+        };
         TrainConfig {
             model: model.to_string(),
             algorithm: Algorithm::Lags,
             workers: 4,
             threads: 1,
-            steps: 200,
-            lr: 0.05,
+            steps,
+            lr,
             momentum: 0.0,
             local_momentum: 0.0,
             warmup_steps: 0,

@@ -41,7 +41,13 @@ USAGE: lags <subcommand> [flags]
 
            --artifacts native  selects the built-in pure-rust model zoo
                                (no `make artifacts` needed; also the
-                               fallback when ./artifacts is absent)
+                               fallback when ./artifacts is absent).
+                               Native models: mlp | mlp_deep | convnet |
+                               convnet_deep | rnn — the conv nets run on a
+                               synthetic image task, rnn is an Elman/BPTT
+                               LM on the markov sequence task (metric:
+                               ppl loss); their heterogeneous layer tables
+                               are what make --adaptive non-trivial
            --threads T         fans the per-worker hot loop over T OS
                                threads (0 = one per core); results are
                                bit-identical to --threads 1
@@ -118,14 +124,13 @@ fn artifacts_dir(args: &Args) -> String {
     if let Some(dir) = args.get("artifacts") {
         return dir.to_string();
     }
-    if std::path::Path::new("artifacts/manifest.json").exists() {
-        "artifacts".into()
-    } else {
-        // no compiled artifacts around — fall back to the built-in zoo so
-        // train/compare/ratios work out of the box
+    // shared probe: ./artifacts when compiled, else the built-in zoo so
+    // train/compare/ratios work out of the box
+    let dir = lags::runtime::default_artifacts_dir();
+    if dir == "native" {
         eprintln!("note: no ./artifacts/manifest.json; using the built-in native zoo");
-        "native".into()
     }
+    dir.to_string()
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -396,7 +401,7 @@ fn cmd_ratios(args: &Args) -> Result<()> {
     let mm = rt.manifest.model(&tc.model)?;
     let net = tc.net.model(tc.workers);
     let rc = RatioConfig { c_max: tc.c_max, ..RatioConfig::default() };
-    let ratios = adaptive::select_ratios_manifest(mm, lags::models::DEVICE_FLOPS, &net, &rc);
+    let ratios = adaptive::select_ratios_manifest(mm, rt.device_flops(), &net, &rc);
     println!(
         "Eq. 18 initial selection for model {} (P={}, alpha={}, B={}/s, c_u = {}):",
         tc.model,

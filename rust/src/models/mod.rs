@@ -17,8 +17,26 @@ use crate::runtime::ModelManifest;
 /// counts into the startup timing profile — shared by the trainer's
 /// `--adaptive` selection, its DES pricing, and `lags ratios`, so all
 /// three agree on the same inputs until measured timings take over
-/// (`adaptive::online`).
-pub const DEVICE_FLOPS: f64 = 1e12;
+/// (`adaptive::online`). Device speed is a property of the BACKEND
+/// ([`crate::runtime::Runtime::device_flops`] dispatches), not of the
+/// selection math; this constant is the native backend's figure and the
+/// default where no runtime is in scope.
+///
+/// Calibrated to the native backend: scalar f32 rust sustains ~1e9
+/// flops/s, not the 1e12 of an accelerator. The old accelerator-class
+/// figure priced every layer's backward in microseconds, so on any α–β
+/// network the Eq. 18 budget check degenerated (latency alone exceeded
+/// every budget) and the "adaptive" selection was uniformly capped. At
+/// 1e9 the conv/rnn zoo layers' real comm-to-compute asymmetry is
+/// visible to the selection, which is the paper's whole point; the MLP
+/// family's layers are still too small to hide anything, so its
+/// selection is unchanged (all capped).
+pub const DEVICE_FLOPS: f64 = 1e9;
+
+/// Accelerator-class device speed (flops/s) used to price manifests
+/// served by the PJRT backend — the figure the repo used for every
+/// backend before device speed became backend-dispatched.
+pub const PJRT_DEVICE_FLOPS: f64 = 1e12;
 
 /// A layer as the timing model sees it: parameter count + backprop compute
 /// time share. Order follows the BACKPROP schedule: index 0 is the OUTPUT

@@ -96,6 +96,12 @@ impl ModelManifest {
         self.layers.iter().map(|l| l.fwd_flops).sum()
     }
 
+    /// Look up a layer by name (the heterogeneous-zoo tests and reports
+    /// key per-layer expectations on names like `"conv1"` / `"head"`).
+    pub fn layer(&self, name: &str) -> Option<&LayerInfo> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
     fn from_json(v: &Json) -> Result<Self> {
         let name = v.get("name")?.as_str()?.to_string();
         let metric = match v.get("metric")?.as_str()? {
@@ -276,6 +282,8 @@ mod tests {
         assert_eq!(m.compress_files[&1024].0, "compress_1024.hlo.txt");
         assert!(m.model("missing").is_err());
         assert_eq!(toy.total_fwd_flops(), 18.0);
+        assert_eq!(toy.layer("w").unwrap().size, 4);
+        assert!(toy.layer("nope").is_none());
     }
 
     #[test]

@@ -2,10 +2,12 @@
 //!
 //! Two backends implement the `train/eval/apply/compress` contract:
 //!
-//! * [`native`] — pure-rust reference MLPs (always available; `Sync`, so
-//!   the trainer's [`crate::util::ParallelExecutor`] fans the P workers'
-//!   gradient steps across threads). Selected by [`Runtime::native`] or by
-//!   loading the magic artifacts dir `"native"`.
+//! * [`native`] — a pure-rust heterogeneous model zoo: MLPs, im2col
+//!   Conv2d nets and an Elman/BPTT recurrent LM (always available;
+//!   `Sync`, so the trainer's [`crate::util::ParallelExecutor`] fans the
+//!   P workers' gradient steps across threads). Selected by
+//!   [`Runtime::native`] or by loading the magic artifacts dir
+//!   `"native"`.
 //! * [`pjrt`] (feature `pjrt`) — AOT HLO-text artifacts executed through
 //!   the vendored `xla` crate's PJRT CPU client. PJRT objects are not
 //!   `Sync`, so this backend runs worker gradient steps sequentially in
@@ -67,6 +69,18 @@ pub struct GradJob<'a> {
 /// artifacts path (mirrors the artifacts' baked manifest seed).
 const NATIVE_DEFAULT_SEED: u64 = 42;
 
+/// The artifacts directory a zero-config run should use: `"artifacts"`
+/// when `./artifacts/manifest.json` exists, else the built-in native zoo
+/// (`"native"`). The CLI and the examples share this probe so the
+/// fallback policy has exactly one source of truth.
+pub fn default_artifacts_dir() -> &'static str {
+    if Path::new("artifacts/manifest.json").exists() {
+        "artifacts"
+    } else {
+        "native"
+    }
+}
+
 enum RuntimeBackend {
     Native { seed: u64 },
     #[cfg(feature = "pjrt")]
@@ -126,12 +140,24 @@ impl Runtime {
         }
     }
 
+    /// Synthetic device speed (flops/s) this backend's models execute at
+    /// — what Eq. 18 startup selection and the DES price compute with.
+    /// Scalar-rust speed for the native zoo, accelerator-class for PJRT
+    /// artifacts.
+    pub fn device_flops(&self) -> f64 {
+        match &self.backend {
+            RuntimeBackend::Native { .. } => crate::models::DEVICE_FLOPS,
+            #[cfg(feature = "pjrt")]
+            RuntimeBackend::Pjrt(_) => crate::models::PJRT_DEVICE_FLOPS,
+        }
+    }
+
     /// Build the full runtime for one model.
     pub fn model_runtime(&self, name: &str) -> Result<ModelRuntime> {
         let mm = self.manifest.model(name)?.clone();
         match &self.backend {
             RuntimeBackend::Native { seed } => {
-                let m = native::NativeMlp::from_manifest(&mm)?;
+                let m = native::NativeNet::from_manifest(&mm)?;
                 let init_params = m.init_params(*seed);
                 Ok(ModelRuntime { mm, init_params, backend: ModelBackend::Native(m) })
             }
@@ -146,7 +172,7 @@ impl Runtime {
 }
 
 enum ModelBackend {
-    Native(native::NativeMlp),
+    Native(native::NativeNet),
     #[cfg(feature = "pjrt")]
     Pjrt(pjrt::PjrtModel),
 }
@@ -210,10 +236,11 @@ impl ModelRuntime {
         }
     }
 
-    /// Run the eval step: returns (loss, metric).
+    /// Run the eval step: returns (loss, metric) — accuracy for
+    /// classifiers, the loss itself for `Metric::PplLoss` models.
     pub fn eval_step(&self, params: &[f32], x: &BatchData, y: &BatchData) -> Result<(f32, f32)> {
         match &self.backend {
-            ModelBackend::Native(m) => m.eval_step(params, x, y),
+            ModelBackend::Native(m) => m.eval_metric(params, x, y, self.mm.metric),
             #[cfg(feature = "pjrt")]
             ModelBackend::Pjrt(m) => m.eval_step(&self.mm, params, x, y),
         }

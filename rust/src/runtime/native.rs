@@ -1,13 +1,39 @@
-//! Native backend: a reference MLP family executed directly on the host.
+//! Native backend: a heterogeneous reference model zoo executed directly
+//! on the host.
 //!
 //! The PJRT backend needs the vendored `xla` crate plus `make artifacts`;
 //! neither is required to exercise the *distributed* layer this crate
 //! reproduces (workers, error feedback, sparse aggregation, pipelining).
 //! This backend supplies the same `train/eval/apply/compress` contract
-//! with plain-rust f32 math over a small built-in model zoo, so the
-//! trainer, the determinism tests and the hot-path benches run in any
-//! environment — and, unlike PJRT executables, it is `Sync`, so the P
-//! workers' gradient steps genuinely fan out across threads.
+//! with plain-rust f32 math over a built-in model zoo, so the trainer,
+//! the determinism tests and the hot-path benches run in any environment
+//! — and, unlike PJRT executables, it is `Sync`, so the P workers'
+//! gradient steps genuinely fan out across threads.
+//!
+//! ## Layer zoo (DESIGN.md §Native-layer-zoo)
+//!
+//! The zoo is no longer MLP-only. [`NativeNet`] executes a layer graph
+//! assembled from [`LayerSpec`]s:
+//!
+//! * `Dense`    — fused `[fan_in + 1, fan_out]` tensor (last row = bias),
+//!   ReLU on hidden layers, identity on the output layer;
+//! * `Conv`     — channels-last Conv2d via im2col: the fused tensor is
+//!   `[k·k·cin + 1, cout]` (last row = bias), stride + zero padding,
+//!   always ReLU;
+//! * `MaxPool`  — k×k window, stride k, no parameters;
+//! * `Flatten`  — shape bookkeeping only (channels-last is already
+//!   row-major contiguous, so it resolves to nothing at runtime);
+//! * `Embed`    — token table `[vocab, dim]` over i32 inputs;
+//! * `Elman`    — simple recurrent cell unrolled over the sequence with
+//!   full BPTT: the fused tensor is `[in + hidden + 1, hidden]` (rows
+//!   0..in = Wx, rows in..in+hidden = Wh, last row = bias), tanh states.
+//!
+//! Fusing each block's weights + bias into ONE manifest tensor matters
+//! for the paper's Eq. 18: interleaved 10-float bias tensors would give
+//! every weight tensor a near-zero overlap budget (the next "layer" in
+//! backprop order would be a bias whose backward takes microseconds) and
+//! force the adaptive selection to the cap everywhere. One tensor per
+//! block makes the layer table's comm-to-compute ratios mean something.
 //!
 //! Determinism: every loop runs in a fixed order with f32 accumulation,
 //! so results are bit-identical across runs and across `--threads`
@@ -26,18 +52,1339 @@ use std::path::PathBuf;
 /// the native emulation of `CompressorKind::XlaSampled` mirrors it.
 pub const XLA_SAMPLE_STRIDE: usize = 64;
 
-/// Fully-connected classifier: dims = [in, h1, ..., hk, classes], ReLU
-/// hidden activations, softmax cross-entropy loss, flat param layout
-/// `[w1, b1, w2, b2, ...]` with row-major `w_l: [dims[l], dims[l+1]]` —
-/// the layer table the manifest publishes.
-pub struct NativeMlp {
-    dims: Vec<usize>,
-    batch: usize,
-    d: usize,
+// ---------------------------------------------------------------------------
+// layer primitives
+// ---------------------------------------------------------------------------
+
+/// Geometry of one channels-last Conv2d layer (per-sample input
+/// `[h, w, cin]`, output `[out_h, out_w, cout]`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvDims {
+    pub h: usize,
+    pub w: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
 }
 
-/// Layer table for an MLP spec (shared by the manifest builder and
-/// [`NativeMlp::from_manifest`] validation).
+impl ConvDims {
+    pub fn out_h(&self) -> usize {
+        (self.h + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.w + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// im2col patch length `k·k·cin` (one GEMM reduction axis).
+    pub fn patch(&self) -> usize {
+        self.k * self.k * self.cin
+    }
+
+    pub fn weight_len(&self) -> usize {
+        self.patch() * self.cout
+    }
+
+    pub fn in_len(&self) -> usize {
+        self.h * self.w * self.cin
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.out_h() * self.out_w() * self.cout
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.k >= 1 && self.stride >= 1, "conv k/stride must be >= 1");
+        ensure!(self.cin >= 1 && self.cout >= 1, "conv channels must be >= 1");
+        ensure!(self.pad < self.k, "conv pad must be < k");
+        ensure!(
+            self.h + 2 * self.pad >= self.k && self.w + 2 * self.pad >= self.k,
+            "conv kernel larger than padded input"
+        );
+        Ok(())
+    }
+}
+
+/// Gather one sample's im2col matrix: `col[p, q]` with `p` the output
+/// pixel `(oy·out_w + ox)` and `q = (ky·k + kx)·cin + ci` — the same
+/// (ky, kx, ci) lexicographic reduction order a direct convolution walks,
+/// so the GEMM sums coordinates in the identical f32 order. Out-of-image
+/// taps are zero (zero padding).
+pub fn im2col(d: &ConvDims, x: &[f32], col: &mut [f32]) {
+    let (ho, wo, patch) = (d.out_h(), d.out_w(), d.patch());
+    debug_assert_eq!(x.len(), d.in_len());
+    debug_assert_eq!(col.len(), ho * wo * patch);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let prow = &mut col[(oy * wo + ox) * patch..(oy * wo + ox + 1) * patch];
+            for ky in 0..d.k {
+                let iy = (oy * d.stride + ky) as isize - d.pad as isize;
+                for kx in 0..d.k {
+                    let ix = (ox * d.stride + kx) as isize - d.pad as isize;
+                    let dst = &mut prow[(ky * d.k + kx) * d.cin..(ky * d.k + kx + 1) * d.cin];
+                    let inside =
+                        iy >= 0 && (iy as usize) < d.h && ix >= 0 && (ix as usize) < d.w;
+                    if inside {
+                        let s = ((iy as usize) * d.w + ix as usize) * d.cin;
+                        dst.copy_from_slice(&x[s..s + d.cin]);
+                    } else {
+                        dst.iter_mut().for_each(|v| *v = 0.0);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Scatter-add one sample's `dcol` (the im2col layout of the gradient)
+/// back onto the input image — the transpose of [`im2col`].
+fn col2im_add(d: &ConvDims, dcol: &[f32], dx: &mut [f32]) {
+    let (ho, wo, patch) = (d.out_h(), d.out_w(), d.patch());
+    debug_assert_eq!(dx.len(), d.in_len());
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let prow = &dcol[(oy * wo + ox) * patch..(oy * wo + ox + 1) * patch];
+            for ky in 0..d.k {
+                let iy = (oy * d.stride + ky) as isize - d.pad as isize;
+                if iy < 0 || (iy as usize) >= d.h {
+                    continue;
+                }
+                for kx in 0..d.k {
+                    let ix = (ox * d.stride + kx) as isize - d.pad as isize;
+                    if ix < 0 || (ix as usize) >= d.w {
+                        continue;
+                    }
+                    let src = &prow[(ky * d.k + kx) * d.cin..(ky * d.k + kx + 1) * d.cin];
+                    let s = ((iy as usize) * d.w + ix as usize) * d.cin;
+                    let dst = &mut dx[s..s + d.cin];
+                    for (o, &v) in dst.iter_mut().zip(src.iter()) {
+                        *o += v;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Conv2d forward over a whole batch. `w` is the fused weight block
+/// `[patch, cout]` row-major, `bias` is `[cout]`; `col` is reusable
+/// scratch (resized to one sample's im2col matrix).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_forward(
+    d: &ConvDims,
+    w: &[f32],
+    bias: &[f32],
+    x: &[f32],
+    batch: usize,
+    col: &mut Vec<f32>,
+    out: &mut [f32],
+    relu: bool,
+) {
+    let (np, patch, cout) = (d.out_h() * d.out_w(), d.patch(), d.cout);
+    debug_assert_eq!(w.len(), d.weight_len());
+    debug_assert_eq!(bias.len(), cout);
+    debug_assert_eq!(out.len(), batch * np * cout);
+    col.clear();
+    col.resize(np * patch, 0.0);
+    for n in 0..batch {
+        im2col(d, &x[n * d.in_len()..(n + 1) * d.in_len()], col);
+        for p in 0..np {
+            let orow = &mut out[(n * np + p) * cout..(n * np + p + 1) * cout];
+            orow.copy_from_slice(bias);
+            let crow = &col[p * patch..(p + 1) * patch];
+            for (q, &cq) in crow.iter().enumerate() {
+                if cq != 0.0 {
+                    let wrow = &w[q * cout..(q + 1) * cout];
+                    for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                        *o += cq * wv;
+                    }
+                }
+            }
+            if relu {
+                for o in orow.iter_mut() {
+                    *o = o.max(0.0);
+                }
+            }
+        }
+    }
+}
+
+/// Conv2d backward over a whole batch. `delta` is dL/d(out) AFTER the
+/// caller applied the activation mask; `dw`/`db` are accumulated into
+/// (`+=`), `dx` (if given) is overwritten per sample. `col`/`dcol` are
+/// reusable scratch.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_backward(
+    d: &ConvDims,
+    w: &[f32],
+    x: &[f32],
+    batch: usize,
+    delta: &[f32],
+    col: &mut Vec<f32>,
+    dcol: &mut Vec<f32>,
+    dw: &mut [f32],
+    db: &mut [f32],
+    mut dx: Option<&mut [f32]>,
+) {
+    let (np, patch, cout) = (d.out_h() * d.out_w(), d.patch(), d.cout);
+    debug_assert_eq!(dw.len(), d.weight_len());
+    debug_assert_eq!(db.len(), cout);
+    debug_assert_eq!(delta.len(), batch * np * cout);
+    col.clear();
+    col.resize(np * patch, 0.0);
+    dcol.clear();
+    dcol.resize(np * patch, 0.0);
+    for n in 0..batch {
+        let xn = &x[n * d.in_len()..(n + 1) * d.in_len()];
+        im2col(d, xn, col);
+        for p in 0..np {
+            let drow = &delta[(n * np + p) * cout..(n * np + p + 1) * cout];
+            let crow = &col[p * patch..(p + 1) * patch];
+            // dW[q, co] += col[p, q] · δ[p, co];  db[co] += δ[p, co]
+            for (q, &cq) in crow.iter().enumerate() {
+                if cq != 0.0 {
+                    let grow = &mut dw[q * cout..(q + 1) * cout];
+                    for (g, &dj) in grow.iter_mut().zip(drow.iter()) {
+                        *g += cq * dj;
+                    }
+                }
+            }
+            for (g, &dj) in db.iter_mut().zip(drow.iter()) {
+                *g += dj;
+            }
+        }
+        if let Some(dx) = dx.as_deref_mut() {
+            // dcol[p, q] = Σ_co δ[p, co] · w[q, co], then col2im
+            for p in 0..np {
+                let drow = &delta[(n * np + p) * cout..(n * np + p + 1) * cout];
+                for q in 0..patch {
+                    let wrow = &w[q * cout..(q + 1) * cout];
+                    let mut acc = 0.0f32;
+                    for (&dv, &wv) in drow.iter().zip(wrow.iter()) {
+                        acc += dv * wv;
+                    }
+                    dcol[p * patch + q] = acc;
+                }
+            }
+            let dxn = &mut dx[n * d.in_len()..(n + 1) * d.in_len()];
+            dxn.iter_mut().for_each(|v| *v = 0.0);
+            col2im_add(d, dcol, dxn);
+        }
+    }
+}
+
+/// MaxPool k×k (stride k) forward over a batch of `[h, w, c]` samples.
+pub fn maxpool_forward(h: usize, w: usize, c: usize, k: usize, x: &[f32], batch: usize, out: &mut [f32]) {
+    let (ho, wo) = (h / k, w / k);
+    debug_assert_eq!(out.len(), batch * ho * wo * c);
+    for n in 0..batch {
+        let xn = &x[n * h * w * c..(n + 1) * h * w * c];
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for ch in 0..c {
+                    let mut m = f32::NEG_INFINITY;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let v = xn[((oy * k + ky) * w + ox * k + kx) * c + ch];
+                            if v > m {
+                                m = v;
+                            }
+                        }
+                    }
+                    out[((n * ho + oy) * wo + ox) * c + ch] = m;
+                }
+            }
+        }
+    }
+}
+
+/// MaxPool backward: route each output cell's delta to the FIRST argmax
+/// position (scan order ky, kx — ties resolve deterministically), found
+/// by re-scanning the stored input activation. `dx` is overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool_backward(
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    x: &[f32],
+    batch: usize,
+    delta: &[f32],
+    dx: &mut [f32],
+) {
+    let (ho, wo) = (h / k, w / k);
+    debug_assert_eq!(delta.len(), batch * ho * wo * c);
+    debug_assert_eq!(dx.len(), batch * h * w * c);
+    dx.iter_mut().for_each(|v| *v = 0.0);
+    for n in 0..batch {
+        let xn = &x[n * h * w * c..(n + 1) * h * w * c];
+        let dxn = &mut dx[n * h * w * c..(n + 1) * h * w * c];
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for ch in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_at = 0usize;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let at = ((oy * k + ky) * w + ox * k + kx) * c + ch;
+                            if xn[at] > best {
+                                best = xn[at];
+                                best_at = at;
+                            }
+                        }
+                    }
+                    dxn[best_at] += delta[((n * ho + oy) * wo + ox) * c + ch];
+                }
+            }
+        }
+    }
+}
+
+/// Elman forward: `h_s = tanh(Wx·x_s + Wh·h_{s-1} + b)` unrolled over the
+/// sequence, `h_0 = 0` per sequence. `x` is `[batch, t, in_dim]`, `out`
+/// receives all hidden states `[batch, t, hidden]`.
+#[allow(clippy::too_many_arguments)]
+pub fn elman_forward(
+    t: usize,
+    in_dim: usize,
+    hidden: usize,
+    wx: &[f32],
+    wh: &[f32],
+    bias: &[f32],
+    x: &[f32],
+    batch: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(wx.len(), in_dim * hidden);
+    debug_assert_eq!(wh.len(), hidden * hidden);
+    debug_assert_eq!(out.len(), batch * t * hidden);
+    for n in 0..batch {
+        for s in 0..t {
+            let base = (n * t + s) * hidden;
+            // split so the previous state stays readable while the
+            // current row is written
+            let (done, cur) = out.split_at_mut(base);
+            let orow = &mut cur[..hidden];
+            orow.copy_from_slice(bias);
+            let xrow = &x[(n * t + s) * in_dim..(n * t + s + 1) * in_dim];
+            for (i, &xi) in xrow.iter().enumerate() {
+                if xi != 0.0 {
+                    let wrow = &wx[i * hidden..(i + 1) * hidden];
+                    for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                        *o += xi * wv;
+                    }
+                }
+            }
+            if s > 0 {
+                let hprev = &done[base - hidden..];
+                for (j, &hj) in hprev.iter().enumerate() {
+                    if hj != 0.0 {
+                        let wrow = &wh[j * hidden..(j + 1) * hidden];
+                        for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                            *o += hj * wv;
+                        }
+                    }
+                }
+            }
+            for o in orow.iter_mut() {
+                *o = o.tanh();
+            }
+        }
+    }
+}
+
+/// Elman BPTT: walk each sequence backward carrying `dL/dh` through the
+/// recurrence. `delta` is dL/d(h states) as produced by the layers above
+/// (tanh' is applied HERE — callers must not pre-mask); `hs` is the
+/// forward pass's state tensor; `dwx`/`dwh`/`db` accumulate (`+=`), `dx`
+/// (if given) is overwritten. `dh`/`carry` are reusable scratch.
+#[allow(clippy::too_many_arguments)]
+pub fn elman_backward(
+    t: usize,
+    in_dim: usize,
+    hidden: usize,
+    wx: &[f32],
+    wh: &[f32],
+    x: &[f32],
+    hs: &[f32],
+    batch: usize,
+    delta: &[f32],
+    dh: &mut Vec<f32>,
+    carry: &mut Vec<f32>,
+    dwx: &mut [f32],
+    dwh: &mut [f32],
+    db: &mut [f32],
+    mut dx: Option<&mut [f32]>,
+) {
+    debug_assert_eq!(delta.len(), batch * t * hidden);
+    dh.clear();
+    dh.resize(hidden, 0.0);
+    carry.clear();
+    carry.resize(hidden, 0.0);
+    for n in 0..batch {
+        carry.iter_mut().for_each(|v| *v = 0.0);
+        for s in (0..t).rev() {
+            let base = (n * t + s) * hidden;
+            let hrow = &hs[base..base + hidden];
+            // δ_s = (incoming + recurrent carry) ⊙ tanh'(h_s)
+            for j in 0..hidden {
+                dh[j] = (delta[base + j] + carry[j]) * (1.0 - hrow[j] * hrow[j]);
+            }
+            let xrow = &x[(n * t + s) * in_dim..(n * t + s + 1) * in_dim];
+            for (i, &xi) in xrow.iter().enumerate() {
+                if xi != 0.0 {
+                    let grow = &mut dwx[i * hidden..(i + 1) * hidden];
+                    for (g, &dj) in grow.iter_mut().zip(dh.iter()) {
+                        *g += xi * dj;
+                    }
+                }
+            }
+            if s > 0 {
+                let hprev = &hs[base - hidden..base];
+                for (j, &hj) in hprev.iter().enumerate() {
+                    if hj != 0.0 {
+                        let grow = &mut dwh[j * hidden..(j + 1) * hidden];
+                        for (g, &dj) in grow.iter_mut().zip(dh.iter()) {
+                            *g += hj * dj;
+                        }
+                    }
+                }
+            }
+            for (g, &dj) in db.iter_mut().zip(dh.iter()) {
+                *g += dj;
+            }
+            if let Some(dx) = dx.as_deref_mut() {
+                let dxrow = &mut dx[(n * t + s) * in_dim..(n * t + s + 1) * in_dim];
+                for (i, o) in dxrow.iter_mut().enumerate() {
+                    let wrow = &wx[i * hidden..(i + 1) * hidden];
+                    let mut acc = 0.0f32;
+                    for (&wv, &dv) in wrow.iter().zip(dh.iter()) {
+                        acc += wv * dv;
+                    }
+                    *o = acc;
+                }
+            }
+            if s > 0 {
+                // carry_{s-1} = Wh · δ_s
+                for j in 0..hidden {
+                    let wrow = &wh[j * hidden..(j + 1) * hidden];
+                    let mut acc = 0.0f32;
+                    for (&wv, &dv) in wrow.iter().zip(dh.iter()) {
+                        acc += wv * dv;
+                    }
+                    carry[j] = acc;
+                }
+            }
+        }
+    }
+}
+
+/// Mean softmax cross-entropy over `rows` logit rows + per-logit gradient
+/// (∂loss/∂logits, mean-reduced over rows).
+pub fn softmax_xent(rows: usize, classes: usize, logits: &[f32], labels: &[i32], dlogits: &mut [f32]) -> f32 {
+    debug_assert_eq!(logits.len(), rows * classes);
+    debug_assert_eq!(labels.len(), rows);
+    debug_assert_eq!(dlogits.len(), rows * classes);
+    let mut loss = 0.0f32;
+    for n in 0..rows {
+        let row = &logits[n * classes..(n + 1) * classes];
+        let drow = &mut dlogits[n * classes..(n + 1) * classes];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for (d, &v) in drow.iter_mut().zip(row.iter()) {
+            *d = (v - max).exp();
+            z += *d;
+        }
+        let y = labels[n] as usize;
+        loss += z.ln() - (row[y] - max);
+        let inv = 1.0 / (z * rows as f32);
+        for (j, d) in drow.iter_mut().enumerate() {
+            *d = *d * inv - if j == y { 1.0 / rows as f32 } else { 0.0 };
+        }
+    }
+    loss / rows as f32
+}
+
+// ---------------------------------------------------------------------------
+// model specs + the built-in zoo
+// ---------------------------------------------------------------------------
+
+/// Input of a spec-built model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputKind {
+    /// channels-last image `[batch, h, w, c]` f32
+    Image { h: usize, w: usize, c: usize },
+    /// flat features `[batch, n]` f32
+    Flat { n: usize },
+    /// token ids `[batch, t]` i32 (labels are `[batch, t]` too)
+    Tokens { t: usize },
+}
+
+/// One layer of a model spec (shapes are resolved by [`NativeNet::from_spec`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerSpec {
+    /// fully-connected `[fan_in + 1, out]`; ReLU unless it is the last layer
+    Dense { out: usize },
+    /// Conv2d `[k·k·cin + 1, out_ch]`, stride + zero padding, ReLU
+    Conv { out_ch: usize, k: usize, stride: usize, pad: usize },
+    /// k×k max pooling, stride k (no parameters)
+    MaxPool { k: usize },
+    /// image → flat features (no parameters, no runtime work:
+    /// channels-last row-major is already flat)
+    Flatten,
+    /// token embedding table `[vocab, dim]` (vocab = the spec's `classes`)
+    Embed { dim: usize },
+    /// Elman recurrent cell `[in + hidden + 1, hidden]`, tanh, full BPTT
+    Elman { hidden: usize },
+}
+
+/// A complete native model description: input, layer stack, label space.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub batch: usize,
+    pub input: InputKind,
+    /// label cardinality: classes for classifiers, vocab for LMs
+    pub classes: usize,
+    pub metric: Metric,
+    pub layers: Vec<LayerSpec>,
+}
+
+/// Built-in specs for the heterogeneous zoo models (the MLP family keeps
+/// its legacy alternating-w/b manifests and is reconstructed from the
+/// manifest table instead). Layer sizes are chosen so that, priced at
+/// [`crate::models::DEVICE_FLOPS`] on the paper's 1GbE testbed, Eq. 18
+/// yields genuinely NON-uniform per-layer ratios — the property the
+/// MLP-only zoo could never exhibit.
+pub fn zoo_spec(name: &str) -> Option<ModelSpec> {
+    match name {
+        "convnet" => Some(ModelSpec {
+            name: "convnet".into(),
+            batch: 16,
+            input: InputKind::Image { h: 12, w: 12, c: 3 },
+            classes: 10,
+            metric: Metric::Accuracy,
+            layers: vec![
+                LayerSpec::Conv { out_ch: 16, k: 3, stride: 1, pad: 1 },
+                LayerSpec::MaxPool { k: 2 },
+                LayerSpec::Conv { out_ch: 32, k: 3, stride: 1, pad: 1 },
+                LayerSpec::MaxPool { k: 2 },
+                LayerSpec::Flatten,
+                LayerSpec::Dense { out: 10 },
+            ],
+        }),
+        "convnet_deep" => Some(ModelSpec {
+            name: "convnet_deep".into(),
+            batch: 8,
+            input: InputKind::Image { h: 16, w: 16, c: 3 },
+            classes: 10,
+            metric: Metric::Accuracy,
+            layers: vec![
+                LayerSpec::Conv { out_ch: 12, k: 3, stride: 1, pad: 1 },
+                LayerSpec::MaxPool { k: 2 },
+                LayerSpec::Conv { out_ch: 24, k: 3, stride: 1, pad: 1 },
+                LayerSpec::Conv { out_ch: 24, k: 3, stride: 1, pad: 1 },
+                LayerSpec::MaxPool { k: 2 },
+                LayerSpec::Conv { out_ch: 32, k: 3, stride: 1, pad: 1 },
+                LayerSpec::Flatten,
+                LayerSpec::Dense { out: 48 },
+                LayerSpec::Dense { out: 10 },
+            ],
+        }),
+        "rnn" => Some(ModelSpec {
+            name: "rnn".into(),
+            batch: 8,
+            input: InputKind::Tokens { t: 16 },
+            classes: 64,
+            metric: Metric::PplLoss,
+            layers: vec![
+                LayerSpec::Embed { dim: 32 },
+                LayerSpec::Elman { hidden: 64 },
+                LayerSpec::Dense { out: 64 },
+            ],
+        }),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// resolved layers + the executable net
+// ---------------------------------------------------------------------------
+
+/// Shape-resolved layer with its flat-parameter offset.
+#[derive(Debug, Clone)]
+struct ResolvedLayer {
+    kind: ResolvedKind,
+    /// offset of this layer's fused parameter block (0 for paramless)
+    off: usize,
+    /// f32 activation elements flowing IN for the whole batch (token
+    /// count for `Embed`)
+    in_len: usize,
+    /// f32 activation elements flowing OUT for the whole batch
+    out_len: usize,
+}
+
+#[derive(Debug, Clone)]
+enum ResolvedKind {
+    Dense { rows: usize, fan_in: usize, fan_out: usize, relu: bool },
+    Conv { dims: ConvDims },
+    Pool { h: usize, w: usize, c: usize, k: usize },
+    Embed { vocab: usize, dim: usize },
+    Elman { t: usize, in_dim: usize, hidden: usize },
+}
+
+impl ResolvedLayer {
+    fn param_len(&self) -> usize {
+        match &self.kind {
+            ResolvedKind::Dense { fan_in, fan_out, .. } => (fan_in + 1) * fan_out,
+            ResolvedKind::Conv { dims } => (dims.patch() + 1) * dims.cout,
+            ResolvedKind::Pool { .. } => 0,
+            ResolvedKind::Embed { vocab, dim } => vocab * dim,
+            ResolvedKind::Elman { in_dim, hidden, .. } => (in_dim + hidden + 1) * hidden,
+        }
+    }
+}
+
+/// Worker-owned scratch for the native forward/backward pass, reused
+/// across steps: per-layer activations, the two δ buffers, the per-layer
+/// Wᵀ cache for the dense dX walk, the im2col `col`/`dcol` matrices and
+/// the BPTT `dh`/`carry` rows. Every buffer reaches steady-state capacity
+/// after the first step, so the hot loop stops allocating.
+#[derive(Debug, Clone, Default)]
+pub struct GradScratch {
+    acts: Vec<Vec<f32>>,
+    delta: Vec<f32>,
+    prev: Vec<f32>,
+    wt: Vec<f32>,
+    col: Vec<f32>,
+    dcol: Vec<f32>,
+    dh: Vec<f32>,
+    carry: Vec<f32>,
+}
+
+/// Reusable scratch for [`compress_layer_bucket_into`]: the bucket-padded
+/// accumulator plus the selection buffers, so the per-layer-per-worker
+/// XLA-emulation compress path performs no allocation for the threshold
+/// search (the returned sparse/residual vectors stay owned — they are the
+/// artifact contract's outputs).
+#[derive(Debug, Clone, Default)]
+pub struct CompressScratch {
+    acc: Vec<f32>,
+    sample: Vec<f32>,
+    mags: Vec<f32>,
+}
+
+/// Executable native model: a resolved layer stack over a flat parameter
+/// vector, plus the loss head (softmax cross-entropy over `loss_rows`
+/// logit rows — `batch` for classifiers, `batch·t` for LMs).
+pub struct NativeNet {
+    batch: usize,
+    d: usize,
+    classes: usize,
+    loss_rows: usize,
+    /// expected x elements (f32, or token count for token inputs)
+    x_elems: usize,
+    tokens_in: bool,
+    layers: Vec<ResolvedLayer>,
+}
+
+/// Intermediate feature shape during spec resolution.
+#[derive(Debug, Clone, Copy)]
+enum Feat {
+    Img { h: usize, w: usize, c: usize },
+    Flat { n: usize },
+    Seq { t: usize, n: usize },
+    Tok { t: usize },
+}
+
+impl NativeNet {
+    /// Resolve a [`ModelSpec`] into an executable net, validating shapes.
+    pub fn from_spec(spec: &ModelSpec) -> Result<NativeNet> {
+        let (layers, _) = resolve(spec)?;
+        NativeNet::from_resolved(spec, layers)
+    }
+
+    /// Assemble the net from an already-resolved layer stack (shared by
+    /// [`NativeNet::from_spec`] and the zoo path of
+    /// [`NativeNet::from_manifest`], so a spec is resolved exactly once).
+    fn from_resolved(spec: &ModelSpec, layers: Vec<ResolvedLayer>) -> Result<NativeNet> {
+        let last = layers.last().expect("resolve ensures non-empty");
+        let (loss_rows, classes) = match &last.kind {
+            ResolvedKind::Dense { rows, fan_out, .. } => (*rows, *fan_out),
+            _ => bail!("model {} must end in a Dense layer", spec.name),
+        };
+        let d: usize = layers.iter().map(|l| l.param_len()).sum();
+        let (x_elems, tokens_in) = match spec.input {
+            InputKind::Image { h, w, c } => (spec.batch * h * w * c, false),
+            InputKind::Flat { n } => (spec.batch * n, false),
+            InputKind::Tokens { t } => (spec.batch * t, true),
+        };
+        Ok(NativeNet { batch: spec.batch, d, classes, loss_rows, x_elems, tokens_in, layers })
+    }
+
+    /// Reconstruct a net from a manifest: known zoo specs are matched by
+    /// name (the manifest's layer table must agree structurally); any
+    /// other manifest is reconstructed as the legacy alternating-w/b MLP
+    /// this backend originally served.
+    pub fn from_manifest(mm: &ModelManifest) -> Result<NativeNet> {
+        if let Some(spec) = zoo_spec(&mm.name) {
+            // resolve ONCE: the same walk yields the expectation table
+            // the manifest must match and the executable layer stack
+            let (layers, infos) = resolve(&spec)?;
+            let d: usize = infos.iter().map(|l| l.size).sum();
+            ensure!(d == mm.d, "model {}: manifest d {} != spec d {d}", mm.name, mm.d);
+            let (x, y) = spec_batch_specs(&spec);
+            ensure!(x == mm.x && y == mm.y, "model {}: batch specs diverge from the zoo spec", mm.name);
+            ensure!(spec.classes == mm.classes, "model {}: classes diverge from the zoo spec", mm.name);
+            ensure!(infos.len() == mm.layers.len(), "model {}: layer count diverges from the zoo spec", mm.name);
+            for (e, g) in infos.iter().zip(mm.layers.iter()) {
+                ensure!(
+                    e.name == g.name && e.shape == g.shape && e.offset == g.offset,
+                    "model {}: layer {} diverges from the zoo spec",
+                    mm.name,
+                    g.name
+                );
+            }
+            return NativeNet::from_resolved(&spec, layers);
+        }
+        // legacy MLP reconstruction (mlp, mlp_deep and custom test
+        // manifests): alternating row-major w [fan_in, fan_out] / b
+        // [fan_out] pairs over [batch, in] f32 inputs
+        ensure!(mm.x.shape.len() == 2 && mm.x.dtype == DType::F32, "native backend wants [batch, in] f32 inputs");
+        ensure!(mm.y.shape.len() == 1 && mm.y.dtype == DType::I32, "native backend wants [batch] i32 labels");
+        ensure!(!mm.layers.is_empty() && mm.layers.len() % 2 == 0, "native backend wants alternating w/b layers");
+        let batch = mm.x.shape[0];
+        let mut dims = vec![mm.x.shape[1]];
+        for pair in mm.layers.chunks(2) {
+            let (w, b) = (&pair[0], &pair[1]);
+            ensure!(w.shape.len() == 2 && b.shape.len() == 1, "layer pair {}/{} not (matrix, bias)", w.name, b.name);
+            ensure!(w.shape[0] == *dims.last().unwrap(), "layer {} fan-in mismatch", w.name);
+            ensure!(w.shape[1] == b.shape[0], "layer {} bias mismatch", w.name);
+            dims.push(w.shape[1]);
+        }
+        ensure!(*dims.last().unwrap() == mm.classes, "output width != classes");
+        let npairs = dims.len() - 1;
+        let mut layers = Vec::with_capacity(npairs);
+        let mut off = 0;
+        for l in 0..npairs {
+            let (fan_in, fan_out) = (dims[l], dims[l + 1]);
+            layers.push(ResolvedLayer {
+                kind: ResolvedKind::Dense { rows: batch, fan_in, fan_out, relu: l + 1 < npairs },
+                off,
+                in_len: batch * fan_in,
+                out_len: batch * fan_out,
+            });
+            off += (fan_in + 1) * fan_out;
+        }
+        ensure!(off == mm.d, "layer sizes sum to {off} but d = {}", mm.d);
+        Ok(NativeNet {
+            batch,
+            d: mm.d,
+            classes: mm.classes,
+            loss_rows: batch,
+            x_elems: batch * dims[0],
+            tokens_in: false,
+            layers,
+        })
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Seeded initial parameters, deterministic in (seed, layer index):
+    /// He-normal dense/conv weights, Xavier-ish recurrent blocks, zero
+    /// biases — the native stand-in for `init.bin`.
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut params = vec![0.0f32; self.d];
+        let mut pi = 0u64; // parametric layer index (matches legacy w_l numbering)
+        for layer in &self.layers {
+            if layer.param_len() == 0 {
+                continue;
+            }
+            let mut rng = Rng::new(seed ^ 0x9a7e_11e5 ^ (pi << 40));
+            pi += 1;
+            let off = layer.off;
+            match &layer.kind {
+                ResolvedKind::Dense { fan_in, fan_out, .. } => {
+                    let sigma = (2.0 / *fan_in as f32).sqrt();
+                    rng.fill_normal(&mut params[off..off + fan_in * fan_out], sigma);
+                }
+                ResolvedKind::Conv { dims } => {
+                    let sigma = (2.0 / dims.patch() as f32).sqrt();
+                    rng.fill_normal(&mut params[off..off + dims.weight_len()], sigma);
+                }
+                ResolvedKind::Embed { vocab, dim } => {
+                    rng.fill_normal(&mut params[off..off + vocab * dim], 0.5);
+                }
+                ResolvedKind::Elman { in_dim, hidden, .. } => {
+                    let sx = (1.0 / *in_dim as f32).sqrt();
+                    rng.fill_normal(&mut params[off..off + in_dim * hidden], sx);
+                    let sh = 0.5 * (1.0 / *hidden as f32).sqrt();
+                    rng.fill_normal(
+                        &mut params[off + in_dim * hidden..off + (in_dim + hidden) * hidden],
+                        sh,
+                    );
+                }
+                ResolvedKind::Pool { .. } => unreachable!("paramless"),
+            }
+            // bias rows stay zero
+        }
+        params
+    }
+
+    fn check_batch(&self, x: &BatchData, y: &BatchData) -> Result<()> {
+        ensure!(x.len() == self.x_elems, "x batch shape mismatch");
+        ensure!(y.len() == self.loss_rows, "y batch shape mismatch");
+        match (x, self.tokens_in) {
+            (BatchData::F32(_), false) | (BatchData::I32(_), true) => {}
+            _ => bail!("x dtype mismatch for this model"),
+        }
+        let BatchData::I32(yv) = y else { bail!("y must be i32") };
+        for &label in yv {
+            ensure!((label as usize) < self.classes, "label out of range");
+        }
+        if self.tokens_in {
+            let BatchData::I32(xv) = x else { unreachable!() };
+            for &tok in xv {
+                ensure!((tok as usize) < self.classes, "token out of range");
+            }
+        }
+        Ok(())
+    }
+
+    /// Forward pass into reusable per-layer activation buffers (`acts[l]`
+    /// holds layer `l`'s full-batch output; the last entry holds raw
+    /// logits). Every element is overwritten, so stale contents don't
+    /// matter.
+    fn forward_into(&self, params: &[f32], x: &BatchData, acts: &mut Vec<Vec<f32>>, col: &mut Vec<f32>) {
+        let nl = self.layers.len();
+        let b = self.batch;
+        acts.resize_with(nl, Vec::new);
+        for l in 0..nl {
+            let layer = &self.layers[l];
+            let (done, rest) = acts.split_at_mut(l);
+            let out = &mut rest[0];
+            out.resize(layer.out_len, 0.0);
+            let off = layer.off;
+            // f32 activations feeding layer l: the previous layer's
+            // output, or the raw batch for layer 0 (token inputs are
+            // consumed by Embed directly and stay None here)
+            let input_f32: Option<&[f32]> = if l == 0 {
+                match x {
+                    BatchData::F32(xv) => Some(xv.as_slice()),
+                    BatchData::I32(_) => None,
+                }
+            } else {
+                Some(done[l - 1].as_slice())
+            };
+            match &layer.kind {
+                ResolvedKind::Dense { rows, fan_in, fan_out, relu } => {
+                    let input = input_f32.expect("checked: f32 input");
+                    let w = &params[off..off + fan_in * fan_out];
+                    let bias = &params[off + fan_in * fan_out..off + (fan_in + 1) * fan_out];
+                    for r in 0..*rows {
+                        let xrow = &input[r * fan_in..(r + 1) * fan_in];
+                        let orow = &mut out[r * fan_out..(r + 1) * fan_out];
+                        orow.copy_from_slice(bias);
+                        for (i, &xi) in xrow.iter().enumerate() {
+                            if xi != 0.0 {
+                                let wrow = &w[i * fan_out..(i + 1) * fan_out];
+                                for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                                    *o += xi * wv;
+                                }
+                            }
+                        }
+                        if *relu {
+                            for o in orow.iter_mut() {
+                                *o = o.max(0.0);
+                            }
+                        }
+                    }
+                }
+                ResolvedKind::Conv { dims } => {
+                    let input = input_f32.expect("checked: f32 input");
+                    let w = &params[off..off + dims.weight_len()];
+                    let bias = &params[off + dims.weight_len()..off + dims.weight_len() + dims.cout];
+                    conv2d_forward(dims, w, bias, input, b, col, out, true);
+                }
+                ResolvedKind::Pool { h, w, c, k } => {
+                    let input = input_f32.expect("checked: f32 input");
+                    maxpool_forward(*h, *w, *c, *k, input, b, out);
+                }
+                ResolvedKind::Embed { vocab: _, dim } => {
+                    let BatchData::I32(toks) = x else { unreachable!("checked") };
+                    for (r, &tok) in toks.iter().enumerate() {
+                        let src = &params[off + tok as usize * dim..off + (tok as usize + 1) * dim];
+                        out[r * dim..(r + 1) * dim].copy_from_slice(src);
+                    }
+                }
+                ResolvedKind::Elman { t, in_dim, hidden } => {
+                    // Embed/Dense always precedes Elman, so l > 0 here
+                    let input = input_f32.expect("checked: f32 input");
+                    let wx = &params[off..off + in_dim * hidden];
+                    let wh = &params[off + in_dim * hidden..off + (in_dim + hidden) * hidden];
+                    let bias = &params
+                        [off + (in_dim + hidden) * hidden..off + (in_dim + hidden + 1) * hidden];
+                    elman_forward(*t, *in_dim, *hidden, wx, wh, bias, input, b, out);
+                }
+            }
+        }
+    }
+
+    /// One train step: loss + flat gradient written into `grad` (resized
+    /// to d; the caller owns the buffer so repeated steps don't allocate).
+    /// `scratch` is worker-owned and reused across steps — after the first
+    /// call the step performs no heap allocation.
+    pub fn train_step_into(
+        &self,
+        params: &[f32],
+        x: &BatchData,
+        y: &BatchData,
+        grad: &mut Vec<f32>,
+        scratch: &mut GradScratch,
+    ) -> Result<f32> {
+        ensure!(params.len() == self.d, "params dim mismatch");
+        self.check_batch(x, y)?;
+        let BatchData::I32(yv) = y else { bail!("y must be i32") };
+        let b = self.batch;
+        let nl = self.layers.len();
+        let GradScratch { acts, delta, prev, wt, col, dcol, dh, carry } = scratch;
+        self.forward_into(params, x, acts, col);
+
+        delta.clear();
+        delta.resize(self.loss_rows * self.classes, 0.0);
+        let loss = softmax_xent(self.loss_rows, self.classes, &acts[nl - 1], yv, delta);
+
+        grad.clear();
+        grad.resize(self.d, 0.0);
+
+        for l in (0..nl).rev() {
+            let layer = &self.layers[l];
+            let off = layer.off;
+            // f32 activations that fed layer l in the forward pass (None
+            // only for layer-0 token inputs, which Embed reads directly)
+            let input_f32: Option<&[f32]> = if l == 0 {
+                match x {
+                    BatchData::F32(xv) => Some(xv.as_slice()),
+                    BatchData::I32(_) => None,
+                }
+            } else {
+                Some(acts[l - 1].as_slice())
+            };
+            match &layer.kind {
+                ResolvedKind::Dense { rows, fan_in, fan_out, relu } => {
+                    // δ here is dL/d(post-activation); fold the layer's own
+                    // ReLU mask first (relu'(0) = 0, matching the forward
+                    // clamp), then the linear part
+                    if *relu {
+                        for (dv, &av) in delta.iter_mut().zip(acts[l].iter()) {
+                            if av <= 0.0 {
+                                *dv = 0.0;
+                            }
+                        }
+                    }
+                    let input = input_f32.expect("checked: f32 input");
+                    // dW[i,j] = Σ_r a[r,i]·δ[r,j];  db[j] = Σ_r δ[r,j]
+                    let boff = off + fan_in * fan_out;
+                    for r in 0..*rows {
+                        let arow = &input[r * fan_in..(r + 1) * fan_in];
+                        let drow = &delta[r * fan_out..(r + 1) * fan_out];
+                        for (i, &ai) in arow.iter().enumerate() {
+                            if ai != 0.0 {
+                                let grow =
+                                    &mut grad[off + i * fan_out..off + (i + 1) * fan_out];
+                                for (g, &dj) in grow.iter_mut().zip(drow.iter()) {
+                                    *g += ai * dj;
+                                }
+                            }
+                        }
+                        let gb = &mut grad[boff..boff + fan_out];
+                        for (g, &dj) in gb.iter_mut().zip(drow.iter()) {
+                            *g += dj;
+                        }
+                    }
+                    // δ_prev[r,i] = Σ_j W[i,j]·δ[r,j]. W is cached
+                    // transposed once per layer so the per-row inner walk
+                    // is a contiguous axpy over Wᵀ rows; the j-ascending
+                    // accumulation order — and therefore every f32 sum —
+                    // is unchanged. The next layer applies its own
+                    // activation mask.
+                    if l > 0 {
+                        let w = &params[off..off + fan_in * fan_out];
+                        wt.clear();
+                        wt.resize(fan_out * fan_in, 0.0);
+                        for i in 0..*fan_in {
+                            let wrow = &w[i * fan_out..(i + 1) * fan_out];
+                            for (j, &wij) in wrow.iter().enumerate() {
+                                wt[j * fan_in + i] = wij;
+                            }
+                        }
+                        prev.clear();
+                        prev.resize(rows * fan_in, 0.0);
+                        for r in 0..*rows {
+                            let drow = &delta[r * fan_out..(r + 1) * fan_out];
+                            let prow = &mut prev[r * fan_in..(r + 1) * fan_in];
+                            for (j, &dj) in drow.iter().enumerate() {
+                                if dj != 0.0 {
+                                    let wtrow = &wt[j * fan_in..(j + 1) * fan_in];
+                                    for (p, &wji) in prow.iter_mut().zip(wtrow.iter()) {
+                                        *p += wji * dj;
+                                    }
+                                }
+                            }
+                        }
+                        std::mem::swap(&mut *delta, &mut *prev);
+                    }
+                }
+                ResolvedKind::Conv { dims } => {
+                    // conv output is always ReLU'd: mask by the stored
+                    // post-activation output
+                    for (dv, &av) in delta.iter_mut().zip(acts[l].iter()) {
+                        if av <= 0.0 {
+                            *dv = 0.0;
+                        }
+                    }
+                    let input = input_f32.expect("checked: f32 input");
+                    let wlen = dims.weight_len();
+                    let w = &params[off..off + wlen];
+                    let gslice = &mut grad[off..off + wlen + dims.cout];
+                    let (dw, db) = gslice.split_at_mut(wlen);
+                    if l > 0 {
+                        prev.clear();
+                        prev.resize(layer.in_len, 0.0);
+                        conv2d_backward(
+                            dims,
+                            w,
+                            input,
+                            b,
+                            delta,
+                            col,
+                            dcol,
+                            dw,
+                            db,
+                            Some(&mut prev[..]),
+                        );
+                        std::mem::swap(&mut *delta, &mut *prev);
+                    } else {
+                        conv2d_backward(dims, w, input, b, delta, col, dcol, dw, db, None);
+                    }
+                }
+                ResolvedKind::Pool { h, w, c, k } => {
+                    // routes δ to the argmax tap; no parameters, no mask
+                    if l > 0 {
+                        let input = input_f32.expect("checked: f32 input");
+                        prev.clear();
+                        prev.resize(layer.in_len, 0.0);
+                        maxpool_backward(*h, *w, *c, *k, input, b, delta, prev);
+                        std::mem::swap(&mut *delta, &mut *prev);
+                    }
+                }
+                ResolvedKind::Embed { vocab: _, dim } => {
+                    // scatter-add δ rows into the table rows (token order
+                    // is fixed, so the accumulation is deterministic)
+                    let BatchData::I32(toks) = x else { unreachable!("checked") };
+                    for (r, &tok) in toks.iter().enumerate() {
+                        let grow =
+                            &mut grad[off + tok as usize * dim..off + (tok as usize + 1) * dim];
+                        let drow = &delta[r * dim..(r + 1) * dim];
+                        for (g, &dj) in grow.iter_mut().zip(drow.iter()) {
+                            *g += dj;
+                        }
+                    }
+                }
+                ResolvedKind::Elman { t, in_dim, hidden } => {
+                    let input = input_f32.expect("checked: f32 input");
+                    let (wxl, whl) = (in_dim * hidden, hidden * hidden);
+                    let w = &params[off..off + wxl + whl];
+                    let (wx, wh) = w.split_at(wxl);
+                    let gslice = &mut grad[off..off + wxl + whl + hidden];
+                    let (dwx, rest) = gslice.split_at_mut(wxl);
+                    let (dwh, db) = rest.split_at_mut(whl);
+                    prev.clear();
+                    prev.resize(layer.in_len, 0.0);
+                    elman_backward(
+                        *t,
+                        *in_dim,
+                        *hidden,
+                        wx,
+                        wh,
+                        input,
+                        &acts[l],
+                        b,
+                        delta,
+                        dh,
+                        carry,
+                        dwx,
+                        dwh,
+                        db,
+                        Some(&mut prev[..]),
+                    );
+                    std::mem::swap(&mut *delta, &mut *prev);
+                }
+            }
+        }
+        Ok(loss)
+    }
+
+    /// Eval step: (mean loss, metric) — top-1 accuracy for classifiers,
+    /// the loss itself for `Metric::PplLoss` models (perplexity =
+    /// exp(loss); same contract as the PJRT LM artifacts).
+    pub fn eval_step(&self, params: &[f32], x: &BatchData, y: &BatchData) -> Result<(f32, f32)> {
+        ensure!(params.len() == self.d, "params dim mismatch");
+        self.check_batch(x, y)?;
+        let BatchData::I32(yv) = y else { bail!("y must be i32") };
+        let mut acts = Vec::new();
+        let mut col = Vec::new();
+        self.forward_into(params, x, &mut acts, &mut col);
+        let logits = acts.last().expect("non-empty net");
+        let (rows, c) = (self.loss_rows, self.classes);
+        let mut dscratch = vec![0.0f32; rows * c];
+        let loss = softmax_xent(rows, c, logits, yv, &mut dscratch);
+        let mut correct = 0usize;
+        for n in 0..rows {
+            let row = &logits[n * c..(n + 1) * c];
+            let mut best = (0usize, f32::NEG_INFINITY);
+            for (j, &v) in row.iter().enumerate() {
+                if v > best.1 {
+                    best = (j, v);
+                }
+            }
+            if best.0 == yv[n] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f32 / rows as f32;
+        Ok((loss, acc))
+    }
+
+    /// Metric-aware eval used by the runtime facade: classifiers report
+    /// accuracy, LMs report the loss (ppl convention).
+    pub fn eval_metric(
+        &self,
+        params: &[f32],
+        x: &BatchData,
+        y: &BatchData,
+        metric: Metric,
+    ) -> Result<(f32, f32)> {
+        let (loss, acc) = self.eval_step(params, x, y)?;
+        Ok(match metric {
+            Metric::Accuracy => (loss, acc),
+            Metric::PplLoss => (loss, loss),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// spec resolution + manifests
+// ---------------------------------------------------------------------------
+
+/// Walk a spec's layer list resolving shapes; returns the executable
+/// layers plus the manifest layer table (one fused tensor per parametric
+/// layer).
+fn resolve(spec: &ModelSpec) -> Result<(Vec<ResolvedLayer>, Vec<LayerInfo>)> {
+    ensure!(!spec.layers.is_empty(), "model {} has no layers", spec.name);
+    ensure!(spec.batch >= 1 && spec.classes >= 2, "model {} needs batch >= 1, classes >= 2", spec.name);
+    let b = spec.batch;
+    let mut feat = match spec.input {
+        InputKind::Image { h, w, c } => Feat::Img { h, w, c },
+        InputKind::Flat { n } => Feat::Flat { n },
+        InputKind::Tokens { t } => Feat::Tok { t },
+    };
+    let mut layers: Vec<ResolvedLayer> = Vec::new();
+    let mut infos: Vec<LayerInfo> = Vec::new();
+    let mut off = 0usize;
+    let (mut n_conv, mut n_fc, mut n_rnn) = (0usize, 0usize, 0usize);
+    let n_spec = spec.layers.len();
+    for (i, ls) in spec.layers.iter().enumerate() {
+        let last = i + 1 == n_spec;
+        match *ls {
+            LayerSpec::Flatten => {
+                feat = match feat {
+                    Feat::Img { h, w, c } => Feat::Flat { n: h * w * c },
+                    Feat::Flat { n } => Feat::Flat { n },
+                    _ => bail!("model {}: Flatten needs image/flat input", spec.name),
+                };
+                continue; // channels-last is already contiguous: no runtime layer
+            }
+            LayerSpec::Dense { out } => {
+                ensure!(out >= 1, "dense out must be >= 1");
+                let (rows, fan_in, seq) = match feat {
+                    Feat::Flat { n } => (b, n, None),
+                    Feat::Img { h, w, c } => (b, h * w * c, None), // implicit flatten
+                    Feat::Seq { t, n } => (b * t, n, Some(t)),
+                    Feat::Tok { .. } => bail!("model {}: Dense cannot read raw tokens", spec.name),
+                };
+                n_fc += 1;
+                let name = if last { "head".to_string() } else { format!("fc{n_fc}") };
+                let size = (fan_in + 1) * out;
+                infos.push(LayerInfo {
+                    name,
+                    shape: vec![fan_in + 1, out],
+                    size,
+                    offset: off,
+                    bucket: next_pow2(size).max(1024),
+                    fwd_flops: 2.0 * rows as f64 * fan_in as f64 * out as f64
+                        + rows as f64 * out as f64,
+                });
+                layers.push(ResolvedLayer {
+                    kind: ResolvedKind::Dense { rows, fan_in, fan_out: out, relu: !last },
+                    off,
+                    in_len: rows * fan_in,
+                    out_len: rows * out,
+                });
+                off += size;
+                feat = match seq {
+                    Some(t) => Feat::Seq { t, n: out },
+                    None => Feat::Flat { n: out },
+                };
+            }
+            LayerSpec::Conv { out_ch, k, stride, pad } => {
+                let Feat::Img { h, w, c } = feat else {
+                    bail!("model {}: Conv needs an image input", spec.name)
+                };
+                let dims = ConvDims { h, w, cin: c, cout: out_ch, k, stride, pad };
+                dims.validate()?;
+                ensure!(!last, "model {} must end in a Dense layer", spec.name);
+                n_conv += 1;
+                let size = (dims.patch() + 1) * out_ch;
+                let npix = dims.out_h() * dims.out_w();
+                infos.push(LayerInfo {
+                    name: format!("conv{n_conv}"),
+                    shape: vec![dims.patch() + 1, out_ch],
+                    size,
+                    offset: off,
+                    bucket: next_pow2(size).max(1024),
+                    fwd_flops: 2.0 * b as f64 * npix as f64 * dims.patch() as f64 * out_ch as f64
+                        + b as f64 * npix as f64 * out_ch as f64,
+                });
+                layers.push(ResolvedLayer {
+                    kind: ResolvedKind::Conv { dims },
+                    off,
+                    in_len: b * dims.in_len(),
+                    out_len: b * dims.out_len(),
+                });
+                off += size;
+                feat = Feat::Img { h: dims.out_h(), w: dims.out_w(), c: out_ch };
+            }
+            LayerSpec::MaxPool { k } => {
+                let Feat::Img { h, w, c } = feat else {
+                    bail!("model {}: MaxPool needs an image input", spec.name)
+                };
+                ensure!(k >= 1 && h % k == 0 && w % k == 0, "model {}: pool {k} must divide {h}x{w}", spec.name);
+                layers.push(ResolvedLayer {
+                    kind: ResolvedKind::Pool { h, w, c, k },
+                    off,
+                    in_len: b * h * w * c,
+                    out_len: b * (h / k) * (w / k) * c,
+                });
+                feat = Feat::Img { h: h / k, w: w / k, c };
+            }
+            LayerSpec::Embed { dim } => {
+                let Feat::Tok { t } = feat else {
+                    bail!("model {}: Embed needs token input (and must come first)", spec.name)
+                };
+                ensure!(dim >= 1, "embed dim must be >= 1");
+                let vocab = spec.classes;
+                let size = vocab * dim;
+                infos.push(LayerInfo {
+                    name: "embed".to_string(),
+                    shape: vec![vocab, dim],
+                    size,
+                    offset: off,
+                    bucket: next_pow2(size).max(1024),
+                    fwd_flops: b as f64 * t as f64 * dim as f64,
+                });
+                layers.push(ResolvedLayer {
+                    kind: ResolvedKind::Embed { vocab, dim },
+                    off,
+                    in_len: b * t,
+                    out_len: b * t * dim,
+                });
+                off += size;
+                feat = Feat::Seq { t, n: dim };
+            }
+            LayerSpec::Elman { hidden } => {
+                let Feat::Seq { t, n } = feat else {
+                    bail!("model {}: Elman needs a sequence input (Embed first)", spec.name)
+                };
+                ensure!(hidden >= 1, "elman hidden must be >= 1");
+                n_rnn += 1;
+                let size = (n + hidden + 1) * hidden;
+                infos.push(LayerInfo {
+                    name: format!("rnn{n_rnn}"),
+                    shape: vec![n + hidden + 1, hidden],
+                    size,
+                    offset: off,
+                    bucket: next_pow2(size).max(1024),
+                    fwd_flops: 2.0 * b as f64 * t as f64 * (n * hidden + hidden * hidden) as f64
+                        + b as f64 * t as f64 * hidden as f64,
+                });
+                layers.push(ResolvedLayer {
+                    kind: ResolvedKind::Elman { t, in_dim: n, hidden },
+                    off,
+                    in_len: b * t * n,
+                    out_len: b * t * hidden,
+                });
+                off += size;
+                feat = Feat::Seq { t, n: hidden };
+            }
+        }
+    }
+    let Some(last) = layers.last() else { bail!("model {} resolves to no layers", spec.name) };
+    match &last.kind {
+        ResolvedKind::Dense { fan_out, relu, .. } => {
+            ensure!(!relu, "internal: output layer must be linear");
+            ensure!(*fan_out == spec.classes, "model {}: head width {} != classes {}", spec.name, fan_out, spec.classes);
+        }
+        _ => bail!("model {} must end in a Dense layer", spec.name),
+    }
+    Ok((layers, infos))
+}
+
+/// The (x, y) batch specs a spec-defined model exchanges with the data
+/// layer (shared by the manifest builder and manifest validation).
+fn spec_batch_specs(spec: &ModelSpec) -> (BatchSpec, BatchSpec) {
+    match spec.input {
+        InputKind::Image { h, w, c } => (
+            BatchSpec { shape: vec![spec.batch, h, w, c], dtype: DType::F32 },
+            BatchSpec { shape: vec![spec.batch], dtype: DType::I32 },
+        ),
+        InputKind::Flat { n } => (
+            BatchSpec { shape: vec![spec.batch, n], dtype: DType::F32 },
+            BatchSpec { shape: vec![spec.batch], dtype: DType::I32 },
+        ),
+        InputKind::Tokens { t } => (
+            BatchSpec { shape: vec![spec.batch, t], dtype: DType::I32 },
+            BatchSpec { shape: vec![spec.batch, t], dtype: DType::I32 },
+        ),
+    }
+}
+
+/// Build the manifest entry for a spec-defined model (fused one-tensor-
+/// per-block layer table). Errors on invalid specs, like the sibling
+/// constructors.
+pub fn spec_manifest(spec: &ModelSpec) -> Result<ModelManifest> {
+    let (_, infos) = resolve(spec)?;
+    let d: usize = infos.iter().map(|l| l.size).sum();
+    let (x, y) = spec_batch_specs(spec);
+    Ok(ModelManifest {
+        name: spec.name.clone(),
+        d,
+        d_padded: pad_to(d, 4096),
+        metric: spec.metric,
+        classes: spec.classes,
+        x,
+        y,
+        layers: infos,
+        files: BTreeMap::new(),
+    })
+}
+
+/// Layer table for a legacy MLP spec (shared by the manifest builder and
+/// [`NativeNet::from_manifest`] validation).
 fn layer_table(dims: &[usize], batch: usize) -> Vec<LayerInfo> {
     let mut layers = Vec::new();
     let mut off = 0;
@@ -66,7 +1413,9 @@ fn layer_table(dims: &[usize], batch: usize) -> Vec<LayerInfo> {
     layers
 }
 
-/// Build the manifest entry for one native MLP.
+/// Build the manifest entry for one legacy native MLP (alternating w/b
+/// layer table — kept for the `mlp` family so existing tooling and tests
+/// see unchanged manifests).
 fn mlp_manifest(name: &str, in_dim: usize, hidden: &[usize], classes: usize, batch: usize) -> ModelManifest {
     let mut dims = vec![in_dim];
     dims.extend_from_slice(hidden);
@@ -89,13 +1438,24 @@ fn mlp_manifest(name: &str, in_dim: usize, hidden: &[usize], classes: usize, bat
 /// The built-in zoo served when no artifacts directory is given:
 /// * `mlp` — 32 → 64 → 64 → 10, the quick-test model;
 /// * `mlp_deep` — 64 → 128 → 96 → 64 → 48 → 32 → 10, twelve tensors with
-///   skewed sizes, the layer-wise-pipelining stress model for the hot-path
-///   benches.
+///   skewed sizes, the layer-wise-pipelining stress model;
+/// * `convnet` — 12×12×3 images → conv16 → pool → conv32 → pool → head,
+///   the heterogeneous comm/compute model (conv layers carry ~50× more
+///   flops per parameter than the dense head);
+/// * `convnet_deep` — 16×16×3 images, four convs + two dense layers, the
+///   deep-pipeline stress model where Eq. 18 selects all three regimes
+///   (dense, fractional, capped) at once;
+/// * `rnn` — order-1 Markov tokens → embed32 → elman64 (BPTT) → head,
+///   the LM workload (metric: ppl loss).
 pub fn native_manifest(seed: u64) -> Manifest {
-    let models: Vec<ModelManifest> = vec![
+    let mut models: Vec<ModelManifest> = vec![
         mlp_manifest("mlp", 32, &[64, 64], 10, 32),
         mlp_manifest("mlp_deep", 64, &[128, 96, 64, 48, 32], 10, 32),
     ];
+    for name in ["convnet", "convnet_deep", "rnn"] {
+        let spec = zoo_spec(name).expect("builtin");
+        models.push(spec_manifest(&spec).expect("builtin zoo specs are valid"));
+    }
     let mut buckets: Vec<usize> = models
         .iter()
         .flat_map(|m| m.layers.iter().map(|l| l.bucket))
@@ -111,272 +1471,9 @@ pub fn native_manifest(seed: u64) -> Manifest {
     }
 }
 
-/// Worker-owned scratch for the native forward/backward pass, reused
-/// across steps: per-layer activations, the two δ buffers, and the
-/// per-layer Wᵀ cache for the dX walk. Every buffer reaches steady-state
-/// capacity after the first step, so the hot loop stops allocating; the
-/// Wᵀ cache additionally turns the per-sample `Σ_j W[i,j]·δ[j]` column
-/// reduction into contiguous row-walk axpys (one strided transpose per
-/// layer instead of `batch` strided reads).
-#[derive(Debug, Clone, Default)]
-pub struct GradScratch {
-    acts: Vec<Vec<f32>>,
-    delta: Vec<f32>,
-    prev: Vec<f32>,
-    wt: Vec<f32>,
-}
-
-/// Reusable scratch for [`compress_layer_bucket_into`]: the bucket-padded
-/// accumulator plus the selection buffers, so the per-layer-per-worker
-/// XLA-emulation compress path performs no allocation for the threshold
-/// search (the returned sparse/residual vectors stay owned — they are the
-/// artifact contract's outputs).
-#[derive(Debug, Clone, Default)]
-pub struct CompressScratch {
-    acc: Vec<f32>,
-    sample: Vec<f32>,
-    mags: Vec<f32>,
-}
-
-impl NativeMlp {
-    /// Reconstruct the MLP shape from a manifest layer table (validates
-    /// the alternating w/b structure this backend requires).
-    pub fn from_manifest(mm: &ModelManifest) -> Result<NativeMlp> {
-        ensure!(mm.x.shape.len() == 2 && mm.x.dtype == DType::F32, "native backend wants [batch, in] f32 inputs");
-        ensure!(mm.y.shape.len() == 1 && mm.y.dtype == DType::I32, "native backend wants [batch] i32 labels");
-        ensure!(!mm.layers.is_empty() && mm.layers.len() % 2 == 0, "native backend wants alternating w/b layers");
-        let batch = mm.x.shape[0];
-        let mut dims = vec![mm.x.shape[1]];
-        for pair in mm.layers.chunks(2) {
-            let (w, b) = (&pair[0], &pair[1]);
-            ensure!(w.shape.len() == 2 && b.shape.len() == 1, "layer pair {}/{} not (matrix, bias)", w.name, b.name);
-            ensure!(w.shape[0] == *dims.last().unwrap(), "layer {} fan-in mismatch", w.name);
-            ensure!(w.shape[1] == b.shape[0], "layer {} bias mismatch", w.name);
-            dims.push(w.shape[1]);
-        }
-        ensure!(*dims.last().unwrap() == mm.classes, "output width != classes");
-        Ok(NativeMlp { dims, batch, d: mm.d })
-    }
-
-    /// Seeded He-normal initial parameters (biases zero), deterministic in
-    /// (seed, shape) — the native stand-in for `init.bin`.
-    pub fn init_params(&self, seed: u64) -> Vec<f32> {
-        let mut params = vec![0.0f32; self.d];
-        let mut off = 0;
-        for l in 0..self.dims.len() - 1 {
-            let (fan_in, fan_out) = (self.dims[l], self.dims[l + 1]);
-            let mut rng = Rng::new(seed ^ 0x9a7e_11e5 ^ ((l as u64) << 40));
-            let sigma = (2.0 / fan_in as f32).sqrt();
-            rng.fill_normal(&mut params[off..off + fan_in * fan_out], sigma);
-            off += fan_in * fan_out + fan_out; // biases stay zero
-        }
-        params
-    }
-
-    fn check_batch(&self, x: &BatchData, y: &BatchData) -> Result<(usize, usize)> {
-        let (b, in_dim) = (self.batch, self.dims[0]);
-        ensure!(x.len() == b * in_dim, "x batch shape mismatch");
-        ensure!(y.len() == b, "y batch shape mismatch");
-        Ok((b, in_dim))
-    }
-
-    /// Forward pass into reusable per-layer activation buffers (`acts[l]`
-    /// has shape [batch, dims[l+1]]; the last entry holds raw logits).
-    /// Every element is overwritten, so stale contents don't matter.
-    fn forward_into(&self, params: &[f32], x: &[f32], acts: &mut Vec<Vec<f32>>) {
-        let nl = self.dims.len() - 1;
-        let b = self.batch;
-        acts.resize_with(nl, Vec::new);
-        let mut off = 0;
-        for l in 0..nl {
-            let (fan_in, fan_out) = (self.dims[l], self.dims[l + 1]);
-            let w = &params[off..off + fan_in * fan_out];
-            let bias = &params[off + fan_in * fan_out..off + fan_in * fan_out + fan_out];
-            off += fan_in * fan_out + fan_out;
-            let (done, rest) = acts.split_at_mut(l);
-            let input: &[f32] = if l == 0 { x } else { &done[l - 1] };
-            let out = &mut rest[0];
-            out.resize(b * fan_out, 0.0);
-            for n in 0..b {
-                let row = &input[n * fan_in..(n + 1) * fan_in];
-                let orow = &mut out[n * fan_out..(n + 1) * fan_out];
-                orow.copy_from_slice(bias);
-                for (i, &xi) in row.iter().enumerate() {
-                    if xi != 0.0 {
-                        let wrow = &w[i * fan_out..(i + 1) * fan_out];
-                        for (o, &wij) in orow.iter_mut().zip(wrow.iter()) {
-                            *o += xi * wij;
-                        }
-                    }
-                }
-                if l + 1 < nl {
-                    for o in orow.iter_mut() {
-                        *o = o.max(0.0);
-                    }
-                }
-            }
-        }
-    }
-
-    /// Mean softmax cross-entropy + per-logit gradient (∂loss/∂logits).
-    fn softmax_xent(&self, logits: &[f32], labels: &[i32], dlogits: &mut [f32]) -> f32 {
-        let (b, c) = (self.batch, *self.dims.last().unwrap());
-        let mut loss = 0.0f32;
-        for n in 0..b {
-            let row = &logits[n * c..(n + 1) * c];
-            let drow = &mut dlogits[n * c..(n + 1) * c];
-            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut z = 0.0f32;
-            for (d, &v) in drow.iter_mut().zip(row.iter()) {
-                *d = (v - max).exp();
-                z += *d;
-            }
-            let y = labels[n] as usize;
-            loss += z.ln() - (row[y] - max);
-            let inv = 1.0 / (z * b as f32);
-            for (j, d) in drow.iter_mut().enumerate() {
-                *d = *d * inv - if j == y { 1.0 / b as f32 } else { 0.0 };
-            }
-        }
-        loss / b as f32
-    }
-
-    /// One train step: loss + flat gradient written into `grad` (resized
-    /// to d; the caller owns the buffer so repeated steps don't allocate).
-    /// `scratch` is worker-owned and reused across steps — after the first
-    /// call the step performs no heap allocation.
-    pub fn train_step_into(
-        &self,
-        params: &[f32],
-        x: &BatchData,
-        y: &BatchData,
-        grad: &mut Vec<f32>,
-        scratch: &mut GradScratch,
-    ) -> Result<f32> {
-        ensure!(params.len() == self.d, "params dim mismatch");
-        let (b, _) = self.check_batch(x, y)?;
-        let BatchData::F32(xv) = x else { bail!("x must be f32") };
-        let BatchData::I32(yv) = y else { bail!("y must be i32") };
-        for &label in yv {
-            ensure!((label as usize) < *self.dims.last().unwrap(), "label out of range");
-        }
-
-        let nl = self.dims.len() - 1;
-        let GradScratch { acts, delta, prev, wt } = scratch;
-        self.forward_into(params, xv, acts);
-        let c = self.dims[nl];
-        delta.clear();
-        delta.resize(b * c, 0.0);
-        let loss = self.softmax_xent(&acts[nl - 1], yv, delta);
-
-        grad.clear();
-        grad.resize(self.d, 0.0);
-        // layer offsets (w, b) for the backward walk
-        let mut offs = Vec::with_capacity(nl);
-        let mut off = 0;
-        for l in 0..nl {
-            offs.push(off);
-            off += self.dims[l] * self.dims[l + 1] + self.dims[l + 1];
-        }
-
-        for l in (0..nl).rev() {
-            let (fan_in, fan_out) = (self.dims[l], self.dims[l + 1]);
-            let woff = offs[l];
-            let boff = woff + fan_in * fan_out;
-            let input: &[f32] = if l == 0 { xv } else { &acts[l - 1] };
-
-            // dW[i,j] = Σ_n a[n,i]·δ[n,j];  db[j] = Σ_n δ[n,j]
-            for n in 0..b {
-                let arow = &input[n * fan_in..(n + 1) * fan_in];
-                let drow = &delta[n * fan_out..(n + 1) * fan_out];
-                for (i, &ai) in arow.iter().enumerate() {
-                    if ai != 0.0 {
-                        let grow = &mut grad[woff + i * fan_out..woff + (i + 1) * fan_out];
-                        for (g, &dj) in grow.iter_mut().zip(drow.iter()) {
-                            *g += ai * dj;
-                        }
-                    }
-                }
-                let gb = &mut grad[boff..boff + fan_out];
-                for (g, &dj) in gb.iter_mut().zip(drow.iter()) {
-                    *g += dj;
-                }
-            }
-
-            // δ_prev[n,i] = relu'(a[n,i]) · Σ_j W[i,j]·δ[n,j]. W is cached
-            // transposed once per layer so the per-sample inner walk is a
-            // contiguous axpy over Wᵀ rows (length fan_in) instead of b
-            // strided column reductions; the j-ascending accumulation
-            // order — and therefore every f32 sum — is unchanged.
-            if l > 0 {
-                let w = &params[woff..woff + fan_in * fan_out];
-                wt.clear();
-                wt.resize(fan_out * fan_in, 0.0);
-                for i in 0..fan_in {
-                    let wrow = &w[i * fan_out..(i + 1) * fan_out];
-                    for (j, &wij) in wrow.iter().enumerate() {
-                        wt[j * fan_in + i] = wij;
-                    }
-                }
-                prev.clear();
-                prev.resize(b * fan_in, 0.0);
-                for n in 0..b {
-                    let drow = &delta[n * fan_out..(n + 1) * fan_out];
-                    let prow = &mut prev[n * fan_in..(n + 1) * fan_in];
-                    for (j, &dj) in drow.iter().enumerate() {
-                        let wtrow = &wt[j * fan_in..(j + 1) * fan_in];
-                        for (p, &wji) in prow.iter_mut().zip(wtrow.iter()) {
-                            *p += wji * dj;
-                        }
-                    }
-                    // relu' mask: zero where the forward activation was
-                    // clamped (matches the branchy reference, which never
-                    // accumulated those entries)
-                    let arow = &input[n * fan_in..(n + 1) * fan_in];
-                    for (p, &ai) in prow.iter_mut().zip(arow.iter()) {
-                        if ai <= 0.0 {
-                            *p = 0.0;
-                        }
-                    }
-                }
-                std::mem::swap(&mut *delta, &mut *prev);
-            }
-        }
-        Ok(loss)
-    }
-
-    /// Eval step: (mean loss, top-1 accuracy).
-    pub fn eval_step(&self, params: &[f32], x: &BatchData, y: &BatchData) -> Result<(f32, f32)> {
-        ensure!(params.len() == self.d, "params dim mismatch");
-        let (b, _) = self.check_batch(x, y)?;
-        let BatchData::F32(xv) = x else { bail!("x must be f32") };
-        let BatchData::I32(yv) = y else { bail!("y must be i32") };
-        for &label in yv {
-            ensure!((label as usize) < *self.dims.last().unwrap(), "label out of range");
-        }
-        let nl = self.dims.len() - 1;
-        let mut acts = Vec::new();
-        self.forward_into(params, xv, &mut acts);
-        let logits = &acts[nl - 1];
-        let c = self.dims[nl];
-        let mut scratch = vec![0.0f32; b * c];
-        let loss = self.softmax_xent(logits, yv, &mut scratch);
-        let mut correct = 0usize;
-        for n in 0..b {
-            let row = &logits[n * c..(n + 1) * c];
-            let mut best = (0usize, f32::NEG_INFINITY);
-            for (j, &v) in row.iter().enumerate() {
-                if v > best.1 {
-                    best = (j, v);
-                }
-            }
-            if best.0 == yv[n] as usize {
-                correct += 1;
-            }
-        }
-        Ok((loss, correct as f32 / b as f32))
-    }
-}
+// ---------------------------------------------------------------------------
+// apply / compress emulation (unchanged contract)
+// ---------------------------------------------------------------------------
 
 /// Host emulation of the fused momentum-SGD apply artifact:
 /// m' = mu·m + agg, p' = p − m', over padded buffers.
@@ -455,17 +1552,29 @@ pub fn compress_layer_bucket_into(
 mod tests {
     use super::*;
 
-    fn toy() -> (NativeMlp, ModelManifest) {
+    fn toy() -> (NativeNet, ModelManifest) {
         let mm = mlp_manifest("toy", 6, &[8], 3, 4);
-        (NativeMlp::from_manifest(&mm).unwrap(), mm)
+        (NativeNet::from_manifest(&mm).unwrap(), mm)
     }
 
     fn toy_batch(mm: &ModelManifest, seed: u64) -> (BatchData, BatchData) {
         let mut rng = Rng::new(seed);
-        let mut xs = vec![0.0f32; mm.x.elements()];
-        rng.fill_normal(&mut xs, 1.0);
-        let ys: Vec<i32> = (0..mm.y.elements()).map(|_| rng.below(mm.classes) as i32).collect();
-        (BatchData::F32(xs), BatchData::I32(ys))
+        match mm.x.dtype {
+            DType::F32 => {
+                let mut xs = vec![0.0f32; mm.x.elements()];
+                rng.fill_normal(&mut xs, 1.0);
+                let ys: Vec<i32> =
+                    (0..mm.y.elements()).map(|_| rng.below(mm.classes) as i32).collect();
+                (BatchData::F32(xs), BatchData::I32(ys))
+            }
+            DType::I32 => {
+                let xs: Vec<i32> =
+                    (0..mm.x.elements()).map(|_| rng.below(mm.classes) as i32).collect();
+                let ys: Vec<i32> =
+                    (0..mm.y.elements()).map(|_| rng.below(mm.classes) as i32).collect();
+                (BatchData::I32(xs), BatchData::I32(ys))
+            }
+        }
     }
 
     #[test]
@@ -473,10 +1582,48 @@ mod tests {
         let man = native_manifest(42);
         for mm in man.models.values() {
             mm.validate().unwrap();
-            let m = NativeMlp::from_manifest(mm).unwrap();
+            let m = NativeNet::from_manifest(mm).unwrap();
             assert_eq!(m.init_params(42).len(), mm.d);
         }
-        assert!(man.models.contains_key("mlp") && man.models.contains_key("mlp_deep"));
+        for name in ["mlp", "mlp_deep", "convnet", "convnet_deep", "rnn"] {
+            assert!(man.models.contains_key(name), "zoo misses {name}");
+        }
+    }
+
+    #[test]
+    fn zoo_layer_tables_are_heterogeneous() {
+        // the point of the conv/rnn zoo: flops-per-param must differ by
+        // orders of magnitude across one model's layers (mlp's never did)
+        let man = native_manifest(1);
+        for name in ["convnet", "convnet_deep"] {
+            let mm = &man.models[name];
+            let fpp: Vec<f64> =
+                mm.layers.iter().map(|l| l.fwd_flops / l.size as f64).collect();
+            let (lo, hi) = fpp
+                .iter()
+                .fold((f64::INFINITY, 0.0f64), |(lo, hi), &v| (lo.min(v), hi.max(v)));
+            assert!(hi / lo > 10.0, "{name}: flops/param spread {lo}..{hi} too flat");
+        }
+    }
+
+    #[test]
+    fn spec_mismatch_manifest_rejected() {
+        // a manifest that borrows a zoo name but not its layout must error,
+        // not silently execute the wrong math
+        let mut mm = spec_manifest(&zoo_spec("convnet").unwrap()).unwrap();
+        mm.layers[0].name = "not_conv1".into();
+        assert!(NativeNet::from_manifest(&mm).is_err());
+        // and an invalid spec errors instead of panicking
+        let bad = ModelSpec {
+            name: "bad".into(),
+            batch: 2,
+            input: InputKind::Image { h: 8, w: 8, c: 1 },
+            classes: 3,
+            metric: Metric::Accuracy,
+            layers: vec![LayerSpec::MaxPool { k: 3 }, LayerSpec::Dense { out: 3 }],
+        };
+        assert!(spec_manifest(&bad).is_err());
+        assert!(NativeNet::from_spec(&bad).is_err());
     }
 
     #[test]
@@ -488,7 +1635,7 @@ mod tests {
         let mut gs = GradScratch::default();
         let loss0 = m.train_step_into(&params, &x, &y, &mut grad, &mut gs).unwrap();
         assert!(loss0.is_finite());
-        // central differences on a few coordinates, f64-refined via eps
+        // central differences on a few coordinates
         let mut rng = Rng::new(3);
         for _ in 0..12 {
             let i = rng.below(mm.d);
@@ -510,21 +1657,25 @@ mod tests {
 
     #[test]
     fn train_step_deterministic_and_buffer_reusing() {
-        let (m, mm) = toy();
-        let params = m.init_params(4);
-        let (x, y) = toy_batch(&mm, 5);
-        let mut g1 = Vec::new();
-        let mut g2 = vec![9.0f32; 3]; // wrong-size buffer must be fixed up
-        // fresh vs reused (dirty) scratch must not change a single bit
-        let mut gs1 = GradScratch::default();
-        let mut gs2 = GradScratch::default();
-        m.train_step_into(&params, &x, &y, &mut g2, &mut gs2).unwrap();
-        let l1 = m.train_step_into(&params, &x, &y, &mut g1, &mut gs1).unwrap();
-        let l2 = m.train_step_into(&params, &x, &y, &mut g2, &mut gs2).unwrap();
-        assert_eq!(l1, l2);
-        assert_eq!(g1, g2);
-        assert!(g1.iter().any(|&g| g != 0.0));
-        assert!(g1.iter().all(|g| g.is_finite()));
+        let man = native_manifest(4);
+        for name in ["mlp", "convnet", "rnn"] {
+            let mm = &man.models[name];
+            let m = NativeNet::from_manifest(mm).unwrap();
+            let params = m.init_params(4);
+            let (x, y) = toy_batch(mm, 5);
+            let mut g1 = Vec::new();
+            let mut g2 = vec![9.0f32; 3]; // wrong-size buffer must be fixed up
+            // fresh vs reused (dirty) scratch must not change a single bit
+            let mut gs1 = GradScratch::default();
+            let mut gs2 = GradScratch::default();
+            m.train_step_into(&params, &x, &y, &mut g2, &mut gs2).unwrap();
+            let l1 = m.train_step_into(&params, &x, &y, &mut g1, &mut gs1).unwrap();
+            let l2 = m.train_step_into(&params, &x, &y, &mut g2, &mut gs2).unwrap();
+            assert_eq!(l1, l2, "{name}");
+            assert_eq!(g1, g2, "{name}");
+            assert!(g1.iter().any(|&g| g != 0.0), "{name}: zero grad");
+            assert!(g1.iter().all(|g| g.is_finite()), "{name}: non-finite grad");
+        }
     }
 
     #[test]
@@ -546,6 +1697,112 @@ mod tests {
     }
 
     #[test]
+    fn sgd_overfits_conv_and_rnn_batches() {
+        // the new layer kinds train end-to-end: plain SGD on one fixed
+        // batch must cut the loss decisively for every heterogeneous model
+        let man = native_manifest(8);
+        for (name, lr, iters, factor) in
+            [("convnet", 0.2f32, 40, 0.7f32), ("rnn", 0.3, 60, 0.7)]
+        {
+            let mm = &man.models[name];
+            let m = NativeNet::from_manifest(mm).unwrap();
+            let mut params = m.init_params(8);
+            let (x, y) = if name == "rnn" {
+                // identity LM task (predict the current token): learnable
+                // through wx alone, so the drop isolates layer correctness
+                // from task difficulty
+                let (x, _) = toy_batch(mm, 9);
+                let BatchData::I32(xs) = &x else { unreachable!() };
+                let y = BatchData::I32(xs.clone());
+                (x, y)
+            } else {
+                toy_batch(mm, 9)
+            };
+            let mut grad = Vec::new();
+            let mut gs = GradScratch::default();
+            let first = m.train_step_into(&params, &x, &y, &mut grad, &mut gs).unwrap();
+            let mut last = first;
+            for _ in 0..iters {
+                last = m.train_step_into(&params, &x, &y, &mut grad, &mut gs).unwrap();
+                for (p, g) in params.iter_mut().zip(grad.iter()) {
+                    *p -= lr * g;
+                }
+            }
+            assert!(last.is_finite() && last < factor * first, "{name}: loss {first} -> {last}");
+        }
+    }
+
+    // NOTE: im2col-vs-direct-convolution equivalence (forward AND
+    // backward, random shapes/strides/paddings) lives in
+    // rust/tests/proptest_invariants.rs — one naive reference, not two.
+
+    #[test]
+    fn maxpool_routes_gradient_to_argmax() {
+        let (h, w, c, k) = (4usize, 4usize, 1usize, 2usize);
+        let mut x = vec![0.0f32; h * w];
+        x[5] = 3.0; // window (0,0): max at (1,1)
+        x[2] = 7.0; // window (0,1): max at (0,2)
+        let mut out = vec![0.0f32; 4];
+        maxpool_forward(h, w, c, k, &x, 1, &mut out);
+        assert_eq!(out[0], 3.0);
+        assert_eq!(out[1], 7.0);
+        let delta = vec![1.0f32, 2.0, 4.0, 8.0];
+        let mut dx = vec![0.0f32; h * w];
+        maxpool_backward(h, w, c, k, &x, 1, &delta, &mut dx);
+        assert_eq!(dx[5], 1.0);
+        assert_eq!(dx[2], 2.0);
+        assert_eq!(dx.iter().filter(|&&v| v != 0.0).count(), 4);
+        let s: f32 = dx.iter().sum();
+        assert_eq!(s, 15.0, "pooling neither duplicates nor drops gradient mass");
+    }
+
+    #[test]
+    fn elman_zero_weights_give_bias_states() {
+        let (t, i, h) = (3usize, 2usize, 2usize);
+        let wx = vec![0.0f32; i * h];
+        let wh = vec![0.0f32; h * h];
+        let bias = vec![0.25f32, -0.5];
+        let x = vec![1.0f32; t * i];
+        let mut out = vec![0.0f32; t * h];
+        elman_forward(t, i, h, &wx, &wh, &bias, &x, 1, &mut out);
+        for s in 0..t {
+            assert!((out[s * h] - 0.25f32.tanh()).abs() < 1e-6);
+            assert!((out[s * h + 1] - (-0.5f32).tanh()).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn train_step_rejects_bad_tokens_and_labels() {
+        let man = native_manifest(3);
+        let mm = &man.models["rnn"];
+        let m = NativeNet::from_manifest(mm).unwrap();
+        let params = m.init_params(3);
+        let mut grad = Vec::new();
+        let mut gs = GradScratch::default();
+        let xs = vec![0i32; mm.x.elements()];
+        let mut ys = vec![0i32; mm.y.elements()];
+        ys[0] = mm.classes as i32; // out of range
+        let r = m.train_step_into(
+            &params,
+            &BatchData::I32(xs.clone()),
+            &BatchData::I32(ys),
+            &mut grad,
+            &mut gs,
+        );
+        assert!(r.is_err());
+        let mut xs_bad = xs;
+        xs_bad[0] = mm.classes as i32;
+        let r = m.train_step_into(
+            &params,
+            &BatchData::I32(xs_bad),
+            &BatchData::I32(vec![0i32; mm.y.elements()]),
+            &mut grad,
+            &mut gs,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
     fn eval_metric_is_accuracy_in_range() {
         let (m, mm) = toy();
         let params = m.init_params(8);
@@ -553,6 +1810,13 @@ mod tests {
         let (loss, acc) = m.eval_step(&params, &x, &y).unwrap();
         assert!(loss.is_finite() && loss > 0.0);
         assert!((0.0..=1.0).contains(&acc));
+        // LM metric convention: metric == loss
+        let man = native_manifest(8);
+        let rm = &man.models["rnn"];
+        let rn = NativeNet::from_manifest(rm).unwrap();
+        let (x, y) = toy_batch(rm, 10);
+        let (loss, metric) = rn.eval_metric(&rn.init_params(8), &x, &y, rm.metric).unwrap();
+        assert_eq!(loss, metric);
     }
 
     #[test]

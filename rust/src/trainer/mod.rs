@@ -14,6 +14,12 @@
 //! optional), so convergence differences isolate the sparsification
 //! scheme — the paper's Fig. 3 / Table 1 experiment design.
 //!
+//! The trainer is layer-KIND agnostic: it walks the manifest's flat
+//! `(offset, size)` layer table, so the heterogeneous native zoo (im2col
+//! convs, pooling, BPTT recurrence — one fused tensor per block) streams
+//! through the same compression, reduction, merge-buffer and adaptive
+//! paths as the MLPs, with no trainer-side special cases.
+//!
 //! ## Hot-loop structure (DESIGN.md §Threading-model, §Streaming-overlap)
 //!
 //! Each iteration runs three logical phases:
@@ -55,7 +61,7 @@ use crate::collectives::{dense::ring_allreduce_mean, sparse_agg, NetworkModel};
 use crate::config::TrainConfig;
 use crate::data::Synthetic;
 use crate::metrics::{CurveRecorder, DeltaMonitor};
-use crate::models::{ModelProfile, DEVICE_FLOPS};
+use crate::models::ModelProfile;
 use crate::pipeline::desim::{simulate, Schedule, SimParams};
 use crate::pipeline::merge::{MergeBuffer, MergedGroup};
 use crate::runtime::{GradJob, Metric, ModelRuntime, Runtime};
@@ -260,6 +266,10 @@ pub struct Trainer {
     /// the configured α–β interconnect at `cfg.workers` — prices Eq. 18
     /// selection and the DES, replacing the old hard-coded `gige_16()`
     net: NetworkModel,
+    /// the runtime backend's synthetic device speed (flops/s) — prices
+    /// the startup Eq. 18 selection and the DES compute profile (native
+    /// ≈ 1e9 scalar-rust flops, PJRT accelerator-class 1e12)
+    device_flops: f64,
     /// online measured-timing accumulator; `Some` only on the adaptive
     /// LAGS path with `--reselect-every N > 0`
     online: Option<MeasuredProfile>,
@@ -305,9 +315,10 @@ impl Trainer {
         // select_ratios_manifest). lags ratios runs the same call, so the
         // CLI report and this selection always agree.
         let net = cfg.net.model(cfg.workers);
+        let device_flops = rt.device_flops();
         let ratios: Vec<f64> = if cfg.adaptive && cfg.algorithm == Algorithm::Lags {
             let rc = RatioConfig { c_max: cfg.c_max, ..RatioConfig::default() };
-            adaptive::select_ratios_manifest(mm, DEVICE_FLOPS, &net, &rc)
+            adaptive::select_ratios_manifest(mm, device_flops, &net, &rc)
         } else {
             vec![cfg.compression; mm.layers.len()]
         };
@@ -369,6 +380,7 @@ impl Trainer {
             stream,
             merge: MergeBuffer::new(cfg.merge_bytes.saturating_mul(cfg.workers)),
             net,
+            device_flops,
             online,
             selections,
             reduce_secs: vec![0.0; nl],
@@ -884,7 +896,7 @@ impl Trainer {
     /// profile, the CONFIGURED network and the real worker count —
     /// P = 1 honestly simulates with zero communication).
     pub fn simulated_iteration(&self) -> crate::pipeline::desim::IterationBreakdown {
-        let profile = ModelProfile::from_manifest(&self.model.mm, DEVICE_FLOPS);
+        let profile = ModelProfile::from_manifest(&self.model.mm, self.device_flops);
         let net = self.net;
         let params = match self.cfg.algorithm {
             Algorithm::Dense => SimParams::dense(&profile),

@@ -1,0 +1,264 @@
+//! Gradient-check conformance suite for the native layer zoo.
+//!
+//! Central finite differences against the analytic backward pass, run for
+//! every layer kind in isolation (micro-specs built via the public
+//! [`NativeNet::from_spec`] API) and for every built-in zoo model — so
+//! any future layer work is conformance-tested by construction.
+//!
+//! ## Tolerances (documented, f32 forward path)
+//!
+//! The forward pass is f32, so the finite-difference quotient carries
+//! ~`loss_ulp / (2·eps)` ≈ 1e-4 of rounding noise at `eps = 2e-3`, plus
+//! `O(eps²)` truncation; analytic-vs-fd agreement is therefore asserted
+//! to `2e-3 + 2.5e-2·max(|analytic|, |fd|)` — a relative 2.5% with an
+//! absolute floor, not the 1e-4 a f64 shadow path would allow. ReLU and
+//! MaxPool are piecewise-linear: a probe whose perturbation crosses a
+//! kink (pre-activation or argmax flip within ±eps) legitimately
+//! disagrees, so a bounded number of probes may exceed the tolerance —
+//! at most HALF of any single layer's probes (so a systematically wrong
+//! layer gradient, which fails all of its own probes, always trips the
+//! assert no matter how many layers the model has) and at most
+//! probes/8 (min 2) model-wide. The directional-derivative check (one
+//! fd along a random direction vs `g·v`) averages the per-coordinate
+//! noise and must always pass.
+
+use lags::runtime::native::{
+    native_manifest, spec_manifest, GradScratch, InputKind, LayerSpec, ModelSpec, NativeNet,
+};
+use lags::runtime::{BatchData, DType, Metric, ModelManifest};
+use lags::util::rng::Rng;
+
+const EPS: f64 = 2e-3;
+
+fn batch_for(mm: &ModelManifest, seed: u64) -> (BatchData, BatchData) {
+    let mut rng = Rng::new(seed);
+    let x = match mm.x.dtype {
+        DType::F32 => {
+            let mut xs = vec![0.0f32; mm.x.elements()];
+            rng.fill_normal(&mut xs, 1.0);
+            BatchData::F32(xs)
+        }
+        DType::I32 => {
+            BatchData::I32((0..mm.x.elements()).map(|_| rng.below(mm.classes) as i32).collect())
+        }
+    };
+    let y =
+        BatchData::I32((0..mm.y.elements()).map(|_| rng.below(mm.classes) as i32).collect());
+    (x, y)
+}
+
+fn loss_at(net: &NativeNet, params: &[f32], x: &BatchData, y: &BatchData) -> f64 {
+    let mut g = Vec::new();
+    let mut s = GradScratch::default();
+    net.train_step_into(params, x, y, &mut g, &mut s).expect("step") as f64
+}
+
+/// Run the conformance check for one (net, manifest) pair: probe every
+/// manifest layer at its strongest-gradient coordinate plus 3 random
+/// coordinates, and one random direction over the whole vector.
+fn gradcheck(tag: &str, net: &NativeNet, mm: &ModelManifest, seed: u64) {
+    let params = net.init_params(seed);
+    let (x, y) = batch_for(mm, seed ^ 0x51ab);
+    let mut grad = Vec::new();
+    let mut gs = GradScratch::default();
+    let loss = net.train_step_into(&params, &x, &y, &mut grad, &mut gs).expect("step");
+    assert!(loss.is_finite() && loss > 0.0, "{tag}: loss {loss}");
+    assert_eq!(grad.len(), mm.d, "{tag}: grad dim");
+    assert!(grad.iter().all(|g| g.is_finite()), "{tag}: non-finite grad");
+
+    // directional derivative: fd along one random direction vs g·v —
+    // aggregates every coordinate, so per-coordinate kink noise washes out
+    let mut rng = Rng::new(seed ^ 0xd1c7);
+    let mut v = vec![0.0f32; mm.d];
+    rng.fill_normal(&mut v, 1.0);
+    let gv: f64 = grad.iter().zip(v.iter()).map(|(&g, &vi)| g as f64 * vi as f64).sum();
+    let deps = 3e-4f64;
+    let mut pp: Vec<f32> = params
+        .iter()
+        .zip(v.iter())
+        .map(|(&p, &vi)| p + (deps as f32) * vi)
+        .collect();
+    let lp = loss_at(net, &pp, &x, &y);
+    for ((q, &p), &vi) in pp.iter_mut().zip(params.iter()).zip(v.iter()) {
+        *q = p - (deps as f32) * vi;
+    }
+    let lm = loss_at(net, &pp, &x, &y);
+    let fd = (lp - lm) / (2.0 * deps);
+    assert!(
+        (fd - gv).abs() <= 2e-3 + 3e-2 * gv.abs().max(fd.abs()),
+        "{tag}: directional derivative {fd} vs g·v {gv}"
+    );
+
+    // per-coordinate probes: each layer's max-|g| coordinate (covers
+    // every tensor kind) + 3 random coordinates per layer. The kink
+    // allowance is PER LAYER (at most half a layer's probes), so a
+    // systematically wrong layer gradient — which fails all of its own
+    // probes — always trips the assert regardless of how many other
+    // layers the model has.
+    let mut failures: Vec<String> = Vec::new();
+    let mut probes = 0usize;
+    for l in &mm.layers {
+        let span = l.offset..l.offset + l.size;
+        let strongest = span
+            .clone()
+            .max_by(|&a, &b| grad[a].abs().partial_cmp(&grad[b].abs()).unwrap())
+            .unwrap();
+        let mut coords = vec![strongest];
+        for _ in 0..3 {
+            coords.push(l.offset + rng.below(l.size));
+        }
+        let layer_probes = coords.len();
+        let mut layer_failures = 0usize;
+        for i in coords {
+            probes += 1;
+            let mut pp = params.clone();
+            pp[i] += EPS as f32;
+            let lp = loss_at(net, &pp, &x, &y);
+            pp[i] = params[i] - EPS as f32;
+            let lm = loss_at(net, &pp, &x, &y);
+            let fd = (lp - lm) / (2.0 * EPS);
+            let an = grad[i] as f64;
+            let tol = 2e-3 + 2.5e-2 * an.abs().max(fd.abs());
+            if (fd - an).abs() > tol {
+                layer_failures += 1;
+                failures.push(format!(
+                    "{tag} layer {} coord {i}: analytic {an} vs fd {fd} (tol {tol})",
+                    l.name
+                ));
+            }
+        }
+        assert!(
+            layer_failures <= layer_probes / 2,
+            "{tag} layer {}: {layer_failures}/{layer_probes} probes failed — \
+             systematically wrong gradient, not kink noise:\n{}",
+            l.name,
+            failures.join("\n")
+        );
+    }
+    let allowed = (probes / 8).max(2); // global kink allowance, see module doc
+    assert!(
+        failures.len() <= allowed,
+        "{tag}: {}/{probes} probes failed (allowed {allowed}):\n{}",
+        failures.len(),
+        failures.join("\n")
+    );
+}
+
+fn check_spec(spec: &ModelSpec, seed: u64) {
+    let mm = spec_manifest(spec).expect("micro spec is valid");
+    mm.validate().expect("spec manifest validates");
+    let net = NativeNet::from_spec(spec).expect("spec resolves");
+    gradcheck(&spec.name, &net, &mm, seed);
+}
+
+// ---- per-layer-kind micro specs -------------------------------------------
+
+#[test]
+fn gradcheck_conv_pool_flatten() {
+    check_spec(
+        &ModelSpec {
+            name: "micro_conv".into(),
+            batch: 3,
+            input: InputKind::Image { h: 6, w: 6, c: 2 },
+            classes: 3,
+            metric: Metric::Accuracy,
+            layers: vec![
+                LayerSpec::Conv { out_ch: 4, k: 3, stride: 1, pad: 1 },
+                LayerSpec::MaxPool { k: 2 },
+                LayerSpec::Flatten,
+                LayerSpec::Dense { out: 3 },
+            ],
+        },
+        11,
+    );
+}
+
+#[test]
+fn gradcheck_conv_strided_no_pad() {
+    check_spec(
+        &ModelSpec {
+            name: "micro_conv_s2".into(),
+            batch: 2,
+            input: InputKind::Image { h: 7, w: 7, c: 1 },
+            classes: 4,
+            metric: Metric::Accuracy,
+            layers: vec![
+                LayerSpec::Conv { out_ch: 3, k: 3, stride: 2, pad: 0 },
+                LayerSpec::Dense { out: 4 },
+            ],
+        },
+        13,
+    );
+}
+
+#[test]
+fn gradcheck_conv_stack_rectangular() {
+    check_spec(
+        &ModelSpec {
+            name: "micro_conv_stack".into(),
+            batch: 2,
+            input: InputKind::Image { h: 8, w: 6, c: 3 },
+            classes: 5,
+            metric: Metric::Accuracy,
+            layers: vec![
+                LayerSpec::Conv { out_ch: 4, k: 3, stride: 1, pad: 1 },
+                LayerSpec::Conv { out_ch: 6, k: 3, stride: 2, pad: 1 },
+                LayerSpec::Flatten,
+                LayerSpec::Dense { out: 8 },
+                LayerSpec::Dense { out: 5 },
+            ],
+        },
+        17,
+    );
+}
+
+#[test]
+fn gradcheck_embed_elman_bptt() {
+    check_spec(
+        &ModelSpec {
+            name: "micro_rnn".into(),
+            batch: 2,
+            input: InputKind::Tokens { t: 5 },
+            classes: 8,
+            metric: Metric::PplLoss,
+            layers: vec![
+                LayerSpec::Embed { dim: 6 },
+                LayerSpec::Elman { hidden: 7 },
+                LayerSpec::Dense { out: 8 },
+            ],
+        },
+        19,
+    );
+}
+
+#[test]
+fn gradcheck_stacked_recurrent() {
+    // two recurrent layers: the BPTT carry must chain through both
+    check_spec(
+        &ModelSpec {
+            name: "micro_rnn2".into(),
+            batch: 2,
+            input: InputKind::Tokens { t: 4 },
+            classes: 6,
+            metric: Metric::PplLoss,
+            layers: vec![
+                LayerSpec::Embed { dim: 5 },
+                LayerSpec::Elman { hidden: 6 },
+                LayerSpec::Elman { hidden: 5 },
+                LayerSpec::Dense { out: 6 },
+            ],
+        },
+        23,
+    );
+}
+
+// ---- every zoo model -------------------------------------------------------
+
+#[test]
+fn gradcheck_all_zoo_models() {
+    let man = native_manifest(42);
+    for (name, mm) in &man.models {
+        let net = NativeNet::from_manifest(mm).expect("zoo model builds");
+        gradcheck(name, &net, mm, 0xbeef ^ mm.d as u64);
+    }
+}

@@ -433,7 +433,7 @@ fn trainer_initial_selection_matches_select_ratios_manifest() {
     let t = Trainer::with_runtime(&rt, c).unwrap();
     let rc = RatioConfig { c_max: 777.0, ..RatioConfig::default() };
     let expect =
-        adaptive::select_ratios_manifest(t.model_manifest(), lags::models::DEVICE_FLOPS, &net, &rc);
+        adaptive::select_ratios_manifest(t.model_manifest(), rt.device_flops(), &net, &rc);
     assert_eq!(t.ratios(), &expect[..]);
     assert_eq!(t.selections().len(), 1, "startup selection recorded");
     // P = 1 adaptively selects all-dense (c = 1), not a phantom 2-worker
@@ -445,6 +445,99 @@ fn trainer_initial_selection_matches_select_ratios_manifest() {
     let d = t1.model_manifest().d;
     let k_total: usize = t1.layer_ks().iter().sum();
     assert_eq!(k_total, d, "all-dense keeps every coordinate");
+}
+
+#[test]
+fn parallel_bit_identical_heterogeneous_zoo() {
+    // the conv and recurrent zoo models ride the SAME determinism
+    // contract as the MLPs: barrier/1-thread is the reference; every
+    // thread count × pipeline mode × compressor must match it bitwise
+    let rt = Arc::new(Runtime::native(91));
+    for (model, workers) in [("convnet", 3usize), ("rnn", 4)] {
+        for comp in [CompressorKind::HostExact, CompressorKind::HostSampled] {
+            let make = |mode: PipelineMode, threads: usize| {
+                let mut c = cfg(model, Algorithm::Lags, 3, workers, threads);
+                c.lr = 0.05;
+                c.compression = 10.0;
+                c.compressor = comp;
+                c.pipeline = mode;
+                c
+            };
+            let (l0, p0, s0) = run_traced(&rt, make(PipelineMode::Barrier, 1));
+            for threads in [2usize, 4] {
+                for mode in [PipelineMode::Barrier, PipelineMode::Overlap] {
+                    let (l, p, s) = run_traced(&rt, make(mode, threads));
+                    let tag = format!("{model} {comp:?} {} threads={threads}", mode.name());
+                    assert_eq!(l0, l, "losses diverged: {tag}");
+                    assert_eq!(p0, p, "params diverged: {tag}");
+                    assert_eq!(s0, s, "msg stats diverged: {tag}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn heterogeneous_models_converge_end_to_end() {
+    let rt = Arc::new(Runtime::native(93));
+    // convnet: every algorithm drops the loss on the image-template task
+    for alg in [Algorithm::Dense, Algorithm::Slgs, Algorithm::Lags] {
+        let mut c = cfg("convnet", alg, 25, 2, 2);
+        c.lr = 0.05;
+        c.compression = 10.0;
+        c.eval_every = 25;
+        c.eval_batches = 2;
+        let mut t = Trainer::with_runtime(&rt, c).unwrap();
+        let first = t.step().unwrap();
+        let r = t.run().unwrap();
+        assert!(
+            r.final_loss < first,
+            "convnet {}: loss did not drop ({first} -> {})",
+            alg.name(),
+            r.final_loss
+        );
+        assert_eq!(r.metric_name, "accuracy");
+        assert!(r.final_metric.is_finite());
+    }
+    // rnn: next-token loss falls from ~ln(vocab) toward the chain's
+    // entropy floor; the report carries the LM metric convention
+    let mut c = cfg("rnn", Algorithm::Lags, 60, 2, 2);
+    c.lr = 0.1;
+    c.compression = 10.0;
+    c.eval_every = 60;
+    c.eval_batches = 2;
+    let mut t = Trainer::with_runtime(&rt, c).unwrap();
+    let first = t.step().unwrap();
+    let r = t.run().unwrap();
+    assert!(r.final_loss < first, "rnn: ppl loss did not drop ({first} -> {})", r.final_loss);
+    assert_eq!(r.metric_name, "ppl_loss");
+    assert!((r.final_metric - r.final_eval_loss).abs() < 1e-6, "LM metric == eval loss");
+}
+
+#[test]
+fn adaptive_selection_and_online_reselection_on_convnet() {
+    // startup Eq. 18 over the heterogeneous table must be non-uniform at
+    // the default network, and the measured-profile reselection path must
+    // run cleanly over fused conv/dense tensors
+    let rt = Arc::new(Runtime::native(95));
+    let mut c = cfg("convnet", Algorithm::Lags, 4, 4, 2);
+    c.lr = 0.05;
+    c.adaptive = true;
+    c.reselect_every = 2;
+    let mut t = Trainer::with_runtime(&rt, c).unwrap();
+    let initial = t.ratios().to_vec();
+    let (lo, hi) =
+        initial.iter().fold((f64::INFINITY, 0.0f64), |(lo, hi), &r| (lo.min(r), hi.max(r)));
+    assert!(hi > 2.0 * lo, "convnet startup selection should be non-uniform: {initial:?}");
+    for _ in 0..4 {
+        t.step().unwrap();
+    }
+    assert!(t.selections().len() >= 2, "online reselection ran: {:?}", t.selections().len());
+    for ((k, &ratio), l) in
+        t.layer_ks().iter().zip(t.ratios().iter()).zip(t.model_manifest().layers.iter())
+    {
+        assert_eq!(*k, ((l.size as f64 / ratio).ceil() as usize).clamp(1, l.size));
+    }
 }
 
 #[test]

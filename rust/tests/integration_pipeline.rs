@@ -1,13 +1,18 @@
 //! Pipeline-level integration: DES reproductions of the paper's headline
-//! timing claims + merge buffer numerics + adaptive ratios end-to-end.
+//! timing claims + merge buffer numerics + adaptive ratios end-to-end +
+//! the streaming/merge bit-identity contract on the heterogeneous zoo.
 
 use lags::adaptive::{perf_model, ratio, RatioConfig};
-use lags::collectives::NetworkModel;
+use lags::collectives::{NetworkModel, PipelineMode};
+use lags::config::TrainConfig;
 use lags::models::zoo;
 use lags::pipeline::desim::{simulate, Schedule, SimParams};
 use lags::pipeline::merge::MergeBuffer;
+use lags::runtime::Runtime;
 use lags::sparsify::sparse::SparseVec;
+use lags::trainer::{Algorithm, Trainer};
 use lags::util::rng::Rng;
+use std::sync::Arc;
 
 fn net16() -> NetworkModel {
     NetworkModel::gige_16()
@@ -171,6 +176,54 @@ fn fig1_comm_start_ordering() {
     // dense pipelined also overlaps
     let dense = simulate(&m, &net16(), Schedule::DensePipelined, &SimParams::dense(&m));
     assert!(dense.events.first().unwrap().start < comp_end);
+}
+
+/// The streaming overlap + §5 merge buffer work UNCHANGED on the conv
+/// and recurrent zoo models: overlap ≡ barrier, merge on ≡ merge off
+/// (losses/params), threads a pure perf knob — for every algorithm.
+#[test]
+fn heterogeneous_zoo_pipeline_and_merge_bit_identity() {
+    let rt = Arc::new(Runtime::native(97));
+    for model in ["convnet", "rnn"] {
+        for alg in [Algorithm::Dense, Algorithm::Slgs, Algorithm::Lags] {
+            let run = |mode: PipelineMode, threads: usize, merge_bytes: usize| {
+                let mut c = TrainConfig::default_for(model);
+                c.algorithm = alg;
+                c.workers = 3;
+                c.threads = threads;
+                c.steps = 3;
+                c.lr = 0.05;
+                c.compression = 10.0;
+                c.eval_every = 0;
+                c.pipeline = mode;
+                c.merge_bytes = merge_bytes;
+                let mut t = Trainer::with_runtime(&rt, c).expect("trainer");
+                let mut losses = Vec::new();
+                for _ in 0..3 {
+                    losses.push(t.step().expect("step"));
+                }
+                (losses, t.params().to_vec(), t.msg_stats().clone())
+            };
+            let (l0, p0, s0) = run(PipelineMode::Barrier, 1, 0);
+            for (mode, threads) in [
+                (PipelineMode::Overlap, 1usize),
+                (PipelineMode::Overlap, 4),
+                (PipelineMode::Barrier, 4),
+            ] {
+                let (l, p, s) = run(mode, threads, 0);
+                let tag = format!("{model} {} {} threads={threads}", alg.name(), mode.name());
+                assert_eq!(l0, l, "losses diverged: {tag}");
+                assert_eq!(p0, p, "params diverged: {tag}");
+                assert_eq!(s0, s, "msg stats diverged: {tag}");
+            }
+            // a merge buffer big enough to group a whole step changes
+            // message granularity only — numerics stay bit-identical
+            let (lm, pm, sm) = run(PipelineMode::Overlap, 2, 1 << 20);
+            assert_eq!(l0, lm, "{model} {}: merge changed losses", alg.name());
+            assert_eq!(p0, pm, "{model} {}: merge changed params", alg.name());
+            assert_eq!(s0.total_bytes, sm.total_bytes, "{model} {}: merge changed bytes", alg.name());
+        }
+    }
 }
 
 /// The bound 1 + t_b/(t_f+t_b) from the paper's §Bound discussion caps all

@@ -16,6 +16,9 @@ use lags::collectives::{dense, sparse_agg, NetworkModel};
 use lags::config::TrainConfig;
 use lags::models::{zoo, LayerProfile, ModelProfile};
 use lags::pipeline::desim::{simulate, Schedule, SimParams};
+use lags::runtime::native::{
+    conv2d_backward, conv2d_forward, elman_backward, elman_forward, ConvDims,
+};
 use lags::runtime::Runtime;
 use lags::sparsify::{randk, sparse::SparseVec, topk, ErrorFeedback};
 use lags::trainer::{Algorithm, Trainer};
@@ -593,6 +596,265 @@ fn prop_warmup_k_monotone_lands_on_ks() {
                     "layer {li}: k_at landed on {k_land}, ks[li] = {} (warmup {warmup})",
                     t.layer_ks()[li]
                 ));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 8. Native layer kinds: im2col conv ≡ direct convolution, BPTT ≡ unrolled
+// ---------------------------------------------------------------------------
+
+/// Draw a random valid conv geometry (small enough that the O(everything)
+/// naive reference stays cheap).
+fn rand_conv_dims(rng: &mut Rng) -> ConvDims {
+    loop {
+        let d = ConvDims {
+            h: 3 + rng.below(4),
+            w: 3 + rng.below(4),
+            cin: 1 + rng.below(3),
+            cout: 1 + rng.below(4),
+            k: 1 + rng.below(3),
+            stride: 1 + rng.below(2),
+            pad: rng.below(3),
+        };
+        if d.validate().is_ok() {
+            return d;
+        }
+    }
+}
+
+#[test]
+fn prop_im2col_conv_forward_matches_naive() {
+    // the im2col GEMM must equal a direct 7-loop convolution on random
+    // shapes, strides and paddings (f64 reference, f32-rounding tolerance)
+    let cases = Config { cases: 48, ..Config::default() };
+    check("im2col-forward", cases, 1, 2, |c: &mut Case| {
+        let d = rand_conv_dims(&mut c.rng);
+        let batch = c.size;
+        let x = randvec(&mut c.rng, batch * d.in_len());
+        let w = randvec(&mut c.rng, d.weight_len());
+        let bias = randvec(&mut c.rng, d.cout);
+        let mut col = Vec::new();
+        let mut out = vec![0.0f32; batch * d.out_len()];
+        conv2d_forward(&d, &w, &bias, &x, batch, &mut col, &mut out, false);
+        let (ho, wo) = (d.out_h(), d.out_w());
+        for n in 0..batch {
+            let xn = &x[n * d.in_len()..(n + 1) * d.in_len()];
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    for co in 0..d.cout {
+                        let mut acc = bias[co] as f64;
+                        for ky in 0..d.k {
+                            for kx in 0..d.k {
+                                let iy = (oy * d.stride + ky) as isize - d.pad as isize;
+                                let ix = (ox * d.stride + kx) as isize - d.pad as isize;
+                                if iy < 0
+                                    || ix < 0
+                                    || iy as usize >= d.h
+                                    || ix as usize >= d.w
+                                {
+                                    continue;
+                                }
+                                for ci in 0..d.cin {
+                                    let xv =
+                                        xn[((iy as usize) * d.w + ix as usize) * d.cin + ci];
+                                    let wv = w[((ky * d.k + kx) * d.cin + ci) * d.cout + co];
+                                    acc += xv as f64 * wv as f64;
+                                }
+                            }
+                        }
+                        let got = out[((n * ho + oy) * wo + ox) * d.cout + co] as f64;
+                        if (got - acc).abs() > 1e-4 * (1.0 + acc.abs()) {
+                            return Err(format!(
+                                "{d:?} n={n} ({oy},{ox},{co}): im2col {got} vs naive {acc}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_conv_backward_matches_naive() {
+    // dW, db AND dX from the im2col backward must match the direct
+    // convolution-gradient loops on random geometry
+    let cases = Config { cases: 32, ..Config::default() };
+    check("im2col-backward", cases, 1, 2, |c: &mut Case| {
+        let d = rand_conv_dims(&mut c.rng);
+        let batch = c.size;
+        let (ho, wo) = (d.out_h(), d.out_w());
+        let x = randvec(&mut c.rng, batch * d.in_len());
+        let w = randvec(&mut c.rng, d.weight_len());
+        let delta = randvec(&mut c.rng, batch * d.out_len());
+        let (mut col, mut dcol) = (Vec::new(), Vec::new());
+        let mut dw = vec![0.0f32; d.weight_len()];
+        let mut db = vec![0.0f32; d.cout];
+        let mut dx = vec![0.0f32; batch * d.in_len()];
+        conv2d_backward(
+            &d, &w, &x, batch, &delta, &mut col, &mut dcol, &mut dw, &mut db,
+            Some(&mut dx[..]),
+        );
+        // f64 references
+        let mut rdw = vec![0.0f64; d.weight_len()];
+        let mut rdb = vec![0.0f64; d.cout];
+        let mut rdx = vec![0.0f64; batch * d.in_len()];
+        for n in 0..batch {
+            let xn = &x[n * d.in_len()..(n + 1) * d.in_len()];
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    for co in 0..d.cout {
+                        let dv = delta[((n * ho + oy) * wo + ox) * d.cout + co] as f64;
+                        rdb[co] += dv;
+                        for ky in 0..d.k {
+                            for kx in 0..d.k {
+                                let iy = (oy * d.stride + ky) as isize - d.pad as isize;
+                                let ix = (ox * d.stride + kx) as isize - d.pad as isize;
+                                if iy < 0
+                                    || ix < 0
+                                    || iy as usize >= d.h
+                                    || ix as usize >= d.w
+                                {
+                                    continue;
+                                }
+                                for ci in 0..d.cin {
+                                    let xi = ((iy as usize) * d.w + ix as usize) * d.cin + ci;
+                                    let q = (ky * d.k + kx) * d.cin + ci;
+                                    rdw[q * d.cout + co] += xn[xi] as f64 * dv;
+                                    rdx[n * d.in_len() + xi] +=
+                                        w[q * d.cout + co] as f64 * dv;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let close = |a: f32, b: f64| (a as f64 - b).abs() <= 1e-4 + 1e-3 * b.abs();
+        for (i, (&a, &b)) in dw.iter().zip(rdw.iter()).enumerate() {
+            if !close(a, b) {
+                return Err(format!("{d:?} dW[{i}]: {a} vs {b}"));
+            }
+        }
+        for (i, (&a, &b)) in db.iter().zip(rdb.iter()).enumerate() {
+            if !close(a, b) {
+                return Err(format!("{d:?} db[{i}]: {a} vs {b}"));
+            }
+        }
+        for (i, (&a, &b)) in dx.iter().zip(rdx.iter()).enumerate() {
+            if !close(a, b) {
+                return Err(format!("{d:?} dX[{i}]: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_elman_bptt_matches_unrolled_reference() {
+    // the linear-time carry BPTT must equal the O(t²) fully-unrolled
+    // graph: for every output timestep, walk the chain back explicitly
+    // (f64 dense reference, no carry, no sparsity skips)
+    let cases = Config { cases: 32, ..Config::default() };
+    check("elman-bptt-unrolled", cases, 1, 2, |c: &mut Case| {
+        let batch = c.size;
+        let t = 2 + c.rng.below(4);
+        let in_dim = 1 + c.rng.below(4);
+        let hidden = 1 + c.rng.below(5);
+        let wx = randvec(&mut c.rng, in_dim * hidden);
+        let wh: Vec<f32> =
+            randvec(&mut c.rng, hidden * hidden).iter().map(|v| 0.5 * v).collect();
+        let bias = randvec(&mut c.rng, hidden);
+        let x = randvec(&mut c.rng, batch * t * in_dim);
+        let mut hs = vec![0.0f32; batch * t * hidden];
+        elman_forward(t, in_dim, hidden, &wx, &wh, &bias, &x, batch, &mut hs);
+        let delta = randvec(&mut c.rng, batch * t * hidden);
+
+        let (mut dh, mut carry) = (Vec::new(), Vec::new());
+        let mut dwx = vec![0.0f32; in_dim * hidden];
+        let mut dwh = vec![0.0f32; hidden * hidden];
+        let mut db = vec![0.0f32; hidden];
+        let mut dx = vec![0.0f32; batch * t * in_dim];
+        elman_backward(
+            t, in_dim, hidden, &wx, &wh, &x, &hs, batch, &delta, &mut dh, &mut carry,
+            &mut dwx, &mut dwh, &mut db, Some(&mut dx[..]),
+        );
+
+        // unrolled reference: contributions of each output timestep s_out
+        // to every earlier timestep's parameters, chained explicitly
+        let mut rwx = vec![0.0f64; in_dim * hidden];
+        let mut rwh = vec![0.0f64; hidden * hidden];
+        let mut rb = vec![0.0f64; hidden];
+        let mut rdx = vec![0.0f64; batch * t * in_dim];
+        for n in 0..batch {
+            for s_out in 0..t {
+                let mut g: Vec<f64> = (0..hidden)
+                    .map(|j| delta[(n * t + s_out) * hidden + j] as f64)
+                    .collect();
+                for s in (0..=s_out).rev() {
+                    let hrow = &hs[(n * t + s) * hidden..(n * t + s + 1) * hidden];
+                    let d: Vec<f64> = (0..hidden)
+                        .map(|j| g[j] * (1.0 - (hrow[j] as f64) * (hrow[j] as f64)))
+                        .collect();
+                    let xrow = &x[(n * t + s) * in_dim..(n * t + s + 1) * in_dim];
+                    for i in 0..in_dim {
+                        for j in 0..hidden {
+                            rwx[i * hidden + j] += xrow[i] as f64 * d[j];
+                        }
+                    }
+                    if s > 0 {
+                        let hprev = &hs[(n * t + s - 1) * hidden..(n * t + s) * hidden];
+                        for j0 in 0..hidden {
+                            for j in 0..hidden {
+                                rwh[j0 * hidden + j] += hprev[j0] as f64 * d[j];
+                            }
+                        }
+                    }
+                    for j in 0..hidden {
+                        rb[j] += d[j];
+                    }
+                    for i in 0..in_dim {
+                        let mut acc = 0.0f64;
+                        for j in 0..hidden {
+                            acc += wx[i * hidden + j] as f64 * d[j];
+                        }
+                        rdx[(n * t + s) * in_dim + i] += acc;
+                    }
+                    if s > 0 {
+                        let mut gnext = vec![0.0f64; hidden];
+                        for (j0, gn) in gnext.iter_mut().enumerate() {
+                            for j in 0..hidden {
+                                *gn += wh[j0 * hidden + j] as f64 * d[j];
+                            }
+                        }
+                        g = gnext;
+                    }
+                }
+            }
+        }
+        let close = |a: f32, b: f64| (a as f64 - b).abs() <= 1e-4 + 2e-3 * b.abs();
+        for (i, (&a, &b)) in dwx.iter().zip(rwx.iter()).enumerate() {
+            if !close(a, b) {
+                return Err(format!("t={t} i={in_dim} h={hidden} dWx[{i}]: {a} vs {b}"));
+            }
+        }
+        for (i, (&a, &b)) in dwh.iter().zip(rwh.iter()).enumerate() {
+            if !close(a, b) {
+                return Err(format!("t={t} dWh[{i}]: {a} vs {b}"));
+            }
+        }
+        for (i, (&a, &b)) in db.iter().zip(rb.iter()).enumerate() {
+            if !close(a, b) {
+                return Err(format!("t={t} db[{i}]: {a} vs {b}"));
+            }
+        }
+        for (i, (&a, &b)) in dx.iter().zip(rdx.iter()).enumerate() {
+            if !close(a, b) {
+                return Err(format!("t={t} dX[{i}]: {a} vs {b}"));
             }
         }
         Ok(())
