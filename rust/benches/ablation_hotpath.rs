@@ -1,5 +1,8 @@
 //! Hot-path ablations (DESIGN.md §Design-choices + EXPERIMENTS.md §Perf):
 //!
+//!   * naive (pre-kernel branchy loop) vs blocked GEMM at the zoo's
+//!     actual Dense/Conv shapes — the `gemm_{naive,blocked}` family,
+//!     snapshotted to `BENCH_gemm.json` with measured GFLOP/s
 //!   * exact O(n) select vs double-sampling threshold (§5 heuristic 2)
 //!   * host compress vs XLA/Pallas compress artifact (ablation_compress_path)
 //!   * sparse codec encode/decode/merge throughput
@@ -15,7 +18,7 @@
 
 use lags::collectives::dense::ring_allreduce_mean;
 use lags::config::TrainConfig;
-use lags::runtime::Runtime;
+use lags::runtime::{kernels, native::NativeNet, Runtime};
 use lags::sparsify::{sparse::SparseVec, threshold, topk, ErrorFeedback};
 use lags::trainer::{Algorithm, Trainer};
 use lags::util::bench::{self, bb};
@@ -49,8 +52,70 @@ fn split_with_threshold_branchy(x: &[f32], thr: f32, kept: &mut [f32], resid: &m
     }
 }
 
+/// The pre-kernel mat-mul hot loop, verbatim: row-major axpy walk with a
+/// scalar zero-skip branch per reduction element — the honest "before"
+/// baseline for the `gemm_{naive,blocked}` family. Same per-element
+/// accumulation order as the blocked kernel's contract.
+fn gemm_naive_branchy(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in crow.iter_mut().zip(brow.iter()) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+}
+
 fn main() {
-    println!("# threshold selection: exact O(n) vs double-sampling (stride 64)");
+    // --- naive vs blocked GEMM at the zoo's actual hot-loop shapes.
+    // Runs FIRST so the BENCH_gemm.json snapshot below contains exactly
+    // this family; the acceptance bar is >= 3x blocked-vs-naive on the
+    // largest Dense and Conv shapes. Each row is annotated with its
+    // measured GFLOP/s (2·m·k·n per iteration).
+    println!("# gemm kernels: naive (branchy axpy) vs blocked/register-tiled");
+    let man = lags::runtime::native::native_manifest(42);
+    let mut gemm_shapes: Vec<(String, usize, usize, usize)> = Vec::new();
+    for name in ["mlp_deep", "convnet", "convnet_deep", "rnn"] {
+        let net = NativeNet::from_manifest(&man.models[name]).unwrap();
+        for s in net.gemm_shapes() {
+            let tagged = format!("{name}/{}", s.label);
+            if !gemm_shapes.iter().any(|(_, sm, sk, sn)| (*sm, *sk, *sn) == (s.m, s.k, s.n)) {
+                gemm_shapes.push((tagged, s.m, s.k, s.n));
+            }
+        }
+    }
+    for (label, m, k, n) in &gemm_shapes {
+        let (m, k, n) = (*m, *k, *n);
+        let mut rng = Rng::new(7);
+        let a = randvec(m * k, 11);
+        let b = randvec(k * n, 12);
+        let mut c = vec![0.0f32; m * n];
+        rng.fill_normal(&mut c, 1.0);
+        let gflops_per_iter = 2.0 * m as f64 * k as f64 * n as f64;
+        let s = bench::run_items(&format!("gemm_naive_{label}"), m * k * n, || {
+            gemm_naive_branchy(bb(&mut c), bb(&a), bb(&b), m, k, n);
+        });
+        bench::annotate(&format!("gemm_naive_{label}"), "gflops", gflops_per_iter / s.median / 1e9);
+        let mut c = vec![0.0f32; m * n];
+        rng.fill_normal(&mut c, 1.0);
+        let s2 = bench::run_items(&format!("gemm_blocked_{label}"), m * k * n, || {
+            kernels::gemm_nn(bb(&mut c), bb(&a), bb(&b), m, k, n);
+        });
+        bench::annotate(
+            &format!("gemm_blocked_{label}"),
+            "gflops",
+            gflops_per_iter / s2.median / 1e9,
+        );
+        println!("  speedup {label} ({m}x{k}x{n}): {:.2}x", s.median / s2.median);
+    }
+    bench::write_json("BENCH_gemm.json").expect("write BENCH_gemm.json");
+
+    println!("\n# threshold selection: exact O(n) vs double-sampling (stride 64)");
     for n in [65_536usize, 1 << 20, 1 << 22] {
         let x = randvec(n, 1);
         let k = n / 1000;

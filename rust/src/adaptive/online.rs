@@ -1,10 +1,12 @@
 //! Online measurement-driven ratio re-selection — the "A" in LAGS made
 //! real.
 //!
-//! The startup selection prices Eq. 18 with a synthetic device profile
-//! (manifest flops at [`crate::models::DEVICE_FLOPS`]). This module
-//! replaces that guess with MEASURED hot-loop timings: every step the
-//! trainer feeds
+//! The startup selection prices Eq. 18 with a static device profile —
+//! manifest flops at the runtime's `device_flops()`, i.e. the persisted
+//! `lags calibrate` measurement when one exists, else the documented
+//! [`crate::models::DEVICE_FLOPS`] fallback. Either way that profile is
+//! fixed at startup; this module replaces it with MEASURED hot-loop
+//! timings: every step the trainer feeds
 //!
 //! * the wall-clock of the forward+backward fan-out (the compute
 //!   stream; the backward share is 2/3 by the bwd ≈ 2×fwd flops ratio),

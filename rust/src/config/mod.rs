@@ -100,6 +100,13 @@ pub struct TrainConfig {
     pub reselect_every: usize,
     /// the α–β interconnect Eq. 18 and the DES price communication with
     pub net: NetConfig,
+    /// run the startup device-flops calibration: measure sustained GEMM
+    /// flops at the zoo's hot-loop shapes and PERSIST the result next to
+    /// the artifacts, so this and every later run prices Eq. 18 with the
+    /// measured number. Off by default: plain runs only LOAD an existing
+    /// calibration file (`runtime::calibrate` explains why measuring
+    /// implicitly on every startup would hurt reproducibility).
+    pub calibrate: bool,
     pub compressor: CompressorKind,
     /// hot-loop schedule: `overlap` streams each layer's rank-ordered
     /// reduction (and its slice of the apply) concurrently with workers
@@ -160,6 +167,7 @@ impl TrainConfig {
             c_max: 1000.0,
             reselect_every: 0,
             net: NetConfig::gige16(),
+            calibrate: false,
             compressor: CompressorKind::HostExact,
             pipeline: PipelineMode::Overlap,
             sample_stride: 64,
@@ -194,6 +202,7 @@ impl TrainConfig {
                 "net_alpha" => self.net.alpha = val.as_f64()?,
                 "net_bandwidth" => self.net.bandwidth = val.as_f64()?,
                 "reselect_every" => self.reselect_every = val.as_usize()?,
+                "calibrate" => self.calibrate = val.as_bool()?,
                 "compressor" => self.compressor = CompressorKind::parse(val.as_str()?)?,
                 "pipeline" => self.pipeline = PipelineMode::parse(val.as_str()?)?,
                 "sample_stride" => self.sample_stride = val.as_usize()?,
@@ -240,6 +249,9 @@ impl TrainConfig {
         }
         self.net.alpha = args.f64_or("net-alpha", self.net.alpha)?;
         self.net.bandwidth = args.f64_or("net-bandwidth", self.net.bandwidth)?;
+        if args.bool("calibrate") {
+            self.calibrate = true;
+        }
         if let Some(c) = args.get("compressor") {
             self.compressor = CompressorKind::parse(c)?;
         }
@@ -319,6 +331,7 @@ impl TrainConfig {
             ("reselect_every", Json::Num(self.reselect_every as f64)),
             ("net_alpha", Json::Num(self.net.alpha)),
             ("net_bandwidth", Json::Num(self.net.bandwidth)),
+            ("calibrate", Json::Bool(self.calibrate)),
             ("compressor", Json::Str(self.compressor.name().into())),
             ("pipeline", Json::Str(self.pipeline.name().into())),
             ("sample_stride", Json::Num(self.sample_stride as f64)),
@@ -410,6 +423,7 @@ mod tests {
         cfg.c_max = 321.0;
         cfg.reselect_every = 25;
         cfg.net = NetConfig { alpha: 1e-4, bandwidth: 2e9 };
+        cfg.calibrate = true;
         cfg.compressor = CompressorKind::HostSampled;
         cfg.pipeline = PipelineMode::Barrier;
         cfg.sample_stride = 17;

@@ -8,6 +8,7 @@
 //!   table2    — DES wall-clock reproduction of Table 2
 //!   timeline  — DES per-layer comm timeline (Fig 1)
 //!   ratios    — Eq. 18 adaptive ratio selection report
+//!   calibrate — measure sustained device flops at the zoo's GEMM shapes
 //!   smax      — Eq. 19 S_max sweep over r = t_c/t_b
 
 use anyhow::Result;
@@ -17,6 +18,7 @@ use lags::config::{NetConfig, TrainConfig};
 use lags::metrics::{CurveRecorder, ResultWriter};
 use lags::models::zoo;
 use lags::pipeline::desim::{simulate, Schedule, SimParams};
+use lags::runtime::{calibrate::DEFAULT_BUDGET, Calibration, Runtime};
 use lags::trainer::{Algorithm, Trainer};
 use lags::util::cli::Args;
 use lags::util::json::Json;
@@ -37,7 +39,7 @@ USAGE: lags <subcommand> [flags]
            [--net-bandwidth F] [--merge-bytes B]
            [--compressor host|host-sampled|xla|xla-sampled]
            [--delta-every N] [--eval-every N] [--seed S] [--verbose]
-           [--config FILE.json] [--out DIR]
+           [--calibrate] [--config FILE.json] [--out DIR]
 
            --artifacts native  selects the built-in pure-rust model zoo
                                (no `make artifacts` needed; also the
@@ -74,6 +76,12 @@ USAGE: lags <subcommand> [flags]
                                (a large buffer can defer all reduction
                                past the last publish, trading overlap for
                                fewer messages — the §5 ablation)
+           --calibrate         measure sustained device flops at startup
+                               (the `lags calibrate` microbenchmark) and
+                               persist it next to the artifacts; without
+                               the flag an existing calibration file is
+                               loaded, else the DEVICE_FLOPS fallback
+                               prices Eq. 18
   compare  same flags as train (runs dense, slgs, lags) [--out DIR]
   delta    [--model M] [--workers P] [--steps N] [--every N] [--out DIR]
   table2   [--net PRESET] [--net-alpha F] [--net-bandwidth F] [--workers P]
@@ -84,8 +92,16 @@ USAGE: lags <subcommand> [flags]
 
            without --profile, selects over the LIVE model exactly as
            `train --adaptive` does (same manifest profile, same device
-           speed, same worker count) — the printed table IS the trainer's
-           initial selection for the same flags
+           speed — measured when a calibration exists, DEVICE_FLOPS
+           fallback otherwise — same worker count); the printed table IS
+           the trainer's initial selection for the same flags
+  calibrate [--artifacts DIR] [--budget-ms N] [--out FILE]
+
+           runs the blocked-GEMM microbenchmark at the model zoo's actual
+           Dense/Conv/Elman shapes, reports per-shape and sustained
+           GFLOP/s, and persists the result (JSON next to the artifacts;
+           ./lags_calibration.json for the built-in zoo) so train/ratios
+           price Eq. 18 with the measured number
   smax     [--tf F] [--tb F]
   sweep    [--profile NAME] [--compression C] [--workers P] [--net-alpha F]
 ";
@@ -111,6 +127,7 @@ fn run(args: &Args) -> Result<()> {
         Some("table2") => cmd_table2(args),
         Some("timeline") => cmd_timeline(args),
         Some("ratios") => cmd_ratios(args),
+        Some("calibrate") => cmd_calibrate(args),
         Some("smax") => cmd_smax(args),
         Some("sweep") => cmd_sweep(args),
         _ => {
@@ -201,7 +218,12 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_compare(args: &Args) -> Result<()> {
     let base = train_config(args)?;
-    let rt = std::sync::Arc::new(lags::runtime::Runtime::open(artifacts_dir(args), base.seed)?);
+    let mut rt = Runtime::open(artifacts_dir(args), base.seed)?;
+    // same calibration policy as `train`: --calibrate measures + persists,
+    // otherwise an existing calibration file is loaded; all three legs
+    // share the runtime, so they price Eq. 18 identically
+    rt.calibrate(base.calibrate)?;
+    let rt = std::sync::Arc::new(rt);
     let mut rows = Vec::new();
     for alg in [Algorithm::Dense, Algorithm::Slgs, Algorithm::Lags] {
         let mut cfg = base.clone();
@@ -397,7 +419,8 @@ fn cmd_ratios(args: &Args) -> Result<()> {
     if args.get("net-bandwidth").is_none() {
         tc.net.bandwidth = args.f64_or("bandwidth", tc.net.bandwidth)?;
     }
-    let rt = lags::runtime::Runtime::open(artifacts_dir(args), tc.seed)?;
+    let mut rt = Runtime::open(artifacts_dir(args), tc.seed)?;
+    rt.calibrate(tc.calibrate)?;
     let mm = rt.manifest.model(&tc.model)?;
     let net = tc.net.model(tc.workers);
     let rc = RatioConfig { c_max: tc.c_max, ..RatioConfig::default() };
@@ -410,6 +433,11 @@ fn cmd_ratios(args: &Args) -> Result<()> {
         fmt_bytes(net.bandwidth),
         rc.c_max
     );
+    println!(
+        "device flops: {:.3e}/s (source: {})",
+        rt.device_flops(),
+        rt.flops_source()
+    );
     if tc.workers <= 1 {
         println!("(P = 1: no communication to hide — all layers dense, c = 1)");
     }
@@ -417,6 +445,64 @@ fn cmd_ratios(args: &Args) -> Result<()> {
     println!("effective c_max = {:.1}", adaptive::ratio::effective_cmax(&ratios));
     println!("(this is the selection `lags train --adaptive` starts from with the same flags;");
     println!(" add --reselect-every N to re-run it online from measured timings)");
+    Ok(())
+}
+
+/// Measure sustained device flops at the zoo's actual GEMM shapes and
+/// persist the calibration next to the artifacts, so `train --adaptive`
+/// and `ratios` price Eq. 18 with the measured number from now on.
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let rt = Runtime::open(&dir, args.usize_or("seed", 42)? as u64)?;
+    anyhow::ensure!(
+        rt.supports_calibration(),
+        "the {} backend's device speed cannot be measured by the host GEMM microbenchmark",
+        rt.platform()
+    );
+    let budget_ms = args.usize_or("budget-ms", DEFAULT_BUDGET.as_millis() as usize)?;
+    anyhow::ensure!(budget_ms > 0, "--budget-ms must be >= 1");
+    let budget = std::time::Duration::from_millis(budget_ms as u64);
+    let mut cal = Calibration::measure(&rt.manifest, budget)?;
+    println!(
+        "GEMM microbenchmark over the {} zoo ({} shapes, ~{budget_ms}ms budget):",
+        dir,
+        cal.shapes.len()
+    );
+    println!("| {:<22} | {:>5} | {:>5} | {:>5} | {:>10} |", "shape", "m", "k", "n", "GFLOP/s");
+    for s in &cal.shapes {
+        println!(
+            "| {:<22} | {:>5} | {:>5} | {:>5} | {:>10.2} |",
+            s.label,
+            s.m,
+            s.k,
+            s.n,
+            s.flops_per_sec / 1e9
+        );
+    }
+    println!(
+        "sustained: {:.3e} flops/s ({:.2} GFLOP/s) — vs the DEVICE_FLOPS fallback {:.1e}",
+        cal.flops_per_sec,
+        cal.flops_per_sec / 1e9,
+        lags::models::DEVICE_FLOPS
+    );
+    let default_path = Calibration::default_path(std::path::Path::new(&dir));
+    let path = match args.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => default_path.clone(),
+    };
+    cal.save(&path)?;
+    if path == default_path {
+        println!(
+            "wrote {} (picked up by `lags train`/`lags ratios` for these artifacts)",
+            path.display()
+        );
+    } else {
+        println!(
+            "wrote {} — note: train/ratios only load {}; --out is for inspection/archival",
+            path.display(),
+            default_path.display()
+        );
+    }
     Ok(())
 }
 

@@ -13,29 +13,37 @@ pub mod zoo;
 
 use crate::runtime::ModelManifest;
 
-/// Synthetic device speed (flops/s) used to turn a live manifest's flop
-/// counts into the startup timing profile — shared by the trainer's
+/// UNCALIBRATED-FALLBACK device speed (flops/s) for the native backend,
+/// used to turn a live manifest's flop counts into the startup timing
+/// profile when no measured calibration exists — shared by the trainer's
 /// `--adaptive` selection, its DES pricing, and `lags ratios`, so all
-/// three agree on the same inputs until measured timings take over
-/// (`adaptive::online`). Device speed is a property of the BACKEND
-/// ([`crate::runtime::Runtime::device_flops`] dispatches), not of the
-/// selection math; this constant is the native backend's figure and the
-/// default where no runtime is in scope.
+/// three agree on the same inputs until measured timings take over.
+/// Device speed is a property of the BACKEND
+/// ([`crate::runtime::Runtime::device_flops`] dispatches), and since the
+/// blocked-GEMM kernel core landed it is a MEASURED property: `lags
+/// calibrate` (or `train --calibrate`) benchmarks the kernels at the
+/// zoo's actual shapes and persists the sustained figure
+/// (`crate::runtime::calibrate`), which then replaces this constant
+/// everywhere `device_flops()` is consulted. The constant remains only
+/// as the documented fallback for uncalibrated runs (and as the fixture
+/// the deterministic adaptive-selection tests pin their regimes to).
 ///
-/// Calibrated to the native backend: scalar f32 rust sustains ~1e9
-/// flops/s, not the 1e12 of an accelerator. The old accelerator-class
-/// figure priced every layer's backward in microseconds, so on any α–β
-/// network the Eq. 18 budget check degenerated (latency alone exceeded
-/// every budget) and the "adaptive" selection was uniformly capped. At
-/// 1e9 the conv/rnn zoo layers' real comm-to-compute asymmetry is
-/// visible to the selection, which is the paper's whole point; the MLP
-/// family's layers are still too small to hide anything, so its
-/// selection is unchanged (all capped).
+/// The order of magnitude is an honest ballpark for scalar-ish f32 rust
+/// (~1e9), not the 1e12 of an accelerator: at an accelerator-class
+/// figure every layer's backward would price in microseconds, the Eq. 18
+/// budget check would degenerate (latency alone exceeds every budget),
+/// and the "adaptive" selection would be uniformly capped. Around 1e9
+/// the conv/rnn zoo layers' real comm-to-compute asymmetry is visible to
+/// the selection, which is the paper's whole point; the MLP family's
+/// layers are still too small to hide anything, so its selection is
+/// uniform either way.
 pub const DEVICE_FLOPS: f64 = 1e9;
 
-/// Accelerator-class device speed (flops/s) used to price manifests
-/// served by the PJRT backend — the figure the repo used for every
-/// backend before device speed became backend-dispatched.
+/// Fallback device speed (flops/s) used to price manifests served by the
+/// PJRT backend. A host GEMM calibration says nothing about an
+/// accelerator, so PJRT runs always use this accelerator-class constant
+/// — the figure the repo used for every backend before device speed
+/// became backend-dispatched (and, later, measurable).
 pub const PJRT_DEVICE_FLOPS: f64 = 1e12;
 
 /// A layer as the timing model sees it: parameter count + backprop compute

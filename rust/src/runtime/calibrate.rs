@@ -1,0 +1,305 @@
+//! Measured device-flops calibration for the native backend.
+//!
+//! Eq. 18's comm-to-compute trade-off is only as honest as its compute
+//! price. Before calibration existed, every native-backend budget was
+//! priced at the hard-coded [`crate::models::DEVICE_FLOPS`] guess; this
+//! module replaces the guess with a MEASURED number: a short
+//! microbenchmark runs the blocked GEMM kernels (`runtime::kernels`) at
+//! the model zoo's actual hot-loop shapes ([`super::native::NativeNet::
+//! gemm_shapes`]), derives the machine's sustained f32 flops/s over that
+//! shape mix, and persists it as JSON next to the artifacts so later runs
+//! (and `lags ratios`) price Eq. 18 with it (DESIGN.md
+//! §Kernels-and-calibration).
+//!
+//! Calibration is deliberately EXPLICIT: `lags calibrate` (or `lags train
+//! --calibrate`) measures and persists; plain runs only LOAD a persisted
+//! file. Measuring implicitly on every startup would make two separately
+//! constructed trainers disagree on their Eq. 18 inputs whenever the
+//! machine's load shifted between them — breaking the bit-identity
+//! contracts the test suite holds the trainer to.
+
+use super::kernels;
+use super::native::NativeNet;
+use super::Manifest;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+/// Total measurement budget of a default calibration run. Split across
+/// the deduped shape set; each shape also gets a minimum floor so tiny
+/// GEMV shapes still collect a stable sample.
+pub const DEFAULT_BUDGET: Duration = Duration::from_millis(240);
+
+/// Minimum per-shape measurement window.
+const MIN_SHAPE_WINDOW: Duration = Duration::from_millis(4);
+
+/// One measured GEMM shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShapeSample {
+    pub label: String,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// measured sustained throughput at this shape (flops/s)
+    pub flops_per_sec: f64,
+    /// aggregation weight: forward flops per training step this shape
+    /// contributes, summed across the zoo models that execute it
+    pub step_flops: f64,
+}
+
+/// A measured (or loaded) device-speed calibration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Calibration {
+    /// sustained flops/s over the whole shape mix — the number that
+    /// replaces `DEVICE_FLOPS` in `Runtime::device_flops`
+    pub flops_per_sec: f64,
+    pub shapes: Vec<ShapeSample>,
+    /// the file this calibration was loaded from (None = freshly
+    /// measured, not yet persisted)
+    pub source: Option<PathBuf>,
+}
+
+impl Calibration {
+    /// Where a calibration for `artifacts_dir` lives: `calibration.json`
+    /// inside a real artifacts directory, `lags_calibration.json` in the
+    /// working directory for the built-in `"native"` zoo (which has no
+    /// directory on disk).
+    pub fn default_path(artifacts_dir: &Path) -> PathBuf {
+        if artifacts_dir == Path::new("native") {
+            PathBuf::from("lags_calibration.json")
+        } else {
+            artifacts_dir.join("calibration.json")
+        }
+    }
+
+    /// Measure sustained flops at every hot-loop GEMM shape of the
+    /// manifest's NativeNet-servable models (shapes deduped across
+    /// models, per-step-flops weights summed), spreading `budget` across
+    /// the shapes. The aggregate is the flops-WEIGHTED harmonic mean of
+    /// the per-shape rates — the time to execute the zoo's actual
+    /// per-step shape mix once, divided into its flops — so the big
+    /// conv/dense mat-muls dominate the figure the way they dominate
+    /// trainer time, and the tiny Elman GEMV rows don't drag it down.
+    /// Errors if the manifest serves no native model at all.
+    pub fn measure(man: &Manifest, budget: Duration) -> Result<Calibration> {
+        // dedupe by (m, k, n); keep the first label, sum the weights
+        let mut shapes: BTreeMap<(usize, usize, usize), (String, f64)> = BTreeMap::new();
+        for mm in man.models.values() {
+            let Ok(net) = NativeNet::from_manifest(mm) else { continue };
+            for s in net.gemm_shapes() {
+                let e = shapes
+                    .entry((s.m, s.k, s.n))
+                    .or_insert_with(|| (s.label.clone(), 0.0));
+                e.1 += s.step_flops();
+            }
+        }
+        ensure!(
+            !shapes.is_empty(),
+            "no native-servable model in {:?}: nothing to calibrate against",
+            man.dir
+        );
+        let window = budget
+            .div_f64(shapes.len() as f64)
+            .max(MIN_SHAPE_WINDOW);
+        let mut samples = Vec::with_capacity(shapes.len());
+        // weighted harmonic mean: Σw / Σ(w / rate)
+        let (mut wsum, mut wtime) = (0.0f64, 0.0f64);
+        let mut rng = Rng::new(0xca11_b8a7e);
+        for ((m, k, n), (label, weight)) in shapes {
+            let (flops, secs) = time_shape(&mut rng, m, k, n, window);
+            let rate = flops / secs;
+            wsum += weight;
+            wtime += weight / rate;
+            samples.push(ShapeSample { label, m, k, n, flops_per_sec: rate, step_flops: weight });
+        }
+        Ok(Calibration { flops_per_sec: wsum / wtime, shapes: samples, source: None })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("flops_per_sec", Json::Num(self.flops_per_sec)),
+            (
+                "shapes",
+                Json::Arr(
+                    self.shapes
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("label", Json::Str(s.label.clone())),
+                                ("m", Json::Num(s.m as f64)),
+                                ("k", Json::Num(s.k as f64)),
+                                ("n", Json::Num(s.n as f64)),
+                                ("flops_per_sec", Json::Num(s.flops_per_sec)),
+                                ("step_flops", Json::Num(s.step_flops)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Calibration> {
+        if let Some(ver) = v.opt("version") {
+            let ver = ver.as_f64()?;
+            ensure!(ver == 1.0, "unsupported calibration version {ver} (this build reads v1)");
+        }
+        let flops = v.get("flops_per_sec")?.as_f64()?;
+        ensure!(
+            flops.is_finite() && flops > 0.0,
+            "calibration flops_per_sec must be positive, got {flops}"
+        );
+        let mut shapes = Vec::new();
+        if let Some(arr) = v.opt("shapes") {
+            for s in arr.as_arr()? {
+                shapes.push(ShapeSample {
+                    label: s.get("label")?.as_str()?.to_string(),
+                    m: s.get("m")?.as_usize()?,
+                    k: s.get("k")?.as_usize()?,
+                    n: s.get("n")?.as_usize()?,
+                    flops_per_sec: s.get("flops_per_sec")?.as_f64()?,
+                    step_flops: s.get("step_flops")?.as_f64()?,
+                });
+            }
+        }
+        Ok(Calibration { flops_per_sec: flops, shapes, source: None })
+    }
+
+    /// Load a persisted calibration; `Ok(None)` when the file doesn't
+    /// exist, `Err` when it exists but doesn't parse (a corrupt file is
+    /// an actionable problem, not a silent fallback).
+    pub fn load(path: &Path) -> Result<Option<Calibration>> {
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading calibration {path:?}"))?;
+        let mut cal = Calibration::from_json(&Json::parse(&text)?)
+            .with_context(|| format!("parsing calibration {path:?}"))?;
+        cal.source = Some(path.to_path_buf());
+        Ok(Some(cal))
+    }
+
+    /// Persist to `path` and record it as this calibration's source.
+    pub fn save(&mut self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing calibration {path:?}"))?;
+        self.source = Some(path.to_path_buf());
+        Ok(())
+    }
+}
+
+/// Time `gemm_nn` at one shape for at least `window`, returning (total
+/// flops executed, elapsed seconds). Iteration counts double until the
+/// window is filled, so tiny GEMV shapes get enough repetitions for the
+/// timer's resolution while big shapes don't overshoot the budget.
+fn time_shape(rng: &mut Rng, m: usize, k: usize, n: usize, window: Duration) -> (f64, f64) {
+    let mut a = vec![0.0f32; m * k];
+    let mut b = vec![0.0f32; k * n];
+    let mut c = vec![0.0f32; m * n];
+    rng.fill_normal(&mut a, 1.0);
+    rng.fill_normal(&mut b, 1.0);
+    let gemm_flops = 2.0 * m as f64 * k as f64 * n as f64;
+    // warm-up (page in the buffers, settle the clock)
+    kernels::gemm_nn(&mut c, &a, &b, m, k, n);
+    let target = window.as_secs_f64();
+    let mut iters = 1usize;
+    loop {
+        // C would drift toward huge magnitudes over many accumulating
+        // iterations; re-zeroing outside the timed region keeps the
+        // arithmetic in the normal f32 range without charging the memset
+        c.iter_mut().for_each(|v| *v = 0.0);
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            kernels::gemm_nn(&mut c, &a, &b, m, k, n);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        std::hint::black_box(&c);
+        if dt >= target || iters >= (1 << 24) {
+            return (gemm_flops * iters as f64, dt.max(1e-9));
+        }
+        // scale straight to the target with headroom, at least doubling
+        let scale = (target / dt.max(1e-9) * 1.25).max(2.0);
+        iters = ((iters as f64 * scale) as usize).min(1 << 24);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::native_manifest;
+
+    #[test]
+    fn measure_native_zoo_yields_positive_flops() {
+        let man = native_manifest(1);
+        let cal = Calibration::measure(&man, Duration::from_millis(30)).unwrap();
+        assert!(cal.flops_per_sec.is_finite() && cal.flops_per_sec > 0.0);
+        assert!(!cal.shapes.is_empty());
+        for s in &cal.shapes {
+            assert!(s.flops_per_sec > 0.0, "{}: non-positive throughput", s.label);
+            assert!(s.step_flops > 0.0, "{}: zero aggregation weight", s.label);
+        }
+        // the weighted harmonic mean lies within the per-shape rates
+        let (lo, hi) = cal.shapes.iter().fold((f64::INFINITY, 0.0f64), |(lo, hi), s| {
+            (lo.min(s.flops_per_sec), hi.max(s.flops_per_sec))
+        });
+        assert!(
+            cal.flops_per_sec >= lo && cal.flops_per_sec <= hi,
+            "aggregate {} outside per-shape range [{lo}, {hi}]",
+            cal.flops_per_sec
+        );
+        assert!(cal.source.is_none(), "freshly measured, not loaded");
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let cal = Calibration {
+            flops_per_sec: 2.5e9,
+            shapes: vec![ShapeSample {
+                label: "dense_32x64x10".into(),
+                m: 32,
+                k: 64,
+                n: 10,
+                flops_per_sec: 3.1e9,
+                step_flops: 40960.0,
+            }],
+            source: None,
+        };
+        let back = Calibration::from_json(&Json::parse(&cal.to_json().to_string_compact()).unwrap())
+            .unwrap();
+        assert_eq!(back, cal);
+        // a calibration claiming zero/negative speed is rejected
+        assert!(Calibration::from_json(&Json::parse(r#"{"flops_per_sec": 0}"#).unwrap()).is_err());
+        assert!(
+            Calibration::from_json(&Json::parse(r#"{"flops_per_sec": -1e9}"#).unwrap()).is_err()
+        );
+        // a future-version file must refuse to load, not misprice Eq. 18
+        assert!(Calibration::from_json(
+            &Json::parse(r#"{"version": 2, "flops_per_sec": 1e9}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn load_missing_file_is_none() {
+        assert!(Calibration::load(Path::new("definitely/not/a/calibration.json"))
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn default_paths() {
+        assert_eq!(
+            Calibration::default_path(Path::new("native")),
+            PathBuf::from("lags_calibration.json")
+        );
+        assert_eq!(
+            Calibration::default_path(Path::new("artifacts")),
+            PathBuf::from("artifacts/calibration.json")
+        );
+    }
+}

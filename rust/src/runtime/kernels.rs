@@ -1,0 +1,330 @@
+//! Shared f32 GEMM kernel core for the native backend's hot loops.
+//!
+//! Every inner-product loop in `runtime::native` — Dense forward/backward,
+//! im2col Conv2d forward + dW/dX, the Elman recurrence and its BPTT — is a
+//! `C += A·B` over small row-major matrices. This module centralises them
+//! behind one cache-blocked, register-tiled kernel family instead of the
+//! original naive triple loops (DESIGN.md §Kernels-and-calibration).
+//!
+//! ## The fixed-reduction-order contract
+//!
+//! Each output element `C[i,j]` is updated as ONE running f32 accumulation
+//! chain, seeded from the incoming `C[i,j]`, adding the products
+//! `A[i,kk]·B[kk,j]` in strictly ascending `kk` order:
+//!
+//! ```text
+//! C[i,j] = (((C0 + t_0) + t_1) + ... + t_{K-1})        t_kk = a·b, f32
+//! ```
+//!
+//! That is exactly what the reference triple loop [`gemm_ref`] produces —
+//! and it is what every blocked/tiled path here produces too, because:
+//!
+//! * **K blocking** round-trips the partial chain through `C` between
+//!   blocks; f32 store/load is exact, so the chain is unchanged;
+//! * **register tiling** (`MR`×`NR` accumulator tiles) loads the tile FROM
+//!   `C` (never from zero), accumulates ascending `kk`, and stores back —
+//!   again the same chain;
+//! * the 8-wide unrolled inner loops vectorize ACROSS output elements
+//!   (independent chains), never across the reduction dimension, so no
+//!   f32 sum is ever reassociated.
+//!
+//! The kernels are therefore bit-identical to [`gemm_ref`] for every
+//! shape including remainder tiles (asserted by the unit tests here and
+//! `prop_blocked_gemm_bit_identical_to_reference`), and — being pure
+//! functions of their arguments — thread-count independent, which is what
+//! keeps the trainer's parallel≡sequential / overlap≡barrier bit-identity
+//! contracts intact.
+
+/// Register-tile rows: each micro-kernel step amortises one `B` row load
+/// across this many `A` rows.
+const MR: usize = 4;
+/// Register-tile columns: the unrolled vector width of the inner loops.
+const NR: usize = 8;
+/// Reduction-dimension cache block: keeps the active `B` panel (`KC`×`NR`
+/// f32) resident in L1/L2 across a row sweep.
+const KC: usize = 256;
+
+/// `C[m,n] += A·B` with `A` row-major `[m,k]`, `B` row-major `[k,n]`.
+pub fn gemm_nn(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    gemm_blocked::<false>(c, a, b, m, k, n);
+}
+
+/// `C[m,n] += Aᵀ·B` with `A` STORED `[k,m]` row-major (i.e. the reduction
+/// dimension is A's row index), `B` row-major `[k,n]` — the dW shape.
+pub fn gemm_tn(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), k * m);
+    gemm_blocked::<true>(c, a, b, m, k, n);
+}
+
+/// `C[m,n] += A·Bᵀ` with `B` STORED `[n,k]` row-major — the dX shape.
+/// Implemented by packing `Bᵀ` into `bt` (caller-owned scratch, so the
+/// steady-state hot loop stays allocation-free) and running the `nn`
+/// kernel; the pack is an exact element copy, so the reduction chain is
+/// the `kk`-ascending one of the contract.
+pub fn gemm_nt(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, bt: &mut Vec<f32>) {
+    debug_assert_eq!(b.len(), n * k);
+    pack_transpose(b, n, k, bt);
+    gemm_blocked::<false>(c, a, bt, m, k, n);
+}
+
+/// Transpose row-major `src[rows, cols]` into `dst[cols, rows]`,
+/// resizing `dst`. Reads are contiguous (row walk), writes strided —
+/// the same pack the dense-backward Wᵀ cache always used.
+pub fn pack_transpose(src: &[f32], rows: usize, cols: usize, dst: &mut Vec<f32>) {
+    dst.clear();
+    dst.resize(rows * cols, 0.0);
+    pack_transpose_into(src, rows, cols, dst);
+}
+
+/// [`pack_transpose`] into a caller-sized slice — for packing several
+/// transposed blocks into one scratch buffer (the Elman backward's
+/// `Whᵀ | Wxᵀ` pack). Every element of `dst` is overwritten.
+pub fn pack_transpose_into(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), rows * cols);
+    debug_assert_eq!(dst.len(), rows * cols);
+    for r in 0..rows {
+        let srow = &src[r * cols..(r + 1) * cols];
+        for (cc, &v) in srow.iter().enumerate() {
+            dst[cc * rows + r] = v;
+        }
+    }
+}
+
+/// `dst[j] += Σ_r src[r, j]` over row-major `src[rows, cols]`, rows
+/// ascending — the bias-gradient column sum.
+pub fn col_sum_add(dst: &mut [f32], src: &[f32], rows: usize, cols: usize) {
+    debug_assert_eq!(dst.len(), cols);
+    debug_assert_eq!(src.len(), rows * cols);
+    for r in 0..rows {
+        let srow = &src[r * cols..(r + 1) * cols];
+        for (d, &s) in dst.iter_mut().zip(srow.iter()) {
+            *d += s;
+        }
+    }
+}
+
+/// Fixed-order reference implementation: the naive triple loop whose
+/// per-element accumulation chain DEFINES the kernel contract (and which
+/// matches the order the pre-kernel native backend accumulated in).
+/// `ta`/`tb` select the transposed-storage variants of [`gemm_tn`] /
+/// [`gemm_nt`]. Used by the conformance proptest and as the honest
+/// "before" baseline of the `gemm_{naive,blocked}` bench family.
+pub fn gemm_ref(
+    c: &mut [f32],
+    a: &[f32],
+    ta: bool,
+    b: &[f32],
+    tb: bool,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        for kk in 0..k {
+            let av = if ta { a[kk * m + i] } else { a[i * k + kk] };
+            let crow = &mut c[i * n..(i + 1) * n];
+            if tb {
+                for (j, o) in crow.iter_mut().enumerate() {
+                    *o += av * b[j * k + kk];
+                }
+            } else {
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in crow.iter_mut().zip(brow.iter()) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// The blocked core. `TA` selects A's storage: `false` = row-major
+/// `[m,k]`, `true` = transposed storage `[k,m]`. `B` is always row-major
+/// `[k,n]` and `C` row-major `[m,n]`.
+fn gemm_blocked<const TA: bool>(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(c.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    #[inline(always)]
+    fn a_at<const TA: bool>(a: &[f32], m: usize, k: usize, i: usize, kk: usize) -> f32 {
+        if TA {
+            a[kk * m + i]
+        } else {
+            a[i * k + kk]
+        }
+    }
+    let mut k0 = 0;
+    while k0 < k {
+        let kb = KC.min(k - k0);
+        // full MR-row blocks through the register-tiled micro-kernel
+        let m_main = m - m % MR;
+        let mut i0 = 0;
+        while i0 < m_main {
+            // NR-column tiles: MR×NR accumulators seeded FROM C
+            let mut j0 = 0;
+            while j0 + NR <= n {
+                let mut acc = [[0.0f32; NR]; MR];
+                for (r, arow) in acc.iter_mut().enumerate() {
+                    let crow = &c[(i0 + r) * n + j0..(i0 + r) * n + j0 + NR];
+                    arow.copy_from_slice(crow);
+                }
+                for kk in k0..k0 + kb {
+                    let brow = &b[kk * n + j0..kk * n + j0 + NR];
+                    for (r, arow) in acc.iter_mut().enumerate() {
+                        let av = a_at::<TA>(a, m, k, i0 + r, kk);
+                        for (o, &bv) in arow.iter_mut().zip(brow.iter()) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+                for (r, arow) in acc.iter().enumerate() {
+                    let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + NR];
+                    crow.copy_from_slice(arow);
+                }
+                j0 += NR;
+            }
+            // column remainder: per-row axpy sweeps, kk ascending
+            if j0 < n {
+                for r in 0..MR {
+                    let i = i0 + r;
+                    for kk in k0..k0 + kb {
+                        let av = a_at::<TA>(a, m, k, i, kk);
+                        let crow = &mut c[i * n + j0..(i + 1) * n];
+                        let brow = &b[kk * n + j0..(kk + 1) * n];
+                        for (o, &bv) in crow.iter_mut().zip(brow.iter()) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+            }
+            i0 += MR;
+        }
+        // row remainder: full-width axpy sweeps, kk ascending
+        for i in m_main..m {
+            for kk in k0..k0 + kb {
+                let av = a_at::<TA>(a, m, k, i, kk);
+                let crow = &mut c[i * n..(i + 1) * n];
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in crow.iter_mut().zip(brow.iter()) {
+                    *o += av * bv;
+                }
+            }
+        }
+        k0 += kb;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// Every variant, at shapes that exercise full tiles, row/column
+    /// remainders, M=1 GEMV rows and K crossing the KC block boundary,
+    /// must be BIT-identical to the fixed-order reference — seeded from a
+    /// non-zero C so the chain-seeding behaviour is covered too.
+    #[test]
+    fn blocked_matches_reference_bitwise() {
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (4, 8, 8),      // exactly one MR×NR tile
+            (5, 9, 11),     // remainders everywhere
+            (1, 64, 64),    // the Elman GEMV shape
+            (3, 7, 1),      // single output column
+            (16, 300, 10),  // K crosses the KC=256 block boundary
+            (7, 257, 17),
+        ];
+        for (si, &(m, k, n)) in shapes.iter().enumerate() {
+            let mut rng = Rng::new(0xee_u64 ^ (si as u64) << 8);
+            let a = randvec(&mut rng, m * k);
+            let at = {
+                let mut t = Vec::new();
+                pack_transpose(&a, m, k, &mut t);
+                t
+            };
+            let b = randvec(&mut rng, k * n);
+            let bt = {
+                let mut t = Vec::new();
+                pack_transpose(&b, k, n, &mut t);
+                t
+            };
+            let c0 = randvec(&mut rng, m * n);
+
+            let mut want = c0.clone();
+            gemm_ref(&mut want, &a, false, &b, false, m, k, n);
+
+            let mut got = c0.clone();
+            gemm_nn(&mut got, &a, &b, m, k, n);
+            assert_eq!(bits(&got), bits(&want), "nn {m}x{k}x{n}");
+
+            let mut got = c0.clone();
+            gemm_tn(&mut got, &at, &b, m, k, n);
+            assert_eq!(bits(&got), bits(&want), "tn {m}x{k}x{n}");
+
+            let mut got = c0.clone();
+            let mut scratch = Vec::new();
+            gemm_nt(&mut got, &a, &bt, m, k, n, &mut scratch);
+            assert_eq!(bits(&got), bits(&want), "nt {m}x{k}x{n}");
+
+            // the ref's own transpose flags agree with the packed forms
+            let mut want_t = c0.clone();
+            gemm_ref(&mut want_t, &at, true, &bt, true, m, k, n);
+            assert_eq!(bits(&want_t), bits(&want), "ref flags {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_are_noops_or_empty() {
+        // k = 0: nothing to accumulate, C untouched
+        let mut c = vec![1.5f32, -2.5];
+        gemm_nn(&mut c, &[], &[], 1, 0, 2);
+        assert_eq!(c, vec![1.5, -2.5]);
+        // m = 0 / n = 0: empty C
+        let mut c: Vec<f32> = Vec::new();
+        gemm_nn(&mut c, &[], &[1.0, 2.0], 0, 2, 0);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn gemm_small_known_values() {
+        // [1 2; 3 4] · [5 6; 7 8] = [19 22; 43 50], on top of C = I
+        let a = vec![1.0f32, 2.0, 3.0, 4.0];
+        let b = vec![5.0f32, 6.0, 7.0, 8.0];
+        let mut c = vec![1.0f32, 0.0, 0.0, 1.0];
+        gemm_nn(&mut c, &a, &b, 2, 2, 2);
+        assert_eq!(c, vec![20.0, 22.0, 43.0, 51.0]);
+    }
+
+    #[test]
+    fn pack_transpose_round_trips() {
+        let mut rng = Rng::new(9);
+        let a = randvec(&mut rng, 5 * 7);
+        let mut t = Vec::new();
+        pack_transpose(&a, 5, 7, &mut t);
+        assert_eq!(t.len(), 35);
+        for r in 0..5 {
+            for cc in 0..7 {
+                assert_eq!(t[cc * 5 + r], a[r * 7 + cc]);
+            }
+        }
+        let mut back = Vec::new();
+        pack_transpose(&t, 7, 5, &mut back);
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn col_sum_add_accumulates_rows_in_order() {
+        let src = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // [3, 2]
+        let mut dst = vec![10.0f32, 20.0];
+        col_sum_add(&mut dst, &src, 3, 2);
+        assert_eq!(dst, vec![19.0, 32.0]);
+    }
+}

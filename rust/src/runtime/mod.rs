@@ -19,11 +19,14 @@
 //! compress_layer_xla`, plus the new [`ModelRuntime::grad_many`] batch
 //! entry point the parallel trainer hot loop uses.
 
+pub mod calibrate;
+pub mod kernels;
 pub mod manifest;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
+pub use calibrate::Calibration;
 pub use manifest::{BatchSpec, DType, LayerInfo, Manifest, Metric, ModelManifest};
 
 use crate::util::executor::ParallelExecutor;
@@ -91,6 +94,11 @@ enum RuntimeBackend {
 pub struct Runtime {
     pub manifest: Manifest,
     backend: RuntimeBackend,
+    /// measured device-speed calibration ([`calibrate`]); attached
+    /// explicitly via [`Runtime::calibrate`] / [`Runtime::set_calibration`]
+    /// — never loaded implicitly, so tests constructing runtimes directly
+    /// stay independent of files in the working directory
+    calibration: Option<Calibration>,
 }
 
 impl Runtime {
@@ -114,7 +122,11 @@ impl Runtime {
         #[cfg(feature = "pjrt")]
         {
             let rt = pjrt::PjrtRuntime::new()?;
-            Ok(Runtime { manifest, backend: RuntimeBackend::Pjrt(std::sync::Arc::new(rt)) })
+            Ok(Runtime {
+                manifest,
+                backend: RuntimeBackend::Pjrt(std::sync::Arc::new(rt)),
+                calibration: None,
+            })
         }
         #[cfg(not(feature = "pjrt"))]
         {
@@ -129,7 +141,11 @@ impl Runtime {
 
     /// The built-in native model zoo, seeded for deterministic init params.
     pub fn native(seed: u64) -> Runtime {
-        Runtime { manifest: native::native_manifest(seed), backend: RuntimeBackend::Native { seed } }
+        Runtime {
+            manifest: native::native_manifest(seed),
+            backend: RuntimeBackend::Native { seed },
+            calibration: None,
+        }
     }
 
     pub fn platform(&self) -> String {
@@ -140,16 +156,81 @@ impl Runtime {
         }
     }
 
-    /// Synthetic device speed (flops/s) this backend's models execute at
-    /// — what Eq. 18 startup selection and the DES price compute with.
-    /// Scalar-rust speed for the native zoo, accelerator-class for PJRT
-    /// artifacts.
+    /// Device speed (flops/s) this backend's models execute at — what
+    /// Eq. 18 startup selection and the DES price compute with. The
+    /// native backend prefers an attached MEASURED calibration
+    /// ([`Runtime::calibrate`]) and falls back to the documented
+    /// [`crate::models::DEVICE_FLOPS`] constant when uncalibrated; PJRT
+    /// artifacts use the accelerator-class constant (a host-GEMM
+    /// calibration says nothing about an accelerator).
     pub fn device_flops(&self) -> f64 {
         match &self.backend {
-            RuntimeBackend::Native { .. } => crate::models::DEVICE_FLOPS,
+            RuntimeBackend::Native { .. } => self
+                .calibration
+                .as_ref()
+                .map(|c| c.flops_per_sec)
+                .unwrap_or(crate::models::DEVICE_FLOPS),
             #[cfg(feature = "pjrt")]
             RuntimeBackend::Pjrt(_) => crate::models::PJRT_DEVICE_FLOPS,
         }
+    }
+
+    /// Human-readable provenance of [`Runtime::device_flops`] — surfaced
+    /// by `lags ratios` and `report.json` so every Eq. 18 number states
+    /// whether it was priced with measured or guessed compute speed.
+    pub fn flops_source(&self) -> String {
+        match &self.backend {
+            RuntimeBackend::Native { .. } => match &self.calibration {
+                Some(c) => match &c.source {
+                    Some(p) => format!("calibrated ({})", p.display()),
+                    None => "calibrated (in-memory measurement)".to_string(),
+                },
+                None => "DEVICE_FLOPS fallback (run `lags calibrate` to measure)".to_string(),
+            },
+            #[cfg(feature = "pjrt")]
+            RuntimeBackend::Pjrt(_) => "PJRT_DEVICE_FLOPS constant".to_string(),
+        }
+    }
+
+    /// Whether this backend's device speed can be measured by the host
+    /// GEMM microbenchmark (native only).
+    pub fn supports_calibration(&self) -> bool {
+        matches!(self.backend, RuntimeBackend::Native { .. })
+    }
+
+    /// The attached calibration, if any.
+    pub fn calibration(&self) -> Option<&Calibration> {
+        self.calibration.as_ref()
+    }
+
+    /// Attach an already-measured/loaded calibration (native backend
+    /// only; ignored elsewhere).
+    pub fn set_calibration(&mut self, cal: Calibration) {
+        if self.supports_calibration() {
+            self.calibration = Some(cal);
+        }
+    }
+
+    /// Calibration entry point shared by the CLI paths: when `measure` is
+    /// true, run the GEMM microbenchmark at this manifest's shapes and
+    /// PERSIST the result to the default path for this artifacts dir;
+    /// otherwise just LOAD a previously persisted calibration if one
+    /// exists. Either way the result is attached, so subsequent
+    /// [`Runtime::device_flops`] calls report the measured number.
+    /// No-op on backends that don't support host calibration.
+    pub fn calibrate(&mut self, measure: bool) -> Result<()> {
+        if !self.supports_calibration() {
+            return Ok(());
+        }
+        let path = Calibration::default_path(&self.manifest.dir);
+        if measure {
+            let mut cal = Calibration::measure(&self.manifest, calibrate::DEFAULT_BUDGET)?;
+            cal.save(&path)?;
+            self.calibration = Some(cal);
+        } else if let Some(cal) = Calibration::load(&path)? {
+            self.calibration = Some(cal);
+        }
+        Ok(())
     }
 
     /// Build the full runtime for one model.
@@ -319,6 +400,22 @@ mod tests {
         let c = Runtime::native(2).model_runtime("mlp").unwrap().init_params;
         assert_eq!(a, b);
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn device_flops_prefers_calibration_and_labels_source() {
+        let mut rt = Runtime::native(7);
+        assert!(rt.supports_calibration());
+        assert_eq!(rt.device_flops(), crate::models::DEVICE_FLOPS);
+        assert!(rt.flops_source().contains("fallback"), "{}", rt.flops_source());
+        rt.set_calibration(Calibration {
+            flops_per_sec: 3.5e9,
+            shapes: Vec::new(),
+            source: None,
+        });
+        assert_eq!(rt.device_flops(), 3.5e9);
+        assert!(rt.flops_source().starts_with("calibrated"), "{}", rt.flops_source());
+        assert!(rt.calibration().is_some());
     }
 
     #[test]

@@ -35,10 +35,15 @@
 //! force the adaptive selection to the cap everywhere. One tensor per
 //! block makes the layer table's comm-to-compute ratios mean something.
 //!
-//! Determinism: every loop runs in a fixed order with f32 accumulation,
-//! so results are bit-identical across runs and across `--threads`
-//! settings (each worker's math touches only that worker's inputs).
+//! Determinism: every mat-mul hot loop runs through the blocked GEMM
+//! kernels in [`super::kernels`], whose per-element f32 accumulation
+//! chain is fixed (reduction index ascending, seeded from the incoming
+//! value) regardless of blocking or tiling — so results are bit-identical
+//! across runs and across `--threads` settings (each worker's math
+//! touches only that worker's inputs). See DESIGN.md
+//! §Kernels-and-calibration.
 
+use super::kernels;
 use super::manifest::{BatchSpec, DType, LayerInfo, Manifest, Metric, ModelManifest};
 use super::BatchData;
 use crate::sparsify::{threshold, topk};
@@ -190,22 +195,16 @@ pub fn conv2d_forward(
     col.resize(np * patch, 0.0);
     for n in 0..batch {
         im2col(d, &x[n * d.in_len()..(n + 1) * d.in_len()], col);
+        // out[p, co] = bias[co] + Σ_q col[p, q]·w[q, co] — one GEMM per
+        // sample over the im2col matrix
+        let on = &mut out[n * np * cout..(n + 1) * np * cout];
         for p in 0..np {
-            let orow = &mut out[(n * np + p) * cout..(n * np + p + 1) * cout];
-            orow.copy_from_slice(bias);
-            let crow = &col[p * patch..(p + 1) * patch];
-            for (q, &cq) in crow.iter().enumerate() {
-                if cq != 0.0 {
-                    let wrow = &w[q * cout..(q + 1) * cout];
-                    for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
-                        *o += cq * wv;
-                    }
-                }
-            }
-            if relu {
-                for o in orow.iter_mut() {
-                    *o = o.max(0.0);
-                }
+            on[p * cout..(p + 1) * cout].copy_from_slice(bias);
+        }
+        kernels::gemm_nn(on, col, w, np, patch, cout);
+        if relu {
+            for o in on.iter_mut() {
+                *o = o.max(0.0);
             }
         }
     }
@@ -214,7 +213,8 @@ pub fn conv2d_forward(
 /// Conv2d backward over a whole batch. `delta` is dL/d(out) AFTER the
 /// caller applied the activation mask; `dw`/`db` are accumulated into
 /// (`+=`), `dx` (if given) is overwritten per sample. `col`/`dcol` are
-/// reusable scratch.
+/// reusable scratch; `wt` is scratch for the packed `Wᵀ` the dX GEMM
+/// reads (only touched when `dx` is requested).
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_backward(
     d: &ConvDims,
@@ -224,6 +224,7 @@ pub fn conv2d_backward(
     delta: &[f32],
     col: &mut Vec<f32>,
     dcol: &mut Vec<f32>,
+    wt: &mut Vec<f32>,
     dw: &mut [f32],
     db: &mut [f32],
     mut dx: Option<&mut [f32]>,
@@ -236,38 +237,23 @@ pub fn conv2d_backward(
     col.resize(np * patch, 0.0);
     dcol.clear();
     dcol.resize(np * patch, 0.0);
+    if dx.is_some() {
+        // Wᵀ [cout, patch], packed once for the whole batch
+        kernels::pack_transpose(w, patch, cout, wt);
+    }
     for n in 0..batch {
         let xn = &x[n * d.in_len()..(n + 1) * d.in_len()];
         im2col(d, xn, col);
-        for p in 0..np {
-            let drow = &delta[(n * np + p) * cout..(n * np + p + 1) * cout];
-            let crow = &col[p * patch..(p + 1) * patch];
-            // dW[q, co] += col[p, q] · δ[p, co];  db[co] += δ[p, co]
-            for (q, &cq) in crow.iter().enumerate() {
-                if cq != 0.0 {
-                    let grow = &mut dw[q * cout..(q + 1) * cout];
-                    for (g, &dj) in grow.iter_mut().zip(drow.iter()) {
-                        *g += cq * dj;
-                    }
-                }
-            }
-            for (g, &dj) in db.iter_mut().zip(drow.iter()) {
-                *g += dj;
-            }
-        }
+        let dn = &delta[n * np * cout..(n + 1) * np * cout];
+        // dW[q, co] += Σ_p col[p, q]·δ[p, co]  (colᵀ·δ — samples in n
+        // order, rows in p order, the direct convolution's accumulation)
+        kernels::gemm_tn(dw, col, dn, patch, np, cout);
+        // db[co] += Σ_p δ[p, co]
+        kernels::col_sum_add(db, dn, np, cout);
         if let Some(dx) = dx.as_deref_mut() {
-            // dcol[p, q] = Σ_co δ[p, co] · w[q, co], then col2im
-            for p in 0..np {
-                let drow = &delta[(n * np + p) * cout..(n * np + p + 1) * cout];
-                for q in 0..patch {
-                    let wrow = &w[q * cout..(q + 1) * cout];
-                    let mut acc = 0.0f32;
-                    for (&dv, &wv) in drow.iter().zip(wrow.iter()) {
-                        acc += dv * wv;
-                    }
-                    dcol[p * patch + q] = acc;
-                }
-            }
+            // dcol[p, q] = Σ_co δ[p, co]·wᵀ[co, q], then col2im
+            dcol.iter_mut().for_each(|v| *v = 0.0);
+            kernels::gemm_nn(dcol, dn, wt, np, cout, patch);
             let dxn = &mut dx[n * d.in_len()..(n + 1) * d.in_len()];
             dxn.iter_mut().for_each(|v| *v = 0.0);
             col2im_add(d, dcol, dxn);
@@ -275,34 +261,79 @@ pub fn conv2d_backward(
     }
 }
 
-/// MaxPool k×k (stride k) forward over a batch of `[h, w, c]` samples.
-pub fn maxpool_forward(h: usize, w: usize, c: usize, k: usize, x: &[f32], batch: usize, out: &mut [f32]) {
+/// MaxPool k×k (stride k) forward over a batch of `[h, w, c]` samples,
+/// caching each output cell's FIRST-argmax routing index (absolute into
+/// the batch's input slab) in `idx` — the backward pass then routes δ by
+/// table lookup instead of re-scanning every k×k window
+/// ([`maxpool_backward_idx`]). Ties resolve to the first strict max in
+/// (ky, kx) scan order, exactly as the re-scanning reference does.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool_forward_idx(
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    x: &[f32],
+    batch: usize,
+    out: &mut [f32],
+    idx: &mut Vec<u32>,
+) {
     let (ho, wo) = (h / k, w / k);
     debug_assert_eq!(out.len(), batch * ho * wo * c);
+    idx.clear();
+    idx.resize(batch * ho * wo * c, 0);
     for n in 0..batch {
-        let xn = &x[n * h * w * c..(n + 1) * h * w * c];
+        let base = n * h * w * c;
+        let xn = &x[base..base + h * w * c];
         for oy in 0..ho {
             for ox in 0..wo {
                 for ch in 0..c {
                     let mut m = f32::NEG_INFINITY;
+                    let mut at = 0usize;
                     for ky in 0..k {
                         for kx in 0..k {
-                            let v = xn[((oy * k + ky) * w + ox * k + kx) * c + ch];
-                            if v > m {
-                                m = v;
+                            let p = ((oy * k + ky) * w + ox * k + kx) * c + ch;
+                            if xn[p] > m {
+                                m = xn[p];
+                                at = p;
                             }
                         }
                     }
-                    out[((n * ho + oy) * wo + ox) * c + ch] = m;
+                    let o = ((n * ho + oy) * wo + ox) * c + ch;
+                    out[o] = m;
+                    idx[o] = (base + at) as u32;
                 }
             }
         }
     }
 }
 
-/// MaxPool backward: route each output cell's delta to the FIRST argmax
-/// position (scan order ky, kx — ties resolve deterministically), found
-/// by re-scanning the stored input activation. `dx` is overwritten.
+/// MaxPool forward without index caching (test/reference convenience —
+/// the trainer always runs [`maxpool_forward_idx`]).
+pub fn maxpool_forward(h: usize, w: usize, c: usize, k: usize, x: &[f32], batch: usize, out: &mut [f32]) {
+    let mut idx = Vec::new();
+    maxpool_forward_idx(h, w, c, k, x, batch, out, &mut idx);
+}
+
+/// MaxPool backward via the forward pass's cached argmax table: `dx` is
+/// overwritten, then each output cell's δ is added at its recorded input
+/// position. Output cells are walked in ascending order — the same
+/// accumulation order as the re-scanning reference
+/// ([`maxpool_backward`]), asserted bit-identical in the unit tests.
+pub fn maxpool_backward_idx(idx: &[u32], delta: &[f32], dx: &mut [f32]) {
+    debug_assert_eq!(idx.len(), delta.len());
+    dx.iter_mut().for_each(|v| *v = 0.0);
+    for (&at, &d) in idx.iter().zip(delta.iter()) {
+        dx[at as usize] += d;
+    }
+}
+
+/// MaxPool backward reference: route each output cell's delta to the
+/// FIRST argmax position (scan order ky, kx — ties resolve
+/// deterministically) by re-scanning the stored input activation. `dx`
+/// is overwritten. The trainer uses the cached-index fast path
+/// ([`maxpool_backward_idx`]); this re-scan is kept as its conformance
+/// reference.
 #[allow(clippy::too_many_arguments)]
 pub fn maxpool_backward(
     h: usize,
@@ -368,25 +399,12 @@ pub fn elman_forward(
             let (done, cur) = out.split_at_mut(base);
             let orow = &mut cur[..hidden];
             orow.copy_from_slice(bias);
+            // h_s = tanh(bias + x_s·Wx + h_{s-1}·Wh): two 1-row GEMMs
             let xrow = &x[(n * t + s) * in_dim..(n * t + s + 1) * in_dim];
-            for (i, &xi) in xrow.iter().enumerate() {
-                if xi != 0.0 {
-                    let wrow = &wx[i * hidden..(i + 1) * hidden];
-                    for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
-                        *o += xi * wv;
-                    }
-                }
-            }
+            kernels::gemm_nn(orow, xrow, wx, 1, in_dim, hidden);
             if s > 0 {
                 let hprev = &done[base - hidden..];
-                for (j, &hj) in hprev.iter().enumerate() {
-                    if hj != 0.0 {
-                        let wrow = &wh[j * hidden..(j + 1) * hidden];
-                        for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
-                            *o += hj * wv;
-                        }
-                    }
-                }
+                kernels::gemm_nn(orow, hprev, wh, 1, hidden, hidden);
             }
             for o in orow.iter_mut() {
                 *o = o.tanh();
@@ -399,7 +417,9 @@ pub fn elman_forward(
 /// recurrence. `delta` is dL/d(h states) as produced by the layers above
 /// (tanh' is applied HERE — callers must not pre-mask); `hs` is the
 /// forward pass's state tensor; `dwx`/`dwh`/`db` accumulate (`+=`), `dx`
-/// (if given) is overwritten. `dh`/`carry` are reusable scratch.
+/// (if given) is overwritten. `dh`/`carry` are reusable scratch; `wt`
+/// holds the packed `Wxᵀ | Whᵀ` the dx/carry GEMMs read (packed once per
+/// call).
 #[allow(clippy::too_many_arguments)]
 pub fn elman_backward(
     t: usize,
@@ -413,6 +433,7 @@ pub fn elman_backward(
     delta: &[f32],
     dh: &mut Vec<f32>,
     carry: &mut Vec<f32>,
+    wt: &mut Vec<f32>,
     dwx: &mut [f32],
     dwh: &mut [f32],
     db: &mut [f32],
@@ -423,6 +444,13 @@ pub fn elman_backward(
     dh.resize(hidden, 0.0);
     carry.clear();
     carry.resize(hidden, 0.0);
+    // wt = [Whᵀ [hidden, hidden] | Wxᵀ [hidden, in_dim]]: the transposed
+    // weights the carry/dx rows multiply against every timestep
+    wt.clear();
+    wt.resize(hidden * hidden + hidden * in_dim, 0.0);
+    let (wht, wxt) = wt.split_at_mut(hidden * hidden);
+    kernels::pack_transpose_into(wh, hidden, hidden, wht);
+    kernels::pack_transpose_into(wx, in_dim, hidden, wxt);
     for n in 0..batch {
         carry.iter_mut().for_each(|v| *v = 0.0);
         for s in (0..t).rev() {
@@ -432,50 +460,26 @@ pub fn elman_backward(
             for j in 0..hidden {
                 dh[j] = (delta[base + j] + carry[j]) * (1.0 - hrow[j] * hrow[j]);
             }
+            // dWx[i, j] += x_i·δ_j (rank-1), dWh[j0, j] += h_{s-1,j0}·δ_j
             let xrow = &x[(n * t + s) * in_dim..(n * t + s + 1) * in_dim];
-            for (i, &xi) in xrow.iter().enumerate() {
-                if xi != 0.0 {
-                    let grow = &mut dwx[i * hidden..(i + 1) * hidden];
-                    for (g, &dj) in grow.iter_mut().zip(dh.iter()) {
-                        *g += xi * dj;
-                    }
-                }
-            }
+            kernels::gemm_tn(dwx, xrow, dh, in_dim, 1, hidden);
             if s > 0 {
                 let hprev = &hs[base - hidden..base];
-                for (j, &hj) in hprev.iter().enumerate() {
-                    if hj != 0.0 {
-                        let grow = &mut dwh[j * hidden..(j + 1) * hidden];
-                        for (g, &dj) in grow.iter_mut().zip(dh.iter()) {
-                            *g += hj * dj;
-                        }
-                    }
-                }
+                kernels::gemm_tn(dwh, hprev, dh, hidden, 1, hidden);
             }
             for (g, &dj) in db.iter_mut().zip(dh.iter()) {
                 *g += dj;
             }
             if let Some(dx) = dx.as_deref_mut() {
+                // dx_s[i] = Σ_j wx[i, j]·δ_j = δ·Wxᵀ (1-row GEMM)
                 let dxrow = &mut dx[(n * t + s) * in_dim..(n * t + s + 1) * in_dim];
-                for (i, o) in dxrow.iter_mut().enumerate() {
-                    let wrow = &wx[i * hidden..(i + 1) * hidden];
-                    let mut acc = 0.0f32;
-                    for (&wv, &dv) in wrow.iter().zip(dh.iter()) {
-                        acc += wv * dv;
-                    }
-                    *o = acc;
-                }
+                dxrow.iter_mut().for_each(|v| *v = 0.0);
+                kernels::gemm_nn(dxrow, dh, wxt, 1, hidden, in_dim);
             }
             if s > 0 {
-                // carry_{s-1} = Wh · δ_s
-                for j in 0..hidden {
-                    let wrow = &wh[j * hidden..(j + 1) * hidden];
-                    let mut acc = 0.0f32;
-                    for (&wv, &dv) in wrow.iter().zip(dh.iter()) {
-                        acc += wv * dv;
-                    }
-                    carry[j] = acc;
-                }
+                // carry_{s-1}[j] = Σ_o wh[j, o]·δ_o = δ·Whᵀ
+                carry.iter_mut().for_each(|v| *v = 0.0);
+                kernels::gemm_nn(carry, dh, wht, 1, hidden, hidden);
             }
         }
     }
@@ -555,9 +559,11 @@ pub struct ModelSpec {
 /// Built-in specs for the heterogeneous zoo models (the MLP family keeps
 /// its legacy alternating-w/b manifests and is reconstructed from the
 /// manifest table instead). Layer sizes are chosen so that, priced at
-/// [`crate::models::DEVICE_FLOPS`] on the paper's 1GbE testbed, Eq. 18
-/// yields genuinely NON-uniform per-layer ratios — the property the
-/// MLP-only zoo could never exhibit.
+/// the uncalibrated-fallback device speed
+/// ([`crate::models::DEVICE_FLOPS`]; a `lags calibrate` run replaces it
+/// with this machine's measured sustained flops) on the paper's 1GbE
+/// testbed, Eq. 18 yields genuinely NON-uniform per-layer ratios — the
+/// property the MLP-only zoo could never exhibit.
 pub fn zoo_spec(name: &str) -> Option<ModelSpec> {
     match name {
         "convnet" => Some(ModelSpec {
@@ -648,10 +654,12 @@ impl ResolvedLayer {
 }
 
 /// Worker-owned scratch for the native forward/backward pass, reused
-/// across steps: per-layer activations, the two δ buffers, the per-layer
-/// Wᵀ cache for the dense dX walk, the im2col `col`/`dcol` matrices and
-/// the BPTT `dh`/`carry` rows. Every buffer reaches steady-state capacity
-/// after the first step, so the hot loop stops allocating.
+/// across steps: per-layer activations, the two δ buffers, the packed Wᵀ
+/// the dense/conv/BPTT dX GEMMs read, the im2col `col`/`dcol` matrices,
+/// the BPTT `dh`/`carry` rows, and the per-pool-layer argmax routing
+/// tables the forward pass caches so the pool backward is a table walk
+/// instead of a k×k window re-scan. Every buffer reaches steady-state
+/// capacity after the first step, so the hot loop stops allocating.
 #[derive(Debug, Clone, Default)]
 pub struct GradScratch {
     acts: Vec<Vec<f32>>,
@@ -662,6 +670,34 @@ pub struct GradScratch {
     dcol: Vec<f32>,
     dh: Vec<f32>,
     carry: Vec<f32>,
+    /// per-layer MaxPool argmax tables (empty vecs for non-pool layers)
+    pool_idx: Vec<Vec<u32>>,
+}
+
+/// One hot-loop GEMM shape with its per-step forward execution count —
+/// the calibration workload unit ([`NativeNet::gemm_shapes`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GemmShape {
+    pub label: String,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// forward-pass executions of this GEMM per training step (the
+    /// backward runs proportional work at the same shapes)
+    pub calls_per_step: usize,
+}
+
+impl GemmShape {
+    /// flops of ONE execution: 2·m·k·n.
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.k as f64 * self.n as f64
+    }
+
+    /// forward flops this shape contributes per training step — the
+    /// calibration aggregate's weight.
+    pub fn step_flops(&self) -> f64 {
+        self.calls_per_step as f64 * self.flops()
+    }
 }
 
 /// Reusable scratch for [`compress_layer_bucket_into`]: the bucket-padded
@@ -794,6 +830,61 @@ impl NativeNet {
         self.d
     }
 
+    /// The labelled GEMM shapes this net's hot loop actually executes —
+    /// Dense whole-batch mat-muls, per-sample im2col Conv mat-muls, and
+    /// the per-timestep Elman GEMV rows — each with its forward-pass
+    /// execution count per training step. The calibration microbenchmark
+    /// (`runtime::calibrate`) times the blocked kernels at exactly these
+    /// shapes and weights the aggregate by `step_flops`, so measured
+    /// device flops reflect the real workload mix (big conv/dense
+    /// mat-muls dominating, as they dominate trainer time) rather than a
+    /// synthetic square GEMM or an unweighted mean over tiny GEMVs.
+    pub fn gemm_shapes(&self) -> Vec<GemmShape> {
+        let b = self.batch;
+        let mut out = Vec::new();
+        for layer in &self.layers {
+            match &layer.kind {
+                ResolvedKind::Dense { rows, fan_in, fan_out, .. } => {
+                    out.push(GemmShape {
+                        label: format!("dense_{rows}x{fan_in}x{fan_out}"),
+                        m: *rows,
+                        k: *fan_in,
+                        n: *fan_out,
+                        calls_per_step: 1,
+                    });
+                }
+                ResolvedKind::Conv { dims } => {
+                    let np = dims.out_h() * dims.out_w();
+                    out.push(GemmShape {
+                        label: format!("conv_{np}x{}x{}", dims.patch(), dims.cout),
+                        m: np,
+                        k: dims.patch(),
+                        n: dims.cout,
+                        calls_per_step: b,
+                    });
+                }
+                ResolvedKind::Elman { t, in_dim, hidden } => {
+                    out.push(GemmShape {
+                        label: format!("elman_x_1x{in_dim}x{hidden}"),
+                        m: 1,
+                        k: *in_dim,
+                        n: *hidden,
+                        calls_per_step: b * t,
+                    });
+                    out.push(GemmShape {
+                        label: format!("elman_h_1x{hidden}x{hidden}"),
+                        m: 1,
+                        k: *hidden,
+                        n: *hidden,
+                        calls_per_step: b * t,
+                    });
+                }
+                ResolvedKind::Pool { .. } | ResolvedKind::Embed { .. } => {}
+            }
+        }
+        out
+    }
+
     /// Seeded initial parameters, deterministic in (seed, layer index):
     /// He-normal dense/conv weights, Xavier-ish recurrent blocks, zero
     /// biases — the native stand-in for `init.bin`.
@@ -858,11 +949,20 @@ impl NativeNet {
     /// Forward pass into reusable per-layer activation buffers (`acts[l]`
     /// holds layer `l`'s full-batch output; the last entry holds raw
     /// logits). Every element is overwritten, so stale contents don't
-    /// matter.
-    fn forward_into(&self, params: &[f32], x: &BatchData, acts: &mut Vec<Vec<f32>>, col: &mut Vec<f32>) {
+    /// matter. `pool_idx[l]` receives each pool layer's argmax routing
+    /// table for the backward pass.
+    fn forward_into(
+        &self,
+        params: &[f32],
+        x: &BatchData,
+        acts: &mut Vec<Vec<f32>>,
+        col: &mut Vec<f32>,
+        pool_idx: &mut Vec<Vec<u32>>,
+    ) {
         let nl = self.layers.len();
         let b = self.batch;
         acts.resize_with(nl, Vec::new);
+        pool_idx.resize_with(nl, Vec::new);
         for l in 0..nl {
             let layer = &self.layers[l];
             let (done, rest) = acts.split_at_mut(l);
@@ -882,25 +982,17 @@ impl NativeNet {
             };
             match &layer.kind {
                 ResolvedKind::Dense { rows, fan_in, fan_out, relu } => {
+                    // out = bias + input·W: one whole-batch GEMM
                     let input = input_f32.expect("checked: f32 input");
                     let w = &params[off..off + fan_in * fan_out];
                     let bias = &params[off + fan_in * fan_out..off + (fan_in + 1) * fan_out];
                     for r in 0..*rows {
-                        let xrow = &input[r * fan_in..(r + 1) * fan_in];
-                        let orow = &mut out[r * fan_out..(r + 1) * fan_out];
-                        orow.copy_from_slice(bias);
-                        for (i, &xi) in xrow.iter().enumerate() {
-                            if xi != 0.0 {
-                                let wrow = &w[i * fan_out..(i + 1) * fan_out];
-                                for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
-                                    *o += xi * wv;
-                                }
-                            }
-                        }
-                        if *relu {
-                            for o in orow.iter_mut() {
-                                *o = o.max(0.0);
-                            }
+                        out[r * fan_out..(r + 1) * fan_out].copy_from_slice(bias);
+                    }
+                    kernels::gemm_nn(out, input, w, *rows, *fan_in, *fan_out);
+                    if *relu {
+                        for o in out.iter_mut() {
+                            *o = o.max(0.0);
                         }
                     }
                 }
@@ -912,7 +1004,7 @@ impl NativeNet {
                 }
                 ResolvedKind::Pool { h, w, c, k } => {
                     let input = input_f32.expect("checked: f32 input");
-                    maxpool_forward(*h, *w, *c, *k, input, b, out);
+                    maxpool_forward_idx(*h, *w, *c, *k, input, b, out, &mut pool_idx[l]);
                 }
                 ResolvedKind::Embed { vocab: _, dim } => {
                     let BatchData::I32(toks) = x else { unreachable!("checked") };
@@ -951,8 +1043,8 @@ impl NativeNet {
         let BatchData::I32(yv) = y else { bail!("y must be i32") };
         let b = self.batch;
         let nl = self.layers.len();
-        let GradScratch { acts, delta, prev, wt, col, dcol, dh, carry } = scratch;
-        self.forward_into(params, x, acts, col);
+        let GradScratch { acts, delta, prev, wt, col, dcol, dh, carry, pool_idx } = scratch;
+        self.forward_into(params, x, acts, col, pool_idx);
 
         delta.clear();
         delta.resize(self.loss_rows * self.classes, 0.0);
@@ -987,55 +1079,27 @@ impl NativeNet {
                         }
                     }
                     let input = input_f32.expect("checked: f32 input");
-                    // dW[i,j] = Σ_r a[r,i]·δ[r,j];  db[j] = Σ_r δ[r,j]
+                    // dW = inputᵀ·δ;  db[j] = Σ_r δ[r,j]
                     let boff = off + fan_in * fan_out;
-                    for r in 0..*rows {
-                        let arow = &input[r * fan_in..(r + 1) * fan_in];
-                        let drow = &delta[r * fan_out..(r + 1) * fan_out];
-                        for (i, &ai) in arow.iter().enumerate() {
-                            if ai != 0.0 {
-                                let grow =
-                                    &mut grad[off + i * fan_out..off + (i + 1) * fan_out];
-                                for (g, &dj) in grow.iter_mut().zip(drow.iter()) {
-                                    *g += ai * dj;
-                                }
-                            }
-                        }
-                        let gb = &mut grad[boff..boff + fan_out];
-                        for (g, &dj) in gb.iter_mut().zip(drow.iter()) {
-                            *g += dj;
-                        }
-                    }
-                    // δ_prev[r,i] = Σ_j W[i,j]·δ[r,j]. W is cached
-                    // transposed once per layer so the per-row inner walk
-                    // is a contiguous axpy over Wᵀ rows; the j-ascending
+                    kernels::gemm_tn(
+                        &mut grad[off..boff],
+                        input,
+                        delta,
+                        *fan_in,
+                        *rows,
+                        *fan_out,
+                    );
+                    kernels::col_sum_add(&mut grad[boff..boff + fan_out], delta, *rows, *fan_out);
+                    // δ_prev = δ·Wᵀ (the nt kernel packs W transposed into
+                    // `wt` so its inner walk is contiguous; the j-ascending
                     // accumulation order — and therefore every f32 sum —
-                    // is unchanged. The next layer applies its own
-                    // activation mask.
+                    // is the kernel contract's). The next layer applies
+                    // its own activation mask.
                     if l > 0 {
                         let w = &params[off..off + fan_in * fan_out];
-                        wt.clear();
-                        wt.resize(fan_out * fan_in, 0.0);
-                        for i in 0..*fan_in {
-                            let wrow = &w[i * fan_out..(i + 1) * fan_out];
-                            for (j, &wij) in wrow.iter().enumerate() {
-                                wt[j * fan_in + i] = wij;
-                            }
-                        }
                         prev.clear();
                         prev.resize(rows * fan_in, 0.0);
-                        for r in 0..*rows {
-                            let drow = &delta[r * fan_out..(r + 1) * fan_out];
-                            let prow = &mut prev[r * fan_in..(r + 1) * fan_in];
-                            for (j, &dj) in drow.iter().enumerate() {
-                                if dj != 0.0 {
-                                    let wtrow = &wt[j * fan_in..(j + 1) * fan_in];
-                                    for (p, &wji) in prow.iter_mut().zip(wtrow.iter()) {
-                                        *p += wji * dj;
-                                    }
-                                }
-                            }
-                        }
+                        kernels::gemm_nt(prev, delta, w, *rows, *fan_out, *fan_in, wt);
                         std::mem::swap(&mut *delta, &mut *prev);
                     }
                 }
@@ -1063,22 +1127,23 @@ impl NativeNet {
                             delta,
                             col,
                             dcol,
+                            wt,
                             dw,
                             db,
                             Some(&mut prev[..]),
                         );
                         std::mem::swap(&mut *delta, &mut *prev);
                     } else {
-                        conv2d_backward(dims, w, input, b, delta, col, dcol, dw, db, None);
+                        conv2d_backward(dims, w, input, b, delta, col, dcol, wt, dw, db, None);
                     }
                 }
-                ResolvedKind::Pool { h, w, c, k } => {
-                    // routes δ to the argmax tap; no parameters, no mask
+                ResolvedKind::Pool { .. } => {
+                    // routes δ to the argmax tap recorded by the forward
+                    // pass (no k×k re-scan); no parameters, no mask
                     if l > 0 {
-                        let input = input_f32.expect("checked: f32 input");
                         prev.clear();
                         prev.resize(layer.in_len, 0.0);
-                        maxpool_backward(*h, *w, *c, *k, input, b, delta, prev);
+                        maxpool_backward_idx(&pool_idx[l], delta, prev);
                         std::mem::swap(&mut *delta, &mut *prev);
                     }
                 }
@@ -1117,6 +1182,7 @@ impl NativeNet {
                         delta,
                         dh,
                         carry,
+                        wt,
                         dwx,
                         dwh,
                         db,
@@ -1138,7 +1204,8 @@ impl NativeNet {
         let BatchData::I32(yv) = y else { bail!("y must be i32") };
         let mut acts = Vec::new();
         let mut col = Vec::new();
-        self.forward_into(params, x, &mut acts, &mut col);
+        let mut pool_idx = Vec::new();
+        self.forward_into(params, x, &mut acts, &mut col, &mut pool_idx);
         let logits = acts.last().expect("non-empty net");
         let (rows, c) = (self.loss_rows, self.classes);
         let mut dscratch = vec![0.0f32; rows * c];
@@ -1754,6 +1821,58 @@ mod tests {
         assert_eq!(dx.iter().filter(|&&v| v != 0.0).count(), 4);
         let s: f32 = dx.iter().sum();
         assert_eq!(s, 15.0, "pooling neither duplicates nor drops gradient mass");
+    }
+
+    #[test]
+    fn maxpool_cached_idx_matches_rescan_backward() {
+        // the cached-argmax fast path must route bit-identically to the
+        // re-scanning reference, including ties (equal values in one
+        // window resolve to the first strict max in scan order)
+        let (h, w, c, k) = (6usize, 4usize, 2usize, 2usize);
+        let batch = 3usize;
+        let mut rng = Rng::new(21);
+        let mut x = vec![0.0f32; batch * h * w * c];
+        rng.fill_normal(&mut x, 1.0);
+        // inject ties: duplicate some values inside windows
+        x[3] = x[1];
+        x[10] = x[2];
+        let (ho, wo) = (h / k, w / k);
+        let mut out_a = vec![0.0f32; batch * ho * wo * c];
+        let mut out_b = vec![0.0f32; batch * ho * wo * c];
+        let mut idx = Vec::new();
+        maxpool_forward(h, w, c, k, &x, batch, &mut out_a);
+        maxpool_forward_idx(h, w, c, k, &x, batch, &mut out_b, &mut idx);
+        assert_eq!(out_a, out_b);
+        let mut delta = vec![0.0f32; out_a.len()];
+        rng.fill_normal(&mut delta, 1.0);
+        let mut dx_scan = vec![0.0f32; x.len()];
+        let mut dx_idx = vec![0.0f32; x.len()];
+        maxpool_backward(h, w, c, k, &x, batch, &delta, &mut dx_scan);
+        maxpool_backward_idx(&idx, &delta, &mut dx_idx);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&dx_idx), bits(&dx_scan));
+    }
+
+    #[test]
+    fn gemm_shapes_cover_parametric_hot_loops() {
+        let man = native_manifest(1);
+        let conv = NativeNet::from_manifest(&man.models["convnet"]).unwrap();
+        let shapes = conv.gemm_shapes();
+        // conv1, conv2, head — pools contribute no GEMM
+        assert_eq!(shapes.len(), 3);
+        assert!(shapes.iter().all(|s| s.flops() > 0.0 && s.step_flops() >= s.flops()));
+        // conv GEMMs run once per sample (batch 16), the head once per step
+        assert_eq!(shapes[0].calls_per_step, 16);
+        assert_eq!(shapes[2].calls_per_step, 1);
+        // the calibration weight must be dominated by the conv mat-muls,
+        // not the head GEMV-ish tail — that is the aggregation's point
+        assert!(shapes[0].step_flops() > 10.0 * shapes[2].step_flops());
+        let rnn = NativeNet::from_manifest(&man.models["rnn"]).unwrap();
+        // embed has no GEMM; elman contributes two shapes; head one
+        let rs = rnn.gemm_shapes();
+        assert_eq!(rs.len(), 3);
+        // elman GEMVs run batch·t times per step
+        assert_eq!(rs[0].calls_per_step, 8 * 16);
     }
 
     #[test]

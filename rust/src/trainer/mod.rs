@@ -266,10 +266,15 @@ pub struct Trainer {
     /// the configured α–β interconnect at `cfg.workers` — prices Eq. 18
     /// selection and the DES, replacing the old hard-coded `gige_16()`
     net: NetworkModel,
-    /// the runtime backend's synthetic device speed (flops/s) — prices
-    /// the startup Eq. 18 selection and the DES compute profile (native
-    /// ≈ 1e9 scalar-rust flops, PJRT accelerator-class 1e12)
+    /// the runtime backend's device speed (flops/s) — prices the startup
+    /// Eq. 18 selection and the DES compute profile. Measured sustained
+    /// GEMM flops when a calibration is attached to the runtime; else
+    /// the documented fallback constants (native `DEVICE_FLOPS`, PJRT
+    /// `PJRT_DEVICE_FLOPS`)
     device_flops: f64,
+    /// provenance of `device_flops` (calibrated vs fallback), carried
+    /// into the report
+    flops_source: String,
     /// online measured-timing accumulator; `Some` only on the adaptive
     /// LAGS path with `--reselect-every N > 0`
     online: Option<MeasuredProfile>,
@@ -292,9 +297,26 @@ pub struct Trainer {
 impl Trainer {
     /// Load artifacts and build a trainer. The magic dir `"native"`
     /// selects the built-in native model zoo seeded with `cfg.seed`.
+    ///
+    /// Device-flops calibration: `--calibrate` measures + persists a
+    /// fresh calibration at startup; otherwise a previously persisted
+    /// calibration (if any) is loaded — either way Eq. 18 startup
+    /// selection and the DES then price compute with the measured
+    /// number instead of the `DEVICE_FLOPS` fallback. Callers that
+    /// build their own [`Runtime`] (tests, `compare`) attach calibration
+    /// explicitly via [`Runtime::calibrate`].
     pub fn from_artifacts(dir: &str, cfg: TrainConfig) -> Result<Trainer> {
-        let rt = Arc::new(Runtime::open(dir, cfg.seed)?);
-        Self::with_runtime(&rt, cfg)
+        let mut rt = Runtime::open(dir, cfg.seed)?;
+        rt.calibrate(cfg.calibrate)?;
+        if cfg.verbose {
+            eprintln!(
+                "[{}] device flops: {:.3e}/s (source: {})",
+                cfg.algorithm.name(),
+                rt.device_flops(),
+                rt.flops_source()
+            );
+        }
+        Self::with_runtime(&Arc::new(rt), cfg)
     }
 
     pub fn with_runtime(rt: &Arc<Runtime>, cfg: TrainConfig) -> Result<Trainer> {
@@ -316,6 +338,7 @@ impl Trainer {
         // CLI report and this selection always agree.
         let net = cfg.net.model(cfg.workers);
         let device_flops = rt.device_flops();
+        let flops_source = rt.flops_source();
         let ratios: Vec<f64> = if cfg.adaptive && cfg.algorithm == Algorithm::Lags {
             let rc = RatioConfig { c_max: cfg.c_max, ..RatioConfig::default() };
             adaptive::select_ratios_manifest(mm, device_flops, &net, &rc)
@@ -381,6 +404,7 @@ impl Trainer {
             merge: MergeBuffer::new(cfg.merge_bytes.saturating_mul(cfg.workers)),
             net,
             device_flops,
+            flops_source,
             online,
             selections,
             reduce_secs: vec![0.0; nl],
@@ -976,6 +1000,8 @@ impl Trainer {
             sim_overlap_efficiency: sim.overlap_efficiency(),
             net_alpha: self.cfg.net.alpha,
             net_bandwidth: self.cfg.net.bandwidth,
+            device_flops: self.device_flops,
+            flops_source: self.flops_source.clone(),
             selections: self.selections.clone(),
         })
     }

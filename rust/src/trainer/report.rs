@@ -95,6 +95,11 @@ pub struct TrainReport {
     pub net_alpha: f64,
     /// bandwidth (bytes/s) of the configured interconnect
     pub net_bandwidth: f64,
+    /// device speed (flops/s) Eq. 18 and the DES priced compute with
+    pub device_flops: f64,
+    /// provenance of `device_flops`: "calibrated (...)" when a measured
+    /// calibration was attached, else the documented fallback constant
+    pub flops_source: String,
     /// Eq. 18 selection history: startup selection + every online
     /// re-selection (empty for non-adaptive runs)
     pub selections: Vec<RatioSelection>,
@@ -150,6 +155,8 @@ impl TrainReport {
                     ("bandwidth", Json::Num(self.net_bandwidth)),
                 ]),
             ),
+            ("device_flops", Json::Num(self.device_flops)),
+            ("flops_source", Json::Str(self.flops_source.clone())),
             (
                 "ratio_selections",
                 Json::Arr(self.selections.iter().map(RatioSelection::to_json).collect()),
@@ -211,6 +218,8 @@ mod tests {
             sim_overlap_efficiency: 0.0,
             net_alpha: 5e-4,
             net_bandwidth: 111e6,
+            device_flops: 1e9,
+            flops_source: "DEVICE_FLOPS fallback".into(),
             selections: vec![RatioSelection {
                 step: 0,
                 effective_cmax: 250.0,

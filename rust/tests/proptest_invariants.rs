@@ -10,12 +10,15 @@
 //!   5. Lemma 1 on gaussian ensembles (the convergence keystone)
 //!   6. DES sanity: monotonicity + bounds
 //!   7. Eq. 18/19 model coherence
+//!   8. Native layer kinds: im2col ≡ direct convolution, BPTT ≡ unrolled
+//!   9. Blocked GEMM kernels ≡ fixed-order reference (bit-identical)
 
 use lags::adaptive::{perf_model, ratio, RatioConfig};
 use lags::collectives::{dense, sparse_agg, NetworkModel};
 use lags::config::TrainConfig;
 use lags::models::{zoo, LayerProfile, ModelProfile};
 use lags::pipeline::desim::{simulate, Schedule, SimParams};
+use lags::runtime::kernels;
 use lags::runtime::native::{
     conv2d_backward, conv2d_forward, elman_backward, elman_forward, ConvDims,
 };
@@ -691,12 +694,12 @@ fn prop_conv_backward_matches_naive() {
         let x = randvec(&mut c.rng, batch * d.in_len());
         let w = randvec(&mut c.rng, d.weight_len());
         let delta = randvec(&mut c.rng, batch * d.out_len());
-        let (mut col, mut dcol) = (Vec::new(), Vec::new());
+        let (mut col, mut dcol, mut wt) = (Vec::new(), Vec::new(), Vec::new());
         let mut dw = vec![0.0f32; d.weight_len()];
         let mut db = vec![0.0f32; d.cout];
         let mut dx = vec![0.0f32; batch * d.in_len()];
         conv2d_backward(
-            &d, &w, &x, batch, &delta, &mut col, &mut dcol, &mut dw, &mut db,
+            &d, &w, &x, batch, &delta, &mut col, &mut dcol, &mut wt, &mut dw, &mut db,
             Some(&mut dx[..]),
         );
         // f64 references
@@ -774,13 +777,13 @@ fn prop_elman_bptt_matches_unrolled_reference() {
         elman_forward(t, in_dim, hidden, &wx, &wh, &bias, &x, batch, &mut hs);
         let delta = randvec(&mut c.rng, batch * t * hidden);
 
-        let (mut dh, mut carry) = (Vec::new(), Vec::new());
+        let (mut dh, mut carry, mut wt) = (Vec::new(), Vec::new(), Vec::new());
         let mut dwx = vec![0.0f32; in_dim * hidden];
         let mut dwh = vec![0.0f32; hidden * hidden];
         let mut db = vec![0.0f32; hidden];
         let mut dx = vec![0.0f32; batch * t * in_dim];
         elman_backward(
-            t, in_dim, hidden, &wx, &wh, &x, &hs, batch, &delta, &mut dh, &mut carry,
+            t, in_dim, hidden, &wx, &wh, &x, &hs, batch, &delta, &mut dh, &mut carry, &mut wt,
             &mut dwx, &mut dwh, &mut db, Some(&mut dx[..]),
         );
 
@@ -856,6 +859,62 @@ fn prop_elman_bptt_matches_unrolled_reference() {
             if !close(a, b) {
                 return Err(format!("t={t} dX[{i}]: {a} vs {b}"));
             }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 9. Blocked GEMM kernels: bit-identical to the fixed-order reference
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_blocked_gemm_bit_identical_to_reference() {
+    // random M/K/N — including sizes that leave MR/NR remainder tiles and
+    // cross the KC reduction block — over every transpose variant, on a
+    // random (non-zero) initial C. The blocked kernels must reproduce the
+    // naive fixed-order triple loop BIT for bit: that chain equality is
+    // what makes blocking/tiling invisible to the trainer's determinism
+    // contracts (DESIGN.md §Kernels-and-calibration).
+    let cases = Config { cases: 96, ..Config::default() };
+    check("blocked-gemm-bitwise", cases, 1, 2, |c: &mut Case| {
+        let m = 1 + c.rng.below(13);
+        let n = 1 + c.rng.below(21);
+        // bias toward small k, but cross the KC=256 boundary sometimes
+        let k = if c.rng.below(8) == 0 { 250 + c.rng.below(20) } else { 1 + c.rng.below(40) };
+        let a = randvec(&mut c.rng, m * k);
+        let b = randvec(&mut c.rng, k * n);
+        let c0 = randvec(&mut c.rng, m * n);
+        let mut at = Vec::new();
+        kernels::pack_transpose(&a, m, k, &mut at);
+        let mut bt = Vec::new();
+        kernels::pack_transpose(&b, k, n, &mut bt);
+
+        let mut want = c0.clone();
+        kernels::gemm_ref(&mut want, &a, false, &b, false, m, k, n);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+
+        let mut got = c0.clone();
+        kernels::gemm_nn(&mut got, &a, &b, m, k, n);
+        if bits(&got) != bits(&want) {
+            return Err(format!("gemm_nn {m}x{k}x{n} diverged from gemm_ref"));
+        }
+        let mut got = c0.clone();
+        kernels::gemm_tn(&mut got, &at, &b, m, k, n);
+        if bits(&got) != bits(&want) {
+            return Err(format!("gemm_tn {m}x{k}x{n} diverged from gemm_ref"));
+        }
+        let mut got = c0.clone();
+        let mut scratch = Vec::new();
+        kernels::gemm_nt(&mut got, &a, &bt, m, k, n, &mut scratch);
+        if bits(&got) != bits(&want) {
+            return Err(format!("gemm_nt {m}x{k}x{n} diverged from gemm_ref"));
+        }
+        // the reference's own transposed-storage flags agree too
+        let mut want_t = c0.clone();
+        kernels::gemm_ref(&mut want_t, &at, true, &bt, true, m, k, n);
+        if bits(&want_t) != bits(&want) {
+            return Err(format!("gemm_ref transpose flags {m}x{k}x{n} inconsistent"));
         }
         Ok(())
     });
