@@ -1,0 +1,127 @@
+//! FAULTS bench: straggler degradation and what wins it back.
+//!
+//! Four scenarios over the native `mlp_deep` at P = 4, c = 20:
+//!
+//! * `baseline`   — healthy cluster, fixed uniform ratios
+//! * `skew4`      — worker 1 runs 4× slow, fixed ratios (`--reselect-every 0`)
+//! * `skew4_resel`— same skew, Eq. 18 re-selection against the MEASURED
+//!                  straggler-inflated profile (`--adaptive --reselect-every 4`)
+//! * `skew4_q3`   — same skew, bounded-staleness quorum 3 of 4
+//!
+//! Each `BENCH_faults.json` row carries the measured step median plus
+//! `des_iter_s` (the DES prediction on the configured α–β network under
+//! the SAME fault plan), `final_loss_30` (a fresh fixed 30-step run, so
+//! losses are comparable across rows), `gate` (the q-th-fastest skew that
+//! paces the synchronous step) and `effective_cmax` when adaptive.
+//!
+//! Read the DES and measured columns together: the in-process trainer
+//! shares one machine, so the quorum cannot reclaim the straggler's REAL
+//! wall clock (its sleep still runs on a local thread) — the DES is where
+//! the wall-clock recovery shows (gate 4 → 1), while the measured rows
+//! validate numerics and the re-selection's lower effective c_max.
+//!
+//!     cargo bench --bench faults
+
+use lags::cluster::faults::FaultPlan;
+use lags::config::TrainConfig;
+use lags::runtime::Runtime;
+use lags::trainer::{Algorithm, Trainer};
+use lags::util::bench;
+use std::sync::Arc;
+
+struct Scenario {
+    name: &'static str,
+    skew: bool,
+    quorum: usize,
+    reselect: bool,
+}
+
+fn skew4() -> FaultPlan {
+    FaultPlan { compute_skew: vec![1.0, 4.0, 1.0, 1.0], ..FaultPlan::none() }
+}
+
+fn cfg(s: &Scenario) -> TrainConfig {
+    let mut c = TrainConfig::default_for("mlp_deep");
+    c.algorithm = Algorithm::Lags;
+    c.workers = 4;
+    c.threads = 2;
+    c.lr = 0.1;
+    c.compression = 20.0;
+    c.eval_every = 0;
+    if s.skew {
+        c.faults = skew4();
+    }
+    c.quorum = s.quorum;
+    c.staleness_bound = if s.quorum > 0 { 4 } else { 0 };
+    if s.reselect {
+        c.adaptive = true;
+        c.reselect_every = 4;
+    }
+    c
+}
+
+fn main() {
+    let scenarios = [
+        Scenario { name: "baseline", skew: false, quorum: 0, reselect: false },
+        Scenario { name: "skew4", skew: true, quorum: 0, reselect: false },
+        Scenario { name: "skew4_resel", skew: true, quorum: 0, reselect: true },
+        Scenario { name: "skew4_q3", skew: true, quorum: 3, reselect: false },
+    ];
+    let rt = Arc::new(Runtime::native(42));
+
+    println!("# robustness: straggler (4x on worker 1) vs re-selection vs quorum, P=4");
+    bench::table_header(&["scenario", "step_ms", "des_iter_s", "loss@30", "gate", "eff_cmax"]);
+    for s in &scenarios {
+        let name = format!("faults_P4_{}", s.name);
+
+        // measured step wall-clock — includes the straggler sleeps, the
+        // re-selection bookkeeping and (for quorum) the late-message folds
+        let mut t = Trainer::with_runtime(&rt, cfg(s)).unwrap();
+        let stats = bench::run(&name, || {
+            t.step().unwrap();
+        });
+
+        // the DES twin: same plan, same live ratios, α–β-priced network.
+        // This is where the quorum's wall-clock recovery is visible — the
+        // compute gate falls from the slowest skew to the q-th fastest.
+        let sim = t.simulated_iteration();
+        bench::annotate(&name, "des_iter_s", sim.iter_time);
+        let rb = t.robustness_stats();
+        let gate = if !s.skew {
+            1.0
+        } else if s.quorum > 0 {
+            1.0 // 3rd-fastest of [1, 4, 1, 1]
+        } else {
+            4.0
+        };
+        bench::annotate(&name, "gate", gate);
+        bench::annotate(&name, "quorum_misses", rb.total_quorum_misses() as f64);
+
+        // fixed-length convergence twin: a FRESH 30-step run so the loss
+        // column is comparable across scenarios (the bench loop above
+        // runs a machine-dependent number of steps)
+        let mut t30 = Trainer::with_runtime(&rt, cfg(s)).unwrap();
+        let mut loss30 = f64::NAN;
+        for _ in 0..30 {
+            loss30 = t30.step().unwrap();
+        }
+        bench::annotate(&name, "final_loss_30", loss30);
+
+        // re-selection against the gate-inflated profile trades
+        // compression for overlap budget: effective c_max drops
+        let eff_cmax = t.selections().last().map(|sel| sel.effective_cmax);
+        if let Some(cm) = eff_cmax {
+            bench::annotate(&name, "effective_cmax", cm);
+        }
+        bench::table_row(&[
+            s.name.to_string(),
+            format!("{:.3}", stats.median * 1e3),
+            format!("{:.4}", sim.iter_time),
+            format!("{loss30:.4}"),
+            format!("{gate:.1}"),
+            eff_cmax.map_or("-".to_string(), |cm| format!("{cm:.0}")),
+        ]);
+    }
+
+    bench::write_json("BENCH_faults.json").expect("write BENCH_faults.json");
+}

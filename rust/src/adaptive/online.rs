@@ -105,6 +105,24 @@ impl MeasuredProfile {
         self.steps += 1;
     }
 
+    /// [`Self::observe_step`] with the compute sample re-inflated by a
+    /// straggler `gate` (`cluster::faults::compute_gate`). The calling
+    /// thread clocks ITS OWN fan-out wall-clock, but under a fault plan
+    /// the synchronous step is paced by the gating worker's skew — so
+    /// Eq. 18 must re-select against `gate × comp_secs`, the measured
+    /// straggler-inflated profile, not the local one. `gate = 1.0`
+    /// reduces to `observe_step` exactly (bit-identical fold), keeping
+    /// the no-fault determinism contract intact.
+    pub fn observe_step_skewed(
+        &mut self,
+        comp_secs: f64,
+        gate: f64,
+        compress_secs: &[f64],
+        reduce_secs: &[f64],
+    ) {
+        self.observe_step(comp_secs * gate.max(0.0), compress_secs, reduce_secs);
+    }
+
     /// Number of steps folded in so far (0 = nothing measured yet).
     pub fn steps(&self) -> usize {
         self.steps
@@ -217,6 +235,22 @@ mod tests {
         assert_eq!(o.len(), 3);
         assert!((o[0] - 0.033).abs() < 1e-12); // layer "c"
         assert!((o[2] - 0.011).abs() < 1e-12); // layer "a"
+    }
+
+    #[test]
+    fn skewed_observation_inflates_only_compute() {
+        let mut plain = mp();
+        let mut skewed = mp();
+        plain.observe_step(1.6, &[0.01; 3], &[0.002; 3]);
+        skewed.observe_step_skewed(0.4, 4.0, &[0.01; 3], &[0.002; 3]);
+        assert_eq!(skewed.compute_seconds(), plain.compute_seconds());
+        assert_eq!(skewed.reduce_seconds(), plain.reduce_seconds());
+        // gate 1.0 is bit-identical to the un-gated call
+        let mut a = mp();
+        let mut b = mp();
+        a.observe_step(0.37, &[0.01; 3], &[0.002; 3]);
+        b.observe_step_skewed(0.37, 1.0, &[0.01; 3], &[0.002; 3]);
+        assert_eq!(a.compute_seconds(), b.compute_seconds());
     }
 
     #[test]

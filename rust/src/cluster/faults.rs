@@ -1,0 +1,438 @@
+//! Deterministic fault & heterogeneity injection (the "flaky cluster"
+//! the paper never tests).
+//!
+//! A [`FaultPlan`] describes everything that can go wrong with the P
+//! logical workers, in a form that is a **pure function of (plan, worker
+//! uid, step)**:
+//!
+//! - **compute skew** — a per-worker multiplicative slowdown (`2.0` = the
+//!   worker takes twice the nominal step compute). Constant over the run,
+//!   indexed by the worker's stable uid.
+//! - **link jitter** — per-(worker, step) multiplicative noise on the
+//!   worker's effective α (latency) and bandwidth terms, drawn from the
+//!   plan's own seeded [`Rng`] stream. Never sampled from wall-clock or
+//!   arrival order, so two runs with the same plan draw identical jitter.
+//! - **membership events** — a drop/join schedule keyed by step. Events
+//!   fire strictly *between* optimizer steps (at the top of `step()` for
+//!   their step index), which is what makes elastic membership compatible
+//!   with the bit-identity contract: the parameter state at every step
+//!   boundary is a deterministic function of the seed and the plan.
+//!
+//! The same plan is threaded through the real trainer (quorum selection,
+//! straggler sleeps, membership) and the DES (`pipeline::desim`, compute
+//! gating + conservative link pricing), so predicted and measured
+//! degradation are directly comparable.
+//!
+//! **Quorum determinism.** The bounded-staleness quorum mode does NOT use
+//! reduce timeouts on real clocks — that would make participation depend
+//! on scheduler noise. Instead each step's participants are the `q`
+//! virtually-fastest alive workers under [`FaultPlan::virtual_step_time`]
+//! (skew × jittered link multiplier, ties broken by rank), with workers
+//! that have been excluded for `staleness_bound` consecutive steps forced
+//! back in. The *wall-clock* effect of straggling is modelled separately
+//! (sleeps in the trainer, compute gating in the DES); the *numeric*
+//! effect is this pure selection function.
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+
+/// What a membership event does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MembershipAction {
+    /// Worker leaves; its error-feedback residual is re-sharded across
+    /// the survivors (no gradient mass is lost).
+    Drop,
+    /// Worker joins with fresh (zero) residual and its own uid-keyed data
+    /// shard stream.
+    Join,
+}
+
+impl MembershipAction {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MembershipAction::Drop => "drop",
+            MembershipAction::Join => "join",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<MembershipAction> {
+        match s {
+            "drop" => Ok(MembershipAction::Drop),
+            "join" => Ok(MembershipAction::Join),
+            other => bail!("unknown membership action {other:?} (want drop|join)"),
+        }
+    }
+}
+
+/// One scheduled membership change. `worker` is the stable uid (the data
+/// shard key), not the current rank.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MembershipEvent {
+    /// step index at whose start the event fires (before the step's
+    /// gradients are computed)
+    pub step: usize,
+    pub action: MembershipAction,
+    pub worker: usize,
+}
+
+/// The full deterministic fault schedule for a run. See the module docs
+/// for semantics; [`FaultPlan::none`] is the default healthy cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// seed for the jitter streams (independent of the training seed)
+    pub seed: u64,
+    /// per-worker-uid multiplicative compute skew; missing entries mean
+    /// 1.0 (nominal). Values < 1 model faster-than-nominal workers.
+    pub compute_skew: Vec<f64>,
+    /// relative α (latency) jitter amplitude in [0, 1): each (worker,
+    /// step) draws a multiplier in [1-j, 1+j]
+    pub alpha_jitter: f64,
+    /// relative bandwidth jitter amplitude in [0, 1), same convention
+    pub bandwidth_jitter: f64,
+    /// drop/join schedule, applied in listed order within a step
+    pub events: Vec<MembershipEvent>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan::none()
+    }
+}
+
+impl FaultPlan {
+    /// The healthy cluster: no skew, no jitter, no membership changes.
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            compute_skew: Vec::new(),
+            alpha_jitter: 0.0,
+            bandwidth_jitter: 0.0,
+            events: Vec::new(),
+        }
+    }
+
+    /// True when the plan injects nothing (the default-config fast path).
+    pub fn is_none(&self) -> bool {
+        self.events.is_empty() && !self.perturbs_time()
+    }
+
+    /// True when the plan perturbs per-worker step time (skew or jitter)
+    /// — the trainer then measures compute wall-clock every step so the
+    /// straggler sleeps have a base to scale.
+    pub fn perturbs_time(&self) -> bool {
+        self.alpha_jitter > 0.0
+            || self.bandwidth_jitter > 0.0
+            || self.compute_skew.iter().any(|&s| s != 1.0)
+    }
+
+    /// Compute skew for a worker uid (1.0 when unlisted).
+    pub fn skew_of(&self, uid: usize) -> f64 {
+        self.compute_skew.get(uid).copied().unwrap_or(1.0)
+    }
+
+    /// Per-(worker, step) link multipliers `(alpha_mult, bandwidth_mult)`,
+    /// each in `[1-j, 1+j]` clamped to ≥ 0.05. Pure function of the plan
+    /// seed — never of wall-clock.
+    pub fn link_jitter(&self, uid: usize, step: usize) -> (f64, f64) {
+        if self.alpha_jitter == 0.0 && self.bandwidth_jitter == 0.0 {
+            return (1.0, 1.0);
+        }
+        let stream = (uid as u64) << 32 | (step as u64 & 0xffff_ffff);
+        let mut r = Rng::new(self.seed).fork(stream);
+        let a = (1.0 + self.alpha_jitter * (2.0 * r.uniform() - 1.0)).max(0.05);
+        let b = (1.0 + self.bandwidth_jitter * (2.0 * r.uniform() - 1.0)).max(0.05);
+        (a, b)
+    }
+
+    /// Relative virtual duration of worker `uid`'s step `step`: compute
+    /// skew × jittered link slowdown (a slow link delays the worker's
+    /// messages just like slow compute does). This is the quantity the
+    /// quorum ranks workers by.
+    pub fn virtual_step_time(&self, uid: usize, step: usize) -> f64 {
+        let (a, b) = self.link_jitter(uid, step);
+        // α grows link time multiplicatively; bandwidth shrinks it
+        self.skew_of(uid) * a / b
+    }
+
+    /// Events scheduled for `step`, in listed order.
+    pub fn events_at(&self, step: usize) -> impl Iterator<Item = &MembershipEvent> {
+        self.events.iter().filter(move |e| e.step == step)
+    }
+
+    /// Check internal consistency against a starting worker count:
+    /// replays the schedule and rejects drops of absent workers, joins of
+    /// present workers, and schedules that empty the cluster.
+    pub fn validate(&self, start_workers: usize) -> Result<()> {
+        if !(0.0..1.0).contains(&self.alpha_jitter) {
+            bail!("alpha_jitter must be in [0, 1), got {}", self.alpha_jitter);
+        }
+        if !(0.0..1.0).contains(&self.bandwidth_jitter) {
+            bail!("bandwidth_jitter must be in [0, 1), got {}", self.bandwidth_jitter);
+        }
+        if let Some(s) = self.compute_skew.iter().find(|s| !s.is_finite() || **s <= 0.0) {
+            bail!("compute_skew entries must be finite and > 0, got {s}");
+        }
+        let mut alive: Vec<usize> = (0..start_workers).collect();
+        let mut sorted = self.events.clone();
+        // replay in (step, listed) order — stable sort keeps the intra-step
+        // order the trainer will apply
+        sorted.sort_by_key(|e| e.step);
+        for ev in &sorted {
+            match ev.action {
+                MembershipAction::Drop => {
+                    let Some(pos) = alive.iter().position(|&u| u == ev.worker) else {
+                        bail!("step {}: drop of absent worker {}", ev.step, ev.worker);
+                    };
+                    if alive.len() == 1 {
+                        bail!("step {}: schedule would drop the last worker", ev.step);
+                    }
+                    alive.remove(pos);
+                }
+                MembershipAction::Join => {
+                    if alive.contains(&ev.worker) {
+                        bail!("step {}: join of already-present worker {}", ev.step, ev.worker);
+                    }
+                    alive.push(ev.worker);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ---- JSON ------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::Num(self.seed as f64)),
+            ("compute_skew", Json::arr_f64(&self.compute_skew)),
+            ("alpha_jitter", Json::Num(self.alpha_jitter)),
+            ("bandwidth_jitter", Json::Num(self.bandwidth_jitter)),
+            (
+                "events",
+                Json::Arr(
+                    self.events
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("step", Json::Num(e.step as f64)),
+                                ("action", Json::Str(e.action.name().into())),
+                                ("worker", Json::Num(e.worker as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse a plan object. Missing keys default to the healthy values so
+    /// a plan file only needs the faults it injects; unknown keys are
+    /// rejected (same contract as `TrainConfig::apply_json`).
+    pub fn from_json(v: &Json) -> Result<FaultPlan> {
+        let obj = v.as_obj().context("fault plan must be a JSON object")?;
+        let mut plan = FaultPlan::none();
+        for (key, val) in obj {
+            match key.as_str() {
+                "seed" => plan.seed = val.as_usize()? as u64,
+                "compute_skew" => {
+                    plan.compute_skew =
+                        val.as_arr()?.iter().map(Json::as_f64).collect::<Result<_>>()?;
+                }
+                "alpha_jitter" => plan.alpha_jitter = val.as_f64()?,
+                "bandwidth_jitter" => plan.bandwidth_jitter = val.as_f64()?,
+                "events" => {
+                    plan.events = val
+                        .as_arr()?
+                        .iter()
+                        .map(|e| {
+                            Ok(MembershipEvent {
+                                step: e.get("step")?.as_usize()?,
+                                action: MembershipAction::parse(e.get("action")?.as_str()?)?,
+                                worker: e.get("worker")?.as_usize()?,
+                            })
+                        })
+                        .collect::<Result<_>>()?;
+                }
+                other => bail!("unknown fault plan key {other:?}"),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Load a plan from a JSON file (the `--faults FILE` path).
+    pub fn load(path: &str) -> Result<FaultPlan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading fault plan {path:?}"))?;
+        FaultPlan::from_json(&Json::parse(&text)?)
+            .with_context(|| format!("parsing fault plan {path:?}"))
+    }
+}
+
+/// Deterministic bounded-staleness quorum selection for one step.
+///
+/// `uids` are the alive workers' stable uids in rank order; `stale[r]` is
+/// rank r's count of consecutive past exclusions. Returns the rank-aligned
+/// participation mask: with `quorum == 0` (off) or `quorum >= P` everyone
+/// participates; otherwise ranks stale for ≥ `staleness_bound` steps
+/// (bound > 0) are force-included first, then the virtually-fastest
+/// remaining ranks fill the quorum. Stable sort + rank tiebreak make the
+/// mask a pure function of `(plan, uids, stale, step)` — the determinism
+/// contract's replacement for a wall-clock reduce timeout.
+pub fn quorum_participants(
+    plan: &FaultPlan,
+    uids: &[usize],
+    stale: &[usize],
+    step: usize,
+    quorum: usize,
+    staleness_bound: usize,
+) -> Vec<bool> {
+    let p = uids.len();
+    if quorum == 0 || quorum >= p {
+        return vec![true; p];
+    }
+    let mut mask = vec![false; p];
+    let mut slots = quorum;
+    if staleness_bound > 0 {
+        for (r, &s) in stale.iter().enumerate() {
+            if s >= staleness_bound {
+                mask[r] = true;
+                slots = slots.saturating_sub(1);
+            }
+        }
+    }
+    let mut order: Vec<usize> = (0..p).filter(|&r| !mask[r]).collect();
+    order.sort_by(|&a, &b| {
+        plan.virtual_step_time(uids[a], step)
+            .partial_cmp(&plan.virtual_step_time(uids[b], step))
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    for &r in order.iter().take(slots) {
+        mask[r] = true;
+    }
+    mask
+}
+
+/// The compute-pacing multiplier of a synchronous step: the q-th fastest
+/// participant's skew gates the step (everyone waits for it). With
+/// `quorum == 0` the slowest alive worker gates. Link jitter is excluded
+/// here on purpose — the gate feeds the EWMA profile behind Eq. 18
+/// reselection and the DES, where a stable per-run value is wanted.
+pub fn compute_gate(plan: &FaultPlan, alive_uids: &[usize], quorum: usize) -> f64 {
+    if alive_uids.is_empty() {
+        return 1.0;
+    }
+    let mut skews: Vec<f64> = alive_uids.iter().map(|&u| plan.skew_of(u)).collect();
+    skews.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let q = if quorum == 0 { skews.len() } else { quorum.min(skews.len()) };
+    skews[q - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn skewed_plan() -> FaultPlan {
+        FaultPlan {
+            seed: 9,
+            compute_skew: vec![1.0, 4.0, 1.0],
+            alpha_jitter: 0.3,
+            bandwidth_jitter: 0.2,
+            events: vec![
+                MembershipEvent { step: 3, action: MembershipAction::Drop, worker: 1 },
+                MembershipEvent { step: 5, action: MembershipAction::Join, worker: 3 },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_round_trip_exact() {
+        let p = skewed_plan();
+        let back = FaultPlan::from_json(&Json::parse(&p.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(p, back);
+        // sparse plan files parse with defaults filled in
+        let min = FaultPlan::from_json(&Json::parse("{\"seed\": 5}").unwrap()).unwrap();
+        assert_eq!(min.seed, 5);
+        assert!(min.events.is_empty() && min.compute_skew.is_empty());
+        assert!(FaultPlan::from_json(&Json::parse("{\"bogus\": 1}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        let p = skewed_plan();
+        for uid in 0..4 {
+            for step in 0..20 {
+                let (a1, b1) = p.link_jitter(uid, step);
+                let (a2, b2) = p.link_jitter(uid, step);
+                assert_eq!((a1, b1), (a2, b2), "same (uid, step) must redraw identically");
+                assert!((0.7..=1.3).contains(&a1), "alpha mult {a1}");
+                assert!((0.8..=1.2).contains(&b1), "bw mult {b1}");
+            }
+        }
+        // distinct (uid, step) pairs draw independent streams
+        assert_ne!(p.link_jitter(0, 1), p.link_jitter(1, 0));
+        // the healthy plan never perturbs
+        assert_eq!(FaultPlan::none().link_jitter(2, 7), (1.0, 1.0));
+        assert!(!FaultPlan::none().perturbs_time());
+        assert!(p.perturbs_time());
+    }
+
+    #[test]
+    fn validate_replays_schedule() {
+        assert!(skewed_plan().validate(3).is_ok());
+        // dropping an absent worker
+        let mut p = FaultPlan::none();
+        p.events.push(MembershipEvent { step: 0, action: MembershipAction::Drop, worker: 7 });
+        assert!(p.validate(3).is_err());
+        // emptying the cluster
+        let mut p = FaultPlan::none();
+        p.events.push(MembershipEvent { step: 0, action: MembershipAction::Drop, worker: 0 });
+        assert!(p.validate(1).is_err());
+        // double join
+        let mut p = FaultPlan::none();
+        p.events.push(MembershipEvent { step: 1, action: MembershipAction::Join, worker: 0 });
+        assert!(p.validate(2).is_err());
+        // jitter range
+        let mut p = FaultPlan::none();
+        p.alpha_jitter = 1.5;
+        assert!(p.validate(2).is_err());
+    }
+
+    #[test]
+    fn quorum_excludes_the_straggler_and_staleness_forces_it_back() {
+        let mut plan = FaultPlan::none();
+        plan.compute_skew = vec![1.0, 8.0, 1.0];
+        let uids = [0, 1, 2];
+        // no jitter: worker 1 is always slowest, always excluded at q=2
+        let m = quorum_participants(&plan, &uids, &[0, 0, 0], 0, 2, 0);
+        assert_eq!(m, vec![true, false, true]);
+        // after 3 consecutive misses with bound 3, it is force-included
+        let m = quorum_participants(&plan, &uids, &[0, 3, 0], 7, 2, 3);
+        assert!(m[1], "stale worker must be forced back in");
+        assert_eq!(m.iter().filter(|&&b| b).count(), 2);
+        // quorum off or >= P: everyone participates
+        assert_eq!(quorum_participants(&plan, &uids, &[0, 0, 0], 0, 0, 0), vec![true; 3]);
+        assert_eq!(quorum_participants(&plan, &uids, &[0, 0, 0], 0, 3, 0), vec![true; 3]);
+    }
+
+    #[test]
+    fn quorum_tie_breaks_by_rank_deterministically() {
+        let plan = FaultPlan::none(); // all virtual times equal
+        let m = quorum_participants(&plan, &[0, 1, 2, 3], &[0; 4], 5, 2, 0);
+        assert_eq!(m, vec![true, true, false, false]);
+    }
+
+    #[test]
+    fn compute_gate_is_qth_fastest_skew() {
+        let mut plan = FaultPlan::none();
+        plan.compute_skew = vec![1.0, 4.0, 2.0];
+        let uids = [0, 1, 2];
+        assert_eq!(compute_gate(&plan, &uids, 0), 4.0); // full sync: slowest gates
+        assert_eq!(compute_gate(&plan, &uids, 2), 2.0); // quorum 2: 2nd fastest
+        assert_eq!(compute_gate(&plan, &uids, 1), 1.0);
+        assert_eq!(compute_gate(&FaultPlan::none(), &uids, 0), 1.0);
+        assert_eq!(compute_gate(&plan, &[], 0), 1.0);
+    }
+}

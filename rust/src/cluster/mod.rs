@@ -8,9 +8,12 @@
 //! deployment; only the wall-clock comes from the DES instead of a real
 //! NIC (DESIGN.md §Hardware-Adaptation).
 
+pub mod faults;
+
 use crate::collectives::pipeline::LayerMsg;
 use crate::runtime::native::{CompressScratch, GradScratch};
 use crate::sparsify::{ErrorFeedback, SparseVec};
+use anyhow::{ensure, Result};
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
@@ -22,6 +25,10 @@ use std::time::Instant;
 /// no shared mutable aggregation inside the parallel region (the
 /// rank-ordered reduction over `msgs` happens afterwards, sequentially).
 pub struct Worker {
+    /// stable uid — the data-shard PRNG key. Under elastic membership a
+    /// worker's uid never changes even as its rank (index in
+    /// `Cluster::workers`) shifts, so its shard stream stays deterministic
+    /// across drops/joins of *other* workers.
     pub id: usize,
     /// error-feedback residuals over the flat parameter vector
     pub ef: ErrorFeedback,
@@ -50,6 +57,11 @@ pub struct Worker {
     /// (`adaptive::online`); manifest order, sized with the message
     /// scratch
     pub compress_secs: Vec<f64>,
+    /// consecutive steps this worker was excluded by the bounded-staleness
+    /// quorum (`cluster::faults::quorum_participants`); travels with the
+    /// worker through membership changes because it lives here, not in a
+    /// rank-indexed array
+    pub quorum_stale: usize,
 }
 
 impl Worker {
@@ -79,6 +91,7 @@ impl Worker {
             grad_scratch: GradScratch::default(),
             compress_scratch: CompressScratch::default(),
             compress_secs: Vec::new(),
+            quorum_stale: 0,
         }
     }
 
@@ -87,18 +100,21 @@ impl Worker {
     /// "compute was still running here"). The buffer is moved out and
     /// cycles back via the trainer's post-phase reclaim, so steady-state
     /// capacity is preserved and the hot loop stays allocation-free.
-    pub fn publish_layer(&mut self, li: usize, sink: &Sender<LayerMsg>) {
+    /// `rank` is the worker's current POSITION in the pool (the executor's
+    /// item index), which under elastic membership can differ from `id` —
+    /// the aggregator's slots are positional.
+    pub fn publish_layer(&mut self, rank: usize, li: usize, sink: &Sender<LayerMsg>) {
         let msg = std::mem::take(&mut self.msgs[li]);
         // send can only fail if the aggregator died, in which case the
         // executor surfaces that error; dropping the message here is fine
-        let _ = sink.send(LayerMsg { rank: self.id, layer: li, msg, sent: Instant::now() });
+        let _ = sink.send(LayerMsg { rank, layer: li, msg, sent: Instant::now() });
     }
 
     /// SLGS variant: publish the whole-flat-vector message as layer 0 of a
     /// single-layer stream.
-    pub fn publish_flat(&mut self, sink: &Sender<LayerMsg>) {
+    pub fn publish_flat(&mut self, rank: usize, sink: &Sender<LayerMsg>) {
         let msg = std::mem::take(&mut self.msg_flat);
-        let _ = sink.send(LayerMsg { rank: self.id, layer: 0, msg, sent: Instant::now() });
+        let _ = sink.send(LayerMsg { rank, layer: 0, msg, sent: Instant::now() });
     }
 
     /// Size the per-layer message scratch for a model's layer table. Called
@@ -133,6 +149,62 @@ impl Cluster {
     /// Total residual mass across workers (diagnostic).
     pub fn total_residual_norm_sq(&self) -> f64 {
         self.workers.iter().map(|w| w.ef.residual_norm_sq()).sum()
+    }
+
+    /// Per-coordinate sum of every worker's error-feedback residual, in
+    /// f64 — the quantity elastic re-sharding conserves (the deferred
+    /// gradient mass that the EF convergence argument, arxiv 1809.10505,
+    /// requires to eventually reach the parameters).
+    pub fn residual_coordinate_sums(&self) -> Vec<f64> {
+        let d = self.workers.first().map(|w| w.ef.dim()).unwrap_or(0);
+        let mut sums = vec![0.0f64; d];
+        for w in &self.workers {
+            for (s, &r) in sums.iter_mut().zip(w.ef.residual()) {
+                *s += r as f64;
+            }
+        }
+        sums
+    }
+
+    /// Remove the worker with stable uid `uid`, re-sharding its
+    /// error-feedback residual across the survivors: coordinate `i`'s mass
+    /// moves **wholesale** to survivor `i % P_new` (coordinate-interleaved
+    /// for balance). Values are added, never scaled by 1/P, so each
+    /// coordinate's cluster-wide residual sum changes by at most one f32
+    /// rounding — no gradient mass is dropped when a worker departs.
+    pub fn drop_worker(&mut self, uid: usize) -> Result<()> {
+        let pos = self
+            .workers
+            .iter()
+            .position(|w| w.id == uid)
+            .ok_or_else(|| anyhow::anyhow!("drop of absent worker {uid}"))?;
+        ensure!(self.workers.len() > 1, "cannot drop the last worker");
+        let departing = self.workers.remove(pos);
+        let p_new = self.workers.len();
+        for (i, &v) in departing.ef.residual().iter().enumerate() {
+            // skip exact zeros: faster, and avoids -0.0 + 0.0 sign flips
+            if v != 0.0 {
+                self.workers[i % p_new].ef.add_residual_at(i, v);
+            }
+        }
+        Ok(())
+    }
+
+    /// Add a fresh worker with stable uid `uid` (zero residual, sized
+    /// message scratch). Its data shard starts at `(uid, current_step)` —
+    /// uid-keyed streams mean no other worker's shard shifts.
+    pub fn join_worker(
+        &mut self,
+        uid: usize,
+        d: usize,
+        sample_stride: usize,
+        layer_sizes: &[usize],
+    ) -> Result<()> {
+        ensure!(self.workers.iter().all(|w| w.id != uid), "join of already-present worker {uid}");
+        let mut w = Worker::new(uid, d, sample_stride);
+        w.ensure_message_scratch(layer_sizes);
+        self.workers.push(w);
+        Ok(())
     }
 }
 
@@ -173,8 +245,8 @@ mod tests {
         c.workers[1].msgs[0].len = 4;
         c.workers[1].msgs[0].idx.push(2);
         c.workers[1].msgs[0].val.push(1.5);
-        c.workers[1].publish_layer(0, &tx);
-        c.workers[0].publish_flat(&tx);
+        c.workers[1].publish_layer(1, 0, &tx);
+        c.workers[0].publish_flat(0, &tx);
         drop(tx);
         let m1 = rx.recv().unwrap();
         assert_eq!((m1.rank, m1.layer, m1.msg.nnz()), (1, 0, 1));
@@ -182,6 +254,45 @@ mod tests {
         assert_eq!((m2.rank, m2.layer, m2.msg.len), (0, 0, 10));
         // the buffer was moved out (capacity cycles back via reclaim)
         assert_eq!(c.workers[1].msgs[0].len, 0);
+    }
+
+    #[test]
+    fn drop_worker_conserves_residual_mass_and_interleaves() {
+        let d = 10;
+        let mut c = Cluster::new(3, d, 1);
+        // seed distinct residuals on every worker
+        for (w, worker) in c.workers.iter_mut().enumerate() {
+            let r: Vec<f32> = (0..d).map(|i| (w * 100 + i) as f32 * 0.25 + 0.5).collect();
+            worker.ef.write_residual(0, &r);
+        }
+        let before = c.residual_coordinate_sums();
+        c.drop_worker(1).unwrap();
+        assert_eq!(c.size(), 2);
+        assert_eq!(c.workers.iter().map(|w| w.id).collect::<Vec<_>>(), vec![0, 2]);
+        let after = c.residual_coordinate_sums();
+        for (i, (&b, &a)) in before.iter().zip(after.iter()).enumerate() {
+            assert!((b - a).abs() < 1e-4 * b.abs().max(1.0), "coord {i}: {b} vs {a}");
+        }
+        // coordinate-interleaved: departing resid[i] landed on survivor i%2
+        // (coordinate 0 → new rank 0 = uid 0, coordinate 1 → new rank 1);
+        // quarters stay exact in f32, so the sums are exact
+        assert_eq!(c.workers[0].ef.residual()[0], 0.5 + (100f32 * 0.25 + 0.5));
+        assert_eq!(c.workers[1].ef.residual()[1], (201f32 * 0.25 + 0.5) + (101f32 * 0.25 + 0.5));
+        // dropping the last worker or an absent uid is rejected
+        assert!(c.drop_worker(7).is_err());
+        c.drop_worker(0).unwrap();
+        assert!(c.drop_worker(2).is_err());
+    }
+
+    #[test]
+    fn join_worker_gets_fresh_state_and_unique_uid() {
+        let mut c = Cluster::new(2, 8, 1);
+        c.join_worker(5, 8, 1, &[3, 5]).unwrap();
+        assert_eq!(c.size(), 3);
+        let w = &c.workers[2];
+        assert_eq!((w.id, w.ef.dim(), w.msgs.len()), (5, 8, 2));
+        assert_eq!(w.ef.residual_norm_sq(), 0.0);
+        assert!(c.join_worker(0, 8, 1, &[3, 5]).is_err(), "uid collision must fail");
     }
 
     #[test]

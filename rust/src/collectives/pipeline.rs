@@ -163,11 +163,17 @@ impl Default for OverlapTimer {
 pub struct StreamAggregator {
     /// arrived messages, `slots[layer][rank]`; `None` until published
     slots: Vec<Vec<Option<SparseVec>>>,
-    /// per-layer arrival count
+    /// per-layer count of arrivals from REQUIRED ranks (non-required
+    /// arrivals land in their slots but never gate firing)
     arrived: Vec<usize>,
     /// next layer to fire, walking L-1 → 0; `None` once all fired
     cursor: Option<usize>,
     workers: usize,
+    /// this step's participation mask (bounded-staleness quorum): a layer
+    /// fires once every `true` rank has landed. All-true by default and
+    /// after every `reset`.
+    required: Vec<bool>,
+    required_count: usize,
 }
 
 impl StreamAggregator {
@@ -178,7 +184,22 @@ impl StreamAggregator {
             arrived: vec![0; layers],
             cursor: Some(layers - 1),
             workers,
+            required: vec![true; workers],
+            required_count: workers,
         }
+    }
+
+    /// Rebuild the table for a new (layers, workers) shape — elastic
+    /// membership resizes the live aggregator between steps. Equivalent to
+    /// constructing fresh, but keeps the allocation when the shape is
+    /// unchanged.
+    pub fn resize(&mut self, layers: usize, workers: usize) {
+        assert!(layers > 0 && workers > 0);
+        if layers == self.layers() && workers == self.workers {
+            self.reset();
+            return;
+        }
+        *self = StreamAggregator::new(layers, workers);
     }
 
     pub fn layers(&self) -> usize {
@@ -190,6 +211,30 @@ impl StreamAggregator {
         self.workers
     }
 
+    /// This step's rank participation mask (all-true when quorum is off).
+    pub fn required(&self) -> &[bool] {
+        &self.required
+    }
+
+    /// Number of required ranks — the per-layer message count the merged
+    /// reduction consumes.
+    pub fn required_count(&self) -> usize {
+        self.required_count
+    }
+
+    /// Arm a per-step participation mask: layers fire once every `true`
+    /// rank has landed; excluded ranks' messages still land in their slots
+    /// (the trainer reclaims them and folds them back into that worker's
+    /// error-feedback residual) but never gate firing. Must be armed
+    /// before the step's first push; `reset` restores all-required.
+    pub fn arm_participants(&mut self, mask: &[bool]) {
+        assert_eq!(mask.len(), self.workers, "mask must be rank-aligned");
+        debug_assert!(self.arrived.iter().all(|&a| a == 0), "arm before pushing");
+        self.required.copy_from_slice(mask);
+        self.required_count = mask.iter().filter(|&&b| b).count();
+        assert!(self.required_count > 0, "at least one rank must participate");
+    }
+
     /// Rank-indexed slots of `layer` — all `Some` once the layer has
     /// fired. The trainer's merged-group reduction reads payloads from
     /// here after the completion callback recorded the layer, so buffers
@@ -198,9 +243,10 @@ impl StreamAggregator {
         &self.slots[layer]
     }
 
-    /// Arm for a new step: counts reset, cursor back to the last layer.
-    /// Slots are normally already empty (the trainer reclaims buffers
-    /// after each step); leftovers from an aborted step are dropped.
+    /// Arm for a new step: counts reset, cursor back to the last layer,
+    /// participation back to all-required. Slots are normally already
+    /// empty (the trainer reclaims buffers after each step); leftovers
+    /// from an aborted step are dropped.
     pub fn reset(&mut self) {
         for layer in &mut self.slots {
             for slot in layer.iter_mut() {
@@ -209,6 +255,8 @@ impl StreamAggregator {
         }
         self.arrived.iter_mut().for_each(|a| *a = 0);
         self.cursor = Some(self.slots.len() - 1);
+        self.required.iter_mut().for_each(|r| *r = true);
+        self.required_count = self.workers;
     }
 
     /// All layers fired?
@@ -217,17 +265,23 @@ impl StreamAggregator {
     }
 
     /// Land one message; fire `on_layer(layer, rank_ordered_slots)` for
-    /// every layer that becomes consumable, in backprop order.
+    /// every layer that becomes consumable, in backprop order. With a
+    /// quorum mask armed, only required ranks' arrivals count toward
+    /// firing — excluded slots may still be `None` when the layer fires,
+    /// and the consumer must filter by [`Self::required`].
     pub fn push<F>(&mut self, m: LayerMsg, mut on_layer: F)
     where
         F: FnMut(usize, &[Option<SparseVec>]),
     {
         debug_assert!(m.layer < self.slots.len() && m.rank < self.workers);
         debug_assert!(self.slots[m.layer][m.rank].is_none(), "duplicate publish");
+        let counts = self.required[m.rank];
         self.slots[m.layer][m.rank] = Some(m.msg);
-        self.arrived[m.layer] += 1;
+        if counts {
+            self.arrived[m.layer] += 1;
+        }
         while let Some(next) = self.cursor {
-            if self.arrived[next] < self.workers {
+            if self.arrived[next] < self.required_count {
                 break;
             }
             on_layer(next, &self.slots[next]);
@@ -311,6 +365,55 @@ mod tests {
         }
         agg.reset();
         assert!(!agg.finished());
+    }
+
+    #[test]
+    fn quorum_mask_fires_without_excluded_ranks() {
+        let (layers, workers, n) = (3usize, 3usize, 16usize);
+        let mut agg = StreamAggregator::new(layers, workers);
+        agg.arm_participants(&[true, false, true]);
+        assert_eq!(agg.required_count(), 2);
+        let mut fired = Vec::new();
+        // only ranks 0 and 2 publish; every layer must still fire
+        for layer in (0..layers).rev() {
+            for rank in [0usize, 2] {
+                agg.push(msg(rank, layer, n, (layer * 7 + rank) as u64), |l, slots| {
+                    // required slots full, excluded slot still empty
+                    assert!(slots[0].is_some() && slots[2].is_some());
+                    assert!(slots[1].is_none());
+                    fired.push(l);
+                });
+            }
+        }
+        assert_eq!(fired, vec![2, 1, 0]);
+        assert!(agg.finished());
+        // the straggler's late message lands without re-firing anything
+        agg.push(msg(1, 2, n, 99), |_, _| panic!("late message must not fire"));
+        assert!(agg.take(2, 1).is_some(), "late buffer is reclaimable");
+        // reset restores full participation
+        agg.reset();
+        assert_eq!(agg.required_count(), 3);
+        assert!(agg.required().iter().all(|&b| b));
+    }
+
+    #[test]
+    fn resize_rebuilds_for_new_membership() {
+        let mut agg = StreamAggregator::new(3, 4);
+        agg.push(msg(0, 2, 8, 1), |_, _| {});
+        agg.resize(3, 2); // a drop shrank the cluster
+        assert_eq!((agg.layers(), agg.workers()), (3, 2));
+        assert!(!agg.finished());
+        let mut fired = Vec::new();
+        for layer in (0..3).rev() {
+            for rank in 0..2 {
+                agg.push(msg(rank, layer, 8, (layer * 3 + rank) as u64), |l, _| fired.push(l));
+            }
+        }
+        assert_eq!(fired, vec![2, 1, 0]);
+        // same-shape resize is just a reset
+        agg.resize(3, 2);
+        assert!(!agg.finished());
+        assert!(agg.layer_slots(2).iter().all(|s| s.is_none()));
     }
 
     #[test]

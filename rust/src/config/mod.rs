@@ -4,6 +4,7 @@
 //! Precedence (lowest to highest): built-in defaults → `--config file.json`
 //! → individual `--key value` CLI flags.
 
+use crate::cluster::faults::FaultPlan;
 use crate::collectives::{NetworkModel, PipelineMode};
 use crate::sparsify::CompressorKind;
 use crate::trainer::Algorithm;
@@ -129,6 +130,20 @@ pub struct TrainConfig {
     /// last publish, erasing the streaming overlap, so merging is the
     /// opt-in ablation knob, not the default.
     pub merge_bytes: usize,
+    /// deterministic fault/heterogeneity schedule (`cluster::faults`):
+    /// per-worker compute skew, per-(worker, step) link jitter, drop/join
+    /// membership events. `--faults plan.json` on the CLI; the JSON config
+    /// key `faults` takes either an inline plan object or a path string.
+    pub faults: FaultPlan,
+    /// bounded-staleness quorum (LAGS only): each step, only the q
+    /// virtually-fastest alive workers participate in the reduction; the
+    /// excluded ranks' messages fold back into their own error-feedback
+    /// residuals and re-enter next step. 0 = off (full synchronous P).
+    pub quorum: usize,
+    /// with `quorum`: a worker excluded this many CONSECUTIVE steps is
+    /// force-included on the next one (bounds gradient staleness). 0 = no
+    /// forcing.
+    pub staleness_bound: usize,
     pub seed: u64,
     /// print progress lines
     pub verbose: bool,
@@ -175,6 +190,9 @@ impl TrainConfig {
             eval_batches: 4,
             delta_every: 0,
             merge_bytes: 0,
+            faults: FaultPlan::none(),
+            quorum: 0,
+            staleness_bound: 0,
             seed: 42,
             verbose: false,
         }
@@ -210,6 +228,15 @@ impl TrainConfig {
                 "eval_batches" => self.eval_batches = val.as_usize()?,
                 "delta_every" => self.delta_every = val.as_usize()?,
                 "merge_bytes" => self.merge_bytes = val.as_usize()?,
+                // either an inline plan object or a path to a plan file
+                "faults" => {
+                    self.faults = match val {
+                        Json::Str(path) => FaultPlan::load(path)?,
+                        obj => FaultPlan::from_json(obj)?,
+                    }
+                }
+                "quorum" => self.quorum = val.as_usize()?,
+                "staleness_bound" => self.staleness_bound = val.as_usize()?,
                 "seed" => self.seed = val.as_usize()? as u64,
                 "verbose" => self.verbose = val.as_bool()?,
                 other => bail!("unknown config key {other:?}"),
@@ -263,6 +290,11 @@ impl TrainConfig {
         self.eval_batches = args.usize_or("eval-batches", self.eval_batches)?;
         self.delta_every = args.usize_or("delta-every", self.delta_every)?;
         self.merge_bytes = args.usize_or("merge-bytes", self.merge_bytes)?;
+        if let Some(path) = args.get("faults") {
+            self.faults = FaultPlan::load(path)?;
+        }
+        self.quorum = args.usize_or("quorum", self.quorum)?;
+        self.staleness_bound = args.usize_or("staleness-bound", self.staleness_bound)?;
         self.seed = args.usize_or("seed", self.seed as usize)? as u64;
         if args.bool("verbose") {
             self.verbose = true;
@@ -307,6 +339,16 @@ impl TrainConfig {
         if !(self.net.bandwidth > 0.0 && self.net.bandwidth.is_finite()) {
             bail!("net bandwidth must be positive");
         }
+        self.faults.validate(self.workers)?;
+        if self.quorum > self.workers {
+            bail!("quorum ({}) cannot exceed the starting worker count ({})", self.quorum, self.workers);
+        }
+        if self.quorum > 0 && self.algorithm != Algorithm::Lags {
+            bail!("--quorum requires the lags algorithm (per-layer reduction with error feedback)");
+        }
+        if self.staleness_bound > 0 && self.quorum == 0 {
+            bail!("--staleness-bound requires --quorum");
+        }
         Ok(())
     }
 
@@ -339,6 +381,9 @@ impl TrainConfig {
             ("eval_batches", Json::Num(self.eval_batches as f64)),
             ("delta_every", Json::Num(self.delta_every as f64)),
             ("merge_bytes", Json::Num(self.merge_bytes as f64)),
+            ("faults", self.faults.to_json()),
+            ("quorum", Json::Num(self.quorum as f64)),
+            ("staleness_bound", Json::Num(self.staleness_bound as f64)),
             ("seed", Json::Num(self.seed as f64)),
             ("verbose", Json::Bool(self.verbose)),
         ])
@@ -431,6 +476,19 @@ mod tests {
         cfg.eval_batches = 3;
         cfg.delta_every = 4;
         cfg.merge_bytes = 4096;
+        cfg.faults = FaultPlan {
+            seed: 13,
+            compute_skew: vec![1.0, 3.5],
+            alpha_jitter: 0.125,
+            bandwidth_jitter: 0.25,
+            events: vec![crate::cluster::faults::MembershipEvent {
+                step: 5,
+                action: crate::cluster::faults::MembershipAction::Drop,
+                worker: 2,
+            }],
+        };
+        cfg.quorum = 5;
+        cfg.staleness_bound = 2;
         cfg.seed = 7;
         cfg.verbose = true;
         let mut back = TrainConfig::default_for("other");
@@ -489,5 +547,53 @@ mod tests {
         cfg.validate().unwrap();
         cfg.algorithm = Algorithm::Slgs;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn robustness_flags_validate() {
+        // quorum must fit the cluster and needs the lags algorithm
+        let mut cfg = TrainConfig::default_for("mlp");
+        cfg.quorum = 3;
+        cfg.validate().unwrap();
+        cfg.quorum = 5; // > workers (4)
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default_for("mlp");
+        cfg.quorum = 3;
+        cfg.algorithm = Algorithm::Dense;
+        assert!(cfg.validate().is_err());
+        // staleness bound is meaningless without a quorum
+        let mut cfg = TrainConfig::default_for("mlp");
+        cfg.staleness_bound = 2;
+        assert!(cfg.validate().is_err());
+        cfg.quorum = 3;
+        cfg.validate().unwrap();
+        // an inconsistent fault schedule is rejected through the config
+        let mut cfg = TrainConfig::default_for("mlp");
+        cfg.faults.events.push(crate::cluster::faults::MembershipEvent {
+            step: 0,
+            action: crate::cluster::faults::MembershipAction::Drop,
+            worker: 9,
+        });
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn faults_json_inline_and_cli_flags() {
+        let mut cfg = TrainConfig::default_for("mlp");
+        cfg.apply_json(
+            &Json::parse(
+                r#"{"faults": {"seed": 3, "compute_skew": [1.0, 2.0]}, "quorum": 3, "staleness_bound": 4}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.faults.seed, 3);
+        assert_eq!(cfg.faults.compute_skew, vec![1.0, 2.0]);
+        assert_eq!((cfg.quorum, cfg.staleness_bound), (3, 4));
+        let args = Args::parse(
+            "train --quorum 2 --staleness-bound 1".split_whitespace().map(String::from),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!((cfg.quorum, cfg.staleness_bound), (2, 1));
     }
 }

@@ -39,6 +39,7 @@ USAGE: lags <subcommand> [flags]
            [--net-bandwidth F] [--merge-bytes B]
            [--compressor host|host-sampled|xla|xla-sampled]
            [--delta-every N] [--eval-every N] [--seed S] [--verbose]
+           [--faults FILE.json] [--quorum Q] [--staleness-bound S]
            [--calibrate] [--config FILE.json] [--out DIR]
 
            --artifacts native  selects the built-in pure-rust model zoo
@@ -76,6 +77,28 @@ USAGE: lags <subcommand> [flags]
                                (a large buffer can defer all reduction
                                past the last publish, trading overlap for
                                fewer messages — the §5 ablation)
+           --faults FILE.json  deterministic fault plan: per-worker
+                               compute skew, per-(worker,step) link
+                               jitter, and a drop/join membership schedule
+                               keyed by step. The same plan drives the
+                               real trainer (straggler sleeps, elastic
+                               re-sharding) AND the DES prediction, so
+                               predicted vs measured degradation are
+                               directly comparable. Same seed + same plan
+                               = bit-identical runs (both --pipeline
+                               modes); report.json carries the robustness
+                               telemetry under stable field names
+           --quorum Q          bounded-staleness mode (LAGS only): each
+                               step fires with the Q virtually-fastest
+                               alive workers; an excluded worker's
+                               compressed messages fold back into its own
+                               error-feedback residual instead of being
+                               discarded. Participation is a pure function
+                               of (plan, step), never wall-clock, so the
+                               determinism contract survives
+           --staleness-bound S with --quorum: a worker excluded for S
+                               consecutive steps is force-included on the
+                               next one, bounding gradient staleness
            --calibrate         measure sustained device flops at startup
                                (the `lags calibrate` microbenchmark) and
                                persist it next to the artifacts; without
@@ -205,6 +228,18 @@ fn cmd_train(args: &Args) -> Result<()> {
             report.selections.len(),
             report.selections.len() - 1,
             traj.join(" -> ")
+        );
+    }
+    let rb = &report.robustness;
+    if !rb.worker_skew.is_empty() || rb.quorum > 0 || !rb.membership_log.is_empty() {
+        println!(
+            "robustness: quorum={} staleness_bound={} quorum_misses={} staleness_max={} \
+             membership_changes={}",
+            rb.quorum,
+            rb.staleness_bound,
+            rb.total_quorum_misses(),
+            rb.max_staleness(),
+            rb.membership_log.len(),
         );
     }
     if let Some(out) = args.get("out") {

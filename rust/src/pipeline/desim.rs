@@ -93,6 +93,15 @@ pub struct SimParams {
     /// sparsification overhead: t_spar(l) = spar_fixed + spar_per_elem * d_l
     pub spar_fixed: f64,
     pub spar_per_elem: f64,
+    /// per-worker multiplicative compute skews (`cluster::faults`); empty
+    /// = homogeneous cluster. A synchronous step's compute stream is paced
+    /// by the slowest participant, so the gating skew scales t_f and every
+    /// t_b — message ready-times shift with it while comm cost does not.
+    pub skews: Vec<f64>,
+    /// bounded-staleness quorum size (0 = full sync): with q < P, the
+    /// q-th fastest worker gates the step instead of the slowest — the
+    /// DES-predicted throughput recovery of `--quorum`.
+    pub quorum: usize,
 }
 
 impl SimParams {
@@ -107,6 +116,8 @@ impl SimParams {
             // P102-100 class GPU
             spar_fixed: 5e-5,
             spar_per_elem: 4e-9,
+            skews: Vec::new(),
+            quorum: 0,
         }
     }
 
@@ -118,7 +129,21 @@ impl SimParams {
             merge_bytes: 64.0 * 1024.0 * 1024.0,
             spar_fixed: 0.0,
             spar_per_elem: 0.0,
+            skews: Vec::new(),
+            quorum: 0,
         }
+    }
+
+    /// The compute-pacing multiplier: q-th smallest skew (q = quorum, or
+    /// everyone when 0). 1.0 for the homogeneous cluster.
+    pub fn skew_gate(&self) -> f64 {
+        if self.skews.is_empty() {
+            return 1.0;
+        }
+        let mut s = self.skews.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let q = if self.quorum == 0 { s.len() } else { self.quorum.min(s.len()) };
+        s[q - 1].max(1e-9)
     }
 }
 
@@ -135,11 +160,14 @@ pub fn simulate(
 
     // --- compute stream: forward, then backward per layer. Sparsification
     // runs on the compression+comm pipeline (see SimParams docs), so it
-    // does NOT extend the compute stream.
+    // does NOT extend the compute stream. Under a straggler plan the whole
+    // stream is paced by the gating worker's skew (everyone waits at the
+    // synchronous reduction; with a quorum, only for the q-th fastest).
+    let gate = params.skew_gate();
     let mut ready = vec![0.0f64; l];
-    let mut t = model.t_f;
+    let mut t = model.t_f * gate;
     for i in 0..l {
-        t += model.layers[i].t_b;
+        t += model.layers[i].t_b * gate;
         ready[i] = t;
     }
     let comp_done = t;
@@ -255,8 +283,8 @@ pub fn simulate(
 
     IterationBreakdown {
         schedule,
-        t_f: model.t_f,
-        t_b: model.t_b(),
+        t_f: model.t_f * gate,
+        t_b: model.t_b() * gate,
         t_comm,
         t_spar: t_spar_total,
         iter_time,
@@ -380,6 +408,28 @@ mod tests {
         let s = simulate(&m, &net(), Schedule::Slgs, &p);
         assert!(s.hidden < 1e-12);
         assert!(s.overlap_efficiency() < 1e-9);
+    }
+
+    #[test]
+    fn skew_gate_scales_compute_and_quorum_drops_it() {
+        let m = zoo::resnet50();
+        let mut p = SimParams::uniform(&m, 1000.0);
+        let base = simulate(&m, &net(), Schedule::Lags, &p);
+
+        // full participation: the 4x straggler paces the step
+        p.skews = vec![1.0, 4.0, 1.0, 1.0];
+        assert!((p.skew_gate() - 4.0).abs() < 1e-12);
+        let skewed = simulate(&m, &net(), Schedule::Lags, &p);
+        assert!((skewed.t_f - 4.0 * base.t_f).abs() < 1e-9);
+        assert!((skewed.t_b - 4.0 * base.t_b).abs() < 1e-9);
+        assert!(skewed.iter_time > base.iter_time);
+
+        // quorum 3-of-4 excludes the straggler: gate back to 1.0, and the
+        // predicted iteration time returns to the homogeneous one exactly
+        p.quorum = 3;
+        assert!((p.skew_gate() - 1.0).abs() < 1e-12);
+        let quorum = simulate(&m, &net(), Schedule::Lags, &p);
+        assert!((quorum.iter_time - base.iter_time).abs() < 1e-12);
     }
 
     #[test]

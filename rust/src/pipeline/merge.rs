@@ -79,6 +79,20 @@ impl<T> MergeBuffer<T> {
     pub fn pending_bytes(&self) -> usize {
         self.staged_bytes
     }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
+    }
+
+    /// Re-size the capacity live. The trainer's capacity is
+    /// `merge_bytes × P`, and under elastic membership P is the CURRENT
+    /// worker count — freezing the startup P would silently mis-scale the
+    /// per-rank grouping threshold after every drop/join. Already-staged
+    /// layers are kept; if they now exceed the new capacity they flush on
+    /// the next push (same rule as filling up normally).
+    pub fn set_capacity(&mut self, capacity_bytes: usize) {
+        self.capacity_bytes = capacity_bytes;
+    }
 }
 
 impl MergeBuffer<SparseVec> {
@@ -141,5 +155,24 @@ mod tests {
         let mut b = MergeBuffer::new(10);
         b.flush();
         assert!(b.take_groups().is_empty());
+    }
+
+    #[test]
+    fn set_capacity_rescales_grouping_live() {
+        // regression: capacity used to be frozen at construction, so a
+        // membership change could not rescale the merge_bytes × P threshold
+        let mut b = MergeBuffer::new(200);
+        b.push(0, msg(6)); // 48B < 200: stays staged
+        assert!(b.take_groups().is_empty());
+        b.set_capacity(80); // cluster shrank: threshold drops
+        assert_eq!(b.capacity_bytes(), 80);
+        b.push(1, msg(6)); // 96B >= 80 -> flush both staged layers
+        let g = b.take_groups();
+        assert_eq!(g.len(), 1);
+        assert_eq!(g[0].layer_indices, vec![0, 1]);
+        // shrinking to 0 restores per-layer flushing
+        b.set_capacity(0);
+        b.push(2, msg(1));
+        assert_eq!(b.take_groups().len(), 1);
     }
 }

@@ -62,6 +62,15 @@ impl ErrorFeedback {
         self.resid[off..off + data.len()].copy_from_slice(data);
     }
 
+    /// Fold mass back into the residual at flat coordinate `i`. Used by
+    /// the robustness layer: a quorum-excluded worker's already-compressed
+    /// message re-enters its own accumulator here (bounded staleness), and
+    /// a departing worker's residual is re-sharded into survivors
+    /// coordinate-by-coordinate (elastic membership).
+    pub fn add_residual_at(&mut self, i: usize, v: f32) {
+        self.resid[i] += v;
+    }
+
     /// Residual L2^2 — diagnostic for how much mass is deferred.
     pub fn residual_norm_sq(&self) -> f64 {
         self.resid.iter().map(|&v| (v as f64) * (v as f64)).sum()

@@ -50,9 +50,12 @@
 
 mod report;
 
-pub use report::{MessageStats, RatioSelection, TrainReport};
+pub use report::{
+    MembershipChange, MessageStats, RatioSelection, RobustnessStats, TrainReport, WorkerSkew,
+};
 
 use crate::adaptive::{self, MeasuredProfile, RatioConfig};
+use crate::cluster::faults::{self, MembershipAction};
 use crate::cluster::Cluster;
 use crate::collectives::pipeline::{
     LayerMsg, OverlapMeasure, OverlapTimer, PipelineMode, StreamAggregator,
@@ -68,9 +71,10 @@ use crate::runtime::{GradJob, Metric, ModelRuntime, Runtime};
 use crate::sparsify::CompressorKind;
 use crate::util::ParallelExecutor;
 use anyhow::Result;
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Which distributed optimizer to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -128,12 +132,15 @@ fn apply_update_range(
 }
 
 /// Reduce + apply one flushed §5 merge group on the aggregator thread:
-/// for each layer of the group — in backprop order, all P rank slots
-/// present in `stream` — zero its `agg` slice, reduce the rank-ordered
-/// messages into it, and apply that slice's update. Each layer's
-/// rank-ordered reduction is individually clocked into `reduce_secs`
-/// when `measure` is on (the online adaptive profile). Returns the
-/// group's total wire bytes.
+/// for each layer of the group — in backprop order, every REQUIRED rank
+/// slot present in `stream` — zero its `agg` slice, reduce the
+/// rank-ordered messages into it, and apply that slice's update. With a
+/// bounded-staleness quorum armed, excluded ranks' slots are skipped
+/// (their messages fold back into their own residuals after the step);
+/// with full participation the filter passes every slot, bit-identical
+/// to the pre-quorum path. Each layer's rank-ordered reduction is
+/// individually clocked into `reduce_secs` when `measure` is on (the
+/// online adaptive profile). Returns the group's total wire bytes.
 #[allow(clippy::too_many_arguments)]
 fn fire_group(
     group: &MergedGroup<usize>,
@@ -156,7 +163,12 @@ fn fire_group(
             dst.iter_mut().for_each(|v| *v = 0.0);
             let r0 = measure.then(Instant::now);
             sparse_agg::sparse_add_rank_ordered(
-                stream.layer_slots(li).iter().map(|s| s.as_ref().expect("complete layer")),
+                stream
+                    .layer_slots(li)
+                    .iter()
+                    .zip(stream.required())
+                    .filter(|(_, &req)| req)
+                    .map(|(s, _)| s.as_ref().expect("required slot")),
                 dst,
             );
             if let Some(r0) = r0 {
@@ -194,7 +206,9 @@ fn drain_stream(
     let mut timer = OverlapTimer::new();
     let mut bytes = 0usize;
     let mut messages = 0usize;
-    let p = stream.workers();
+    // one merged message per PARTICIPATING rank — quorum-excluded ranks
+    // put nothing on the (virtual) wire this step
+    let p = stream.required_count();
     let mut completed: Vec<usize> = Vec::new();
     let mut done = false;
     while !done {
@@ -206,7 +220,9 @@ fn drain_stream(
                     let layer_bytes: usize = stream
                         .layer_slots(li)
                         .iter()
-                        .map(|s| s.as_ref().expect("complete layer").wire_bytes())
+                        .zip(stream.required())
+                        .filter(|(_, &req)| req)
+                        .map(|(s, _)| s.as_ref().expect("required slot").wire_bytes())
                         .sum();
                     merge.push_with(li, layer_bytes, layer_bytes);
                 }
@@ -292,6 +308,20 @@ pub struct Trainer {
     overlap: OverlapMeasure,
     msg_stats: MessageStats,
     step_idx: usize,
+    /// this step's rank-aligned quorum participation mask (all-true when
+    /// `--quorum` is off); re-armed at the top of every step
+    participants: Vec<bool>,
+    /// per-uid count of steps each worker was a cluster member (only
+    /// tracked when robustness telemetry is active)
+    steps_active: BTreeMap<usize, usize>,
+    /// per-layer count of (step × excluded worker) quorum misses,
+    /// manifest order
+    robust_quorum_miss: Vec<u64>,
+    /// staleness histogram: index s counts re-inclusions after s
+    /// consecutive missed steps
+    robust_staleness_hist: Vec<u64>,
+    /// membership events as they were applied, in order
+    robust_membership_log: Vec<MembershipChange>,
 }
 
 impl Trainer {
@@ -413,6 +443,11 @@ impl Trainer {
             overlap: OverlapMeasure::default(),
             msg_stats: MessageStats::default(),
             step_idx: 0,
+            participants: vec![true; cfg.workers],
+            steps_active: BTreeMap::new(),
+            robust_quorum_miss: vec![0; nl],
+            robust_staleness_hist: Vec::new(),
+            robust_membership_log: Vec::new(),
             cfg,
         })
     }
@@ -472,6 +507,18 @@ impl Trainer {
     pub fn step(&mut self) -> Result<f64> {
         let t = self.step_idx;
 
+        // --- robustness layer: membership events fire strictly BETWEEN
+        // steps (here, before step t's gradients), and the step's quorum
+        // participation mask is a pure function of (plan, membership,
+        // staleness, t) — never of wall-clock
+        self.apply_membership_events(t)?;
+        self.arm_participation(t);
+        if self.robustness_active() {
+            for w in &self.cluster.workers {
+                *self.steps_active.entry(w.id).or_insert(0) += 1;
+            }
+        }
+
         // --- local gradient computation, fanned over the worker pool.
         // Each job fills only worker-owned slots; the native backend runs
         // jobs on the executor's threads, PJRT runs them in rank order
@@ -488,7 +535,11 @@ impl Trainer {
                 scratch: &mut w.grad_scratch,
             });
         }
-        let comp_start = self.measuring_at(t).then(Instant::now);
+        // a perturbing plan needs the compute wall-clock every step: it is
+        // the base the straggler sleeps scale (measuring it does not alter
+        // any numerics, so the determinism contract is untouched)
+        let comp_start =
+            (self.measuring_at(t) || self.cfg.faults.perturbs_time()).then(Instant::now);
         self.model.grad_many(&self.exec, &self.params, &mut jobs)?;
         drop(jobs);
         if let Some(s) = comp_start {
@@ -512,6 +563,14 @@ impl Trainer {
             Algorithm::Lags => self.aggregate_lags()?,
         }
 
+        // bounded staleness: excluded workers' already-compressed messages
+        // re-enter their own residuals (validate() guarantees quorum > 0
+        // only on the LAGS path)
+        if self.cfg.quorum > 0 {
+            self.fold_late_messages();
+            self.note_quorum_outcome();
+        }
+
         self.step_idx += 1;
         self.observe_and_reselect();
         Ok(self.cluster.mean_loss())
@@ -524,6 +583,158 @@ impl Trainer {
     /// about to run (`step_idx`).
     fn measuring_at(&self, t: usize) -> bool {
         self.online.is_some() && t + 1 >= self.cfg.warmup_steps
+    }
+
+    /// Whether this run collects robustness telemetry (any fault injected
+    /// or quorum mode on). Clean full-sync runs skip the bookkeeping and
+    /// report an all-default [`RobustnessStats`].
+    fn robustness_active(&self) -> bool {
+        !self.cfg.faults.is_none() || self.cfg.quorum > 0
+    }
+
+    /// Apply the fault plan's membership events scheduled for step `t`
+    /// (strictly between steps), then re-size every P-shaped structure to
+    /// the new membership: the departing worker's residual re-shards into
+    /// survivors ([`Cluster::drop_worker`]), the streaming aggregator and
+    /// dense ring scratch rebuild at the new rank count, and the §5 merge
+    /// capacity recomputes as `merge_bytes × CURRENT P` (it used to be
+    /// frozen at the startup P — the silent-cap regression the elastic
+    /// tests pin down).
+    fn apply_membership_events(&mut self, t: usize) -> Result<()> {
+        if self.cfg.faults.events.is_empty() {
+            return Ok(());
+        }
+        let events: Vec<_> = self.cfg.faults.events_at(t).cloned().collect();
+        if events.is_empty() {
+            return Ok(());
+        }
+        let d = self.model.mm.d;
+        let layer_sizes: Vec<usize> = self.model.mm.layers.iter().map(|l| l.size).collect();
+        for ev in events {
+            match ev.action {
+                MembershipAction::Drop => self.cluster.drop_worker(ev.worker)?,
+                MembershipAction::Join => {
+                    self.cluster.join_worker(ev.worker, d, self.cfg.sample_stride, &layer_sizes)?
+                }
+            }
+            self.robust_membership_log.push(MembershipChange {
+                step: t,
+                action: ev.action.name().to_string(),
+                worker: ev.worker,
+                workers_after: self.cluster.size(),
+            });
+            if self.cfg.verbose {
+                eprintln!(
+                    "[{}] step {t}: membership {} worker {} -> P = {}",
+                    self.cfg.algorithm.name(),
+                    ev.action.name(),
+                    ev.worker,
+                    self.cluster.size(),
+                );
+            }
+        }
+        let alive = self.cluster.size();
+        let stream_layers = match self.cfg.algorithm {
+            Algorithm::Slgs => 1,
+            _ => self.layer_meta.len().max(1),
+        };
+        self.stream.resize(stream_layers, alive);
+        self.merge.set_capacity(self.cfg.merge_bytes.saturating_mul(alive));
+        self.ring_bufs.resize_with(alive, || vec![0.0f32; d]);
+        if self.participants.len() != alive {
+            self.participants = vec![true; alive];
+        }
+        Ok(())
+    }
+
+    /// Recompute this step's quorum participation mask
+    /// ([`faults::quorum_participants`]). All-true when `--quorum` is off.
+    fn arm_participation(&mut self, t: usize) {
+        if self.cfg.quorum == 0 {
+            debug_assert_eq!(self.participants.len(), self.cluster.size());
+            return; // mask stays all-true (membership resize keeps it so)
+        }
+        let uids: Vec<usize> = self.cluster.workers.iter().map(|w| w.id).collect();
+        let stale: Vec<usize> = self.cluster.workers.iter().map(|w| w.quorum_stale).collect();
+        self.participants = faults::quorum_participants(
+            &self.cfg.faults,
+            &uids,
+            &stale,
+            t,
+            self.cfg.quorum,
+            self.cfg.staleness_bound,
+        );
+    }
+
+    /// Wall-clock straggler injection: per-rank sleeps realising the
+    /// plan's virtual pacing, run at the START of each worker's
+    /// compression closure — outside every timed compress region, so the
+    /// Eq. 18 measured profile sees real compression costs, not sleep
+    /// time. The delay scales the measured compute base by the worker's
+    /// `virtual_step_time − 1` (its slowdown relative to nominal), capped
+    /// so CI-scale runs stay fast. `None` when the plan does not perturb
+    /// time or no compute baseline has been measured yet (first step).
+    fn straggler_delays(&self, t: usize) -> Option<Vec<Duration>> {
+        if !self.cfg.faults.perturbs_time() || self.last_comp_secs <= 0.0 {
+            return None;
+        }
+        const MAX_DELAY_SECS: f64 = 0.25;
+        Some(
+            self.cluster
+                .workers
+                .iter()
+                .map(|w| {
+                    let extra = (self.cfg.faults.virtual_step_time(w.id, t) - 1.0).max(0.0);
+                    Duration::from_secs_f64((extra * self.last_comp_secs).min(MAX_DELAY_SECS))
+                })
+                .collect(),
+        )
+    }
+
+    /// Bounded staleness (the quorum contract's second half): an excluded
+    /// worker's already-compressed messages are NOT discarded — each
+    /// coordinate folds back into that worker's own error-feedback
+    /// residual, so the mass competes again in the next step's TopK and
+    /// the EF convergence argument stays intact. Coordinates within one
+    /// worker's messages are disjoint across layers, so the fold order is
+    /// irrelevant; the message buffers are cleared for reuse.
+    fn fold_late_messages(&mut self) {
+        for (rank, w) in self.cluster.workers.iter_mut().enumerate() {
+            if self.participants[rank] {
+                continue;
+            }
+            for (li, &(off, _)) in self.layer_meta.iter().enumerate() {
+                let msg = &mut w.msgs[li];
+                for (&i, &v) in msg.idx.iter().zip(msg.val.iter()) {
+                    w.ef.add_residual_at(off + i as usize, v);
+                }
+                msg.idx.clear();
+                msg.val.clear();
+            }
+        }
+    }
+
+    /// Per-step quorum bookkeeping: participants record a staleness-
+    /// histogram entry at their backlog (0 for the common case) and reset
+    /// it; excluded workers age their backlog and charge one quorum miss
+    /// per layer.
+    fn note_quorum_outcome(&mut self) {
+        let nl = self.layer_meta.len();
+        for (rank, w) in self.cluster.workers.iter_mut().enumerate() {
+            if self.participants[rank] {
+                let s = w.quorum_stale;
+                if self.robust_staleness_hist.len() <= s {
+                    self.robust_staleness_hist.resize(s + 1, 0);
+                }
+                self.robust_staleness_hist[s] += 1;
+                w.quorum_stale = 0;
+            } else {
+                w.quorum_stale += 1;
+                for miss in self.robust_quorum_miss.iter_mut().take(nl) {
+                    *miss += 1;
+                }
+            }
+        }
     }
 
     /// Online adaptive path: fold this step's measured timings into the
@@ -543,9 +754,20 @@ impl Trainer {
             let s: f64 = self.cluster.workers.iter().map(|w| w.compress_secs[li]).sum();
             self.compress_mean[li] = s / p;
         }
+        // skew-aware: the calling thread clocked ITS OWN fan-out, but a
+        // synchronous step is paced by the quorum-gating worker's skew —
+        // re-inflate so Eq. 18 re-selects against the straggler-inflated
+        // profile. gate = 1.0 (healthy plan) folds bit-identically.
+        let uids: Vec<usize> = self.cluster.workers.iter().map(|w| w.id).collect();
+        let gate = faults::compute_gate(&self.cfg.faults, &uids, self.cfg.quorum);
         {
             let mp = self.online.as_mut().expect("measuring implies online");
-            mp.observe_step(self.last_comp_secs, &self.compress_mean, &self.reduce_secs);
+            mp.observe_step_skewed(
+                self.last_comp_secs,
+                gate,
+                &self.compress_mean,
+                &self.reduce_secs,
+            );
         }
         if done % self.cfg.reselect_every != 0 {
             return;
@@ -624,9 +846,15 @@ impl Trainer {
             self.cfg.compressor,
             CompressorKind::HostSampled | CompressorKind::XlaSampled
         );
+        let delays = self.straggler_delays(t);
         match self.cfg.pipeline {
             PipelineMode::Barrier => {
-                self.exec.run(&mut self.cluster.workers, |_, worker| {
+                self.exec.run(&mut self.cluster.workers, |rank, worker| {
+                    if let Some(ds) = &delays {
+                        if !ds[rank].is_zero() {
+                            std::thread::sleep(ds[rank]);
+                        }
+                    }
                     worker.ef.compress_layer_sparse(
                         0,
                         &worker.grad,
@@ -664,7 +892,12 @@ impl Trainer {
                 let (bytes, messages, overlap) = self.exec.run_with_sink(
                     &mut self.cluster.workers,
                     tx,
-                    |_, worker, tx| {
+                    |rank, worker, tx| {
+                        if let Some(ds) = &delays {
+                            if !ds[rank].is_zero() {
+                                std::thread::sleep(ds[rank]);
+                            }
+                        }
                         worker.ef.compress_layer_sparse(
                             0,
                             &worker.grad,
@@ -673,7 +906,7 @@ impl Trainer {
                             exact,
                             &mut worker.msg_flat,
                         );
-                        worker.publish_flat(tx);
+                        worker.publish_flat(rank, tx);
                         Ok(())
                     },
                     move || {
@@ -708,7 +941,10 @@ impl Trainer {
     fn reduce_apply_barrier_lags(&mut self) {
         let nl = self.layer_meta.len();
         let measure = self.measuring_at(self.step_idx);
-        let p = self.cluster.size();
+        // participant-filtered: with a quorum armed only participating
+        // ranks reduce (and account wire bytes); full participation passes
+        // every rank through, bit-identical to the unfiltered path
+        let p = self.participants.iter().filter(|&&b| b).count();
         self.agg.iter_mut().for_each(|v| *v = 0.0);
         let mut bytes = 0usize;
         let mut messages = 0usize;
@@ -716,14 +952,25 @@ impl Trainer {
             let (off, n) = self.layer_meta[li];
             let r0 = measure.then(Instant::now);
             sparse_agg::sparse_add_rank_ordered(
-                self.cluster.workers.iter().map(|w| &w.msgs[li]),
+                self.cluster
+                    .workers
+                    .iter()
+                    .zip(&self.participants)
+                    .filter(|(_, &part)| part)
+                    .map(|(w, _)| &w.msgs[li]),
                 &mut self.agg[off..off + n],
             );
             if let Some(r0) = r0 {
                 self.reduce_secs[li] = r0.elapsed().as_secs_f64();
             }
-            let layer_bytes: usize =
-                self.cluster.workers.iter().map(|w| w.msgs[li].wire_bytes()).sum();
+            let layer_bytes: usize = self
+                .cluster
+                .workers
+                .iter()
+                .zip(&self.participants)
+                .filter(|(_, &part)| part)
+                .map(|(w, _)| w.msgs[li].wire_bytes())
+                .sum();
             self.merge.push_with(li, layer_bytes, layer_bytes);
         }
         // nothing observes intermediate flushes in the barrier path, so
@@ -819,13 +1066,19 @@ impl Trainer {
         }
 
         let exact = !sampled;
+        let delays = self.straggler_delays(t);
         match self.cfg.pipeline {
             PipelineMode::Barrier => {
                 // worker-major compression into worker-owned per-layer
                 // messages, then the fork-join reduction
                 let meta = &self.layer_meta;
                 let ks_t = &self.ks_t;
-                self.exec.run(&mut self.cluster.workers, |_, worker| {
+                self.exec.run(&mut self.cluster.workers, |rank, worker| {
+                    if let Some(ds) = &delays {
+                        if !ds[rank].is_zero() {
+                            std::thread::sleep(ds[rank]);
+                        }
+                    }
                     for li in (0..meta.len()).rev() {
                         let (off, n) = meta[li];
                         let c0 = measure.then(Instant::now);
@@ -847,6 +1100,9 @@ impl Trainer {
             }
             PipelineMode::Overlap => {
                 self.stream.reset();
+                // reset restores all-required; re-arm this step's quorum
+                // mask before any worker publishes
+                self.stream.arm_participants(&self.participants);
                 let p = self.cluster.size();
                 let inv_p = 1.0 / p as f32;
                 let mu = self.cfg.momentum as f32;
@@ -862,7 +1118,12 @@ impl Trainer {
                 let (bytes, messages, overlap) = self.exec.run_with_sink(
                     &mut self.cluster.workers,
                     tx,
-                    |_, worker, tx| {
+                    |rank, worker, tx| {
+                        if let Some(ds) = &delays {
+                            if !ds[rank].is_zero() {
+                                std::thread::sleep(ds[rank]);
+                            }
+                        }
                         for li in (0..meta.len()).rev() {
                             let (off, n) = meta[li];
                             let c0 = measure.then(Instant::now);
@@ -877,7 +1138,7 @@ impl Trainer {
                             if let Some(c0) = c0 {
                                 worker.compress_secs[li] = c0.elapsed().as_secs_f64();
                             }
-                            worker.publish_layer(li, tx);
+                            worker.publish_layer(rank, li, tx);
                         }
                         Ok(())
                     },
@@ -921,7 +1182,14 @@ impl Trainer {
     /// P = 1 honestly simulates with zero communication).
     pub fn simulated_iteration(&self) -> crate::pipeline::desim::IterationBreakdown {
         let profile = ModelProfile::from_manifest(&self.model.mm, self.device_flops);
-        let net = self.net;
+        let mut net = self.net;
+        if self.cfg.faults.perturbs_time() {
+            // conservative link pricing under jitter: every message pays
+            // the worst-case draw (α inflated, bandwidth deflated) — the
+            // DES stays a deterministic single-number prediction
+            net.alpha *= 1.0 + self.cfg.faults.alpha_jitter;
+            net.bandwidth *= (1.0 - self.cfg.faults.bandwidth_jitter).max(0.05);
+        }
         let params = match self.cfg.algorithm {
             Algorithm::Dense => SimParams::dense(&profile),
             _ => {
@@ -929,6 +1197,18 @@ impl Trainer {
                 // backprop order = reversed manifest order
                 p.ratios = self.ratios.iter().rev().cloned().collect();
                 p.merge_bytes = self.cfg.merge_bytes as f64;
+                if self.robustness_active() {
+                    // the LIVE membership's skews: the DES predicts the
+                    // straggler-degraded (and quorum-recovered) step on
+                    // the same fault plan the real trainer runs
+                    p.skews = self
+                        .cluster
+                        .workers
+                        .iter()
+                        .map(|w| self.cfg.faults.skew_of(w.id))
+                        .collect();
+                    p.quorum = self.cfg.quorum;
+                }
                 p
             }
         };
@@ -1003,7 +1283,50 @@ impl Trainer {
             device_flops: self.device_flops,
             flops_source: self.flops_source.clone(),
             selections: self.selections.clone(),
+            robustness: self.robustness_stats(),
         })
+    }
+
+    /// Robustness telemetry accumulated so far (all-default for a clean
+    /// full-sync run — stable field names, see [`RobustnessStats`]).
+    pub fn robustness_stats(&self) -> RobustnessStats {
+        if !self.robustness_active() {
+            return RobustnessStats::default();
+        }
+        RobustnessStats {
+            worker_skew: self
+                .steps_active
+                .iter()
+                .map(|(&uid, &steps)| WorkerSkew {
+                    worker: uid,
+                    skew: self.cfg.faults.skew_of(uid),
+                    steps_active: steps,
+                })
+                .collect(),
+            quorum_miss_per_layer: self.robust_quorum_miss.clone(),
+            staleness_hist: self.robust_staleness_hist.clone(),
+            membership_log: self.robust_membership_log.clone(),
+            quorum: self.cfg.quorum,
+            staleness_bound: self.cfg.staleness_bound,
+        }
+    }
+
+    /// Current live worker count (elastic membership moves it).
+    pub fn cluster_size(&self) -> usize {
+        self.cluster.size()
+    }
+
+    /// Live §5 merge-buffer capacity, `merge_bytes × CURRENT P` — the
+    /// regression hook for the elastic re-capacity fix (the capacity used
+    /// to be frozen at the startup worker count).
+    pub fn merge_capacity_bytes(&self) -> usize {
+        self.merge.capacity_bytes()
+    }
+
+    /// Per-coordinate f64 sums of the workers' error-feedback residuals
+    /// (conservation assertions in the fault-injection tests).
+    pub fn residual_coordinate_sums(&self) -> Vec<f64> {
+        self.cluster.residual_coordinate_sums()
     }
 
     /// Access the delta monitor's per-layer series (Fig. 2 harness).

@@ -58,6 +58,110 @@ impl RatioSelection {
     }
 }
 
+/// One worker's compute skew as configured by the fault plan, plus how
+/// many steps it was actually a member for (drops/joins shorten/extend).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerSkew {
+    /// stable worker uid
+    pub worker: usize,
+    /// multiplicative compute-time skew (1.0 = nominal)
+    pub skew: f64,
+    /// steps this worker was a cluster member
+    pub steps_active: usize,
+}
+
+/// One elastic-membership event as it was applied by the trainer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MembershipChange {
+    /// step index the event took effect BEFORE (events apply between steps)
+    pub step: usize,
+    /// "drop" | "join"
+    pub action: String,
+    /// stable worker uid
+    pub worker: usize,
+    /// cluster size after the event applied
+    pub workers_after: usize,
+}
+
+/// Robustness telemetry for a run under a fault plan / quorum mode
+/// (satellite: stable field names — CI and downstream tooling key on
+/// them). All-default for a clean full-sync run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RobustnessStats {
+    /// per-worker configured skew + membership duration
+    pub worker_skew: Vec<WorkerSkew>,
+    /// per-layer count of (step × excluded worker) quorum misses,
+    /// manifest order
+    pub quorum_miss_per_layer: Vec<u64>,
+    /// staleness histogram: index s counts re-inclusions after s
+    /// consecutive missed steps (index 0 = included with no backlog)
+    pub staleness_hist: Vec<u64>,
+    /// applied drop/join events in order
+    pub membership_log: Vec<MembershipChange>,
+    /// configured quorum size (0 = full sync)
+    pub quorum: usize,
+    /// configured staleness bound (0 = unbounded)
+    pub staleness_bound: usize,
+}
+
+impl RobustnessStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "worker_skew",
+                Json::Arr(
+                    self.worker_skew
+                        .iter()
+                        .map(|w| {
+                            Json::obj(vec![
+                                ("worker", Json::Num(w.worker as f64)),
+                                ("skew", Json::Num(w.skew)),
+                                ("steps_active", Json::Num(w.steps_active as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "quorum_miss_per_layer",
+                Json::Arr(self.quorum_miss_per_layer.iter().map(|&c| Json::Num(c as f64)).collect()),
+            ),
+            (
+                "staleness_hist",
+                Json::Arr(self.staleness_hist.iter().map(|&c| Json::Num(c as f64)).collect()),
+            ),
+            (
+                "membership_log",
+                Json::Arr(
+                    self.membership_log
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("step", Json::Num(m.step as f64)),
+                                ("action", Json::Str(m.action.clone())),
+                                ("worker", Json::Num(m.worker as f64)),
+                                ("workers_after", Json::Num(m.workers_after as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("quorum", Json::Num(self.quorum as f64)),
+            ("staleness_bound", Json::Num(self.staleness_bound as f64)),
+        ])
+    }
+
+    /// Total quorum misses across layers (summary-line diagnostic).
+    pub fn total_quorum_misses(&self) -> u64 {
+        self.quorum_miss_per_layer.iter().sum()
+    }
+
+    /// Largest staleness observed at a re-inclusion (0 if none).
+    pub fn max_staleness(&self) -> usize {
+        self.staleness_hist.iter().rposition(|&c| c > 0).unwrap_or(0)
+    }
+}
+
 /// Result of one full training run.
 #[derive(Debug, Clone)]
 pub struct TrainReport {
@@ -103,6 +207,8 @@ pub struct TrainReport {
     /// Eq. 18 selection history: startup selection + every online
     /// re-selection (empty for non-adaptive runs)
     pub selections: Vec<RatioSelection>,
+    /// fault/quorum telemetry (all-default for a clean full-sync run)
+    pub robustness: RobustnessStats,
 }
 
 impl TrainReport {
@@ -161,6 +267,7 @@ impl TrainReport {
                 "ratio_selections",
                 Json::Arr(self.selections.iter().map(RatioSelection::to_json).collect()),
             ),
+            ("robustness", self.robustness.to_json()),
         ])
     }
 
@@ -225,6 +332,7 @@ mod tests {
                 effective_cmax: 250.0,
                 ratios: vec![1.0, 250.0],
             }],
+            robustness: RobustnessStats::default(),
         };
         assert!((r.headline_metric() - 2.0f64.exp()).abs() < 1e-12);
         assert_eq!(r.headline_name(), "perplexity");
@@ -235,5 +343,46 @@ mod tests {
         let sels = j.get("ratio_selections").unwrap().as_arr().unwrap();
         assert_eq!(sels.len(), 1);
         assert_eq!(sels[0].get("effective_cmax").unwrap().as_f64().unwrap(), 250.0);
+        // robustness block is always present (all-default for clean runs)
+        let rb = j.get("robustness").unwrap();
+        assert_eq!(rb.get("quorum").unwrap().as_f64().unwrap(), 0.0);
+        assert!(rb.get("membership_log").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn robustness_stats_json_field_names_are_stable() {
+        let r = RobustnessStats {
+            worker_skew: vec![WorkerSkew { worker: 1, skew: 4.0, steps_active: 10 }],
+            quorum_miss_per_layer: vec![0, 3],
+            staleness_hist: vec![5, 0, 2],
+            membership_log: vec![MembershipChange {
+                step: 7,
+                action: "drop".into(),
+                worker: 1,
+                workers_after: 3,
+            }],
+            quorum: 3,
+            staleness_bound: 2,
+        };
+        assert_eq!(r.total_quorum_misses(), 3);
+        assert_eq!(r.max_staleness(), 2);
+        let j = r.to_json();
+        // field names are a stable contract: CI and BENCH tooling grep them
+        for key in [
+            "worker_skew",
+            "quorum_miss_per_layer",
+            "staleness_hist",
+            "membership_log",
+            "quorum",
+            "staleness_bound",
+        ] {
+            assert!(j.get(key).is_ok(), "missing robustness field {key}");
+        }
+        let ws = &j.get("worker_skew").unwrap().as_arr().unwrap()[0];
+        assert_eq!(ws.get("skew").unwrap().as_f64().unwrap(), 4.0);
+        let ev = &j.get("membership_log").unwrap().as_arr().unwrap()[0];
+        assert_eq!(ev.get("action").unwrap().as_str().unwrap(), "drop");
+        assert_eq!(ev.get("workers_after").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(j.get("staleness_hist").unwrap().as_arr().unwrap().len(), 3);
     }
 }

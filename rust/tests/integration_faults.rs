@@ -1,0 +1,245 @@
+//! Fault-injection, elastic membership and bounded-staleness quorum.
+//!
+//! The robustness layer extends the determinism contract: a fixed seed
+//! PLUS a fixed [`FaultPlan`] must give bit-identical training runs for
+//! every thread count and pipeline mode, because skew/jitter/quorum are
+//! pure functions of (plan, uid, step) and membership events fire
+//! strictly between steps. These tests pin that contract, the
+//! residual-conservation guarantee of elastic re-sharding, the
+//! bounded-staleness telemetry, and the merge-capacity re-sizing fix.
+
+use lags::cluster::faults::{FaultPlan, MembershipAction, MembershipEvent};
+use lags::cluster::Cluster;
+use lags::collectives::PipelineMode;
+use lags::config::TrainConfig;
+use lags::runtime::Runtime;
+use lags::trainer::{Algorithm, MessageStats, Trainer};
+use std::sync::Arc;
+
+fn cfg(model: &str, alg: Algorithm, steps: usize, workers: usize, threads: usize) -> TrainConfig {
+    let mut c = TrainConfig::default_for(model);
+    c.algorithm = alg;
+    c.steps = steps;
+    c.workers = workers;
+    c.threads = threads;
+    c.lr = 0.1;
+    c.compression = 20.0;
+    c.eval_every = 0;
+    c
+}
+
+fn ev(step: usize, action: MembershipAction, worker: usize) -> MembershipEvent {
+    MembershipEvent { step, action, worker }
+}
+
+/// Run the full loop step-by-step, returning (per-step losses, final
+/// params, message stats).
+fn run_traced(rt: &Arc<Runtime>, cfg: TrainConfig) -> (Vec<f64>, Vec<f32>, MessageStats) {
+    let steps = cfg.steps;
+    let mut t = Trainer::with_runtime(rt, cfg).expect("build trainer");
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        losses.push(t.step().expect("step"));
+    }
+    (losses, t.params().to_vec(), t.msg_stats().clone())
+}
+
+/// Skew + link jitter + a drop and a re-join mid-run.
+fn chaotic_plan() -> FaultPlan {
+    FaultPlan {
+        seed: 11,
+        compute_skew: vec![1.0, 2.0, 1.0, 1.0],
+        alpha_jitter: 0.15,
+        bandwidth_jitter: 0.15,
+        events: vec![ev(3, MembershipAction::Drop, 1), ev(5, MembershipAction::Join, 4)],
+    }
+}
+
+#[test]
+fn fault_plan_bit_identical_across_threads_and_modes() {
+    // same seed + same plan ⇒ bit-identical losses, params and message
+    // stats, with skew, jitter, a drop, a join AND the quorum active —
+    // for both algorithms, both pipeline modes, several thread counts,
+    // and across repeated runs (the plan's jitter streams are seeded,
+    // never wall-clock)
+    let rt = Arc::new(Runtime::native(42));
+    for (alg, quorum) in [(Algorithm::Lags, 3usize), (Algorithm::Slgs, 0)] {
+        let make = |mode: PipelineMode, threads: usize| {
+            let mut c = cfg("mlp", alg, 7, 4, threads);
+            c.faults = chaotic_plan();
+            c.quorum = quorum;
+            c.staleness_bound = if quorum > 0 { 2 } else { 0 };
+            c.pipeline = mode;
+            c
+        };
+        let (l0, p0, s0) = run_traced(&rt, make(PipelineMode::Barrier, 1));
+        let (l1, p1, s1) = run_traced(&rt, make(PipelineMode::Barrier, 1));
+        assert_eq!(l0, l1, "{}: rerun with the same plan diverged", alg.name());
+        assert_eq!(p0, p1, "{}: rerun params diverged", alg.name());
+        assert_eq!(s0, s1, "{}: rerun msg stats diverged", alg.name());
+        for threads in [1usize, 3] {
+            for mode in [PipelineMode::Barrier, PipelineMode::Overlap] {
+                let (l, p, s) = run_traced(&rt, make(mode, threads));
+                let tag = format!("{} {} threads={threads}", alg.name(), mode.name());
+                assert_eq!(l0, l, "losses diverged under faults: {tag}");
+                assert_eq!(p0, p, "params diverged under faults: {tag}");
+                assert_eq!(s0, s, "msg stats diverged under faults: {tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn drop_resharding_conserves_residual_coordinate_sums() {
+    // the elastic-membership invariant at the cluster level: dropping a
+    // worker moves its residual mass wholesale onto survivors, so every
+    // coordinate's cluster-wide sum is preserved (up to one f32 add),
+    // and a join (fresh zero residual) changes nothing
+    let d = 101usize;
+    let mut c = Cluster::new(3, d, 16);
+    for w in &mut c.workers {
+        for i in 0..d {
+            w.ef.add_residual_at(i, (w.id + 1) as f32 * 0.01 * (i as f32 - 50.0));
+        }
+    }
+    let before = c.residual_coordinate_sums();
+    c.drop_worker(1).unwrap();
+    assert_eq!(c.size(), 2);
+    let after = c.residual_coordinate_sums();
+    for (i, (a, b)) in before.iter().zip(after.iter()).enumerate() {
+        assert!((a - b).abs() < 1e-5, "coordinate {i} lost mass: {a} -> {b}");
+    }
+    c.join_worker(7, d, 16, &[50, 51]).unwrap();
+    assert_eq!(c.size(), 3);
+    assert_eq!(after, c.residual_coordinate_sums(), "a joiner must not shift residual mass");
+    // dropping the last worker or an absent uid is refused
+    assert!(c.drop_worker(99).is_err());
+}
+
+#[test]
+fn trainer_drop_and_rejoin_completes_with_membership_log() {
+    // end-to-end elastic run: a worker leaves at step 2 and a new one
+    // joins at step 5; the run completes, the membership log records both
+    // events with the post-event cluster sizes, per-worker membership
+    // durations are tracked, and the residual state stays finite
+    let rt = Arc::new(Runtime::native(101));
+    let mut c = cfg("mlp", Algorithm::Lags, 8, 3, 2);
+    c.faults.events = vec![ev(2, MembershipAction::Drop, 2), ev(5, MembershipAction::Join, 3)];
+    let mut t = Trainer::with_runtime(&rt, c).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        losses.push(t.step().unwrap());
+    }
+    assert!(losses.iter().all(|l| l.is_finite()), "losses stayed finite: {losses:?}");
+    assert_eq!(t.cluster_size(), 3, "back to 3 workers after drop + join");
+    let rb = t.robustness_stats();
+    assert_eq!(rb.membership_log.len(), 2);
+    assert_eq!(rb.membership_log[0].step, 2);
+    assert_eq!(rb.membership_log[0].action, "drop");
+    assert_eq!(rb.membership_log[0].worker, 2);
+    assert_eq!(rb.membership_log[0].workers_after, 2);
+    assert_eq!(rb.membership_log[1].step, 5);
+    assert_eq!(rb.membership_log[1].action, "join");
+    assert_eq!(rb.membership_log[1].worker, 3);
+    assert_eq!(rb.membership_log[1].workers_after, 3);
+    // membership durations: uid 0 full run, uid 2 until the drop, uid 3
+    // from the join; skew defaults to nominal
+    let active = |uid: usize| {
+        let w = rb.worker_skew.iter().find(|w| w.worker == uid).expect("worker in telemetry");
+        assert_eq!(w.skew, 1.0);
+        w.steps_active
+    };
+    assert_eq!(active(0), 8);
+    assert_eq!(active(2), 2);
+    assert_eq!(active(3), 3);
+    assert!(t.residual_coordinate_sums().iter().all(|s| s.is_finite()));
+}
+
+#[test]
+fn quorum_with_permanent_drop_trains_to_healthy_loss() {
+    // the acceptance scenario: LAGS with --quorum P-1 survives a
+    // permanent mid-run drop. Late messages fold back into the excluded
+    // worker's residual (no mass lost), so the final loss lands within a
+    // generous band of the no-fault run and still decreases end to end.
+    let rt = Arc::new(Runtime::native(103));
+    let (clean_losses, _, _) = run_traced(&rt, cfg("mlp", Algorithm::Lags, 40, 4, 2));
+    let clean_final = *clean_losses.last().unwrap();
+
+    let mut c = cfg("mlp", Algorithm::Lags, 40, 4, 2);
+    c.quorum = 3;
+    c.staleness_bound = 4;
+    c.faults.events = vec![ev(10, MembershipAction::Drop, 1)];
+    let mut t = Trainer::with_runtime(&rt, c).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..40 {
+        losses.push(t.step().unwrap());
+    }
+    let (first, last) = (losses[0], *losses.last().unwrap());
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert!(last < first, "faulted run still converges ({first} -> {last})");
+    assert!(
+        last < clean_final * 2.0 + 0.1,
+        "faulted final loss {last} too far from clean {clean_final}"
+    );
+    assert_eq!(t.cluster_size(), 3, "the drop is permanent");
+    let rb = t.robustness_stats();
+    assert_eq!(rb.quorum, 3);
+    assert_eq!(rb.membership_log.len(), 1);
+    assert!(rb.total_quorum_misses() > 0, "P=4 at quorum 3 must exclude someone");
+    assert!(t.residual_coordinate_sums().iter().all(|s| s.is_finite()));
+}
+
+#[test]
+fn quorum_telemetry_counts_misses_and_bounded_staleness() {
+    // P=3 at quorum 2 with an 8× straggler and no jitter: the straggler
+    // is excluded every step until the staleness bound (3) forces it back
+    // in, displacing a nominal worker that step. Over 8 steps the pure
+    // selection function yields exactly 8 (step × worker) exclusions and
+    // two forced re-inclusions at staleness 3 — pinned here so the
+    // telemetry (and the selection semantics behind it) cannot drift.
+    let rt = Arc::new(Runtime::native(107));
+    let mut c = cfg("mlp", Algorithm::Lags, 8, 3, 2);
+    c.faults.compute_skew = vec![1.0, 8.0, 1.0];
+    c.quorum = 2;
+    c.staleness_bound = 3;
+    let mut t = Trainer::with_runtime(&rt, c).unwrap();
+    for _ in 0..8 {
+        t.step().unwrap();
+    }
+    let rb = t.robustness_stats();
+    assert_eq!(rb.quorum, 2);
+    assert_eq!(rb.staleness_bound, 3);
+    let nl = t.model_manifest().layers.len();
+    assert_eq!(rb.quorum_miss_per_layer.len(), nl);
+    assert!(
+        rb.quorum_miss_per_layer.iter().all(|&m| m == 8),
+        "every layer misses each excluded worker once per step: {:?}",
+        rb.quorum_miss_per_layer
+    );
+    assert_eq!(rb.total_quorum_misses(), 8 * nl as u64);
+    assert_eq!(rb.max_staleness(), 3, "bound 3 caps the backlog");
+    assert_eq!(rb.staleness_hist[3], 2, "two forced re-inclusions over 8 steps");
+    let straggler = rb.worker_skew.iter().find(|w| w.worker == 1).unwrap();
+    assert_eq!(straggler.skew, 8.0);
+    assert_eq!(straggler.steps_active, 8);
+}
+
+#[test]
+fn membership_change_recomputes_merge_capacity() {
+    // the §5 merge-buffer capacity is merge_bytes × CURRENT P; it used to
+    // stay frozen at the startup worker count, silently over-grouping
+    // after a drop. Two drops must shrink it twice.
+    let rt = Arc::new(Runtime::native(109));
+    let mut c = cfg("mlp_deep", Algorithm::Lags, 3, 4, 2);
+    c.merge_bytes = 4096;
+    c.faults.events = vec![ev(1, MembershipAction::Drop, 3), ev(2, MembershipAction::Drop, 2)];
+    let mut t = Trainer::with_runtime(&rt, c).unwrap();
+    assert_eq!(t.merge_capacity_bytes(), 4096 * 4);
+    t.step().unwrap(); // step 0: no event
+    assert_eq!(t.merge_capacity_bytes(), 4096 * 4);
+    t.step().unwrap(); // step 1: drop → P=3
+    assert_eq!(t.merge_capacity_bytes(), 4096 * 3, "capacity tracks the live membership");
+    t.step().unwrap(); // step 2: drop → P=2
+    assert_eq!(t.merge_capacity_bytes(), 4096 * 2);
+    assert_eq!(t.cluster_size(), 2);
+}
