@@ -1,0 +1,102 @@
+//! CHECKPOINT bench: durable-state cost and the steady-state overhead of
+//! periodic checkpointing.
+//!
+//! For each of `mlp_deep`, `convnet_deep` and `rnn` at P = 4, c = 20:
+//!
+//! * `ckpt_write_<model>`   — latency of one atomic checkpoint write
+//!   (capture + encode + fsync + rename), annotated with `bytes` (the
+//!   on-disk size) and `write_mb_s` (encode+fsync throughput)
+//! * `ckpt_restore_<model>` — latency of a full restore: read + checksum
+//!   verify + decode + rebuild a trainer from the snapshot
+//! * `step_<model>_every{0,1,10,100}` — training-step wall clock with
+//!   checkpointing off vs `--checkpoint-every {1,10,100}`; the every-N
+//!   rows carry `overhead_pct` relative to the every-0 baseline, i.e. the
+//!   amortized price of durability at each cadence
+//!
+//! Emits `BENCH_checkpoint.json` (atomic write) for the perf trajectory.
+//!
+//!     cargo bench --bench checkpoint
+
+use lags::config::TrainConfig;
+use lags::runtime::Runtime;
+use lags::trainer::{Algorithm, Trainer};
+use lags::util::bench;
+use std::sync::Arc;
+
+fn cfg(model: &str, dir: &str, every: usize) -> TrainConfig {
+    let mut c = TrainConfig::default_for(model);
+    c.algorithm = Algorithm::Lags;
+    c.workers = 4;
+    c.threads = 2;
+    c.lr = 0.1;
+    c.compression = 20.0;
+    c.eval_every = 0;
+    c.checkpoint_dir = dir.to_string();
+    c.checkpoint_every = every;
+    c
+}
+
+fn main() {
+    let rt = Arc::new(Runtime::native(42));
+    let scratch = std::env::temp_dir().join(format!("lags-bench-ckpt-{}", std::process::id()));
+
+    println!("# checkpoint: write/restore latency and per-step overhead, P=4, c=20");
+    bench::table_header(&["model", "write_ms", "size_kb", "restore_ms", "ovh@1", "ovh@10", "ovh@100"]);
+    for model in ["mlp_deep", "convnet_deep", "rnn"] {
+        let dir = scratch.join(model);
+        let dir_s = dir.to_string_lossy().into_owned();
+
+        // warm a trainer a few steps so the snapshot carries realistic
+        // residual/momentum state, then measure one durable write
+        let mut t = Trainer::with_runtime(&rt, cfg(model, &dir_s, 0)).unwrap();
+        for _ in 0..3 {
+            t.step().unwrap();
+        }
+        let write_name = format!("ckpt_write_{model}");
+        let ws = bench::run(&write_name, || {
+            t.save_checkpoint().unwrap();
+        });
+        let path = Trainer::checkpoint_path(&dir_s);
+        let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        bench::annotate(&write_name, "bytes", bytes as f64);
+        bench::annotate(&write_name, "write_mb_s", bytes as f64 / 1e6 / ws.median.max(1e-12));
+
+        // full restore: read + checksum + decode + rebuild the trainer
+        let restore_name = format!("ckpt_restore_{model}");
+        let rs = bench::run_val(&restore_name, || {
+            Trainer::resume_with_runtime(&rt, &dir_s).unwrap()
+        });
+
+        // steady-state step cost at each checkpoint cadence; every=0 is
+        // the no-durability baseline the overheads are measured against
+        let mut medians = Vec::new();
+        for every in [0usize, 1, 10, 100] {
+            let mut tt = Trainer::with_runtime(&rt, cfg(model, &dir_s, every)).unwrap();
+            let name = format!("step_{model}_every{every}");
+            let s = bench::run(&name, || {
+                tt.step().unwrap();
+            });
+            medians.push((name, every, s.median));
+        }
+        let base = medians[0].2.max(1e-12);
+        let mut ovh = Vec::new();
+        for (name, every, med) in &medians[1..] {
+            let pct = (med - base) / base * 100.0;
+            bench::annotate(name, "overhead_pct", pct);
+            bench::annotate(name, "checkpoint_every", *every as f64);
+            ovh.push(pct);
+        }
+        bench::table_row(&[
+            model.to_string(),
+            format!("{:.3}", ws.median * 1e3),
+            format!("{:.1}", bytes as f64 / 1e3),
+            format!("{:.3}", rs.median * 1e3),
+            format!("{:.1}%", ovh[0]),
+            format!("{:.1}%", ovh[1]),
+            format!("{:.1}%", ovh[2]),
+        ]);
+    }
+
+    std::fs::remove_dir_all(&scratch).ok();
+    bench::write_json("BENCH_checkpoint.json").expect("write BENCH_checkpoint.json");
+}

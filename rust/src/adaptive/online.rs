@@ -128,6 +128,31 @@ impl MeasuredProfile {
         self.steps
     }
 
+    /// Checkpoint snapshot of the EWMA state: `(t_comp, t_compress,
+    /// t_reduce, steps)`. The structural fields (names / params /
+    /// flops_frac) are NOT captured — they are a pure function of the
+    /// model manifest and are rebuilt by [`Self::new`] on restore.
+    pub fn ewma_snapshot(&self) -> (f64, Vec<f64>, Vec<f64>, usize) {
+        (self.t_comp, self.t_compress.clone(), self.t_reduce.clone(), self.steps)
+    }
+
+    /// Install an EWMA state captured by [`Self::ewma_snapshot`] onto a
+    /// freshly-built profile (same manifest ⇒ same layer count).
+    pub fn restore_ewma(
+        &mut self,
+        t_comp: f64,
+        t_compress: &[f64],
+        t_reduce: &[f64],
+        steps: usize,
+    ) {
+        assert_eq!(t_compress.len(), self.t_compress.len(), "layer count changed under restore");
+        assert_eq!(t_reduce.len(), self.t_reduce.len(), "layer count changed under restore");
+        self.t_comp = t_comp;
+        self.t_compress.copy_from_slice(t_compress);
+        self.t_reduce.copy_from_slice(t_reduce);
+        self.steps = steps;
+    }
+
     /// Smoothed forward+backward compute wall-clock (s).
     pub fn compute_seconds(&self) -> f64 {
         self.t_comp
@@ -251,6 +276,23 @@ mod tests {
         a.observe_step(0.37, &[0.01; 3], &[0.002; 3]);
         b.observe_step_skewed(0.37, 1.0, &[0.01; 3], &[0.002; 3]);
         assert_eq!(a.compute_seconds(), b.compute_seconds());
+    }
+
+    #[test]
+    fn ewma_snapshot_restore_is_bit_identical() {
+        let mut m = mp();
+        m.observe_step(0.4, &[0.01, 0.02, 0.03], &[0.001, 0.002, 0.003]);
+        m.observe_step(0.7, &[0.02, 0.01, 0.04], &[0.002, 0.001, 0.004]);
+        let (tc, comp, red, steps) = m.ewma_snapshot();
+        let mut fresh = mp();
+        fresh.restore_ewma(tc, &comp, &red, steps);
+        // the restored profile folds the NEXT observation identically
+        m.observe_step(0.9, &[0.03; 3], &[0.005; 3]);
+        fresh.observe_step(0.9, &[0.03; 3], &[0.005; 3]);
+        assert_eq!(m.compute_seconds(), fresh.compute_seconds());
+        assert_eq!(m.reduce_seconds(), fresh.reduce_seconds());
+        assert_eq!(m.overhead_backprop(), fresh.overhead_backprop());
+        assert_eq!(m.steps(), fresh.steps());
     }
 
     #[test]

@@ -76,6 +76,37 @@ pub struct MembershipEvent {
     pub worker: usize,
 }
 
+/// The typed error a `crash@step` event raises: the trainer refuses to
+/// run the scheduled step and unwinds, modelling a process death the
+/// chaos harness can catch (tests) or turn into a non-zero exit (CLI).
+/// Downcast with `err.downcast_ref::<CrashPoint>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CrashPoint(pub usize);
+
+impl std::fmt::Display for CrashPoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "injected crash at step {}", self.0)
+    }
+}
+
+impl std::error::Error for CrashPoint {}
+
+/// One step of a recorded execution trace: per-worker-uid measured
+/// compute seconds plus the link multipliers that step actually applied.
+/// Workers absent that step carry 0.0 compute (replay treats it as
+/// nominal). Written by `--record-trace`, consumed by
+/// [`FaultPlan::from_trace`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceStepRecord {
+    pub step: usize,
+    /// per-uid measured per-worker wall-clock seconds (0.0 = absent)
+    pub comp_secs: Vec<f64>,
+    /// per-uid α multiplier applied this step (1.0 = no jitter)
+    pub alpha_mult: Vec<f64>,
+    /// per-uid bandwidth multiplier applied this step
+    pub bw_mult: Vec<f64>,
+}
+
 /// The full deterministic fault schedule for a run. See the module docs
 /// for semantics; [`FaultPlan::none`] is the default healthy cluster.
 #[derive(Debug, Clone, PartialEq)]
@@ -92,6 +123,17 @@ pub struct FaultPlan {
     pub bandwidth_jitter: f64,
     /// drop/join schedule, applied in listed order within a step
     pub events: Vec<MembershipEvent>,
+    /// steps at whose START the process crashes (`crash@step`): the
+    /// trainer raises [`CrashPoint`] before computing any gradient, so
+    /// the last durable checkpoint is the complete state. A fired crash
+    /// is disarmed on resume via a tombstone in the checkpoint dir —
+    /// pure schedule data here, no mutable cursor.
+    pub crashes: Vec<usize>,
+    /// recorded-profile replay: per-step rows of per-uid compute-time
+    /// multipliers (median-normalized by [`FaultPlan::from_trace`]).
+    /// Row `step % len` paces step `step`, so a short trace cycles over
+    /// a longer run. Empty = no trace replay.
+    pub trace: Vec<Vec<f64>>,
 }
 
 impl Default for FaultPlan {
@@ -109,26 +151,62 @@ impl FaultPlan {
             alpha_jitter: 0.0,
             bandwidth_jitter: 0.0,
             events: Vec::new(),
+            crashes: Vec::new(),
+            trace: Vec::new(),
         }
     }
 
     /// True when the plan injects nothing (the default-config fast path).
     pub fn is_none(&self) -> bool {
-        self.events.is_empty() && !self.perturbs_time()
+        self.events.is_empty() && self.crashes.is_empty() && !self.perturbs_time()
     }
 
-    /// True when the plan perturbs per-worker step time (skew or jitter)
-    /// — the trainer then measures compute wall-clock every step so the
-    /// straggler sleeps have a base to scale.
+    /// True when the plan perturbs per-worker step time (skew, jitter or
+    /// a replayed trace) — the trainer then measures compute wall-clock
+    /// every step so the straggler sleeps have a base to scale.
     pub fn perturbs_time(&self) -> bool {
         self.alpha_jitter > 0.0
             || self.bandwidth_jitter > 0.0
             || self.compute_skew.iter().any(|&s| s != 1.0)
+            || !self.trace.is_empty()
     }
 
-    /// Compute skew for a worker uid (1.0 when unlisted).
-    pub fn skew_of(&self, uid: usize) -> f64 {
+    /// True when a crash is scheduled at the start of `step`.
+    pub fn crash_at(&self, step: usize) -> bool {
+        self.crashes.contains(&step)
+    }
+
+    /// The configured (synthetic) skew for a worker uid, trace excluded.
+    fn base_skew(&self, uid: usize) -> f64 {
         self.compute_skew.get(uid).copied().unwrap_or(1.0)
+    }
+
+    /// The replayed trace multiplier for `(uid, step)` — row `step % T`
+    /// of the schedule, 1.0 with no trace or for uids beyond the row.
+    pub fn trace_multiplier(&self, uid: usize, step: usize) -> f64 {
+        if self.trace.is_empty() {
+            return 1.0;
+        }
+        self.trace[step % self.trace.len()].get(uid).copied().unwrap_or(1.0)
+    }
+
+    /// Mean trace multiplier for a uid across the schedule (1.0 with no
+    /// trace) — the run-level pacing factor of a replayed profile.
+    fn trace_mean(&self, uid: usize) -> f64 {
+        if self.trace.is_empty() {
+            return 1.0;
+        }
+        let sum: f64 = self.trace.iter().map(|row| row.get(uid).copied().unwrap_or(1.0)).sum();
+        sum / self.trace.len() as f64
+    }
+
+    /// Run-level compute skew for a worker uid: the configured synthetic
+    /// skew × the mean replayed trace multiplier (each 1.0 when absent).
+    /// This is the single scalar the compute gate, the DES `skews` and
+    /// the telemetry consume, so a replayed trace flows into all three
+    /// without any caller changes.
+    pub fn skew_of(&self, uid: usize) -> f64 {
+        self.base_skew(uid) * self.trace_mean(uid)
     }
 
     /// Per-(worker, step) link multipliers `(alpha_mult, bandwidth_mult)`,
@@ -146,13 +224,13 @@ impl FaultPlan {
     }
 
     /// Relative virtual duration of worker `uid`'s step `step`: compute
-    /// skew × jittered link slowdown (a slow link delays the worker's
-    /// messages just like slow compute does). This is the quantity the
-    /// quorum ranks workers by.
+    /// skew × this step's replayed trace multiplier × jittered link
+    /// slowdown (a slow link delays the worker's messages just like slow
+    /// compute does). This is the quantity the quorum ranks workers by.
     pub fn virtual_step_time(&self, uid: usize, step: usize) -> f64 {
         let (a, b) = self.link_jitter(uid, step);
         // α grows link time multiplicatively; bandwidth shrinks it
-        self.skew_of(uid) * a / b
+        self.base_skew(uid) * self.trace_multiplier(uid, step) * a / b
     }
 
     /// Events scheduled for `step`, in listed order.
@@ -172,6 +250,11 @@ impl FaultPlan {
         }
         if let Some(s) = self.compute_skew.iter().find(|s| !s.is_finite() || **s <= 0.0) {
             bail!("compute_skew entries must be finite and > 0, got {s}");
+        }
+        for (i, row) in self.trace.iter().enumerate() {
+            if let Some(m) = row.iter().find(|m| !m.is_finite() || **m <= 0.0) {
+                bail!("trace row {i}: multipliers must be finite and > 0, got {m}");
+            }
         }
         let mut alive: Vec<usize> = (0..start_workers).collect();
         let mut sorted = self.events.clone();
@@ -223,6 +306,11 @@ impl FaultPlan {
                         .collect(),
                 ),
             ),
+            (
+                "crashes",
+                Json::Arr(self.crashes.iter().map(|&s| Json::Num(s as f64)).collect()),
+            ),
+            ("trace", Json::Arr(self.trace.iter().map(|row| Json::arr_f64(row)).collect())),
         ])
     }
 
@@ -254,19 +342,119 @@ impl FaultPlan {
                         })
                         .collect::<Result<_>>()?;
                 }
+                "crashes" => {
+                    plan.crashes =
+                        val.as_arr()?.iter().map(Json::as_usize).collect::<Result<_>>()?;
+                }
+                "trace" => {
+                    plan.trace = val
+                        .as_arr()?
+                        .iter()
+                        .map(|row| row.as_arr()?.iter().map(Json::as_f64).collect::<Result<_>>())
+                        .collect::<Result<_>>()?;
+                }
                 other => bail!("unknown fault plan key {other:?}"),
             }
         }
         Ok(plan)
     }
 
-    /// Load a plan from a JSON file (the `--faults FILE` path).
-    pub fn load(path: &str) -> Result<FaultPlan> {
+    /// Load a plan from a JSON file (the `--faults FILE` path) and
+    /// validate it against the configured starting worker count
+    /// immediately — a malformed schedule fails HERE with its file and
+    /// the offending event's step, not at first use mid-run.
+    pub fn load(path: &str, start_workers: usize) -> Result<FaultPlan> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading fault plan {path:?}"))?;
-        FaultPlan::from_json(&Json::parse(&text)?)
-            .with_context(|| format!("parsing fault plan {path:?}"))
+        let plan = FaultPlan::from_json(&Json::parse(&text)?)
+            .with_context(|| format!("parsing fault plan {path:?}"))?;
+        plan.validate(start_workers).with_context(|| {
+            format!("invalid fault plan {path:?} (at {start_workers} starting workers)")
+        })?;
+        Ok(plan)
     }
+
+    /// Build a replay plan from a `--record-trace` file: each recorded
+    /// step's per-uid compute seconds become multipliers normalized by
+    /// the row's median positive entry (the median worker replays at
+    /// 1.0, stragglers replay their measured relative slowdown). Entries
+    /// ≤ 0 mark workers absent that step and replay as nominal.
+    pub fn from_trace(path: &str) -> Result<FaultPlan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {path:?}"))?;
+        let v = Json::parse(&text).with_context(|| format!("parsing trace {path:?}"))?;
+        let kind = v.get("kind")?.as_str()?;
+        if kind != TRACE_KIND {
+            bail!("{path:?} is not a recorded trace (kind {kind:?}, want {TRACE_KIND:?})");
+        }
+        let rows: Vec<Vec<f64>> = v
+            .get("steps")?
+            .as_arr()?
+            .iter()
+            .map(|s| s.get("comp_secs")?.as_arr()?.iter().map(Json::as_f64).collect())
+            .collect::<Result<_>>()?;
+        FaultPlan::from_trace_rows(&rows).with_context(|| format!("normalizing trace {path:?}"))
+    }
+
+    /// [`FaultPlan::from_trace`] over in-memory rows of per-uid seconds.
+    pub fn from_trace_rows(rows: &[Vec<f64>]) -> Result<FaultPlan> {
+        if rows.is_empty() {
+            bail!("trace has no recorded steps");
+        }
+        let trace = rows
+            .iter()
+            .map(|row| {
+                let mut pos: Vec<f64> = row.iter().copied().filter(|&s| s > 0.0).collect();
+                if pos.is_empty() {
+                    return vec![1.0; row.len()];
+                }
+                pos.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+                let median = pos[pos.len() / 2];
+                row.iter()
+                    .map(|&s| if s > 0.0 { (s / median).max(0.05) } else { 1.0 })
+                    .collect()
+            })
+            .collect();
+        Ok(FaultPlan { trace, ..FaultPlan::none() })
+    }
+}
+
+/// Schema tag of a `--record-trace` file.
+pub const TRACE_KIND: &str = "lags-trace";
+
+/// Serialize a recorded execution trace (the `--record-trace` artifact):
+///
+/// ```json
+/// {"kind": "lags-trace", "version": 1, "model": "...", "workers": P,
+///  "steps": [{"step": 0, "comp_secs": [...], "alpha_mult": [...],
+///             "bw_mult": [...]}, ...]}
+/// ```
+///
+/// Arrays are indexed by stable worker uid; absent workers carry 0.0
+/// compute. [`FaultPlan::from_trace`] consumes `comp_secs`; the link
+/// multipliers document what the recorded run's plan applied.
+pub fn trace_to_json(model: &str, workers: usize, rows: &[TraceStepRecord]) -> Json {
+    Json::obj(vec![
+        ("kind", Json::Str(TRACE_KIND.into())),
+        ("version", Json::Num(1.0)),
+        ("model", Json::Str(model.into())),
+        ("workers", Json::Num(workers as f64)),
+        (
+            "steps",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("step", Json::Num(r.step as f64)),
+                            ("comp_secs", Json::arr_f64(&r.comp_secs)),
+                            ("alpha_mult", Json::arr_f64(&r.alpha_mult)),
+                            ("bw_mult", Json::arr_f64(&r.bw_mult)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
 }
 
 /// Deterministic bounded-staleness quorum selection for one step.
@@ -343,6 +531,8 @@ mod tests {
                 MembershipEvent { step: 3, action: MembershipAction::Drop, worker: 1 },
                 MembershipEvent { step: 5, action: MembershipAction::Join, worker: 3 },
             ],
+            crashes: vec![4],
+            trace: vec![vec![1.0, 1.5, 0.5], vec![2.0, 1.0, 1.0]],
         }
     }
 
@@ -398,6 +588,123 @@ mod tests {
         let mut p = FaultPlan::none();
         p.alpha_jitter = 1.5;
         assert!(p.validate(2).is_err());
+    }
+
+    #[test]
+    fn crash_schedule_and_trace_fields() {
+        let p = skewed_plan();
+        assert!(p.crash_at(4));
+        assert!(!p.crash_at(3));
+        assert!(!FaultPlan::none().crash_at(4));
+        // a crashes-only plan is not "none" and must round-trip
+        let mut c = FaultPlan::none();
+        c.crashes = vec![7];
+        assert!(!c.is_none());
+        let back =
+            FaultPlan::from_json(&Json::parse(&c.to_json().to_string_compact()).unwrap()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn trace_multipliers_pace_virtual_time_and_cycle() {
+        let p = skewed_plan(); // trace rows: [1.0, 1.5, 0.5], [2.0, 1.0, 1.0]
+        assert_eq!(p.trace_multiplier(1, 0), 1.5);
+        assert_eq!(p.trace_multiplier(0, 1), 2.0);
+        // a short trace cycles: step 2 re-reads row 0
+        assert_eq!(p.trace_multiplier(1, 2), 1.5);
+        // uids beyond the row fall back to nominal
+        assert_eq!(p.trace_multiplier(9, 0), 1.0);
+        assert_eq!(FaultPlan::none().trace_multiplier(0, 0), 1.0);
+        // virtual step time scales by base skew × the step's multiplier
+        let mut t = FaultPlan::none();
+        t.compute_skew = vec![2.0];
+        t.trace = vec![vec![3.0], vec![1.0]];
+        let base = FaultPlan::none().virtual_step_time(0, 0);
+        assert_eq!(t.virtual_step_time(0, 0), 6.0 * base);
+        assert_eq!(t.virtual_step_time(0, 1), 2.0 * base);
+        // skew_of folds the trace mean, so the DES and telemetry see the
+        // recorded profile's average pace
+        assert_eq!(t.skew_of(0), 2.0 * 2.0);
+        // a trace alone perturbs time (gates the Instant::now probes)
+        let mut only = FaultPlan::none();
+        only.trace = vec![vec![1.0]];
+        assert!(only.perturbs_time());
+    }
+
+    #[test]
+    fn from_trace_rows_normalizes_by_median() {
+        // rows of measured seconds → multipliers around a median of 1
+        let p = FaultPlan::from_trace_rows(&[
+            vec![0.010, 0.020, 0.040],
+            vec![0.010, 0.010, 0.0], // 0.0 = absent worker → nominal
+        ])
+        .unwrap();
+        assert_eq!(p.trace.len(), 2);
+        assert_eq!(p.trace[0], vec![0.5, 1.0, 2.0]);
+        assert_eq!(p.trace[1][2], 1.0, "absent workers replay at nominal pace");
+        // multipliers are floored so one tiny sample cannot zero a worker
+        let p = FaultPlan::from_trace_rows(&[vec![1e-9, 1.0]]).unwrap();
+        assert!(p.trace[0][0] >= 0.05);
+        assert!(FaultPlan::from_trace_rows(&[]).is_err());
+        // the result passes its own validation
+        FaultPlan::from_trace_rows(&[vec![0.01, 0.02]]).unwrap().validate(2).unwrap();
+    }
+
+    #[test]
+    fn load_validates_against_start_workers_and_names_the_event() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("lags-bad-plan-{}.json", std::process::id()));
+        // structurally valid JSON, but the schedule drops an absent worker
+        std::fs::write(
+            &path,
+            r#"{"seed": 1, "events": [{"step": 6, "action": "drop", "worker": 9}]}"#,
+        )
+        .unwrap();
+        let err = FaultPlan::load(path.to_str().unwrap(), 3).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("invalid fault plan"), "missing load context: {msg}");
+        assert!(msg.contains("3 starting workers"), "missing worker count: {msg}");
+        assert!(
+            msg.contains("step 6") && msg.contains('9'),
+            "must name the offending event and its step: {msg}"
+        );
+        // a healthy plan at a sufficient worker count loads fine
+        std::fs::write(&path, r#"{"seed": 1, "compute_skew": [1.0, 2.0]}"#).unwrap();
+        let ok = FaultPlan::load(path.to_str().unwrap(), 2).unwrap();
+        assert_eq!(ok.compute_skew, vec![1.0, 2.0]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn trace_file_round_trips_through_from_trace() {
+        let rows = vec![
+            TraceStepRecord {
+                step: 0,
+                comp_secs: vec![0.010, 0.020],
+                alpha_mult: vec![1.0, 1.1],
+                bw_mult: vec![1.0, 0.9],
+            },
+            TraceStepRecord {
+                step: 1,
+                comp_secs: vec![0.010, 0.010],
+                alpha_mult: vec![1.0, 1.0],
+                bw_mult: vec![1.0, 1.0],
+            },
+        ];
+        let doc = trace_to_json("mlp", 2, &rows);
+        assert_eq!(doc.get("kind").unwrap().as_str().unwrap(), TRACE_KIND);
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("lags-trace-{}.json", std::process::id()));
+        std::fs::write(&path, doc.to_string_pretty()).unwrap();
+        let p = FaultPlan::from_trace(path.to_str().unwrap()).unwrap();
+        assert_eq!(p.trace.len(), 2);
+        // even-length row: the upper-middle sample (0.020) is the median
+        assert_eq!(p.trace[0], vec![0.5, 1.0]);
+        // a non-trace JSON file is refused with the kind named
+        std::fs::write(&path, r#"{"kind": "other", "steps": []}"#).unwrap();
+        let err = format!("{:#}", FaultPlan::from_trace(path.to_str().unwrap()).unwrap_err());
+        assert!(err.contains(TRACE_KIND), "error must name the expected kind: {err}");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

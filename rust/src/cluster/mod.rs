@@ -62,6 +62,10 @@ pub struct Worker {
     /// worker through membership changes because it lives here, not in a
     /// rank-indexed array
     pub quorum_stale: usize,
+    /// scratch: this step's measured whole-phase wall-clock (s) for this
+    /// worker — compression plus any injected straggler sleep — written
+    /// only while `--record-trace` is capturing an execution trace
+    pub step_secs: f64,
 }
 
 impl Worker {
@@ -92,6 +96,7 @@ impl Worker {
             compress_scratch: CompressScratch::default(),
             compress_secs: Vec::new(),
             quorum_stale: 0,
+            step_secs: 0.0,
         }
     }
 

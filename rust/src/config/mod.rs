@@ -144,6 +144,17 @@ pub struct TrainConfig {
     /// force-included on the next one (bounds gradient staleness). 0 = no
     /// forcing.
     pub staleness_bound: usize,
+    /// write a durable checkpoint every N steps (0 = off). Requires
+    /// `checkpoint_dir`. Each write is atomic (temp + fsync + rename), so
+    /// a crash mid-write keeps the previous checkpoint intact.
+    pub checkpoint_every: usize,
+    /// directory holding `checkpoint.bin` and crash tombstones ("" =
+    /// unset); `lags resume <dir>` and `train --resume` read it back
+    pub checkpoint_dir: String,
+    /// write the per-step per-worker measured timing trace to this JSON
+    /// file at the end of the run ("" = off). Replay the recorded profile
+    /// as a fault schedule with `--faults-trace FILE`.
+    pub record_trace: String,
     pub seed: u64,
     /// print progress lines
     pub verbose: bool,
@@ -193,6 +204,9 @@ impl TrainConfig {
             faults: FaultPlan::none(),
             quorum: 0,
             staleness_bound: 0,
+            checkpoint_every: 0,
+            checkpoint_dir: String::new(),
+            record_trace: String::new(),
             seed: 42,
             verbose: false,
         }
@@ -200,6 +214,13 @@ impl TrainConfig {
 
     /// Apply a JSON config object (unknown keys rejected).
     pub fn apply_json(&mut self, v: &Json) -> Result<()> {
+        // "faults" sorts before "workers" in the BTreeMap walk, so resolve
+        // the start-worker count up front: a path-form plan validates at
+        // load time against the worker count the SAME object configures.
+        let start_workers = match v.opt("workers") {
+            Some(w) => w.as_usize().context("workers")?,
+            None => self.workers,
+        };
         for (k, val) in v.as_obj()? {
             match k.as_str() {
                 "model" => self.model = val.as_str()?.to_string(),
@@ -228,10 +249,13 @@ impl TrainConfig {
                 "eval_batches" => self.eval_batches = val.as_usize()?,
                 "delta_every" => self.delta_every = val.as_usize()?,
                 "merge_bytes" => self.merge_bytes = val.as_usize()?,
+                "checkpoint_every" => self.checkpoint_every = val.as_usize()?,
+                "checkpoint_dir" => self.checkpoint_dir = val.as_str()?.to_string(),
+                "record_trace" => self.record_trace = val.as_str()?.to_string(),
                 // either an inline plan object or a path to a plan file
                 "faults" => {
                     self.faults = match val {
-                        Json::Str(path) => FaultPlan::load(path)?,
+                        Json::Str(path) => FaultPlan::load(path, start_workers)?,
                         obj => FaultPlan::from_json(obj)?,
                     }
                 }
@@ -291,10 +315,24 @@ impl TrainConfig {
         self.delta_every = args.usize_or("delta-every", self.delta_every)?;
         self.merge_bytes = args.usize_or("merge-bytes", self.merge_bytes)?;
         if let Some(path) = args.get("faults") {
-            self.faults = FaultPlan::load(path)?;
+            // --workers is resolved above, so the load-time validation
+            // sees the final start-worker count
+            self.faults = FaultPlan::load(path, self.workers)?;
+        }
+        if let Some(path) = args.get("faults-trace") {
+            // replay a --record-trace file as a compute-skew schedule; the
+            // trace composes with (overrides the skew rows of) --faults
+            self.faults.trace = FaultPlan::from_trace(path)?.trace;
         }
         self.quorum = args.usize_or("quorum", self.quorum)?;
         self.staleness_bound = args.usize_or("staleness-bound", self.staleness_bound)?;
+        self.checkpoint_every = args.usize_or("checkpoint-every", self.checkpoint_every)?;
+        if let Some(d) = args.get("checkpoint-dir") {
+            self.checkpoint_dir = d.to_string();
+        }
+        if let Some(p) = args.get("record-trace") {
+            self.record_trace = p.to_string();
+        }
         self.seed = args.usize_or("seed", self.seed as usize)? as u64;
         if args.bool("verbose") {
             self.verbose = true;
@@ -349,6 +387,16 @@ impl TrainConfig {
         if self.staleness_bound > 0 && self.quorum == 0 {
             bail!("--staleness-bound requires --quorum");
         }
+        if self.checkpoint_every > 0 && self.checkpoint_dir.is_empty() {
+            bail!("--checkpoint-every requires --checkpoint-dir");
+        }
+        if !self.faults.crashes.is_empty() && self.checkpoint_every == 0 {
+            bail!(
+                "a crash@step schedule requires --checkpoint-every > 0 \
+                 (and --checkpoint-dir): without a durable checkpoint the \
+                 crashed run could never resume"
+            );
+        }
         Ok(())
     }
 
@@ -384,6 +432,9 @@ impl TrainConfig {
             ("faults", self.faults.to_json()),
             ("quorum", Json::Num(self.quorum as f64)),
             ("staleness_bound", Json::Num(self.staleness_bound as f64)),
+            ("checkpoint_every", Json::Num(self.checkpoint_every as f64)),
+            ("checkpoint_dir", Json::Str(self.checkpoint_dir.clone())),
+            ("record_trace", Json::Str(self.record_trace.clone())),
             ("seed", Json::Num(self.seed as f64)),
             ("verbose", Json::Bool(self.verbose)),
         ])
@@ -486,9 +537,14 @@ mod tests {
                 action: crate::cluster::faults::MembershipAction::Drop,
                 worker: 2,
             }],
+            crashes: vec![12],
+            trace: vec![vec![1.0, 2.0], vec![0.5, 1.5]],
         };
         cfg.quorum = 5;
         cfg.staleness_bound = 2;
+        cfg.checkpoint_every = 6;
+        cfg.checkpoint_dir = "ckpt-dir".into();
+        cfg.record_trace = "trace.json".into();
         cfg.seed = 7;
         cfg.verbose = true;
         let mut back = TrainConfig::default_for("other");
@@ -575,6 +631,34 @@ mod tests {
             worker: 9,
         });
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn checkpoint_flags_validate() {
+        // a checkpoint period without a destination has nowhere to write
+        let mut cfg = TrainConfig::default_for("mlp");
+        cfg.checkpoint_every = 10;
+        assert!(cfg.validate().is_err());
+        cfg.checkpoint_dir = "ckpts".into();
+        cfg.validate().unwrap();
+        // a crash schedule without durable checkpoints could never resume
+        let mut cfg = TrainConfig::default_for("mlp");
+        cfg.faults.crashes.push(5);
+        assert!(cfg.validate().is_err());
+        cfg.checkpoint_every = 1;
+        cfg.checkpoint_dir = "ckpts".into();
+        cfg.validate().unwrap();
+        // CLI spelling
+        let mut cfg = TrainConfig::default_for("mlp");
+        let args = Args::parse(
+            "train --checkpoint-every 3 --checkpoint-dir out/ck --record-trace t.json"
+                .split_whitespace()
+                .map(String::from),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.checkpoint_every, 3);
+        assert_eq!(cfg.checkpoint_dir, "out/ck");
+        assert_eq!(cfg.record_trace, "t.json");
     }
 
     #[test]

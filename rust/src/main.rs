@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   info      — inspect artifacts (models, layer tables, buckets)
 //!   train     — run a distributed training job (dense|slgs|lags)
+//!   resume    — continue a checkpointed run (bit-identical to uninterrupted)
 //!   compare   — run all three algorithms with identical seeds (Fig 3/Table 1)
 //!   delta     — Assumption-1 delta^(l) monitoring run (Fig 2)
 //!   table2    — DES wall-clock reproduction of Table 2
@@ -39,7 +40,10 @@ USAGE: lags <subcommand> [flags]
            [--net-bandwidth F] [--merge-bytes B]
            [--compressor host|host-sampled|xla|xla-sampled]
            [--delta-every N] [--eval-every N] [--seed S] [--verbose]
-           [--faults FILE.json] [--quorum Q] [--staleness-bound S]
+           [--faults FILE.json] [--faults-trace FILE.json]
+           [--quorum Q] [--staleness-bound S]
+           [--checkpoint-every N] [--checkpoint-dir DIR] [--resume]
+           [--record-trace FILE.json]
            [--calibrate] [--config FILE.json] [--out DIR]
 
            --artifacts native  selects the built-in pure-rust model zoo
@@ -99,12 +103,46 @@ USAGE: lags <subcommand> [flags]
            --staleness-bound S with --quorum: a worker excluded for S
                                consecutive steps is force-included on the
                                next one, bounding gradient staleness
+           --checkpoint-every N  write a durable checkpoint to
+                               --checkpoint-dir every N steps (plus one at
+                               step 0): a versioned, checksummed file
+                               capturing the COMPLETE deterministic state
+                               (params, per-worker EF residuals, momentum,
+                               RNG stream positions, EWMA profile,
+                               selection history, membership log), written
+                               atomically (temp + fsync + rename). A run
+                               resumed from it is bit-identical to the
+                               uninterrupted run. Required whenever the
+                               fault plan schedules crash@step events
+                               (`"crashes": [k, ...]` — the process exits
+                               137 at the top of step k; tombstones in the
+                               checkpoint dir disarm fired crashes on
+                               resume)
+           --resume            continue `train` from the checkpoint in
+                               --checkpoint-dir instead of starting fresh
+                               (the stored config wins; flags other than
+                               --checkpoint-dir are ignored)
+           --record-trace F    write a per-step per-worker execution trace
+                               (measured compute seconds + link-jitter
+                               multipliers) to F at the end of the run
+           --faults-trace F    replay a trace recorded by --record-trace
+                               as a deterministic skew/jitter schedule:
+                               rows are median-normalized into per-step
+                               compute multipliers driving both the real
+                               trainer's straggler pacing and the DES
            --calibrate         measure sustained device flops at startup
                                (the `lags calibrate` microbenchmark) and
                                persist it next to the artifacts; without
                                the flag an existing calibration file is
                                loaded, else the DEVICE_FLOPS fallback
                                prices Eq. 18
+  resume   <DIR> [--out DIR]
+
+           continue the run checkpointed in DIR: the artifacts dir, model
+           and full config are read back from the checkpoint header, the
+           remaining steps run, and the same summary as `train` prints.
+           A truncated or corrupted checkpoint fails with a checksum
+           error before any state is touched
   compare  same flags as train (runs dense, slgs, lags) [--out DIR]
   delta    [--model M] [--workers P] [--steps N] [--every N] [--out DIR]
   table2   [--net PRESET] [--net-alpha F] [--net-bandwidth F] [--workers P]
@@ -135,7 +173,14 @@ fn main() {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("error: {e:#}");
-            1
+            // an injected crash@step is a deliberate kill, not a usage
+            // error: exit like a SIGKILLed process so chaos harnesses can
+            // tell it apart (and `lags resume` can pick the run back up)
+            if e.downcast_ref::<lags::cluster::faults::CrashPoint>().is_some() {
+                137
+            } else {
+                1
+            }
         }
     };
     std::process::exit(code);
@@ -145,6 +190,7 @@ fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("info") => cmd_info(args),
         Some("train") => cmd_train(args),
+        Some("resume") => cmd_resume(args),
         Some("compare") => cmd_compare(args),
         Some("delta") => cmd_delta(args),
         Some("table2") => cmd_table2(args),
@@ -214,7 +260,38 @@ fn train_config(args: &Args) -> Result<TrainConfig> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = train_config(args)?;
-    let mut t = Trainer::from_artifacts(&artifacts_dir(args), cfg)?;
+    let mut t = if args.bool("resume") {
+        anyhow::ensure!(
+            !cfg.checkpoint_dir.is_empty(),
+            "--resume needs --checkpoint-dir (where the checkpoint lives)"
+        );
+        Trainer::resume_from_dir(&cfg.checkpoint_dir)?
+    } else {
+        Trainer::from_artifacts(&artifacts_dir(args), cfg)?
+    };
+    run_and_report(&mut t, args)
+}
+
+/// `lags resume <dir>` — continue the run checkpointed in `<dir>`.
+fn cmd_resume(args: &Args) -> Result<()> {
+    let dir = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: lags resume <checkpoint-dir>"))?;
+    let mut t = Trainer::resume_from_dir(dir)?;
+    println!(
+        "resuming {} {} at step {} / {} (checkpoint in {dir})",
+        t.cfg.algorithm.name(),
+        t.cfg.model,
+        t.step_index(),
+        t.cfg.steps,
+    );
+    run_and_report(&mut t, args)
+}
+
+/// Shared `train`/`resume` tail: run the remaining steps and print the
+/// summary + adaptive + robustness lines (CI greps these).
+fn run_and_report(t: &mut Trainer, args: &Args) -> Result<()> {
     let report = t.run()?;
     println!("{}", report.summary_line());
     if !report.selections.is_empty() {

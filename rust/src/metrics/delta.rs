@@ -112,6 +112,21 @@ impl DeltaMonitor {
             .flat_map(|s| s.iter().map(|&(_, d)| d))
             .fold(0.0, f64::max)
     }
+
+    /// RNG stream position for checkpointing. The monitor's single-draw
+    /// RandK denominator advances this stream once per recorded sample,
+    /// so resuming without it would shift every later δ draw.
+    pub fn rng_snapshot(&self) -> (u64, Option<f64>) {
+        self.rng.snapshot()
+    }
+
+    /// Install a checkpointed series + RNG position (from
+    /// [`Self::rng_snapshot`]) onto a freshly-built monitor.
+    pub fn restore(&mut self, series: Vec<Vec<(usize, f64)>>, rng_state: u64, spare: Option<f64>) {
+        assert_eq!(series.len(), self.series.len(), "layer count changed under restore");
+        self.series = series;
+        self.rng = Rng::restore(rng_state, spare);
+    }
 }
 
 #[cfg(test)]
@@ -163,6 +178,22 @@ mod tests {
         assert_eq!(m.series[1].len(), 1);
         assert!(m.fraction_holding() > 0.99);
         assert!(m.max_delta() < 1.0);
+    }
+
+    #[test]
+    fn monitor_restore_resumes_rng_stream() {
+        // single-draw mode (expectation = false) advances the rng per
+        // record; a restored monitor must continue the SAME stream
+        let accs = gaussian_accs(4, 128, 11);
+        let mut full = DeltaMonitor::new(1, 1, false, 13);
+        full.record(0, 0, &accs, 8);
+        let (state, spare) = full.rng_snapshot();
+        let series = full.series.clone();
+        let mut resumed = DeltaMonitor::new(1, 1, false, 13);
+        resumed.restore(series, state, spare);
+        full.record(0, 1, &accs, 8);
+        resumed.record(0, 1, &accs, 8);
+        assert_eq!(full.series, resumed.series, "post-restore draws must be bit-identical");
     }
 
     #[test]

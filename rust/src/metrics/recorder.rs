@@ -90,7 +90,8 @@ impl ResultWriter {
 
     pub fn write_json(&self, name: &str, value: &Json) -> Result<PathBuf> {
         let path = self.dir.join(name);
-        std::fs::write(&path, value.to_string_pretty()).with_context(|| format!("{path:?}"))?;
+        crate::util::json::write_atomic(&path, value.to_string_pretty().as_bytes())
+            .with_context(|| format!("{path:?}"))?;
         Ok(path)
     }
 

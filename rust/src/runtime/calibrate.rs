@@ -184,9 +184,11 @@ impl Calibration {
         Ok(Some(cal))
     }
 
-    /// Persist to `path` and record it as this calibration's source.
+    /// Persist to `path` (atomically — a crash mid-write must not leave a
+    /// truncated calibration that poisons every later run) and record it
+    /// as this calibration's source.
     pub fn save(&mut self, path: &Path) -> Result<()> {
-        std::fs::write(path, self.to_json().to_string_pretty())
+        crate::util::json::write_atomic(path, self.to_json().to_string_pretty().as_bytes())
             .with_context(|| format!("writing calibration {path:?}"))?;
         self.source = Some(path.to_path_buf());
         Ok(())

@@ -1,0 +1,725 @@
+//! Durable checkpoint/restore for the distributed trainer.
+//!
+//! One file, `checkpoint.bin`, captures the COMPLETE deterministic state
+//! of a run, so `resume ≡ uninterrupted` holds bit-for-bit:
+//!
+//! * the replicated params and the aggregated-momentum buffer;
+//! * every worker's error-feedback residual (the deferred gradient mass
+//!   the EF convergence argument requires to eventually reach the
+//!   parameters — dropping it would silently change the trajectory),
+//!   local-momentum buffer, last loss and quorum-staleness backlog,
+//!   keyed by stable uid so elastic membership survives the round trip;
+//! * the per-layer ratios/ks in effect plus the Eq. 18 selection
+//!   history, the online [`MeasuredProfile`] EWMAs, and the δ monitor's
+//!   series AND RandK RNG stream position (single-draw mode advances
+//!   that stream once per sample — resuming without it would shift
+//!   every later δ draw);
+//! * message stats, overlap accounting, robustness telemetry, the
+//!   membership log and per-uid activity counters, and the global step.
+//!
+//! The synthetic data stream needs no state: batches are pure functions
+//! of `(seed, worker uid, step)`.
+//!
+//! ## On-disk format (version 1)
+//!
+//! ```text
+//! b"LAGSCKPT" | u32 version LE | u64 header_len LE | header JSON
+//!            | binary payload (little-endian) | u64 FNV-1a checksum LE
+//! ```
+//!
+//! The JSON header carries `{kind, step, artifacts, config}` — enough
+//! for `lags resume <dir>` to rebuild the [`Runtime`] and the
+//! [`TrainConfig`] with no extra flags. All floats live in the binary
+//! payload (JSON cannot represent every f32/f64 bit pattern); the
+//! trailing checksum covers every preceding byte, and the file is
+//! written atomically (temp + fsync + rename), so a crash mid-write
+//! can never leave a half-valid checkpoint behind.
+//!
+//! Crash tombstones ride in the same directory: `crash-{step}.tombstone`
+//! marks an injected [`faults::CrashPoint`] that already fired, so the
+//! resumed process replays through that step instead of dying again.
+//! Tombstones are read ONLY on resume — a fresh run re-arms every crash.
+
+use super::{MembershipChange, MessageStats, RatioSelection, Trainer};
+use crate::cluster::Worker;
+use crate::collectives::pipeline::OverlapMeasure;
+use crate::config::TrainConfig;
+use crate::runtime::Runtime;
+use crate::util::json::{self, Json};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+const MAGIC: [u8; 8] = *b"LAGSCKPT";
+const VERSION: u32 = 1;
+const HEADER_KIND: &str = "lags-checkpoint";
+
+/// File name of the checkpoint inside `--checkpoint-dir`.
+pub const CHECKPOINT_FILE: &str = "checkpoint.bin";
+
+/// FNV-1a over the whole file body — cheap, dependency-free, and plenty
+/// to catch truncation and bit rot (this is integrity, not crypto).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Little-endian byte sink for the binary payload.
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn len(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32s(&mut self, xs: &[f32]) {
+        self.len(xs.len());
+        for &x in xs {
+            self.f32(x);
+        }
+    }
+    fn f64s(&mut self, xs: &[f64]) {
+        self.len(xs.len());
+        for &x in xs {
+            self.f64(x);
+        }
+    }
+    fn u64s(&mut self, xs: &[u64]) {
+        self.len(xs.len());
+        for &x in xs {
+            self.u64(x);
+        }
+    }
+    fn usizes(&mut self, xs: &[usize]) {
+        self.len(xs.len());
+        for &x in xs {
+            self.len(x);
+        }
+    }
+    fn str(&mut self, s: &str) {
+        self.len(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+/// Checked little-endian reader over the payload; every read bails with
+/// a "truncated" error instead of panicking (the checksum catches real
+/// corruption first, but a version-skewed payload must still fail
+/// cleanly).
+struct Dec<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.b.len() >= n, "truncated checkpoint payload (wanted {n} more bytes)");
+        let (head, rest) = self.b.split_at(n);
+        self.b = rest;
+        Ok(head)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+    fn len(&mut self) -> Result<usize> {
+        usize::try_from(self.u64()?).context("length overflows usize")
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len()?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.len()?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+    fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.len()?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+    fn usizes(&mut self) -> Result<Vec<usize>> {
+        let n = self.len()?;
+        (0..n).map(|_| self.len()).collect()
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.len()?;
+        Ok(std::str::from_utf8(self.take(n)?).context("non-UTF-8 string field")?.to_string())
+    }
+    fn finish(&self) -> Result<()> {
+        ensure!(self.b.is_empty(), "{} trailing bytes after checkpoint payload", self.b.len());
+        Ok(())
+    }
+}
+
+/// One worker's durable state, keyed by stable uid (NOT rank — elastic
+/// membership permutes ranks, uids never change).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerState {
+    pub uid: usize,
+    pub residual: Vec<f32>,
+    pub local_mom: Vec<f32>,
+    pub last_loss: f32,
+    pub quorum_stale: usize,
+}
+
+/// The δ monitor's durable state: per-layer series plus the RandK
+/// denominator's RNG stream position.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeltaState {
+    pub series: Vec<Vec<(usize, f64)>>,
+    pub rng_state: u64,
+    pub spare: Option<f64>,
+}
+
+/// A decoded checkpoint — the complete deterministic trainer state at a
+/// step boundary. [`Checkpoint::capture`] and [`Checkpoint::apply_to`]
+/// are exact inverses (pinned by the round-trip proptest).
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// steps completed when the checkpoint was taken (`Trainer::step_idx`)
+    pub step: usize,
+    /// artifacts dir the run's [`Runtime`] was opened from ("native" for
+    /// the built-in zoo) — lets `lags resume <dir>` rebuild it
+    pub artifacts: String,
+    /// the full [`TrainConfig`] as JSON (`TrainConfig::to_json`)
+    pub config: Json,
+    pub params: Vec<f32>,
+    pub momentum: Vec<f32>,
+    pub workers: Vec<WorkerState>,
+    pub ratios: Vec<f64>,
+    pub ks: Vec<usize>,
+    pub selections: Vec<RatioSelection>,
+    /// online EWMA profile `(t_comp, t_compress, t_reduce, steps)` — see
+    /// `MeasuredProfile::ewma_snapshot`
+    pub online: Option<(f64, Vec<f64>, Vec<f64>, usize)>,
+    pub delta: Option<DeltaState>,
+    pub msg_stats: MessageStats,
+    pub last_comp_secs: f64,
+    pub overlap_busy: f64,
+    pub overlap_hidden: f64,
+    pub quorum_miss: Vec<u64>,
+    pub staleness_hist: Vec<u64>,
+    pub membership_log: Vec<MembershipChange>,
+    /// per-uid membership-duration counters, sorted by uid
+    pub steps_active: Vec<(usize, usize)>,
+}
+
+impl Checkpoint {
+    /// Snapshot the trainer's complete deterministic state.
+    pub fn capture(t: &Trainer) -> Checkpoint {
+        Checkpoint {
+            step: t.step_idx,
+            artifacts: t.artifacts.clone(),
+            config: t.cfg.to_json(),
+            params: t.params.clone(),
+            momentum: t.momentum_buf.clone(),
+            workers: t
+                .cluster
+                .workers
+                .iter()
+                .map(|w| WorkerState {
+                    uid: w.id,
+                    residual: w.ef.residual().to_vec(),
+                    local_mom: w.local_mom.clone(),
+                    last_loss: w.last_loss,
+                    quorum_stale: w.quorum_stale,
+                })
+                .collect(),
+            ratios: t.ratios.clone(),
+            ks: t.ks.clone(),
+            selections: t.selections.clone(),
+            online: t.online.as_ref().map(|mp| mp.ewma_snapshot()),
+            delta: t.delta.as_ref().map(|m| {
+                let (rng_state, spare) = m.rng_snapshot();
+                DeltaState { series: m.series.clone(), rng_state, spare }
+            }),
+            msg_stats: t.msg_stats.clone(),
+            last_comp_secs: t.last_comp_secs,
+            overlap_busy: t.overlap.busy_seconds,
+            overlap_hidden: t.overlap.hidden_seconds,
+            quorum_miss: t.robust_quorum_miss.clone(),
+            staleness_hist: t.robust_staleness_hist.clone(),
+            membership_log: t.robust_membership_log.clone(),
+            steps_active: t.steps_active.iter().map(|(&uid, &n)| (uid, n)).collect(),
+        }
+    }
+
+    /// Install this checkpoint's state onto a freshly-built trainer with
+    /// the same config. The cluster is rebuilt worker-by-worker from the
+    /// stored uids (membership may differ from the startup P), then every
+    /// P-shaped structure re-sizes to the restored membership.
+    pub fn apply_to(&self, t: &mut Trainer) -> Result<()> {
+        let d = t.model.mm.d;
+        let nl = t.layer_meta.len();
+        ensure!(
+            self.params.len() == d && self.momentum.len() == d,
+            "checkpoint/model mismatch: {} params on disk, model has {d}",
+            self.params.len()
+        );
+        ensure!(
+            self.ks.len() == nl && self.ratios.len() == nl && self.quorum_miss.len() == nl,
+            "checkpoint/model mismatch: {} layers on disk, model has {nl}",
+            self.ks.len()
+        );
+        ensure!(!self.workers.is_empty(), "checkpoint has no workers");
+        t.step_idx = self.step;
+        t.params.copy_from_slice(&self.params);
+        t.momentum_buf.copy_from_slice(&self.momentum);
+        let layer_sizes: Vec<usize> = t.model.mm.layers.iter().map(|l| l.size).collect();
+        t.cluster.workers = self
+            .workers
+            .iter()
+            .map(|ws| {
+                ensure!(
+                    ws.residual.len() == d,
+                    "worker {}: residual length {} != model dim {d}",
+                    ws.uid,
+                    ws.residual.len()
+                );
+                let mut w = Worker::new(ws.uid, d, t.cfg.sample_stride);
+                w.ensure_message_scratch(&layer_sizes);
+                w.ef.write_residual(0, &ws.residual);
+                w.local_mom = ws.local_mom.clone();
+                w.last_loss = ws.last_loss;
+                w.quorum_stale = ws.quorum_stale;
+                Ok(w)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        t.resize_to_membership();
+        t.ratios = self.ratios.clone();
+        t.ks = self.ks.clone();
+        t.selections = self.selections.clone();
+        match (&mut t.online, &self.online) {
+            (Some(mp), Some((t_comp, t_compress, t_reduce, steps))) => {
+                mp.restore_ewma(*t_comp, t_compress, t_reduce, *steps)
+            }
+            (None, None) => {}
+            _ => bail!("checkpoint and config disagree on online adaptive measurement"),
+        }
+        match (&mut t.delta, &self.delta) {
+            (Some(m), Some(ds)) => m.restore(ds.series.clone(), ds.rng_state, ds.spare),
+            (None, None) => {}
+            _ => bail!("checkpoint and config disagree on the δ monitor"),
+        }
+        t.msg_stats = self.msg_stats.clone();
+        t.last_comp_secs = self.last_comp_secs;
+        t.overlap = OverlapMeasure {
+            busy_seconds: self.overlap_busy,
+            hidden_seconds: self.overlap_hidden,
+        };
+        t.robust_quorum_miss = self.quorum_miss.clone();
+        t.robust_staleness_hist = self.staleness_hist.clone();
+        t.robust_membership_log = self.membership_log.clone();
+        t.steps_active = self.steps_active.iter().copied().collect();
+        Ok(())
+    }
+
+    fn encode_payload(&self, e: &mut Enc) {
+        e.f32s(&self.params);
+        e.f32s(&self.momentum);
+        e.len(self.workers.len());
+        for w in &self.workers {
+            e.len(w.uid);
+            e.f32s(&w.residual);
+            e.f32s(&w.local_mom);
+            e.f32(w.last_loss);
+            e.len(w.quorum_stale);
+        }
+        e.f64s(&self.ratios);
+        e.usizes(&self.ks);
+        e.len(self.selections.len());
+        for s in &self.selections {
+            e.len(s.step);
+            e.f64(s.effective_cmax);
+            e.f64s(&s.ratios);
+        }
+        match &self.online {
+            None => e.u8(0),
+            Some((t_comp, t_compress, t_reduce, steps)) => {
+                e.u8(1);
+                e.f64(*t_comp);
+                e.f64s(t_compress);
+                e.f64s(t_reduce);
+                e.len(*steps);
+            }
+        }
+        match &self.delta {
+            None => e.u8(0),
+            Some(ds) => {
+                e.u8(1);
+                e.u64(ds.rng_state);
+                match ds.spare {
+                    None => e.u8(0),
+                    Some(v) => {
+                        e.u8(1);
+                        e.f64(v);
+                    }
+                }
+                e.len(ds.series.len());
+                for layer in &ds.series {
+                    e.len(layer.len());
+                    for &(step, delta) in layer {
+                        e.len(step);
+                        e.f64(delta);
+                    }
+                }
+            }
+        }
+        e.len(self.msg_stats.total_bytes);
+        e.len(self.msg_stats.total_messages);
+        e.len(self.msg_stats.iterations);
+        e.f64(self.last_comp_secs);
+        e.f64(self.overlap_busy);
+        e.f64(self.overlap_hidden);
+        e.u64s(&self.quorum_miss);
+        e.u64s(&self.staleness_hist);
+        e.len(self.membership_log.len());
+        for m in &self.membership_log {
+            e.len(m.step);
+            e.str(&m.action);
+            e.len(m.worker);
+            e.len(m.workers_after);
+        }
+        e.len(self.steps_active.len());
+        for &(uid, n) in &self.steps_active {
+            e.len(uid);
+            e.len(n);
+        }
+    }
+
+    fn decode_payload(
+        d: &mut Dec<'_>,
+        step: usize,
+        artifacts: String,
+        config: Json,
+    ) -> Result<Checkpoint> {
+        let params = d.f32s()?;
+        let momentum = d.f32s()?;
+        let nworkers = d.len()?;
+        let mut workers = Vec::with_capacity(nworkers);
+        for _ in 0..nworkers {
+            workers.push(WorkerState {
+                uid: d.len()?,
+                residual: d.f32s()?,
+                local_mom: d.f32s()?,
+                last_loss: d.f32()?,
+                quorum_stale: d.len()?,
+            });
+        }
+        let ratios = d.f64s()?;
+        let ks = d.usizes()?;
+        let nsel = d.len()?;
+        let mut selections = Vec::with_capacity(nsel);
+        for _ in 0..nsel {
+            selections.push(RatioSelection {
+                step: d.len()?,
+                effective_cmax: d.f64()?,
+                ratios: d.f64s()?,
+            });
+        }
+        let online = match d.u8()? {
+            0 => None,
+            1 => Some((d.f64()?, d.f64s()?, d.f64s()?, d.len()?)),
+            v => bail!("bad online flag {v}"),
+        };
+        let delta = match d.u8()? {
+            0 => None,
+            1 => {
+                let rng_state = d.u64()?;
+                let spare = match d.u8()? {
+                    0 => None,
+                    1 => Some(d.f64()?),
+                    v => bail!("bad spare flag {v}"),
+                };
+                let nl = d.len()?;
+                let mut series = Vec::with_capacity(nl);
+                for _ in 0..nl {
+                    let n = d.len()?;
+                    let mut layer = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        layer.push((d.len()?, d.f64()?));
+                    }
+                    series.push(layer);
+                }
+                Some(DeltaState { series, rng_state, spare })
+            }
+            v => bail!("bad delta flag {v}"),
+        };
+        let msg_stats = MessageStats {
+            total_bytes: d.len()?,
+            total_messages: d.len()?,
+            iterations: d.len()?,
+        };
+        let last_comp_secs = d.f64()?;
+        let overlap_busy = d.f64()?;
+        let overlap_hidden = d.f64()?;
+        let quorum_miss = d.u64s()?;
+        let staleness_hist = d.u64s()?;
+        let nlog = d.len()?;
+        let mut membership_log = Vec::with_capacity(nlog);
+        for _ in 0..nlog {
+            membership_log.push(MembershipChange {
+                step: d.len()?,
+                action: d.str()?,
+                worker: d.len()?,
+                workers_after: d.len()?,
+            });
+        }
+        let nactive = d.len()?;
+        let mut steps_active = Vec::with_capacity(nactive);
+        for _ in 0..nactive {
+            steps_active.push((d.len()?, d.len()?));
+        }
+        Ok(Checkpoint {
+            step,
+            artifacts,
+            config,
+            params,
+            momentum,
+            workers,
+            ratios,
+            ks,
+            selections,
+            online,
+            delta,
+            msg_stats,
+            last_comp_secs,
+            overlap_busy,
+            overlap_hidden,
+            quorum_miss,
+            staleness_hist,
+            membership_log,
+            steps_active,
+        })
+    }
+
+    /// Serialize and write atomically (temp + fsync + rename): readers
+    /// only ever see the previous complete checkpoint or this one.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let header = Json::obj(vec![
+            ("kind", Json::Str(HEADER_KIND.into())),
+            ("step", Json::Num(self.step as f64)),
+            ("artifacts", Json::Str(self.artifacts.clone())),
+            ("config", self.config.clone()),
+        ])
+        .to_string_compact();
+        let mut e = Enc { buf: Vec::with_capacity(header.len() + 64 + 8 * self.params.len()) };
+        e.buf.extend_from_slice(&MAGIC);
+        e.buf.extend_from_slice(&VERSION.to_le_bytes());
+        e.u64(header.len() as u64);
+        e.buf.extend_from_slice(header.as_bytes());
+        self.encode_payload(&mut e);
+        let sum = fnv1a(&e.buf);
+        e.u64(sum);
+        json::write_atomic(path, &e.buf).with_context(|| format!("writing checkpoint {path:?}"))
+    }
+
+    /// Read + verify a checkpoint file. The trailing FNV-1a checksum is
+    /// checked before anything is parsed, so truncation and corruption
+    /// both fail with an explicit checksum error.
+    pub fn read(path: &Path) -> Result<Checkpoint> {
+        let data =
+            std::fs::read(path).with_context(|| format!("reading checkpoint {path:?}"))?;
+        if data.len() < MAGIC.len() + 4 + 8 + 8 {
+            bail!(
+                "checkpoint {path:?} is only {} bytes — too short to carry its checksum \
+                 (truncated write?)",
+                data.len()
+            );
+        }
+        let (body, tail) = data.split_at(data.len() - 8);
+        let stored = u64::from_le_bytes(tail.try_into().expect("8-byte tail"));
+        let computed = fnv1a(body);
+        if stored != computed {
+            bail!(
+                "checkpoint {path:?} failed its checksum (stored {stored:#018x}, computed \
+                 {computed:#018x}) — the file is truncated or corrupt"
+            );
+        }
+        let mut d = Dec { b: body };
+        let magic = d.take(MAGIC.len())?;
+        ensure!(magic == MAGIC, "checkpoint {path:?}: bad magic (not a LAGS checkpoint)");
+        let version = u32::from_le_bytes(d.take(4)?.try_into().expect("4 bytes"));
+        ensure!(
+            version == VERSION,
+            "checkpoint {path:?}: unsupported format version {version} (this build reads \
+             {VERSION})"
+        );
+        let hlen = d.len()?;
+        let header_bytes = d.take(hlen)?;
+        let header = Json::parse(
+            std::str::from_utf8(header_bytes).context("checkpoint header is not UTF-8")?,
+        )
+        .with_context(|| format!("parsing checkpoint header of {path:?}"))?;
+        ensure!(
+            header.get("kind")?.as_str()? == HEADER_KIND,
+            "checkpoint {path:?}: unexpected header kind"
+        );
+        let step = header.get("step")?.as_usize().context("header step")?;
+        let artifacts = header.get("artifacts")?.as_str()?.to_string();
+        let config = header.get("config")?.clone();
+        let ck = Self::decode_payload(&mut d, step, artifacts, config)
+            .with_context(|| format!("decoding checkpoint payload of {path:?}"))?;
+        d.finish()?;
+        Ok(ck)
+    }
+}
+
+/// Record that the injected crash at `step` has fired, durably, so the
+/// resumed process replays straight through it. Written (fsync'd) BEFORE
+/// the crash error propagates.
+pub(crate) fn write_tombstone(dir: &str, step: usize) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating checkpoint dir {dir:?}"))?;
+    let path = Path::new(dir).join(format!("crash-{step}.tombstone"));
+    json::write_atomic(&path, b"fired\n").with_context(|| format!("writing tombstone {path:?}"))
+}
+
+/// Scan `dir` for fired-crash tombstones. Called only on resume — a
+/// fresh run starts with every scheduled crash armed.
+fn load_tombstones(dir: &str) -> Result<BTreeSet<usize>> {
+    let mut fired = BTreeSet::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(fired), // no dir yet ⇒ nothing fired
+    };
+    for entry in entries {
+        let name = entry?.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some(step) = name.strip_prefix("crash-").and_then(|s| s.strip_suffix(".tombstone"))
+        {
+            if let Ok(s) = step.parse::<usize>() {
+                fired.insert(s);
+            }
+        }
+    }
+    Ok(fired)
+}
+
+impl Trainer {
+    /// Path of the checkpoint file inside `dir`.
+    pub fn checkpoint_path(dir: &str) -> PathBuf {
+        Path::new(dir).join(CHECKPOINT_FILE)
+    }
+
+    /// Write the current state to `--checkpoint-dir`, atomically.
+    pub fn save_checkpoint(&self) -> Result<()> {
+        let dir = &self.cfg.checkpoint_dir;
+        ensure!(!dir.is_empty(), "save_checkpoint requires --checkpoint-dir");
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {dir:?}"))?;
+        Checkpoint::capture(self).write(&Self::checkpoint_path(dir))
+    }
+
+    /// Resume from `dir`'s checkpoint on an already-open runtime (tests
+    /// and harnesses that share one [`Runtime`] across runs).
+    pub fn resume_with_runtime(rt: &Arc<Runtime>, dir: &str) -> Result<Trainer> {
+        let ck = Checkpoint::read(&Self::checkpoint_path(dir))?;
+        Self::resume_from_checkpoint(rt, &ck, dir)
+    }
+
+    /// `lags resume <dir>`: read the checkpoint, re-open the runtime it
+    /// recorded (artifacts dir + seed from the embedded config), and
+    /// rebuild the trainer at the saved step. Calibration is never
+    /// re-measured on resume (a persisted calibration file still loads),
+    /// so resumed pricing matches the original run's.
+    pub fn resume_from_dir(dir: &str) -> Result<Trainer> {
+        let ck = Checkpoint::read(&Self::checkpoint_path(dir))?;
+        let seed = ck.config.get("seed")?.as_usize().context("config seed")? as u64;
+        let mut rt = Runtime::open(&ck.artifacts, seed)?;
+        rt.calibrate(false)?;
+        Self::resume_from_checkpoint(&Arc::new(rt), &ck, dir)
+    }
+
+    fn resume_from_checkpoint(rt: &Arc<Runtime>, ck: &Checkpoint, dir: &str) -> Result<Trainer> {
+        let model = ck.config.get("model")?.as_str().context("config model")?;
+        let mut cfg = TrainConfig::default_for(model);
+        cfg.apply_json(&ck.config)?;
+        // resume never re-measures calibration, and always checkpoints
+        // back into the SAME dir (where the crash tombstones live)
+        cfg.calibrate = false;
+        cfg.checkpoint_dir = dir.to_string();
+        let mut t = Trainer::with_runtime(rt, cfg)?;
+        ck.apply_to(&mut t)?;
+        t.fired_crashes = load_tombstones(dir)?;
+        Ok(t)
+    }
+
+    /// Steps completed so far (== the step index the next `step()` runs).
+    pub fn step_index(&self) -> usize {
+        self.step_idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        // reference values for the 64-bit FNV-1a parameters
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn enc_dec_round_trip_primitives() {
+        let mut e = Enc { buf: Vec::new() };
+        e.u8(7);
+        e.u64(u64::MAX - 3);
+        e.f32(-0.5);
+        e.f64(std::f64::consts::PI);
+        e.f32s(&[1.0, f32::NAN, -0.0]);
+        e.f64s(&[2.5]);
+        e.u64s(&[9, 8]);
+        e.usizes(&[3, 1, 4]);
+        e.str("drop");
+        let mut d = Dec { b: &e.buf };
+        assert_eq!(d.u8().unwrap(), 7);
+        assert_eq!(d.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(d.f32().unwrap(), -0.5);
+        assert_eq!(d.f64().unwrap(), std::f64::consts::PI);
+        let fs = d.f32s().unwrap();
+        assert_eq!(fs.len(), 3);
+        assert_eq!(fs[0], 1.0);
+        assert!(fs[1].is_nan(), "NaN survives the binary round trip");
+        assert_eq!(fs[2].to_bits(), (-0.0f32).to_bits(), "-0.0 bit pattern preserved");
+        assert_eq!(d.f64s().unwrap(), vec![2.5]);
+        assert_eq!(d.u64s().unwrap(), vec![9, 8]);
+        assert_eq!(d.usizes().unwrap(), vec![3, 1, 4]);
+        assert_eq!(d.str().unwrap(), "drop");
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn truncated_reads_error_not_panic() {
+        let mut e = Enc { buf: Vec::new() };
+        e.u64(1000); // length prefix promising far more than is present
+        let mut d = Dec { b: &e.buf };
+        assert!(d.f32s().is_err());
+    }
+}

@@ -48,8 +48,10 @@
 //! and message stats for every setting (asserted by
 //! `rust/tests/integration_parallel.rs`).
 
+mod checkpoint;
 mod report;
 
+pub use checkpoint::{Checkpoint, DeltaState, WorkerState, CHECKPOINT_FILE};
 pub use report::{
     MembershipChange, MessageStats, RatioSelection, RobustnessStats, TrainReport, WorkerSkew,
 };
@@ -70,8 +72,9 @@ use crate::pipeline::merge::{MergeBuffer, MergedGroup};
 use crate::runtime::{GradJob, Metric, ModelRuntime, Runtime};
 use crate::sparsify::CompressorKind;
 use crate::util::ParallelExecutor;
-use anyhow::Result;
-use std::collections::BTreeMap;
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -322,6 +325,17 @@ pub struct Trainer {
     robust_staleness_hist: Vec<u64>,
     /// membership events as they were applied, in order
     robust_membership_log: Vec<MembershipChange>,
+    /// artifacts dir this trainer's [`Runtime`] was opened from
+    /// (`"native"` for the built-in zoo) — recorded in checkpoints so
+    /// `lags resume <dir>` can rebuild the runtime with no extra flags
+    artifacts: String,
+    /// injected crashes that already fired (loaded from tombstones on
+    /// resume; always empty for a fresh run, so every scheduled crash
+    /// is armed)
+    fired_crashes: BTreeSet<usize>,
+    /// `--record-trace` accumulator: one per-step row of measured
+    /// per-worker compute seconds + link-jitter multipliers
+    trace_rows: Vec<faults::TraceStepRecord>,
 }
 
 impl Trainer {
@@ -448,6 +462,9 @@ impl Trainer {
             robust_quorum_miss: vec![0; nl],
             robust_staleness_hist: Vec::new(),
             robust_membership_log: Vec::new(),
+            artifacts: rt.manifest.dir.to_string_lossy().into_owned(),
+            fired_crashes: BTreeSet::new(),
+            trace_rows: Vec::new(),
             cfg,
         })
     }
@@ -507,6 +524,18 @@ impl Trainer {
     pub fn step(&mut self) -> Result<f64> {
         let t = self.step_idx;
 
+        // --- crash-fault tier: a scheduled crash fires at the TOP of the
+        // step, before any state mutates, so the last durable checkpoint
+        // is exactly the pre-step state and the resumed process replays
+        // this step bit-identically. The fsync'd tombstone disarms the
+        // crash for the resumed run only (config validation guarantees a
+        // checkpoint dir whenever crashes are scheduled).
+        if self.cfg.faults.crash_at(t) && !self.fired_crashes.contains(&t) {
+            self.fired_crashes.insert(t);
+            checkpoint::write_tombstone(&self.cfg.checkpoint_dir, t)?;
+            return Err(anyhow::Error::new(faults::CrashPoint(t)));
+        }
+
         // --- robustness layer: membership events fire strictly BETWEEN
         // steps (here, before step t's gradients), and the step's quorum
         // participation mask is a pure function of (plan, membership,
@@ -536,10 +565,13 @@ impl Trainer {
             });
         }
         // a perturbing plan needs the compute wall-clock every step: it is
-        // the base the straggler sleeps scale (measuring it does not alter
-        // any numerics, so the determinism contract is untouched)
-        let comp_start =
-            (self.measuring_at(t) || self.cfg.faults.perturbs_time()).then(Instant::now);
+        // the base the straggler sleeps scale, and --record-trace wants it
+        // as the recorded rows' per-worker base share (measuring it does
+        // not alter any numerics, so the determinism contract is untouched)
+        let comp_start = (self.measuring_at(t)
+            || self.cfg.faults.perturbs_time()
+            || !self.cfg.record_trace.is_empty())
+        .then(Instant::now);
         self.model.grad_many(&self.exec, &self.params, &mut jobs)?;
         drop(jobs);
         if let Some(s) = comp_start {
@@ -571,8 +603,16 @@ impl Trainer {
             self.note_quorum_outcome();
         }
 
+        if !self.cfg.record_trace.is_empty() {
+            self.record_trace_row(t);
+        }
         self.step_idx += 1;
         self.observe_and_reselect();
+        // durable checkpoint at --checkpoint-every boundaries, AFTER all
+        // of this step's state (including any re-selection) has settled
+        if self.cfg.checkpoint_every > 0 && self.step_idx % self.cfg.checkpoint_every == 0 {
+            self.save_checkpoint()?;
+        }
         Ok(self.cluster.mean_loss())
     }
 
@@ -633,6 +673,17 @@ impl Trainer {
                 );
             }
         }
+        self.resize_to_membership();
+        Ok(())
+    }
+
+    /// Re-size every P-shaped structure to the CURRENT cluster
+    /// membership: the streaming aggregator's rank slots, the §5 merge
+    /// capacity (`merge_bytes × live P`), the dense ring scratch and the
+    /// quorum participation mask. Shared by elastic membership events
+    /// and checkpoint restore (which rebuilds the worker pool wholesale).
+    fn resize_to_membership(&mut self) {
+        let d = self.model.mm.d;
         let alive = self.cluster.size();
         let stream_layers = match self.cfg.algorithm {
             Algorithm::Slgs => 1,
@@ -644,7 +695,41 @@ impl Trainer {
         if self.participants.len() != alive {
             self.participants = vec![true; alive];
         }
-        Ok(())
+    }
+
+    /// Append one `--record-trace` row for completed step `t`: per-uid
+    /// measured compute seconds (the shared fan-out wall-clock split
+    /// evenly, plus each worker's own measured compression phase — the
+    /// per-worker differential a trace replay turns back into skew) and
+    /// the plan's link-jitter multipliers. Absent uids record 0.0
+    /// compute, which `FaultPlan::from_trace` maps back to nominal.
+    fn record_trace_row(&mut self, t: usize) {
+        let max_uid = self.cluster.workers.iter().map(|w| w.id).max().unwrap_or(0);
+        let mut comp_secs = vec![0.0f64; max_uid + 1];
+        let mut alpha_mult = vec![1.0f64; max_uid + 1];
+        let mut bw_mult = vec![1.0f64; max_uid + 1];
+        let base = self.last_comp_secs / self.cluster.size() as f64;
+        for w in &self.cluster.workers {
+            comp_secs[w.id] = base + w.step_secs;
+            let (a, b) = self.cfg.faults.link_jitter(w.id, t);
+            alpha_mult[w.id] = a;
+            bw_mult[w.id] = b;
+        }
+        self.trace_rows.push(faults::TraceStepRecord { step: t, comp_secs, alpha_mult, bw_mult });
+    }
+
+    /// Write the rows accumulated under `--record-trace` to the
+    /// configured path (atomically), in the `lags-trace` schema that
+    /// `--faults-trace` and `FaultPlan::from_trace` replay. A resumed
+    /// run records only its post-resume steps.
+    pub fn write_trace(&self) -> Result<()> {
+        let workers = self.trace_rows.iter().map(|r| r.comp_secs.len()).max().unwrap_or(0);
+        let doc = faults::trace_to_json(&self.cfg.model, workers, &self.trace_rows);
+        crate::util::json::write_atomic(
+            Path::new(&self.cfg.record_trace),
+            doc.to_string_pretty().as_bytes(),
+        )
+        .with_context(|| format!("writing trace {:?}", self.cfg.record_trace))
     }
 
     /// Recompute this step's quorum participation mask
@@ -847,9 +932,14 @@ impl Trainer {
             CompressorKind::HostSampled | CompressorKind::XlaSampled
         );
         let delays = self.straggler_delays(t);
+        // --record-trace times each worker's whole per-worker phase
+        // (straggler sleep included — the recorded profile should carry
+        // the fault the run actually experienced)
+        let record = !self.cfg.record_trace.is_empty();
         match self.cfg.pipeline {
             PipelineMode::Barrier => {
                 self.exec.run(&mut self.cluster.workers, |rank, worker| {
+                    let w0 = record.then(Instant::now);
                     if let Some(ds) = &delays {
                         if !ds[rank].is_zero() {
                             std::thread::sleep(ds[rank]);
@@ -863,6 +953,9 @@ impl Trainer {
                         exact,
                         &mut worker.msg_flat,
                     );
+                    if let Some(w0) = w0 {
+                        worker.step_secs = w0.elapsed().as_secs_f64();
+                    }
                     Ok(())
                 })?;
                 self.agg.iter_mut().for_each(|v| *v = 0.0);
@@ -893,6 +986,7 @@ impl Trainer {
                     &mut self.cluster.workers,
                     tx,
                     |rank, worker, tx| {
+                        let w0 = record.then(Instant::now);
                         if let Some(ds) = &delays {
                             if !ds[rank].is_zero() {
                                 std::thread::sleep(ds[rank]);
@@ -906,6 +1000,9 @@ impl Trainer {
                             exact,
                             &mut worker.msg_flat,
                         );
+                        if let Some(w0) = w0 {
+                            worker.step_secs = w0.elapsed().as_secs_f64();
+                        }
                         worker.publish_flat(rank, tx);
                         Ok(())
                     },
@@ -1026,11 +1123,13 @@ impl Trainer {
         }
 
         let measure = self.measuring_at(t);
+        let record = !self.cfg.record_trace.is_empty();
         if self.cfg.compressor.is_xla() {
             // the XLA compress executables are not Sync — compression runs
             // sequentially in rank order, and aggregation stays a barrier
             // even under `--pipeline overlap` (bit-identical regardless)
             for worker in self.cluster.workers.iter_mut() {
+                let w0 = record.then(Instant::now);
                 for li in (0..nl).rev() {
                     let (off, n) = self.layer_meta[li];
                     let layer = &self.model.mm.layers[li];
@@ -1060,6 +1159,9 @@ impl Trainer {
                         }
                     }
                 }
+                if let Some(w0) = w0 {
+                    worker.step_secs = w0.elapsed().as_secs_f64();
+                }
             }
             self.reduce_apply_barrier_lags();
             return Ok(());
@@ -1074,6 +1176,7 @@ impl Trainer {
                 let meta = &self.layer_meta;
                 let ks_t = &self.ks_t;
                 self.exec.run(&mut self.cluster.workers, |rank, worker| {
+                    let w0 = record.then(Instant::now);
                     if let Some(ds) = &delays {
                         if !ds[rank].is_zero() {
                             std::thread::sleep(ds[rank]);
@@ -1093,6 +1196,9 @@ impl Trainer {
                         if let Some(c0) = c0 {
                             worker.compress_secs[li] = c0.elapsed().as_secs_f64();
                         }
+                    }
+                    if let Some(w0) = w0 {
+                        worker.step_secs = w0.elapsed().as_secs_f64();
                     }
                     Ok(())
                 })?;
@@ -1119,6 +1225,7 @@ impl Trainer {
                     &mut self.cluster.workers,
                     tx,
                     |rank, worker, tx| {
+                        let w0 = record.then(Instant::now);
                         if let Some(ds) = &delays {
                             if !ds[rank].is_zero() {
                                 std::thread::sleep(ds[rank]);
@@ -1139,6 +1246,9 @@ impl Trainer {
                                 worker.compress_secs[li] = c0.elapsed().as_secs_f64();
                             }
                             worker.publish_layer(rank, li, tx);
+                        }
+                        if let Some(w0) = w0 {
+                            worker.step_secs = w0.elapsed().as_secs_f64();
                         }
                         Ok(())
                     },
@@ -1215,12 +1325,20 @@ impl Trainer {
         simulate(&profile, &net, self.cfg.algorithm.schedule(), &params)
     }
 
-    /// Run the full configured training loop.
+    /// Run the full configured training loop. A resumed trainer picks up
+    /// at its checkpointed step, so the loop covers only the remaining
+    /// steps (the report's curve then spans the post-resume segment; its
+    /// final numbers match the uninterrupted run's bit-for-bit).
     pub fn run(&mut self) -> Result<TrainReport> {
         let mut curve = CurveRecorder::new(&["train_loss", "eval_loss", "metric"]);
         let wall_start = std::time::Instant::now();
         let mut final_eval = (f64::NAN, f64::NAN);
-        for s in 0..self.cfg.steps {
+        // a step-0 checkpoint anchors crashes scheduled before the first
+        // --checkpoint-every boundary: resume is always possible
+        if self.cfg.checkpoint_every > 0 && self.step_idx == 0 {
+            self.save_checkpoint()?;
+        }
+        for s in self.step_idx..self.cfg.steps {
             let loss = self.step()?;
             let do_eval = self.cfg.eval_every > 0
                 && ((s + 1) % self.cfg.eval_every == 0 || s + 1 == self.cfg.steps);
@@ -1249,6 +1367,17 @@ impl Trainer {
                     s + 1,
                     adaptive::ratio::effective_cmax(&self.ratios),
                     self.selections.len(),
+                );
+            }
+        }
+        if !self.cfg.record_trace.is_empty() {
+            self.write_trace()?;
+            if self.cfg.verbose {
+                eprintln!(
+                    "[{}] recorded {}-step trace to {:?}",
+                    self.cfg.algorithm.name(),
+                    self.trace_rows.len(),
+                    self.cfg.record_trace,
                 );
             }
         }

@@ -153,8 +153,12 @@ pub fn results_json() -> Json {
 
 /// Write the recorded results as machine-readable JSON (e.g.
 /// `BENCH_hotpath.json`) so the perf trajectory is trackable across PRs.
+/// Atomic (temp file + rename): an interrupted bench run keeps the
+/// previous snapshot instead of truncating it.
 pub fn write_json(path: &str) -> std::io::Result<()> {
-    std::fs::write(path, results_json().to_string_pretty())?;
+    let doc = results_json().to_string_pretty();
+    crate::util::json::write_atomic(std::path::Path::new(path), doc.as_bytes())
+        .map_err(|e| std::io::Error::other(format!("{e:#}")))?;
     println!("wrote {path} ({} benches)", registry().lock().unwrap().len());
     Ok(())
 }

@@ -173,6 +173,43 @@ impl Json {
     }
 }
 
+/// Crash-safe file write: the bytes land in a temp file in the SAME
+/// directory (rename across filesystems isn't atomic), are fsynced, and
+/// only then renamed over `path`. A crash at any point leaves either the
+/// old file or nothing — never a truncated artifact. Every JSON artifact
+/// (report.json, BENCH_*.json, calibration files) and the binary
+/// checkpoints go through this path.
+pub fn write_atomic(path: &std::path::Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write as _;
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    // the pid keeps concurrent writers (e.g. two bench runs) from
+    // clobbering each other's temp file; the final rename still wins-last
+    let name = path.file_name().context("write_atomic needs a file name")?;
+    let tmp = dir.join(format!(".{}.tmp.{}", name.to_string_lossy(), std::process::id()));
+    let result = (|| -> Result<()> {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating temp file {tmp:?}"))?;
+        f.write_all(bytes).with_context(|| format!("writing {tmp:?}"))?;
+        f.sync_all().with_context(|| format!("fsyncing {tmp:?}"))?;
+        drop(f);
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {tmp:?} over {path:?}"))?;
+        // fsync the directory so the rename itself survives a crash;
+        // best-effort — some filesystems refuse to sync a directory handle
+        if let Ok(d) = std::fs::File::open(&dir) {
+            let _ = d.sync_all();
+        }
+        Ok(())
+    })();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
 fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
@@ -401,6 +438,26 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("{\"a\" 1}").is_err());
         assert!(Json::parse("12 34").is_err());
+    }
+
+    #[test]
+    fn write_atomic_replaces_and_leaves_no_temp() {
+        let dir = std::env::temp_dir().join(format!("lags_json_atomic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("artifact.json");
+        write_atomic(&path, b"{\"v\": 1}").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{\"v\": 1}");
+        // overwrite: the new contents fully replace the old
+        write_atomic(&path, b"{\"v\": 2}").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{\"v\": 2}");
+        // no temp droppings left behind
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -8,12 +8,13 @@
 //! residual-conservation guarantee of elastic re-sharding, the
 //! bounded-staleness telemetry, and the merge-capacity re-sizing fix.
 
-use lags::cluster::faults::{FaultPlan, MembershipAction, MembershipEvent};
+use lags::cluster::faults::{CrashPoint, FaultPlan, MembershipAction, MembershipEvent};
 use lags::cluster::Cluster;
 use lags::collectives::PipelineMode;
 use lags::config::TrainConfig;
 use lags::runtime::Runtime;
-use lags::trainer::{Algorithm, MessageStats, Trainer};
+use lags::sparsify::CompressorKind;
+use lags::trainer::{Algorithm, Checkpoint, MessageStats, Trainer};
 use std::sync::Arc;
 
 fn cfg(model: &str, alg: Algorithm, steps: usize, workers: usize, threads: usize) -> TrainConfig {
@@ -52,6 +53,7 @@ fn chaotic_plan() -> FaultPlan {
         alpha_jitter: 0.15,
         bandwidth_jitter: 0.15,
         events: vec![ev(3, MembershipAction::Drop, 1), ev(5, MembershipAction::Join, 4)],
+        ..FaultPlan::none()
     }
 }
 
@@ -242,4 +244,254 @@ fn membership_change_recomputes_merge_capacity() {
     t.step().unwrap(); // step 2: drop → P=2
     assert_eq!(t.merge_capacity_bytes(), 4096 * 2);
     assert_eq!(t.cluster_size(), 2);
+}
+
+/// Fresh scratch dir for checkpoint files, unique per test and process.
+fn ckdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("lags-ckpt-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn kill_and_resume_is_bit_identical_to_uninterrupted() {
+    // the checkpoint acceptance matrix: a crash@5 with --checkpoint-every 2
+    // followed by a resume must replay to EXACTLY the uninterrupted run —
+    // bit-identical per-step losses, final params and message stats — for
+    // a dense, a conv and a recurrent model, both pipeline modes and two
+    // thread counts. The crash fires before any step-5 mutation, so the
+    // step-4 checkpoint replays steps 4..; its tombstone disarms the
+    // crash event on the resumed run.
+    let rt = Arc::new(Runtime::native(42));
+    let steps = 8usize;
+    let crash = 5usize;
+    for model in ["mlp", "convnet", "rnn"] {
+        for mode in [PipelineMode::Barrier, PipelineMode::Overlap] {
+            for threads in [1usize, 3] {
+                let tag = format!("{model}-{}-t{threads}", mode.name());
+                let mut clean = cfg(model, Algorithm::Lags, steps, 3, threads);
+                clean.pipeline = mode;
+                let (ref_losses, ref_params, ref_stats) = run_traced(&rt, clean.clone());
+
+                let dir = ckdir(&tag);
+                let mut c = clean;
+                c.checkpoint_every = 2;
+                c.checkpoint_dir = dir.to_string_lossy().into_owned();
+                c.faults.crashes = vec![crash];
+                let mut t = Trainer::with_runtime(&rt, c).unwrap();
+                let mut losses = Vec::new();
+                let err = loop {
+                    match t.step() {
+                        Ok(l) => losses.push(l),
+                        Err(e) => break e,
+                    }
+                };
+                let cp = err.downcast_ref::<CrashPoint>().expect("a CrashPoint error");
+                assert_eq!(cp.0, crash, "{tag}: crash fired at the scheduled step");
+                assert_eq!(losses.len(), crash, "{tag}: steps completed before the crash");
+                assert!(
+                    Trainer::checkpoint_path(&dir.to_string_lossy()).is_file(),
+                    "{tag}: a checkpoint exists at the crash"
+                );
+                drop(t); // the "killed" process
+
+                let mut r = Trainer::resume_with_runtime(&rt, &dir.to_string_lossy()).unwrap();
+                assert_eq!(r.step_index(), 4, "{tag}: resumed from the last boundary");
+                while r.step_index() < steps {
+                    let s = r.step_index();
+                    let l = r.step().unwrap_or_else(|e| panic!("{tag}: resumed step {s}: {e:#}"));
+                    if s < losses.len() {
+                        assert_eq!(losses[s], l, "{tag}: replayed step {s} diverged");
+                    } else {
+                        losses.push(l);
+                    }
+                }
+                assert_eq!(ref_losses, losses, "{tag}: losses diverged after resume");
+                assert_eq!(ref_params, r.params().to_vec(), "{tag}: final params diverged");
+                assert_eq!(ref_stats, *r.msg_stats(), "{tag}: message stats diverged");
+                std::fs::remove_dir_all(&dir).ok();
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_checkpoint_round_trip_is_bit_identical() {
+    // arbitrary zoo model × compressor × P × threads × algorithm: warm up
+    // `size` steps, save, resume into a second trainer, and step both —
+    // the next step must be bit-identical (loss, params, message stats,
+    // δ series), i.e. the checkpoint captures the COMPLETE deterministic
+    // state
+    let rt = Arc::new(Runtime::native(7));
+    let models = ["mlp", "mlp_deep", "convnet", "rnn"];
+    let mut case_no = 0usize;
+    lags::util::prop::check(
+        "checkpoint-round-trip",
+        lags::util::prop::Config { cases: 10, seed: 0x5EED_CDE7 },
+        1,
+        4,
+        |case| {
+            case_no += 1;
+            let model = models[case.rng.below(models.len())];
+            let alg =
+                if case.rng.below(4) == 0 { Algorithm::Slgs } else { Algorithm::Lags };
+            let workers = 2 + case.rng.below(3);
+            let threads = 1 + case.rng.below(2);
+            let warm = case.size;
+            let mut c = cfg(model, alg, warm + 1, workers, threads);
+            c.compressor = if case.rng.below(2) == 0 {
+                CompressorKind::HostExact
+            } else {
+                CompressorKind::HostSampled
+            };
+            if case.rng.below(2) == 0 {
+                c.pipeline = PipelineMode::Barrier;
+            }
+            if alg == Algorithm::Lags && case.rng.below(2) == 0 {
+                c.delta_every = 1; // exercise the δ monitor's RNG stream
+            }
+            let dir = ckdir(&format!("prop{case_no}"));
+            c.checkpoint_dir = dir.to_string_lossy().into_owned();
+            let mut a = Trainer::with_runtime(&rt, c).map_err(|e| format!("build: {e:#}"))?;
+            for s in 0..warm {
+                a.step().map_err(|e| format!("warm step {s}: {e:#}"))?;
+            }
+            a.save_checkpoint().map_err(|e| format!("save: {e:#}"))?;
+            let mut b = Trainer::resume_with_runtime(&rt, &dir.to_string_lossy())
+                .map_err(|e| format!("resume: {e:#}"))?;
+            let la = a.step().map_err(|e| format!("original step: {e:#}"))?;
+            let lb = b.step().map_err(|e| format!("resumed step: {e:#}"))?;
+            std::fs::remove_dir_all(&dir).ok();
+            if la.to_bits() != lb.to_bits() {
+                return Err(format!("loss diverged: {la} vs {lb}"));
+            }
+            if a.params() != b.params() {
+                return Err("params diverged".into());
+            }
+            if a.msg_stats() != b.msg_stats() {
+                return Err("message stats diverged".into());
+            }
+            if a.delta_series() != b.delta_series() {
+                return Err("δ series diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn checkpoint_preserves_online_profile_and_delta_rng() {
+    // the online EWMA profile, the selection history and the δ monitor's
+    // RandK stream position are deterministic state too: a resumed
+    // trainer must carry the exact snapshot (asserted by re-capturing
+    // both sides), not re-measure from scratch
+    let rt = Arc::new(Runtime::native(42));
+    let mut c = cfg("mlp", Algorithm::Lags, 10, 3, 2);
+    c.adaptive = true;
+    c.reselect_every = 50; // arm online measurement; no reselect in-window
+    c.delta_every = 2;
+    let dir = ckdir("online");
+    c.checkpoint_dir = dir.to_string_lossy().into_owned();
+    let mut t = Trainer::with_runtime(&rt, c).unwrap();
+    for _ in 0..4 {
+        t.step().unwrap();
+    }
+    t.save_checkpoint().unwrap();
+    let r = Trainer::resume_with_runtime(&rt, &dir.to_string_lossy()).unwrap();
+    let a = Checkpoint::capture(&t);
+    let b = Checkpoint::capture(&r);
+    assert_eq!(a.step, b.step);
+    assert!(a.online.is_some(), "adaptive + reselect_every arms the EWMA profile");
+    assert_eq!(a.online, b.online, "measured-profile EWMAs survive the round trip");
+    assert!(a.delta.is_some(), "delta_every arms the δ monitor");
+    assert_eq!(a.delta, b.delta, "δ series + RNG stream position survive");
+    assert_eq!(a.selections, b.selections, "selection history survives");
+    assert_eq!(a.ratios, b.ratios);
+    assert_eq!(a.ks, b.ks);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupted_or_truncated_checkpoint_fails_with_checksum_error() {
+    // resume must refuse a damaged checkpoint loudly: a single flipped
+    // byte or a truncated file both surface as a checksum error, and
+    // restoring the original bytes makes the same directory resumable
+    // again
+    let rt = Arc::new(Runtime::native(42));
+    let dir = ckdir("corrupt");
+    let mut c = cfg("mlp", Algorithm::Lags, 4, 2, 1);
+    c.checkpoint_dir = dir.to_string_lossy().into_owned();
+    let mut t = Trainer::with_runtime(&rt, c).unwrap();
+    t.step().unwrap();
+    t.save_checkpoint().unwrap();
+    let path = Trainer::checkpoint_path(&dir.to_string_lossy());
+    let good = std::fs::read(&path).unwrap();
+
+    let mut bad = good.clone();
+    let mid = bad.len() / 2;
+    bad[mid] ^= 0x40;
+    std::fs::write(&path, &bad).unwrap();
+    let err = match Trainer::resume_with_runtime(&rt, &dir.to_string_lossy()) {
+        Ok(_) => panic!("a flipped byte must be refused"),
+        Err(e) => e,
+    };
+    assert!(format!("{err:#}").contains("checksum"), "flipped byte: {err:#}");
+
+    std::fs::write(&path, &good[..16]).unwrap();
+    let err = match Trainer::resume_with_runtime(&rt, &dir.to_string_lossy()) {
+        Ok(_) => panic!("a truncated file must be refused"),
+        Err(e) => e,
+    };
+    assert!(format!("{err:#}").contains("checksum"), "truncated file: {err:#}");
+
+    std::fs::write(&path, &good).unwrap();
+    Trainer::resume_with_runtime(&rt, &dir.to_string_lossy())
+        .expect("pristine bytes resume cleanly");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn recorded_trace_replays_as_a_fault_schedule() {
+    // --record-trace → FaultPlan::from_trace → trace replay: a skewed
+    // run's recorded per-step profile loads back as a valid fault
+    // schedule, and a trace-driven run is bit-identical across repeats,
+    // thread counts and pipeline modes (the trace is data, not wall
+    // clock)
+    let rt = Arc::new(Runtime::native(42));
+    let path = std::env::temp_dir()
+        .join(format!("lags-trace-rec-{}.json", std::process::id()));
+    let mut c = cfg("mlp", Algorithm::Lags, 6, 3, 2);
+    c.faults.compute_skew = vec![1.0, 3.0, 1.0];
+    c.record_trace = path.to_string_lossy().into_owned();
+    let mut t = Trainer::with_runtime(&rt, c).unwrap();
+    for _ in 0..6 {
+        t.step().unwrap();
+    }
+    t.write_trace().unwrap();
+
+    let plan = FaultPlan::from_trace(&path.to_string_lossy()).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(plan.trace.len(), 6, "one trace row per recorded step");
+    assert!(plan.trace.iter().all(|row| row.len() == 3), "one column per worker");
+    assert!(plan.perturbs_time(), "a non-empty trace perturbs step timing");
+    plan.validate(3).unwrap();
+    assert!(
+        plan.trace.iter().flatten().all(|m| m.is_finite() && *m > 0.0),
+        "normalized multipliers are positive and finite"
+    );
+
+    let mut c2 = cfg("mlp", Algorithm::Lags, 5, 3, 2);
+    c2.faults.trace = plan.trace.clone();
+    let (l0, p0, s0) = run_traced(&rt, c2.clone());
+    let (l1, p1, s1) = run_traced(&rt, c2.clone());
+    assert_eq!(l0, l1, "trace replay reruns identically");
+    assert_eq!(p0, p1);
+    assert_eq!(s0, s1);
+    let mut c3 = c2;
+    c3.pipeline = PipelineMode::Barrier;
+    c3.threads = 1;
+    let (l2, p2, s2) = run_traced(&rt, c3);
+    assert_eq!(l0, l2, "trace replay is mode- and thread-invariant");
+    assert_eq!(p0, p2);
+    assert_eq!(s0, s2);
 }
