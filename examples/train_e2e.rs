@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     let mm = trainer.model_manifest().clone();
     eprintln!("[e2e] d={} ({} layers); training...", mm.d, mm.layers.len());
 
-    let t0 = std::time::Instant::now();
+    let t0 = lags::util::clock::now();
     let report = trainer.run()?;
     let wall = t0.elapsed().as_secs_f64();
 

@@ -150,6 +150,7 @@ pub fn select_ratios_manifest(
 /// Effective global compression c_max over the selection (drives the
 /// convergence bound of Corollary 2).
 pub fn effective_cmax(ratios: &[f64]) -> f64 {
+    // lags-audit: allow(R3) reason="max-fold, not a float sum: f64::max is order-insensitive (associative+commutative over non-NaN ratios)"
     ratios.iter().cloned().fold(1.0, f64::max)
 }
 

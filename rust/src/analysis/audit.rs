@@ -1,0 +1,888 @@
+//! `lags-audit` — token/line-level static enforcement of the determinism
+//! contract over `rust/src/**` (DESIGN.md §Determinism contract and
+//! enforcement).
+//!
+//! The scanner is deliberately dependency-free and line-oriented: it masks
+//! comments, string/char literals and `#[cfg(test)]` blocks with a small
+//! carry-over lexer, then matches per-rule token patterns against the
+//! remaining code. That is coarse next to a full HIR lint, but it is fast
+//! (one pass, no build), runs identically in CI and locally, and the rules
+//! it enforces are *textually* recognisable by design — the contract bans
+//! whole constructs (`HashMap` in core, `Instant::now` outside the clock
+//! funnel), not subtle usages of them.
+//!
+//! ## Rules
+//!
+//! * **R1** — no order-unstable collections (`HashMap`/`HashSet`) in the
+//!   deterministic core (trainer, cluster, collectives, sparsify,
+//!   adaptive, pipeline, runtime::native/kernels, util::rng): iteration
+//!   order would leak into reductions, telemetry and checkpoints.
+//! * **R2** — no wall-clock or environment reads (`Instant::now`,
+//!   `SystemTime`, `std::env`) anywhere except the single clock funnel
+//!   `util::clock::now` (structurally whitelisted).
+//! * **R3** — no float accumulation (`.fold(`, `.sum::<f32>`,
+//!   `.sum::<f64>`) in core modules outside the fixed-order sites
+//!   `runtime::kernels` and `collectives::sparse_agg`.
+//! * **R4** — `unsafe` forbidden crate-wide (backed by
+//!   `#![forbid(unsafe_code)]`; the lint also catches attempts to relax
+//!   that attribute in any module).
+//! * **R5** — no randomness source other than `util::rng::Rng` (no
+//!   `rand::`, `thread_rng`, `getrandom`, `RandomState`, `chrono::`).
+//! * **W0** — waiver-protocol violations (a waiver that lacks a
+//!   `reason="..."`, names an unknown rule, or cannot be parsed). W0 is
+//!   not waivable.
+//!
+//! ## Waivers
+//!
+//! A finding is suppressed — but still reported in `audit.json` — by an
+//! inline comment on the same line, or on a comment-only line directly
+//! above: `// lags-audit: allow(R1) reason="membership-only set, never
+//! iterated"`. A waiver without a reason does not suppress anything and is
+//! itself a W0 finding, so exceptions are always visible and always
+//! justified. Waivers that match no finding are ignored (this lets docs —
+//! like this one — quote the syntax without tripping the scanner).
+
+use crate::util::json::{self, Json};
+use crate::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A determinism-contract rule (or the waiver meta-rule `W0`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    R1,
+    R2,
+    R3,
+    R4,
+    R5,
+    /// Waiver-protocol violation (missing reason / unknown rule id).
+    W0,
+}
+
+impl Rule {
+    /// The scannable rules, in report order (W0 findings are synthesized
+    /// by the waiver machinery, never pattern-matched).
+    pub const CHECKS: [Rule; 5] = [Rule::R1, Rule::R2, Rule::R3, Rule::R4, Rule::R5];
+
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::R1 => "R1",
+            Rule::R2 => "R2",
+            Rule::R3 => "R3",
+            Rule::R4 => "R4",
+            Rule::R5 => "R5",
+            Rule::W0 => "W0",
+        }
+    }
+
+    pub fn summary(self) -> &'static str {
+        match self {
+            Rule::R1 => "no order-unstable collections (HashMap/HashSet) in deterministic core",
+            Rule::R2 => "no wall-clock or environment reads outside util::clock::now",
+            Rule::R3 => "no float accumulation outside runtime::kernels / collectives::sparse_agg",
+            Rule::R4 => "unsafe forbidden crate-wide",
+            Rule::R5 => "no randomness source other than util::rng::Rng",
+            Rule::W0 => "waiver protocol: waivers must parse, name known rules, and carry a reason",
+        }
+    }
+
+    /// Parse a rule id as it appears inside `allow(...)`. `W0` is not
+    /// waivable, so it does not parse.
+    pub fn parse(s: &str) -> Option<Rule> {
+        match s {
+            "R1" => Some(Rule::R1),
+            "R2" => Some(Rule::R2),
+            "R3" => Some(Rule::R3),
+            "R4" => Some(Rule::R4),
+            "R5" => Some(Rule::R5),
+            _ => None,
+        }
+    }
+
+    fn patterns(self) -> &'static [&'static str] {
+        match self {
+            Rule::R1 => &["HashMap", "HashSet"],
+            Rule::R2 => &["Instant::now", "SystemTime", "std::env"],
+            Rule::R3 => &[".fold(", ".sum::<f32>", ".sum::<f64>"],
+            Rule::R4 => &["unsafe"],
+            Rule::R5 => &["rand::", "thread_rng", "from_entropy", "getrandom", "RandomState", "chrono::"],
+            Rule::W0 => &[],
+        }
+    }
+
+    /// Does this rule apply to the file at (root-relative, '/'-separated)
+    /// path `rel`?
+    fn applies(self, rel: &str) -> bool {
+        match self {
+            Rule::R1 => is_core(rel),
+            Rule::R2 => rel != "util/clock.rs",
+            Rule::R3 => {
+                is_core(rel) && rel != "runtime/kernels.rs" && rel != "collectives/sparse_agg.rs"
+            }
+            Rule::R4 => true,
+            Rule::R5 => rel != "util/rng.rs",
+            Rule::W0 => true,
+        }
+    }
+}
+
+/// Deterministic-core membership: modules whose state feeds the
+/// bit-identity contract (params, residuals, message stats, checkpoints).
+fn is_core(rel: &str) -> bool {
+    const CORE_PREFIXES: [&str; 6] =
+        ["trainer/", "cluster/", "collectives/", "sparsify/", "adaptive/", "pipeline/"];
+    const CORE_FILES: [&str; 3] = ["runtime/native.rs", "runtime/kernels.rs", "util/rng.rs"];
+    CORE_PREFIXES.iter().any(|p| rel.starts_with(p)) || CORE_FILES.contains(&rel)
+}
+
+/// One audit hit: a rule match (waived or not) or a W0 protocol violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: Rule,
+    /// path relative to the scan root, '/'-separated
+    pub file: String,
+    /// 1-based line number
+    pub line: usize,
+    /// the matched pattern, or a description of the protocol violation
+    pub what: String,
+    /// the offending source line, trimmed
+    pub excerpt: String,
+    /// `Some(reason)` when suppressed by a valid waiver
+    pub waiver: Option<String>,
+}
+
+impl Finding {
+    pub fn is_waived(&self) -> bool {
+        self.waiver.is_some()
+    }
+}
+
+/// The result of auditing a tree (or a single in-memory source).
+#[derive(Debug, Default)]
+pub struct AuditReport {
+    pub root: String,
+    pub files_scanned: usize,
+    /// every finding, waived and unwaived, sorted by (file, line, rule)
+    pub findings: Vec<Finding>,
+}
+
+impl AuditReport {
+    pub fn unwaived(&self) -> Vec<&Finding> {
+        self.findings.iter().filter(|f| !f.is_waived()).collect()
+    }
+
+    pub fn waivers(&self) -> Vec<&Finding> {
+        self.findings.iter().filter(|f| f.is_waived()).collect()
+    }
+
+    /// Zero unwaived findings?
+    pub fn clean(&self) -> bool {
+        self.findings.iter().all(|f| f.is_waived())
+    }
+
+    /// The machine-readable `audit.json` payload: rule table, unwaived
+    /// findings, and every effective waiver (exceptions are visible, never
+    /// silent).
+    pub fn to_json(&self) -> Json {
+        let rule_row = |r: Rule| {
+            Json::obj(vec![
+                ("id", Json::Str(r.id().to_string())),
+                ("summary", Json::Str(r.summary().to_string())),
+            ])
+        };
+        let finding_row = |f: &Finding| {
+            let mut pairs = vec![
+                ("rule", Json::Str(f.rule.id().to_string())),
+                ("file", Json::Str(f.file.clone())),
+                ("line", Json::Num(f.line as f64)),
+                ("what", Json::Str(f.what.clone())),
+                ("excerpt", Json::Str(f.excerpt.clone())),
+            ];
+            if let Some(r) = &f.waiver {
+                pairs.push(("reason", Json::Str(r.clone())));
+            }
+            Json::obj(pairs)
+        };
+        Json::obj(vec![
+            ("root", Json::Str(self.root.clone())),
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            (
+                "rules",
+                Json::Arr(Rule::CHECKS.iter().chain([&Rule::W0]).map(|&r| rule_row(r)).collect()),
+            ),
+            (
+                "findings",
+                Json::Arr(self.unwaived().into_iter().map(finding_row).collect()),
+            ),
+            ("waivers", Json::Arr(self.waivers().into_iter().map(finding_row).collect())),
+            ("clean", Json::Bool(self.clean())),
+        ])
+    }
+
+    /// Human-readable summary for the CLI.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let unwaived = self.unwaived();
+        let waived = self.waivers();
+        for f in &unwaived {
+            out.push_str(&format!(
+                "{} {}:{} [{}] {}\n    {}\n",
+                f.rule.id(),
+                f.file,
+                f.line,
+                f.what,
+                f.rule.summary(),
+                f.excerpt
+            ));
+        }
+        if !waived.is_empty() {
+            out.push_str("waivers in effect:\n");
+            for f in &waived {
+                out.push_str(&format!(
+                    "  {} {}:{} [{}] reason: {}\n",
+                    f.rule.id(),
+                    f.file,
+                    f.line,
+                    f.what,
+                    f.waiver.as_deref().unwrap_or("")
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "lags-audit: {} file(s), {} finding(s), {} waived, {} unwaived\n",
+            self.files_scanned,
+            self.findings.len(),
+            waived.len(),
+            unwaived.len()
+        ));
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// lexer: mask comments / string / char literals so patterns only see code
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LexState {
+    Code,
+    /// inside `/* ... */`, with nesting depth
+    Block(u32),
+    /// inside a `"..."` string literal
+    Str,
+    /// inside a raw string, with the `#` count of its delimiter
+    RawStr(u8),
+}
+
+/// Per-file masking lexer; state carries across lines (block comments and
+/// string literals may span lines).
+struct Masker {
+    state: LexState,
+}
+
+impl Masker {
+    fn new() -> Masker {
+        Masker { state: LexState::Code }
+    }
+
+    /// Replace comment and literal interiors with spaces, preserving code
+    /// tokens and braces. Line comments truncate the line.
+    fn mask_line(&mut self, raw: &str) -> String {
+        let c: Vec<char> = raw.chars().collect();
+        let n = c.len();
+        let mut out = String::with_capacity(n);
+        let mut i = 0usize;
+        while i < n {
+            match self.state {
+                LexState::Block(depth) => {
+                    if c[i] == '*' && i + 1 < n && c[i + 1] == '/' {
+                        self.state =
+                            if depth <= 1 { LexState::Code } else { LexState::Block(depth - 1) };
+                        out.push_str("  ");
+                        i += 2;
+                    } else if c[i] == '/' && i + 1 < n && c[i + 1] == '*' {
+                        self.state = LexState::Block(depth + 1);
+                        out.push_str("  ");
+                        i += 2;
+                    } else {
+                        out.push(' ');
+                        i += 1;
+                    }
+                }
+                LexState::Str => {
+                    if c[i] == '\\' {
+                        out.push(' ');
+                        if i + 1 < n {
+                            out.push(' ');
+                        }
+                        i = (i + 2).min(n);
+                    } else if c[i] == '"' {
+                        self.state = LexState::Code;
+                        out.push(' ');
+                        i += 1;
+                    } else {
+                        out.push(' ');
+                        i += 1;
+                    }
+                }
+                LexState::RawStr(h) => {
+                    if c[i] == '"' && (1..=h as usize).all(|k| c.get(i + k) == Some(&'#')) {
+                        self.state = LexState::Code;
+                        for _ in 0..=h as usize {
+                            out.push(' ');
+                        }
+                        i += 1 + h as usize;
+                    } else {
+                        out.push(' ');
+                        i += 1;
+                    }
+                }
+                LexState::Code => {
+                    let ch = c[i];
+                    if ch == '/' && i + 1 < n && c[i + 1] == '/' {
+                        break; // line comment: rest of line is not code
+                    }
+                    if ch == '/' && i + 1 < n && c[i + 1] == '*' {
+                        self.state = LexState::Block(1);
+                        out.push_str("  ");
+                        i += 2;
+                        continue;
+                    }
+                    if ch == '"' {
+                        self.state = LexState::Str;
+                        out.push(' ');
+                        i += 1;
+                        continue;
+                    }
+                    if ch == 'r' && !ends_in_ident(&out) {
+                        // raw string r"..." / r#"..."#
+                        let mut j = i + 1;
+                        let mut hashes = 0u8;
+                        while j < n && c[j] == '#' && hashes < u8::MAX {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if j < n && c[j] == '"' {
+                            self.state = LexState::RawStr(hashes);
+                            for _ in i..=j {
+                                out.push(' ');
+                            }
+                            i = j + 1;
+                            continue;
+                        }
+                        out.push(ch);
+                        i += 1;
+                        continue;
+                    }
+                    if ch == '\'' {
+                        // char literal vs lifetime
+                        if i + 1 < n && c[i + 1] == '\\' {
+                            let mut j = i + 2;
+                            while j < n && c[j] != '\'' && j < i + 12 {
+                                j += 1;
+                            }
+                            let end = j.min(n.saturating_sub(1));
+                            for _ in i..=end {
+                                out.push(' ');
+                            }
+                            i = j + 1;
+                            continue;
+                        }
+                        if i + 2 < n && c[i + 2] == '\'' && c[i + 1] != '\'' {
+                            out.push_str("   ");
+                            i += 3;
+                            continue;
+                        }
+                        out.push('\'');
+                        i += 1;
+                        continue;
+                    }
+                    out.push(ch);
+                    i += 1;
+                }
+            }
+        }
+        out
+    }
+}
+
+fn ends_in_ident(s: &str) -> bool {
+    s.chars().next_back().map(|c| c.is_alphanumeric() || c == '_').unwrap_or(false)
+}
+
+/// Substring search with identifier-boundary checks on pattern edges that
+/// are themselves identifier characters (so `unsafe` does not match
+/// `unsafe_code`, and `HashMap` does not match `MyHashMapLike`).
+fn has_token(hay: &str, pat: &str) -> bool {
+    let first = pat.chars().next().unwrap();
+    let last = pat.chars().next_back().unwrap();
+    let need_before = first.is_alphanumeric() || first == '_';
+    let need_after = last.is_alphanumeric() || last == '_';
+    let mut start = 0usize;
+    while let Some(pos) = hay[start..].find(pat) {
+        let p = start + pos;
+        let end = p + pat.len();
+        let before_ok = !need_before || !ends_in_ident(&hay[..p]);
+        let after_ok = !need_after
+            || hay[end..].chars().next().map(|c| !(c.is_alphanumeric() || c == '_')).unwrap_or(true);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = end;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// waivers
+// ---------------------------------------------------------------------------
+
+const WAIVER_MARK: &str = concat!("lags-", "audit:");
+
+#[derive(Debug)]
+struct Waiver {
+    rules: Vec<Rule>,
+    reason: Option<String>,
+    /// 0-based line the waiver comment sits on
+    line: usize,
+    /// 0-based line the waiver suppresses findings on
+    target: usize,
+    /// set when the waiver matched a finding but had no reason
+    reason_missing_hit: bool,
+}
+
+enum WaiverParse {
+    Ok { rules: Vec<Rule>, reason: Option<String> },
+    Malformed(String),
+    NotAWaiver,
+}
+
+/// Parse a waiver from a raw source line. Only text that follows the
+/// marker with `allow(` is treated as a waiver attempt; anything else
+/// (docs quoting the marker) is ignored.
+fn parse_waiver(raw: &str) -> WaiverParse {
+    let Some(pos) = raw.find(WAIVER_MARK) else {
+        return WaiverParse::NotAWaiver;
+    };
+    let rest = raw[pos + WAIVER_MARK.len()..].trim_start();
+    let Some(rest) = rest.strip_prefix("allow") else {
+        return WaiverParse::NotAWaiver;
+    };
+    let rest = rest.trim_start();
+    let Some(rest) = rest.strip_prefix('(') else {
+        return WaiverParse::Malformed("allow not followed by (rule list)".to_string());
+    };
+    let Some(close) = rest.find(')') else {
+        return WaiverParse::Malformed("unterminated allow(...)".to_string());
+    };
+    let mut rules = Vec::new();
+    for name in rest[..close].split(',') {
+        let name = name.trim();
+        match Rule::parse(name) {
+            Some(r) => rules.push(r),
+            None => {
+                return WaiverParse::Malformed(format!("unknown rule id {name:?} in allow(...)"))
+            }
+        }
+    }
+    if rules.is_empty() {
+        return WaiverParse::Malformed("empty rule list in allow(...)".to_string());
+    }
+    let tail = &rest[close + 1..];
+    let reason = tail.find("reason=\"").and_then(|r| {
+        let s = &tail[r + 8..];
+        s.find('"').map(|e| s[..e].to_string())
+    });
+    let reason = reason.filter(|r| !r.trim().is_empty());
+    WaiverParse::Ok { rules, reason }
+}
+
+// ---------------------------------------------------------------------------
+// scanning
+// ---------------------------------------------------------------------------
+
+fn brace_delta(masked: &str) -> (usize, usize) {
+    let opens = masked.chars().filter(|&c| c == '{').count();
+    let closes = masked.chars().filter(|&c| c == '}').count();
+    (opens, closes)
+}
+
+fn excerpt_of(raw: &str) -> String {
+    let t = raw.trim();
+    if t.len() > 120 {
+        let mut cut = 120;
+        while !t.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        format!("{}…", &t[..cut])
+    } else {
+        t.to_string()
+    }
+}
+
+/// Audit a single source file (given as text). `rel` is the path relative
+/// to the scan root with '/' separators — it selects which rules apply.
+/// `#[cfg(test)]` items/blocks are skipped: test code is exercised by the
+/// dynamic tier, and clippy's `disallowed-*` lists cover it under
+/// `--all-targets`.
+pub fn audit_source(rel: &str, text: &str) -> Vec<Finding> {
+    let lines: Vec<&str> = text.lines().collect();
+    let mut masker = Masker::new();
+    let mut masked: Vec<String> = Vec::with_capacity(lines.len());
+    let mut scanned = vec![false; lines.len()];
+    let mut pending_attr = false;
+    let mut skip_depth: Option<usize> = None;
+
+    for (i, raw) in lines.iter().enumerate() {
+        let m = masker.mask_line(raw);
+        if let Some(d) = skip_depth {
+            let (o, c) = brace_delta(&m);
+            let nd = (d + o).saturating_sub(c);
+            skip_depth = if nd == 0 { None } else { Some(nd) };
+            masked.push(m);
+            continue;
+        }
+        let has_code = !m.trim().is_empty();
+        if pending_attr {
+            if !has_code {
+                masked.push(m);
+                continue; // blank/comment line between attribute and item
+            }
+            if m.trim_start().starts_with("#[") && !m.contains("cfg(test)") {
+                masked.push(m);
+                continue; // stacked attribute; keep waiting for the item
+            }
+            let (o, c) = brace_delta(&m);
+            if o > c {
+                skip_depth = Some(o - c);
+            }
+            pending_attr = false;
+            masked.push(m);
+            continue; // the cfg(test) item line itself is not scanned
+        }
+        if m.contains("#[cfg(test)]") {
+            let (o, c) = brace_delta(&m);
+            if o > c {
+                skip_depth = Some(o - c);
+            } else {
+                pending_attr = true;
+            }
+            masked.push(m);
+            continue;
+        }
+        scanned[i] = true;
+        masked.push(m);
+    }
+
+    // collect waivers on scanned lines; comment-only waivers target the
+    // next scanned line that has code
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut waivers: Vec<Waiver> = Vec::new();
+    for i in 0..lines.len() {
+        if !scanned[i] {
+            continue;
+        }
+        match parse_waiver(lines[i]) {
+            WaiverParse::NotAWaiver => {}
+            WaiverParse::Malformed(msg) => findings.push(Finding {
+                rule: Rule::W0,
+                file: rel.to_string(),
+                line: i + 1,
+                what: msg,
+                excerpt: excerpt_of(lines[i]),
+                waiver: None,
+            }),
+            WaiverParse::Ok { rules, reason } => {
+                let target = if !masked[i].trim().is_empty() {
+                    Some(i)
+                } else {
+                    (i + 1..lines.len()).find(|&j| scanned[j] && !masked[j].trim().is_empty())
+                };
+                if let Some(target) = target {
+                    waivers.push(Waiver { rules, reason, line: i, target, reason_missing_hit: false });
+                }
+            }
+        }
+    }
+
+    // pattern scan
+    for i in 0..lines.len() {
+        if !scanned[i] || masked[i].trim().is_empty() {
+            continue;
+        }
+        for rule in Rule::CHECKS {
+            if !rule.applies(rel) {
+                continue;
+            }
+            for pat in rule.patterns() {
+                if !has_token(&masked[i], pat) {
+                    continue;
+                }
+                let mut reason: Option<String> = None;
+                for w in waivers.iter_mut() {
+                    if w.target == i && w.rules.contains(&rule) {
+                        match &w.reason {
+                            Some(r) => reason = Some(r.clone()),
+                            // reasonless waiver: the finding stays unwaived
+                            // and the waiver becomes a W0 below
+                            None => w.reason_missing_hit = true,
+                        }
+                        break;
+                    }
+                }
+                findings.push(Finding {
+                    rule,
+                    file: rel.to_string(),
+                    line: i + 1,
+                    what: (*pat).to_string(),
+                    excerpt: excerpt_of(lines[i]),
+                    waiver: reason,
+                });
+            }
+        }
+    }
+
+    // waivers that matched a finding but carried no reason are protocol
+    // violations in their own right
+    for w in &waivers {
+        if w.reason_missing_hit {
+            findings.push(Finding {
+                rule: Rule::W0,
+                file: rel.to_string(),
+                line: w.line + 1,
+                what: "waiver suppresses nothing: missing reason=\"...\"".to_string(),
+                excerpt: excerpt_of(lines[w.line]),
+                waiver: None,
+            });
+        }
+    }
+
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+/// Recursively audit every `.rs` file under `root` (deterministic,
+/// lexicographic walk). `root` is typically `rust/src`.
+pub fn audit_tree(root: &Path) -> Result<AuditReport> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    collect_rs(root, &mut files)
+        .with_context(|| format!("walking audit root {}", root.display()))?;
+    files.sort();
+    let mut report = AuditReport {
+        root: root.display().to_string(),
+        files_scanned: 0,
+        findings: Vec::new(),
+    };
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        report.findings.extend(audit_source(&rel, &text));
+        report.files_scanned += 1;
+    }
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Shared driver for `lags audit` and the standalone `lags-audit` bin:
+/// audit `root`, print the report, write `audit.json` to `json_out`, and
+/// fail (non-zero exit through the caller's error path) on any unwaived
+/// finding.
+pub fn run_cli(root: &Path, json_out: Option<&Path>) -> Result<()> {
+    if !root.is_dir() {
+        bail!("audit root {} is not a directory (pass --root <dir>)", root.display());
+    }
+    let report = audit_tree(root)?;
+    print!("{}", report.render());
+    if let Some(path) = json_out {
+        json::write_atomic(path, report.to_json().to_string_pretty().as_bytes())?;
+        println!("wrote {}", path.display());
+    }
+    if !report.clean() {
+        bail!("lags-audit: {} unwaived finding(s)", report.unwaived().len());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mask_all(src: &str) -> Vec<String> {
+        let mut m = Masker::new();
+        src.lines().map(|l| m.mask_line(l)).collect()
+    }
+
+    #[test]
+    fn masker_strips_comments_and_strings() {
+        let m = mask_all("let x = \"HashMap\"; // HashMap\nlet y = 1; /* unsafe */ let z = 2;");
+        assert!(!m[0].contains("HashMap"));
+        assert!(m[0].contains("let x ="));
+        assert!(!m[1].contains("unsafe"));
+        assert!(m[1].contains("let z = 2;"));
+    }
+
+    #[test]
+    fn masker_handles_multiline_block_and_raw_strings() {
+        let m = mask_all("let a = 1; /* start\nstill unsafe here\nend */ let b = 2;");
+        assert!(m[0].contains("let a = 1;"));
+        assert!(!m[1].contains("unsafe"));
+        assert!(m[2].contains("let b = 2;"));
+        let m = mask_all("let s = r#\"Instant::now\"#; let t = 3;");
+        assert!(!m[0].contains("Instant::now"));
+        assert!(m[0].contains("let t = 3;"));
+    }
+
+    #[test]
+    fn masker_distinguishes_char_literal_from_lifetime() {
+        let m = mask_all("fn f<'a>(x: &'a str) { let c = '{'; let d = '\\n'; }");
+        // lifetime survives, char literals (including brace) are masked
+        assert!(m[0].contains("<'a>"));
+        assert_eq!(m[0].chars().filter(|&c| c == '{').count(), 1);
+        let (o, c) = brace_delta(&m[0]);
+        assert_eq!((o, c), (1, 1));
+    }
+
+    #[test]
+    fn token_boundaries_respected() {
+        assert!(has_token("unsafe { }", "unsafe"));
+        assert!(!has_token("#![forbid(unsafe_code)]", "unsafe"));
+        assert!(has_token("let m: HashMap<u32, u32>;", "HashMap"));
+        assert!(!has_token("struct MyHashMapLike;", "HashMap"));
+        assert!(has_token("std::env::args()", "std::env"));
+    }
+
+    #[test]
+    fn r1_fires_in_core_only() {
+        let src = "use std::collections::HashMap;\n";
+        let core = audit_source("trainer/mod.rs", src);
+        assert_eq!(core.len(), 1);
+        assert_eq!(core[0].rule, Rule::R1);
+        assert_eq!(core[0].line, 1);
+        assert!(audit_source("metrics/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r2_fires_everywhere_but_clock() {
+        let src = "let t = std::time::Instant::now();\n";
+        assert_eq!(audit_source("metrics/mod.rs", src).len(), 1);
+        assert_eq!(audit_source("trainer/mod.rs", src).len(), 1);
+        assert!(audit_source("util/clock.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r3_allows_fixed_order_sites() {
+        let src = "let s = xs.iter().sum::<f32>();\n";
+        assert_eq!(audit_source("collectives/pipeline.rs", src).len(), 1);
+        assert!(audit_source("collectives/sparse_agg.rs", src).is_empty());
+        assert!(audit_source("runtime/kernels.rs", src).is_empty());
+        assert!(audit_source("metrics/mod.rs", src).is_empty(), "R3 is core-scoped");
+    }
+
+    #[test]
+    fn waiver_suppresses_and_reports() {
+        let src = format!(
+            "let t = Instant::now(); // {} allow(R2) reason=\"test fixture\"\n",
+            WAIVER_MARK
+        );
+        let fs = audit_source("trainer/mod.rs", &src);
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].is_waived());
+        assert_eq!(fs[0].waiver.as_deref(), Some("test fixture"));
+    }
+
+    #[test]
+    fn preceding_line_waiver_targets_next_code_line() {
+        let src = format!(
+            "// {} allow(R1) reason=\"point lookups only\"\nlet m = HashMap::new();\n",
+            WAIVER_MARK
+        );
+        let fs = audit_source("cluster/mod.rs", &src);
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].is_waived());
+        assert_eq!(fs[0].line, 2);
+    }
+
+    #[test]
+    fn reasonless_waiver_is_a_w0_and_suppresses_nothing() {
+        let src = format!("let t = Instant::now(); // {} allow(R2)\n", WAIVER_MARK);
+        let fs = audit_source("trainer/mod.rs", &src);
+        assert_eq!(fs.len(), 2);
+        assert!(fs.iter().any(|f| f.rule == Rule::R2 && !f.is_waived()));
+        assert!(fs.iter().any(|f| f.rule == Rule::W0));
+    }
+
+    #[test]
+    fn unknown_rule_in_waiver_is_malformed() {
+        let src = format!("// {} allow(R9) reason=\"x\"\nlet y = 1;\n", WAIVER_MARK);
+        let fs = audit_source("trainer/mod.rs", &src);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, Rule::W0);
+    }
+
+    #[test]
+    fn unused_waiver_is_ignored() {
+        let src = format!("// {} allow(R2) reason=\"docs example\"\nlet y = 1;\n", WAIVER_MARK);
+        assert!(audit_source("trainer/mod.rs", &src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_blocks_are_skipped() {
+        let src = "fn f() {}\n#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n    fn g() { let t = std::time::Instant::now(); }\n}\nfn h() { let m: HashMap<u8, u8> = HashMap::new(); }\n";
+        let fs = audit_source("trainer/mod.rs", src);
+        // only the HashMap *outside* the test mod fires
+        assert!(!fs.is_empty());
+        assert!(fs.iter().all(|f| f.line == 7 && f.rule == Rule::R1));
+    }
+
+    #[test]
+    fn strings_and_comments_never_fire() {
+        let src = "// uses Instant::now and HashMap\nlet s = \"unsafe HashMap Instant::now\";\n";
+        assert!(audit_source("trainer/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r4_and_r5_fire_crate_wide() {
+        let fs = audit_source("metrics/mod.rs", "unsafe { core::hint::unreachable_unchecked() }\n");
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, Rule::R4);
+        let fs = audit_source("util/json.rs", "let r = rand::thread_rng();\n");
+        assert_eq!(fs.iter().filter(|f| f.rule == Rule::R5).count(), 2);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let findings = audit_source(
+            "trainer/mod.rs",
+            &format!(
+                "let m = HashMap::new(); // {} allow(R1) reason=\"fixture\"\nunsafe {{}}\n",
+                WAIVER_MARK
+            ),
+        );
+        let rep = AuditReport { root: "mem".to_string(), files_scanned: 1, findings };
+        let j = rep.to_json();
+        assert!(!j.get("clean").unwrap().as_bool().unwrap());
+        assert_eq!(j.get("findings").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(j.get("waivers").unwrap().as_arr().unwrap().len(), 1);
+        let w = &j.get("waivers").unwrap().as_arr().unwrap()[0];
+        assert_eq!(w.get("reason").unwrap().as_str().unwrap(), "fixture");
+        // render is total
+        assert!(rep.render().contains("unwaived"));
+    }
+}

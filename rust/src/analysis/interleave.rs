@@ -1,0 +1,163 @@
+//! Exhaustive interleaving enumeration — a miniature, dependency-free
+//! `loom` for the repo's message-passing concurrency.
+//!
+//! The overlap pipeline's only cross-thread interaction is an `mpsc`
+//! channel: P producer threads each publish their layers in a fixed
+//! per-thread order, and the aggregator consumes whatever interleaving the
+//! scheduler produced. Determinism therefore has to hold for **every**
+//! merge of the per-thread sequences, not just the handful a live run
+//! happens to exercise. This module enumerates exactly that schedule
+//! space: all distinct interleavings of `k` sequences with lengths
+//! `lens[0..k]`, i.e. the multinomial `(Σ lens)! / Π lens[i]!`, in
+//! lexicographic thread-id order (deterministic, so a failing schedule
+//! index is a stable repro).
+//!
+//! `rust/tests/concurrency_model.rs` drives `StreamAggregator`
+//! publish/arm_participants/fire ordering and `MergeBuffer`
+//! capacity-resize through every schedule and asserts the pipeline
+//! invariants (strict backprop-order firing, rank-ordered bit-identical
+//! reductions, quorum gating, conservation across resize). What this
+//! cannot see — torn reads, reordered non-atomic writes, racy `unsafe` —
+//! is covered by the real `loom`/Miri/TSan jobs in the scheduled CI tier
+//! (DESIGN.md §Determinism contract and enforcement); what *they* cannot
+//! see (loom explores a fixed closure, these tests sweep parameterised
+//! topologies) is covered here. The two tiers are complements, not
+//! substitutes.
+
+/// Number of distinct interleavings of sequences with the given lengths:
+/// `(Σ lens)! / Π (lens[i]!)`, computed without overflow for the sizes the
+/// model tests use (panics on u128 overflow otherwise).
+pub fn count(lens: &[usize]) -> u128 {
+    let mut total: u128 = 1;
+    let mut placed: u128 = 0;
+    for &len in lens {
+        // choose positions for this thread's ops among the slots so far:
+        // total *= C(placed + len, len), kept exact by interleaving the
+        // multiplications and divisions
+        for j in 1..=len as u128 {
+            placed += 1;
+            total = total.checked_mul(placed).expect("interleaving count overflow") / j;
+        }
+    }
+    total
+}
+
+/// Invoke `f` once per distinct interleaving. Each schedule is the full
+/// sequence of thread ids, e.g. `[0, 1, 0]` = thread 0's first op, then
+/// thread 1's first op, then thread 0's second op. Schedules arrive in
+/// lexicographic order of the thread-id sequence. Returns the number of
+/// schedules visited.
+///
+/// Guard rail: panics if the schedule space exceeds `10_000_000` — an
+/// exhaustive model that large belongs in the scheduled loom tier, not in
+/// `cargo test`.
+pub fn for_each_schedule<F: FnMut(&[usize])>(lens: &[usize], mut f: F) -> u128 {
+    let total = count(lens);
+    assert!(
+        total <= 10_000_000,
+        "schedule space {total} too large for exhaustive in-test exploration"
+    );
+    let n: usize = lens.iter().sum();
+    if n == 0 {
+        f(&[]);
+        return 1;
+    }
+    let mut remaining: Vec<usize> = lens.to_vec();
+    let mut schedule: Vec<usize> = Vec::with_capacity(n);
+    let mut visited = 0u128;
+    dfs(&mut remaining, &mut schedule, n, &mut f, &mut visited);
+    debug_assert_eq!(visited, total);
+    visited
+}
+
+fn dfs<F: FnMut(&[usize])>(
+    remaining: &mut [usize],
+    schedule: &mut Vec<usize>,
+    n: usize,
+    f: &mut F,
+    visited: &mut u128,
+) {
+    if schedule.len() == n {
+        f(schedule);
+        *visited += 1;
+        return;
+    }
+    for t in 0..remaining.len() {
+        if remaining[t] == 0 {
+            continue;
+        }
+        remaining[t] -= 1;
+        schedule.push(t);
+        dfs(remaining, schedule, n, f, visited);
+        schedule.pop();
+        remaining[t] += 1;
+    }
+}
+
+/// Convenience: materialise every schedule (small spaces only — the model
+/// tests mostly stream via [`for_each_schedule`]).
+pub fn schedules(lens: &[usize]) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    for_each_schedule(lens, |s| out.push(s.to_vec()));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_match_multinomials() {
+        assert_eq!(count(&[]), 1);
+        assert_eq!(count(&[3]), 1);
+        assert_eq!(count(&[1, 1]), 2);
+        assert_eq!(count(&[2, 1]), 3);
+        assert_eq!(count(&[2, 2]), 6);
+        assert_eq!(count(&[3, 3]), 20);
+        // 3 workers x 3 layers: 9! / 6^3
+        assert_eq!(count(&[3, 3, 3]), 1680);
+        // 2 workers x 4 layers: 8! / (24 * 24)
+        assert_eq!(count(&[4, 4]), 70);
+    }
+
+    #[test]
+    fn enumeration_is_exact_and_lexicographic() {
+        let all = schedules(&[2, 1]);
+        assert_eq!(all, vec![vec![0, 0, 1], vec![0, 1, 0], vec![1, 0, 0]]);
+        let all = schedules(&[1, 1, 1]);
+        assert_eq!(all.len(), 6);
+        let mut sorted = all.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted, all, "lexicographic and duplicate-free");
+    }
+
+    #[test]
+    fn each_schedule_preserves_per_thread_order_and_counts() {
+        let lens = [3usize, 2, 1];
+        let visited = for_each_schedule(&lens, |s| {
+            assert_eq!(s.len(), 6);
+            for (t, &len) in lens.iter().enumerate() {
+                assert_eq!(s.iter().filter(|&&x| x == t).count(), len);
+            }
+        });
+        assert_eq!(visited, count(&lens));
+    }
+
+    #[test]
+    fn empty_space_has_one_schedule() {
+        let mut seen = 0;
+        for_each_schedule(&[], |s| {
+            assert!(s.is_empty());
+            seen += 1;
+        });
+        assert_eq!(seen, 1);
+        assert_eq!(schedules(&[0, 0]).len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "too large")]
+    fn oversized_space_is_rejected() {
+        for_each_schedule(&[10, 10, 10], |_| {});
+    }
+}

@@ -1,0 +1,28 @@
+//! Static + model-based enforcement of the determinism contract.
+//!
+//! The repo's central guarantee — same seed + same fault plan ⇒
+//! bit-identical losses, params, and message stats across thread counts,
+//! pipeline modes, elastic membership, and kill-and-resume — used to be
+//! enforced only *dynamically*, by the integration-test matrices. This
+//! module makes the contract statically checkable and adds a deterministic
+//! concurrency-model harness for the parts a lint cannot see:
+//!
+//! * [`audit`] — `lags-audit`, a dependency-free token/line-level scanner
+//!   over `rust/src/**` that enforces rules R1–R5 (order-unstable
+//!   collections, wall-clock/env reads, unordered float accumulation,
+//!   `unsafe`, non-`util::rng` randomness) with an explicit, machine-
+//!   readable waiver protocol (`audit.json`). Run via `lags audit` or the
+//!   standalone `lags-audit` bin; gates the fast CI tier.
+//! * [`interleave`] — an exhaustive interleaving enumerator (a miniature,
+//!   dependency-free loom): tests replay every legal schedule of
+//!   concurrent producer operations against `StreamAggregator` /
+//!   `MergeBuffer` invariants, so "determinism survives the overlap" is
+//!   checked over the *whole* schedule space, not the few orders a live
+//!   `mpsc` race happens to produce. The real `loom`/Miri/TSan jobs in the
+//!   scheduled CI tier cover the memory-model layer below this
+//!   (DESIGN.md §Determinism contract and enforcement).
+
+pub mod audit;
+pub mod interleave;
+
+pub use audit::{audit_tree, AuditReport, Finding, Rule};

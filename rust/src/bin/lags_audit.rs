@@ -1,0 +1,20 @@
+//! Standalone determinism-contract auditor (`lags-audit`) — the same pass
+//! as `lags audit`, packaged as its own bin so CI and pre-commit hooks can
+//! run it without pulling in the full coordinator CLI.
+//!
+//! Usage: `lags-audit [--root rust/src] [--json audit.json]`
+//! Exits non-zero on any unwaived finding.
+
+#![forbid(unsafe_code)]
+
+use lags::analysis::audit;
+use lags::util::cli::Args;
+use lags::Result;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let root = args.flags.get("root").map(String::as_str).unwrap_or("rust/src");
+    let json = args.flags.get("json").map(String::as_str).unwrap_or("audit.json");
+    audit::run_cli(Path::new(root), Some(Path::new(json)))
+}

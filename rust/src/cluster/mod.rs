@@ -13,9 +13,9 @@ pub mod faults;
 use crate::collectives::pipeline::LayerMsg;
 use crate::runtime::native::{CompressScratch, GradScratch};
 use crate::sparsify::{ErrorFeedback, SparseVec};
+use crate::util::clock;
 use anyhow::{ensure, Result};
 use std::sync::mpsc::Sender;
-use std::time::Instant;
 
 /// Per-replica state.
 ///
@@ -112,14 +112,14 @@ impl Worker {
         let msg = std::mem::take(&mut self.msgs[li]);
         // send can only fail if the aggregator died, in which case the
         // executor surfaces that error; dropping the message here is fine
-        let _ = sink.send(LayerMsg { rank, layer: li, msg, sent: Instant::now() });
+        let _ = sink.send(LayerMsg { rank, layer: li, msg, sent: clock::now() });
     }
 
     /// SLGS variant: publish the whole-flat-vector message as layer 0 of a
     /// single-layer stream.
     pub fn publish_flat(&mut self, rank: usize, sink: &Sender<LayerMsg>) {
         let msg = std::mem::take(&mut self.msg_flat);
-        let _ = sink.send(LayerMsg { rank, layer: 0, msg, sent: Instant::now() });
+        let _ = sink.send(LayerMsg { rank, layer: 0, msg, sent: clock::now() });
     }
 
     /// Size the per-layer message scratch for a model's layer table. Called

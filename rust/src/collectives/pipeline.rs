@@ -309,7 +309,7 @@ mod tests {
         for i in rng.sample_distinct(n, (n / 3).max(1)) {
             dense[i] = rng.normal_f32();
         }
-        LayerMsg { rank, layer, msg: SparseVec::from_dense(&dense), sent: Instant::now() }
+        LayerMsg { rank, layer, msg: SparseVec::from_dense(&dense), sent: crate::util::clock::now() }
     }
 
     #[test]
@@ -418,7 +418,7 @@ mod tests {
 
     #[test]
     fn overlap_timer_counts_hidden_before_last_send() {
-        let t0 = Instant::now();
+        let t0 = crate::util::clock::now();
         let mut timer = OverlapTimer::new();
         let ms = Duration::from_millis(1);
         // busy interval entirely before the last send → fully hidden

@@ -125,6 +125,7 @@ mod tests {
     use super::*;
 
     #[test]
+    #[allow(clippy::disallowed_types)] // distinctness check only, not order-sensitive
     fn mlp_labels_in_range_and_varied() {
         let t = TeacherMlp::new(32, 10, 64, 1);
         let b = t.batch(0);

@@ -37,8 +37,17 @@
 //! let report = t.run().unwrap();
 //! println!("final loss {:.4}", report.final_loss);
 //! ```
+//!
+//! The crate ships its own determinism auditor ([`analysis`], `lags
+//! audit`): rules R1–R5 (DESIGN.md §Determinism contract and enforcement)
+//! are statically enforced over this source tree, `unsafe` is forbidden
+//! crate-wide, and every wall-clock read funnels through
+//! [`util::clock::now`].
+
+#![forbid(unsafe_code)]
 
 pub mod adaptive;
+pub mod analysis;
 pub mod cluster;
 pub mod collectives;
 pub mod config;

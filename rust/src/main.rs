@@ -11,6 +11,9 @@
 //!   ratios    — Eq. 18 adaptive ratio selection report
 //!   calibrate — measure sustained device flops at the zoo's GEMM shapes
 //!   smax      — Eq. 19 S_max sweep over r = t_c/t_b
+//!   audit     — static determinism-contract lint over rust/src (R1–R5)
+
+#![forbid(unsafe_code)]
 
 use anyhow::Result;
 use lags::adaptive::{self, perf_model, RatioConfig};
@@ -165,6 +168,16 @@ USAGE: lags <subcommand> [flags]
            price Eq. 18 with the measured number
   smax     [--tf F] [--tb F]
   sweep    [--profile NAME] [--compression C] [--workers P] [--net-alpha F]
+  audit    [--root rust/src] [--json audit.json]
+
+           static determinism-contract lint (rules R1-R5, DESIGN.md
+           §Determinism contract and enforcement): masks comments/strings/
+           test modules, flags order-unstable collections in the
+           deterministic core, wall-clock/env reads outside util::clock,
+           unordered float accumulation, unsafe, and foreign randomness.
+           Inline waivers suppress findings but are always emitted into
+           the machine-readable audit.json; exits non-zero on any
+           unwaived finding (gates the fast CI tier)
 ";
 
 fn main() {
@@ -199,6 +212,7 @@ fn run(args: &Args) -> Result<()> {
         Some("calibrate") => cmd_calibrate(args),
         Some("smax") => cmd_smax(args),
         Some("sweep") => cmd_sweep(args),
+        Some("audit") => cmd_audit(args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -680,6 +694,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     println!("(sparsification's S1 shrinks toward 1 as bandwidth grows — the paper's");
     println!(" premise that gradient compression targets slow commodity interconnects)");
     Ok(())
+}
+
+/// `lags audit` — run the determinism-contract lint over the source tree
+/// and write the machine-readable report. Same driver as the standalone
+/// `lags-audit` bin.
+fn cmd_audit(args: &Args) -> Result<()> {
+    let root = args.str_or("root", "rust/src");
+    let json = args.str_or("json", "audit.json");
+    lags::analysis::audit::run_cli(std::path::Path::new(&root), Some(std::path::Path::new(&json)))
 }
 
 fn cmd_smax(args: &Args) -> Result<()> {

@@ -21,12 +21,13 @@
 use super::kernels;
 use super::native::NativeNet;
 use super::Manifest;
+use crate::util::clock;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use anyhow::{ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Total measurement budget of a default calibration run. Split across
 /// the deduped shape set; each shape also gets a minimum floor so tiny
@@ -215,7 +216,7 @@ fn time_shape(rng: &mut Rng, m: usize, k: usize, n: usize, window: Duration) -> 
         // iterations; re-zeroing outside the timed region keeps the
         // arithmetic in the normal f32 range without charging the memset
         c.iter_mut().for_each(|v| *v = 0.0);
-        let t0 = Instant::now();
+        let t0 = clock::now();
         for _ in 0..iters {
             kernels::gemm_nn(&mut c, &a, &b, m, k, n);
         }

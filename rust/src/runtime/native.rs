@@ -173,10 +173,33 @@ fn col2im_add(d: &ConvDims, dcol: &[f32], dx: &mut [f32]) {
     }
 }
 
+/// Reusable im2col scratch for the conv backward pass: the per-sample
+/// im2col matrix (`col`), its gradient-layout twin (`dcol`), and the
+/// packed-`Wᵀ` buffer the dX GEMM reads (`wt`, only touched when dX is
+/// requested). Bundling the three keeps [`conv2d_backward`] at a
+/// reviewable arity (formerly an `#[allow(clippy::too_many_arguments)]`
+/// site) and documents that they are one borrow unit: worker-owned,
+/// resized in place, never aliased with the gradient outputs.
+pub struct ConvScratch<'a> {
+    pub col: &'a mut Vec<f32>,
+    pub dcol: &'a mut Vec<f32>,
+    pub wt: &'a mut Vec<f32>,
+}
+
+/// The conv backward pass's gradient outputs: `dw`/`db` are accumulated
+/// into (`+=`), `dx` (if present) is overwritten per sample.
+pub struct ConvGrads<'a> {
+    pub dw: &'a mut [f32],
+    pub db: &'a mut [f32],
+    pub dx: Option<&'a mut [f32]>,
+}
+
 /// Conv2d forward over a whole batch. `w` is the fused weight block
 /// `[patch, cout]` row-major, `bias` is `[cout]`; `col` is reusable
-/// scratch (resized to one sample's im2col matrix).
-#[allow(clippy::too_many_arguments)]
+/// scratch (resized to one sample's im2col matrix). The output is the
+/// raw pre-activation — callers apply their own activation mask (the
+/// trainer ReLUs the whole batch after this returns, elementwise, which
+/// is bit-identical to masking per sample).
 pub fn conv2d_forward(
     d: &ConvDims,
     w: &[f32],
@@ -185,7 +208,6 @@ pub fn conv2d_forward(
     batch: usize,
     col: &mut Vec<f32>,
     out: &mut [f32],
-    relu: bool,
 ) {
     let (np, patch, cout) = (d.out_h() * d.out_w(), d.patch(), d.cout);
     debug_assert_eq!(w.len(), d.weight_len());
@@ -202,63 +224,63 @@ pub fn conv2d_forward(
             on[p * cout..(p + 1) * cout].copy_from_slice(bias);
         }
         kernels::gemm_nn(on, col, w, np, patch, cout);
-        if relu {
-            for o in on.iter_mut() {
-                *o = o.max(0.0);
-            }
-        }
     }
 }
 
 /// Conv2d backward over a whole batch. `delta` is dL/d(out) AFTER the
-/// caller applied the activation mask; `dw`/`db` are accumulated into
-/// (`+=`), `dx` (if given) is overwritten per sample. `col`/`dcol` are
-/// reusable scratch; `wt` is scratch for the packed `Wᵀ` the dX GEMM
-/// reads (only touched when `dx` is requested).
-#[allow(clippy::too_many_arguments)]
+/// caller applied the activation mask; gradients land in `g`
+/// ([`ConvGrads`]), scratch comes from `s` ([`ConvScratch`]).
 pub fn conv2d_backward(
     d: &ConvDims,
     w: &[f32],
     x: &[f32],
     batch: usize,
     delta: &[f32],
-    col: &mut Vec<f32>,
-    dcol: &mut Vec<f32>,
-    wt: &mut Vec<f32>,
-    dw: &mut [f32],
-    db: &mut [f32],
-    mut dx: Option<&mut [f32]>,
+    s: &mut ConvScratch<'_>,
+    g: &mut ConvGrads<'_>,
 ) {
     let (np, patch, cout) = (d.out_h() * d.out_w(), d.patch(), d.cout);
-    debug_assert_eq!(dw.len(), d.weight_len());
-    debug_assert_eq!(db.len(), cout);
+    debug_assert_eq!(g.dw.len(), d.weight_len());
+    debug_assert_eq!(g.db.len(), cout);
     debug_assert_eq!(delta.len(), batch * np * cout);
-    col.clear();
-    col.resize(np * patch, 0.0);
-    dcol.clear();
-    dcol.resize(np * patch, 0.0);
-    if dx.is_some() {
+    s.col.clear();
+    s.col.resize(np * patch, 0.0);
+    s.dcol.clear();
+    s.dcol.resize(np * patch, 0.0);
+    if g.dx.is_some() {
         // Wᵀ [cout, patch], packed once for the whole batch
-        kernels::pack_transpose(w, patch, cout, wt);
+        kernels::pack_transpose(w, patch, cout, s.wt);
     }
     for n in 0..batch {
         let xn = &x[n * d.in_len()..(n + 1) * d.in_len()];
-        im2col(d, xn, col);
+        im2col(d, xn, s.col);
         let dn = &delta[n * np * cout..(n + 1) * np * cout];
         // dW[q, co] += Σ_p col[p, q]·δ[p, co]  (colᵀ·δ — samples in n
         // order, rows in p order, the direct convolution's accumulation)
-        kernels::gemm_tn(dw, col, dn, patch, np, cout);
+        kernels::gemm_tn(g.dw, s.col, dn, patch, np, cout);
         // db[co] += Σ_p δ[p, co]
-        kernels::col_sum_add(db, dn, np, cout);
-        if let Some(dx) = dx.as_deref_mut() {
+        kernels::col_sum_add(g.db, dn, np, cout);
+        if let Some(dx) = g.dx.as_deref_mut() {
             // dcol[p, q] = Σ_co δ[p, co]·wᵀ[co, q], then col2im
-            dcol.iter_mut().for_each(|v| *v = 0.0);
-            kernels::gemm_nn(dcol, dn, wt, np, cout, patch);
+            s.dcol.iter_mut().for_each(|v| *v = 0.0);
+            kernels::gemm_nn(s.dcol, dn, s.wt, np, cout, patch);
             let dxn = &mut dx[n * d.in_len()..(n + 1) * d.in_len()];
             dxn.iter_mut().for_each(|v| *v = 0.0);
-            col2im_add(d, dcol, dxn);
+            col2im_add(d, s.dcol, dxn);
         }
     }
+}
+
+/// MaxPool window geometry: an `[h, w, c]` input pooled by k×k windows
+/// at stride k. A plain value bundle so the pool entry points stay at a
+/// reviewable arity (formerly `#[allow(clippy::too_many_arguments)]`
+/// sites).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolDims {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub k: usize,
 }
 
 /// MaxPool k×k (stride k) forward over a batch of `[h, w, c]` samples,
@@ -267,17 +289,14 @@ pub fn conv2d_backward(
 /// table lookup instead of re-scanning every k×k window
 /// ([`maxpool_backward_idx`]). Ties resolve to the first strict max in
 /// (ky, kx) scan order, exactly as the re-scanning reference does.
-#[allow(clippy::too_many_arguments)]
 pub fn maxpool_forward_idx(
-    h: usize,
-    w: usize,
-    c: usize,
-    k: usize,
+    p: &PoolDims,
     x: &[f32],
     batch: usize,
     out: &mut [f32],
     idx: &mut Vec<u32>,
 ) {
+    let PoolDims { h, w, c, k } = *p;
     let (ho, wo) = (h / k, w / k);
     debug_assert_eq!(out.len(), batch * ho * wo * c);
     idx.clear();
@@ -310,9 +329,9 @@ pub fn maxpool_forward_idx(
 
 /// MaxPool forward without index caching (test/reference convenience —
 /// the trainer always runs [`maxpool_forward_idx`]).
-pub fn maxpool_forward(h: usize, w: usize, c: usize, k: usize, x: &[f32], batch: usize, out: &mut [f32]) {
+pub fn maxpool_forward(p: &PoolDims, x: &[f32], batch: usize, out: &mut [f32]) {
     let mut idx = Vec::new();
-    maxpool_forward_idx(h, w, c, k, x, batch, out, &mut idx);
+    maxpool_forward_idx(p, x, batch, out, &mut idx);
 }
 
 /// MaxPool backward via the forward pass's cached argmax table: `dx` is
@@ -334,17 +353,8 @@ pub fn maxpool_backward_idx(idx: &[u32], delta: &[f32], dx: &mut [f32]) {
 /// is overwritten. The trainer uses the cached-index fast path
 /// ([`maxpool_backward_idx`]); this re-scan is kept as its conformance
 /// reference.
-#[allow(clippy::too_many_arguments)]
-pub fn maxpool_backward(
-    h: usize,
-    w: usize,
-    c: usize,
-    k: usize,
-    x: &[f32],
-    batch: usize,
-    delta: &[f32],
-    dx: &mut [f32],
-) {
+pub fn maxpool_backward(p: &PoolDims, x: &[f32], batch: usize, delta: &[f32], dx: &mut [f32]) {
+    let PoolDims { h, w, c, k } = *p;
     let (ho, wo) = (h / k, w / k);
     debug_assert_eq!(delta.len(), batch * ho * wo * c);
     debug_assert_eq!(dx.len(), batch * h * w * c);
@@ -373,21 +383,49 @@ pub fn maxpool_backward(
     }
 }
 
+/// Elman cell geometry: `batch` sequences of `t` steps, `in_dim` inputs
+/// per step, `hidden` state width. A plain value bundle so the recurrent
+/// entry points stay at a reviewable arity (formerly
+/// `#[allow(clippy::too_many_arguments)]` sites).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ElmanDims {
+    pub batch: usize,
+    pub t: usize,
+    pub in_dim: usize,
+    pub hidden: usize,
+}
+
+/// The Elman cell's weight matrices: `wx` is `[in_dim, hidden]`, `wh` is
+/// `[hidden, hidden]`, both row-major.
+pub struct ElmanWeights<'a> {
+    pub wx: &'a [f32],
+    pub wh: &'a [f32],
+}
+
+/// Reusable BPTT scratch: the per-step δ row (`dh`), the recurrent carry
+/// row (`carry`), and the packed `Wxᵀ|Whᵀ` block the dx/carry GEMMs read
+/// (`wt`, packed once per [`elman_backward`] call).
+pub struct ElmanScratch<'a> {
+    pub dh: &'a mut Vec<f32>,
+    pub carry: &'a mut Vec<f32>,
+    pub wt: &'a mut Vec<f32>,
+}
+
+/// The BPTT gradient outputs: `dwx`/`dwh`/`db` are accumulated into
+/// (`+=`), `dx` (if present) is overwritten.
+pub struct ElmanGrads<'a> {
+    pub dwx: &'a mut [f32],
+    pub dwh: &'a mut [f32],
+    pub db: &'a mut [f32],
+    pub dx: Option<&'a mut [f32]>,
+}
+
 /// Elman forward: `h_s = tanh(Wx·x_s + Wh·h_{s-1} + b)` unrolled over the
 /// sequence, `h_0 = 0` per sequence. `x` is `[batch, t, in_dim]`, `out`
 /// receives all hidden states `[batch, t, hidden]`.
-#[allow(clippy::too_many_arguments)]
-pub fn elman_forward(
-    t: usize,
-    in_dim: usize,
-    hidden: usize,
-    wx: &[f32],
-    wh: &[f32],
-    bias: &[f32],
-    x: &[f32],
-    batch: usize,
-    out: &mut [f32],
-) {
+pub fn elman_forward(e: &ElmanDims, w: &ElmanWeights<'_>, bias: &[f32], x: &[f32], out: &mut [f32]) {
+    let ElmanDims { batch, t, in_dim, hidden } = *e;
+    let (wx, wh) = (w.wx, w.wh);
     debug_assert_eq!(wx.len(), in_dim * hidden);
     debug_assert_eq!(wh.len(), hidden * hidden);
     debug_assert_eq!(out.len(), batch * t * hidden);
@@ -416,30 +454,20 @@ pub fn elman_forward(
 /// Elman BPTT: walk each sequence backward carrying `dL/dh` through the
 /// recurrence. `delta` is dL/d(h states) as produced by the layers above
 /// (tanh' is applied HERE — callers must not pre-mask); `hs` is the
-/// forward pass's state tensor; `dwx`/`dwh`/`db` accumulate (`+=`), `dx`
-/// (if given) is overwritten. `dh`/`carry` are reusable scratch; `wt`
-/// holds the packed `Wxᵀ | Whᵀ` the dx/carry GEMMs read (packed once per
-/// call).
-#[allow(clippy::too_many_arguments)]
+/// forward pass's state tensor; gradients land in `g` ([`ElmanGrads`]),
+/// scratch comes from `s` ([`ElmanScratch`]).
 pub fn elman_backward(
-    t: usize,
-    in_dim: usize,
-    hidden: usize,
-    wx: &[f32],
-    wh: &[f32],
+    e: &ElmanDims,
+    w: &ElmanWeights<'_>,
     x: &[f32],
     hs: &[f32],
-    batch: usize,
     delta: &[f32],
-    dh: &mut Vec<f32>,
-    carry: &mut Vec<f32>,
-    wt: &mut Vec<f32>,
-    dwx: &mut [f32],
-    dwh: &mut [f32],
-    db: &mut [f32],
-    mut dx: Option<&mut [f32]>,
+    s: &mut ElmanScratch<'_>,
+    g: &mut ElmanGrads<'_>,
 ) {
+    let ElmanDims { batch, t, in_dim, hidden } = *e;
     debug_assert_eq!(delta.len(), batch * t * hidden);
+    let (dh, carry, wt) = (&mut *s.dh, &mut *s.carry, &mut *s.wt);
     dh.clear();
     dh.resize(hidden, 0.0);
     carry.clear();
@@ -449,34 +477,34 @@ pub fn elman_backward(
     wt.clear();
     wt.resize(hidden * hidden + hidden * in_dim, 0.0);
     let (wht, wxt) = wt.split_at_mut(hidden * hidden);
-    kernels::pack_transpose_into(wh, hidden, hidden, wht);
-    kernels::pack_transpose_into(wx, in_dim, hidden, wxt);
+    kernels::pack_transpose_into(w.wh, hidden, hidden, wht);
+    kernels::pack_transpose_into(w.wx, in_dim, hidden, wxt);
     for n in 0..batch {
         carry.iter_mut().for_each(|v| *v = 0.0);
-        for s in (0..t).rev() {
-            let base = (n * t + s) * hidden;
+        for step in (0..t).rev() {
+            let base = (n * t + step) * hidden;
             let hrow = &hs[base..base + hidden];
             // δ_s = (incoming + recurrent carry) ⊙ tanh'(h_s)
             for j in 0..hidden {
                 dh[j] = (delta[base + j] + carry[j]) * (1.0 - hrow[j] * hrow[j]);
             }
             // dWx[i, j] += x_i·δ_j (rank-1), dWh[j0, j] += h_{s-1,j0}·δ_j
-            let xrow = &x[(n * t + s) * in_dim..(n * t + s + 1) * in_dim];
-            kernels::gemm_tn(dwx, xrow, dh, in_dim, 1, hidden);
-            if s > 0 {
+            let xrow = &x[(n * t + step) * in_dim..(n * t + step + 1) * in_dim];
+            kernels::gemm_tn(g.dwx, xrow, dh, in_dim, 1, hidden);
+            if step > 0 {
                 let hprev = &hs[base - hidden..base];
-                kernels::gemm_tn(dwh, hprev, dh, hidden, 1, hidden);
+                kernels::gemm_tn(g.dwh, hprev, dh, hidden, 1, hidden);
             }
-            for (g, &dj) in db.iter_mut().zip(dh.iter()) {
-                *g += dj;
+            for (gb, &dj) in g.db.iter_mut().zip(dh.iter()) {
+                *gb += dj;
             }
-            if let Some(dx) = dx.as_deref_mut() {
+            if let Some(dx) = g.dx.as_deref_mut() {
                 // dx_s[i] = Σ_j wx[i, j]·δ_j = δ·Wxᵀ (1-row GEMM)
-                let dxrow = &mut dx[(n * t + s) * in_dim..(n * t + s + 1) * in_dim];
+                let dxrow = &mut dx[(n * t + step) * in_dim..(n * t + step + 1) * in_dim];
                 dxrow.iter_mut().for_each(|v| *v = 0.0);
                 kernels::gemm_nn(dxrow, dh, wxt, 1, hidden, in_dim);
             }
-            if s > 0 {
+            if step > 0 {
                 // carry_{s-1}[j] = Σ_o wh[j, o]·δ_o = δ·Whᵀ
                 carry.iter_mut().for_each(|v| *v = 0.0);
                 kernels::gemm_nn(carry, dh, wht, 1, hidden, hidden);
@@ -495,6 +523,7 @@ pub fn softmax_xent(rows: usize, classes: usize, logits: &[f32], labels: &[i32],
     for n in 0..rows {
         let row = &logits[n * classes..(n + 1) * classes];
         let drow = &mut dlogits[n * classes..(n + 1) * classes];
+        // lags-audit: allow(R3) reason="max-fold for softmax stabilization: f32::max is order-insensitive, no rounding accumulates"
         let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut z = 0.0f32;
         for (d, &v) in drow.iter_mut().zip(row.iter()) {
@@ -1000,11 +1029,17 @@ impl NativeNet {
                     let input = input_f32.expect("checked: f32 input");
                     let w = &params[off..off + dims.weight_len()];
                     let bias = &params[off + dims.weight_len()..off + dims.weight_len() + dims.cout];
-                    conv2d_forward(dims, w, bias, input, b, col, out, true);
+                    conv2d_forward(dims, w, bias, input, b, col, out);
+                    // conv output is always ReLU'd (whole-batch elementwise
+                    // mask, bit-identical to masking inside the batch loop)
+                    for o in out.iter_mut() {
+                        *o = o.max(0.0);
+                    }
                 }
                 ResolvedKind::Pool { h, w, c, k } => {
                     let input = input_f32.expect("checked: f32 input");
-                    maxpool_forward_idx(*h, *w, *c, *k, input, b, out, &mut pool_idx[l]);
+                    let p = PoolDims { h: *h, w: *w, c: *c, k: *k };
+                    maxpool_forward_idx(&p, input, b, out, &mut pool_idx[l]);
                 }
                 ResolvedKind::Embed { vocab: _, dim } => {
                     let BatchData::I32(toks) = x else { unreachable!("checked") };
@@ -1020,7 +1055,8 @@ impl NativeNet {
                     let wh = &params[off + in_dim * hidden..off + (in_dim + hidden) * hidden];
                     let bias = &params
                         [off + (in_dim + hidden) * hidden..off + (in_dim + hidden + 1) * hidden];
-                    elman_forward(*t, *in_dim, *hidden, wx, wh, bias, input, b, out);
+                    let e = ElmanDims { batch: b, t: *t, in_dim: *in_dim, hidden: *hidden };
+                    elman_forward(&e, &ElmanWeights { wx, wh }, bias, input, out);
                 }
             }
         }
@@ -1116,25 +1152,16 @@ impl NativeNet {
                     let w = &params[off..off + wlen];
                     let gslice = &mut grad[off..off + wlen + dims.cout];
                     let (dw, db) = gslice.split_at_mut(wlen);
+                    let mut scr = ConvScratch { col: &mut *col, dcol: &mut *dcol, wt: &mut *wt };
                     if l > 0 {
                         prev.clear();
                         prev.resize(layer.in_len, 0.0);
-                        conv2d_backward(
-                            dims,
-                            w,
-                            input,
-                            b,
-                            delta,
-                            col,
-                            dcol,
-                            wt,
-                            dw,
-                            db,
-                            Some(&mut prev[..]),
-                        );
+                        let mut g = ConvGrads { dw, db, dx: Some(&mut prev[..]) };
+                        conv2d_backward(dims, w, input, b, delta, &mut scr, &mut g);
                         std::mem::swap(&mut *delta, &mut *prev);
                     } else {
-                        conv2d_backward(dims, w, input, b, delta, col, dcol, wt, dw, db, None);
+                        let mut g = ConvGrads { dw, db, dx: None };
+                        conv2d_backward(dims, w, input, b, delta, &mut scr, &mut g);
                     }
                 }
                 ResolvedKind::Pool { .. } => {
@@ -1170,24 +1197,10 @@ impl NativeNet {
                     let (dwh, db) = rest.split_at_mut(whl);
                     prev.clear();
                     prev.resize(layer.in_len, 0.0);
-                    elman_backward(
-                        *t,
-                        *in_dim,
-                        *hidden,
-                        wx,
-                        wh,
-                        input,
-                        &acts[l],
-                        b,
-                        delta,
-                        dh,
-                        carry,
-                        wt,
-                        dwx,
-                        dwh,
-                        db,
-                        Some(&mut prev[..]),
-                    );
+                    let e = ElmanDims { batch: b, t: *t, in_dim: *in_dim, hidden: *hidden };
+                    let mut scr = ElmanScratch { dh: &mut *dh, carry: &mut *carry, wt: &mut *wt };
+                    let mut g = ElmanGrads { dwx, dwh, db, dx: Some(&mut prev[..]) };
+                    elman_backward(&e, &ElmanWeights { wx, wh }, input, &acts[l], delta, &mut scr, &mut g);
                     std::mem::swap(&mut *delta, &mut *prev);
                 }
             }
@@ -1805,17 +1818,18 @@ mod tests {
 
     #[test]
     fn maxpool_routes_gradient_to_argmax() {
-        let (h, w, c, k) = (4usize, 4usize, 1usize, 2usize);
+        let (h, w) = (4usize, 4usize);
+        let p = PoolDims { h, w, c: 1, k: 2 };
         let mut x = vec![0.0f32; h * w];
         x[5] = 3.0; // window (0,0): max at (1,1)
         x[2] = 7.0; // window (0,1): max at (0,2)
         let mut out = vec![0.0f32; 4];
-        maxpool_forward(h, w, c, k, &x, 1, &mut out);
+        maxpool_forward(&p, &x, 1, &mut out);
         assert_eq!(out[0], 3.0);
         assert_eq!(out[1], 7.0);
         let delta = vec![1.0f32, 2.0, 4.0, 8.0];
         let mut dx = vec![0.0f32; h * w];
-        maxpool_backward(h, w, c, k, &x, 1, &delta, &mut dx);
+        maxpool_backward(&p, &x, 1, &delta, &mut dx);
         assert_eq!(dx[5], 1.0);
         assert_eq!(dx[2], 2.0);
         assert_eq!(dx.iter().filter(|&&v| v != 0.0).count(), 4);
@@ -1829,6 +1843,7 @@ mod tests {
         // re-scanning reference, including ties (equal values in one
         // window resolve to the first strict max in scan order)
         let (h, w, c, k) = (6usize, 4usize, 2usize, 2usize);
+        let p = PoolDims { h, w, c, k };
         let batch = 3usize;
         let mut rng = Rng::new(21);
         let mut x = vec![0.0f32; batch * h * w * c];
@@ -1840,14 +1855,14 @@ mod tests {
         let mut out_a = vec![0.0f32; batch * ho * wo * c];
         let mut out_b = vec![0.0f32; batch * ho * wo * c];
         let mut idx = Vec::new();
-        maxpool_forward(h, w, c, k, &x, batch, &mut out_a);
-        maxpool_forward_idx(h, w, c, k, &x, batch, &mut out_b, &mut idx);
+        maxpool_forward(&p, &x, batch, &mut out_a);
+        maxpool_forward_idx(&p, &x, batch, &mut out_b, &mut idx);
         assert_eq!(out_a, out_b);
         let mut delta = vec![0.0f32; out_a.len()];
         rng.fill_normal(&mut delta, 1.0);
         let mut dx_scan = vec![0.0f32; x.len()];
         let mut dx_idx = vec![0.0f32; x.len()];
-        maxpool_backward(h, w, c, k, &x, batch, &delta, &mut dx_scan);
+        maxpool_backward(&p, &x, batch, &delta, &mut dx_scan);
         maxpool_backward_idx(&idx, &delta, &mut dx_idx);
         let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&dx_idx), bits(&dx_scan));
@@ -1883,7 +1898,8 @@ mod tests {
         let bias = vec![0.25f32, -0.5];
         let x = vec![1.0f32; t * i];
         let mut out = vec![0.0f32; t * h];
-        elman_forward(t, i, h, &wx, &wh, &bias, &x, 1, &mut out);
+        let e = ElmanDims { batch: 1, t, in_dim: i, hidden: h };
+        elman_forward(&e, &ElmanWeights { wx: &wx, wh: &wh }, &bias, &x, &mut out);
         for s in 0..t {
             assert!((out[s * h] - 0.25f32.tanh()).abs() < 1e-6);
             assert!((out[s * h + 1] - (-0.5f32).tanh()).abs() < 1e-6);

@@ -71,13 +71,13 @@ use crate::pipeline::desim::{simulate, Schedule, SimParams};
 use crate::pipeline::merge::{MergeBuffer, MergedGroup};
 use crate::runtime::{GradJob, Metric, ModelRuntime, Runtime};
 use crate::sparsify::CompressorKind;
-use crate::util::ParallelExecutor;
+use crate::util::{clock, ParallelExecutor};
 use anyhow::{Context, Result};
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Which distributed optimizer to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -134,6 +134,31 @@ fn apply_update_range(
     }
 }
 
+/// The aggregator thread's per-phase context: the disjoint state one
+/// streamed reduction phase mutates (aggregate, params, momentum) plus
+/// the constants that parameterise it. Bundling these keeps
+/// [`fire_group`]/[`drain_stream`] at a reviewable arity (the former
+/// `#[allow(clippy::too_many_arguments)]` sites) and makes the borrow
+/// story explicit: one `StepCtx` = exclusive access to everything the
+/// apply touches, handed to the drain closure as a unit.
+struct StepCtx<'a> {
+    /// per-layer (offset, size) spans the stream covers — the manifest's
+    /// layer table for LAGS, a single flat span for SLGS
+    spans: &'a [(usize, usize)],
+    /// scratch: the aggregated update (zeroed per layer slice)
+    agg: &'a mut [f32],
+    params: &'a mut [f32],
+    momentum: &'a mut [f32],
+    /// momentum coefficient μ
+    mu: f32,
+    /// 1 / (participating rank count)
+    inv_p: f32,
+    /// per-layer measured reduction seconds (EWMA profile input)
+    reduce_secs: &'a mut [f64],
+    /// clock the per-layer reductions into `reduce_secs`?
+    measure: bool,
+}
+
 /// Reduce + apply one flushed §5 merge group on the aggregator thread:
 /// for each layer of the group — in backprop order, every REQUIRED rank
 /// slot present in `stream` — zero its `agg` slice, reduce the
@@ -142,29 +167,21 @@ fn apply_update_range(
 /// (their messages fold back into their own residuals after the step);
 /// with full participation the filter passes every slot, bit-identical
 /// to the pre-quorum path. Each layer's rank-ordered reduction is
-/// individually clocked into `reduce_secs` when `measure` is on (the
+/// individually clocked into `reduce_secs` when `ctx.measure` is on (the
 /// online adaptive profile). Returns the group's total wire bytes.
-#[allow(clippy::too_many_arguments)]
 fn fire_group(
     group: &MergedGroup<usize>,
     stream: &StreamAggregator,
-    spans: &[(usize, usize)],
-    agg: &mut [f32],
-    params: &mut [f32],
-    momentum: &mut [f32],
-    mu: f32,
-    inv_p: f32,
+    ctx: &mut StepCtx<'_>,
     timer: &mut OverlapTimer,
-    reduce_secs: &mut [f64],
-    measure: bool,
 ) -> usize {
     for &li in &group.layer_indices {
-        let begin = Instant::now();
-        let (off, n) = spans[li];
+        let begin = clock::now();
+        let (off, n) = ctx.spans[li];
         {
-            let dst = &mut agg[off..off + n];
+            let dst = &mut ctx.agg[off..off + n];
             dst.iter_mut().for_each(|v| *v = 0.0);
-            let r0 = measure.then(Instant::now);
+            let r0 = ctx.measure.then(clock::now);
             sparse_agg::sparse_add_rank_ordered(
                 stream
                     .layer_slots(li)
@@ -175,11 +192,19 @@ fn fire_group(
                 dst,
             );
             if let Some(r0) = r0 {
-                reduce_secs[li] = r0.elapsed().as_secs_f64();
+                ctx.reduce_secs[li] = r0.elapsed().as_secs_f64();
             }
         }
-        apply_update_range(&mut *params, &mut *momentum, &*agg, mu, inv_p, off, n);
-        timer.note_busy(begin, Instant::now());
+        apply_update_range(
+            &mut *ctx.params,
+            &mut *ctx.momentum,
+            &*ctx.agg,
+            ctx.mu,
+            ctx.inv_p,
+            off,
+            n,
+        );
+        timer.note_busy(begin, clock::now());
     }
     group.payloads.iter().sum()
 }
@@ -192,19 +217,11 @@ fn fire_group(
 /// merged message per rank is accounted per group, so `merge_bytes`
 /// shapes the real trainer's message granularity exactly like the DES's.
 /// Returns (wire bytes, message count, measured overlap).
-#[allow(clippy::too_many_arguments)]
 fn drain_stream(
     rx: mpsc::Receiver<LayerMsg>,
     stream: &mut StreamAggregator,
     merge: &mut MergeBuffer<usize>,
-    spans: &[(usize, usize)],
-    agg: &mut [f32],
-    params: &mut [f32],
-    momentum: &mut [f32],
-    mu: f32,
-    inv_p: f32,
-    reduce_secs: &mut [f64],
-    measure: bool,
+    mut ctx: StepCtx<'_>,
 ) -> (usize, usize, OverlapMeasure) {
     let mut timer = OverlapTimer::new();
     let mut bytes = 0usize;
@@ -237,10 +254,7 @@ fn drain_stream(
             }
         }
         for g in merge.take_groups() {
-            bytes += fire_group(
-                &g, stream, spans, agg, params, momentum, mu, inv_p, &mut timer, reduce_secs,
-                measure,
-            );
+            bytes += fire_group(&g, stream, &mut ctx, &mut timer);
             messages += p;
         }
     }
@@ -571,7 +585,7 @@ impl Trainer {
         let comp_start = (self.measuring_at(t)
             || self.cfg.faults.perturbs_time()
             || !self.cfg.record_trace.is_empty())
-        .then(Instant::now);
+        .then(clock::now);
         self.model.grad_many(&self.exec, &self.params, &mut jobs)?;
         drop(jobs);
         if let Some(s) = comp_start {
@@ -939,7 +953,7 @@ impl Trainer {
         match self.cfg.pipeline {
             PipelineMode::Barrier => {
                 self.exec.run(&mut self.cluster.workers, |rank, worker| {
-                    let w0 = record.then(Instant::now);
+                    let w0 = record.then(clock::now);
                     if let Some(ds) = &delays {
                         if !ds[rank].is_zero() {
                             std::thread::sleep(ds[rank]);
@@ -974,19 +988,24 @@ impl Trainer {
                 let inv_p = 1.0 / p as f32;
                 let mu = self.cfg.momentum as f32;
                 let flat_span = [(0usize, d)];
-                let spans = &flat_span[..];
                 let stream = &mut self.stream;
                 let merge = &mut self.merge;
-                let agg = &mut self.agg[..];
-                let params = &mut self.params[..];
-                let momentum = &mut self.momentum_buf[..];
-                let reduce_secs = &mut self.reduce_secs[..1];
+                let ctx = StepCtx {
+                    spans: &flat_span[..],
+                    agg: &mut self.agg[..],
+                    params: &mut self.params[..],
+                    momentum: &mut self.momentum_buf[..],
+                    mu,
+                    inv_p,
+                    reduce_secs: &mut self.reduce_secs[..1],
+                    measure: false,
+                };
                 let (tx, rx) = mpsc::channel::<LayerMsg>();
                 let (bytes, messages, overlap) = self.exec.run_with_sink(
                     &mut self.cluster.workers,
                     tx,
                     |rank, worker, tx| {
-                        let w0 = record.then(Instant::now);
+                        let w0 = record.then(clock::now);
                         if let Some(ds) = &delays {
                             if !ds[rank].is_zero() {
                                 std::thread::sleep(ds[rank]);
@@ -1006,12 +1025,7 @@ impl Trainer {
                         worker.publish_flat(rank, tx);
                         Ok(())
                     },
-                    move || {
-                        drain_stream(
-                            rx, stream, merge, spans, agg, params, momentum, mu, inv_p,
-                            reduce_secs, false,
-                        )
-                    },
+                    move || drain_stream(rx, stream, merge, ctx),
                 )?;
                 anyhow::ensure!(self.stream.finished(), "streamed SLGS reduction incomplete");
                 self.msg_stats.record(bytes, messages);
@@ -1047,7 +1061,7 @@ impl Trainer {
         let mut messages = 0usize;
         for li in (0..nl).rev() {
             let (off, n) = self.layer_meta[li];
-            let r0 = measure.then(Instant::now);
+            let r0 = measure.then(clock::now);
             sparse_agg::sparse_add_rank_ordered(
                 self.cluster
                     .workers
@@ -1129,11 +1143,11 @@ impl Trainer {
             // sequentially in rank order, and aggregation stays a barrier
             // even under `--pipeline overlap` (bit-identical regardless)
             for worker in self.cluster.workers.iter_mut() {
-                let w0 = record.then(Instant::now);
+                let w0 = record.then(clock::now);
                 for li in (0..nl).rev() {
                     let (off, n) = self.layer_meta[li];
                     let layer = &self.model.mm.layers[li];
-                    let c0 = measure.then(Instant::now);
+                    let c0 = measure.then(clock::now);
                     let resid = worker.ef.residual_slice(off, n).to_vec();
                     let (sparse, new_resid, _thr) = self.model.compress_layer_xla(
                         layer,
@@ -1176,7 +1190,7 @@ impl Trainer {
                 let meta = &self.layer_meta;
                 let ks_t = &self.ks_t;
                 self.exec.run(&mut self.cluster.workers, |rank, worker| {
-                    let w0 = record.then(Instant::now);
+                    let w0 = record.then(clock::now);
                     if let Some(ds) = &delays {
                         if !ds[rank].is_zero() {
                             std::thread::sleep(ds[rank]);
@@ -1184,7 +1198,7 @@ impl Trainer {
                     }
                     for li in (0..meta.len()).rev() {
                         let (off, n) = meta[li];
-                        let c0 = measure.then(Instant::now);
+                        let c0 = measure.then(clock::now);
                         worker.ef.compress_layer_sparse(
                             off,
                             &worker.grad[off..off + n],
@@ -1216,16 +1230,22 @@ impl Trainer {
                 let ks_t = &self.ks_t;
                 let stream = &mut self.stream;
                 let merge = &mut self.merge;
-                let agg = &mut self.agg[..];
-                let params = &mut self.params[..];
-                let momentum = &mut self.momentum_buf[..];
-                let reduce_secs = &mut self.reduce_secs[..];
+                let ctx = StepCtx {
+                    spans: &meta[..],
+                    agg: &mut self.agg[..],
+                    params: &mut self.params[..],
+                    momentum: &mut self.momentum_buf[..],
+                    mu,
+                    inv_p,
+                    reduce_secs: &mut self.reduce_secs[..],
+                    measure,
+                };
                 let (tx, rx) = mpsc::channel::<LayerMsg>();
                 let (bytes, messages, overlap) = self.exec.run_with_sink(
                     &mut self.cluster.workers,
                     tx,
                     |rank, worker, tx| {
-                        let w0 = record.then(Instant::now);
+                        let w0 = record.then(clock::now);
                         if let Some(ds) = &delays {
                             if !ds[rank].is_zero() {
                                 std::thread::sleep(ds[rank]);
@@ -1233,7 +1253,7 @@ impl Trainer {
                         }
                         for li in (0..meta.len()).rev() {
                             let (off, n) = meta[li];
-                            let c0 = measure.then(Instant::now);
+                            let c0 = measure.then(clock::now);
                             worker.ef.compress_layer_sparse(
                                 off,
                                 &worker.grad[off..off + n],
@@ -1252,12 +1272,7 @@ impl Trainer {
                         }
                         Ok(())
                     },
-                    move || {
-                        drain_stream(
-                            rx, stream, merge, meta, agg, params, momentum, mu, inv_p,
-                            reduce_secs, measure,
-                        )
-                    },
+                    move || drain_stream(rx, stream, merge, ctx),
                 )?;
                 anyhow::ensure!(self.stream.finished(), "streamed LAGS reduction incomplete");
                 self.msg_stats.record(bytes, messages);
@@ -1331,7 +1346,7 @@ impl Trainer {
     /// final numbers match the uninterrupted run's bit-for-bit).
     pub fn run(&mut self) -> Result<TrainReport> {
         let mut curve = CurveRecorder::new(&["train_loss", "eval_loss", "metric"]);
-        let wall_start = std::time::Instant::now();
+        let wall_start = clock::now();
         let mut final_eval = (f64::NAN, f64::NAN);
         // a step-0 checkpoint anchors crashes scheduled before the first
         // --checkpoint-every boundary: resume is always possible

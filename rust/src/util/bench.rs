@@ -11,10 +11,11 @@
 //! The `cargo bench` targets (`rust/benches/*.rs`, harness = false) use
 //! this to regenerate each paper table/figure.
 
+use crate::util::clock;
 use crate::util::json::Json;
 use std::hint::black_box;
 use std::sync::{Mutex, OnceLock};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 pub use std::hint::black_box as bb;
 
@@ -43,7 +44,7 @@ impl Stats {
 /// Benchmark `f`, auto-scaling iteration count to fill ~`budget`.
 pub fn bench_with_budget<F: FnMut()>(budget: Duration, mut f: F) -> Stats {
     // warm-up + calibration
-    let t0 = Instant::now();
+    let t0 = clock::now();
     f();
     let once = t0.elapsed().as_secs_f64().max(1e-9);
     let per_sample = (once * 1.2).max(1e-6);
@@ -51,7 +52,7 @@ pub fn bench_with_budget<F: FnMut()>(budget: Duration, mut f: F) -> Stats {
 
     let mut times = Vec::with_capacity(samples);
     for _ in 0..samples {
-        let t = Instant::now();
+        let t = clock::now();
         f();
         times.push(t.elapsed().as_secs_f64());
     }

@@ -19,6 +19,7 @@ impl Args {
     /// `--key=value` both work; a `--key` followed by another `--` token or
     /// end-of-args is treated as boolean `true`.
     pub fn parse_env() -> Args {
+        // lags-audit: allow(R2) reason="argv read at process start; configuration enters exactly once, before any deterministic state exists"
         Self::parse(std::env::args().skip(1))
     }
 

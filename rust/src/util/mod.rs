@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod clock;
 pub mod executor;
 pub mod json;
 pub mod prop;

@@ -1,0 +1,180 @@
+//! Fixture and self-audit tests for `lags-audit` (the determinism-contract
+//! scanner, `lags::analysis::audit`).
+//!
+//! Two layers:
+//! 1. **Fixtures** (`rust/tests/audit_fixtures/*.rs` — data files, never
+//!    compiled): for every rule R1–R5, a known-bad file that MUST flag and
+//!    a waivered twin that MUST suppress-but-report; plus the reasonless
+//!    waiver, which suppresses nothing and is itself a W0.
+//! 2. **Self-audit**: the shipped `rust/src` tree must audit clean, with
+//!    exactly the four justified waivers the contract documents.
+
+use lags::analysis::audit::{audit_source, audit_tree, Finding, Rule};
+use std::path::Path;
+
+fn fixture(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/audit_fixtures")
+        .join(name);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading fixture {}: {e}", path.display()))
+}
+
+/// Audit a fixture under a caller-chosen root-relative path (the rel path
+/// selects which rules apply — fixtures simulate core or non-core files).
+fn audit_fixture(name: &str, rel: &str) -> Vec<Finding> {
+    audit_source(rel, &fixture(name))
+}
+
+fn unwaived_of(findings: &[Finding], rule: Rule) -> usize {
+    findings.iter().filter(|f| f.rule == rule && !f.is_waived()).count()
+}
+
+fn waived_of(findings: &[Finding], rule: Rule) -> usize {
+    findings.iter().filter(|f| f.rule == rule && f.is_waived()).count()
+}
+
+// --- R1: order-unstable collections in core ------------------------------
+
+#[test]
+fn bad_r1_flags_in_core_and_not_outside() {
+    let fs = audit_fixture("bad_r1.rs", "trainer/fixture.rs");
+    assert!(unwaived_of(&fs, Rule::R1) >= 1, "known-bad R1 must flag: {fs:?}");
+    assert!(fs.iter().all(|f| f.rule == Rule::R1 && !f.is_waived()));
+    // findings carry file:line into the report
+    assert!(fs.iter().all(|f| f.file == "trainer/fixture.rs" && f.line >= 1));
+    // R1 is scoped to the deterministic core
+    assert!(audit_fixture("bad_r1.rs", "metrics/fixture.rs").is_empty());
+}
+
+#[test]
+fn waived_r1_suppresses_but_reports() {
+    let fs = audit_fixture("waived_r1.rs", "trainer/fixture.rs");
+    assert_eq!(unwaived_of(&fs, Rule::R1), 0, "waiver must suppress: {fs:?}");
+    assert_eq!(waived_of(&fs, Rule::R1), 1, "waived finding must still be reported");
+    assert!(fs[0].waiver.as_deref().unwrap().contains("membership-only"));
+}
+
+// --- R2: wall-clock / env outside the clock funnel -----------------------
+
+#[test]
+fn bad_r2_flags_everywhere_but_clock() {
+    let fs = audit_fixture("bad_r2.rs", "metrics/fixture.rs");
+    assert_eq!(unwaived_of(&fs, Rule::R2), 1, "{fs:?}");
+    // the funnel itself is structurally whitelisted
+    assert!(audit_fixture("bad_r2.rs", "util/clock.rs").is_empty());
+}
+
+#[test]
+fn waived_r2_same_line_form() {
+    let fs = audit_fixture("waived_r2.rs", "trainer/fixture.rs");
+    assert_eq!(unwaived_of(&fs, Rule::R2), 0, "{fs:?}");
+    assert_eq!(waived_of(&fs, Rule::R2), 1);
+}
+
+// --- R3: float accumulation outside fixed-order sites --------------------
+
+#[test]
+fn bad_r3_flags_in_core_but_not_fixed_order_sites() {
+    let fs = audit_fixture("bad_r3.rs", "sparsify/fixture.rs");
+    assert_eq!(unwaived_of(&fs, Rule::R3), 1, "{fs:?}");
+    assert!(audit_fixture("bad_r3.rs", "runtime/kernels.rs").is_empty());
+    assert!(audit_fixture("bad_r3.rs", "collectives/sparse_agg.rs").is_empty());
+    assert!(audit_fixture("bad_r3.rs", "util/json.rs").is_empty(), "R3 is core-scoped");
+}
+
+#[test]
+fn waived_r3_comment_above_form() {
+    let fs = audit_fixture("waived_r3.rs", "adaptive/fixture.rs");
+    assert_eq!(unwaived_of(&fs, Rule::R3), 0, "{fs:?}");
+    assert_eq!(waived_of(&fs, Rule::R3), 1);
+}
+
+// --- R4: unsafe, crate-wide ----------------------------------------------
+
+#[test]
+fn bad_r4_flags_core_and_non_core_alike() {
+    for rel in ["trainer/fixture.rs", "metrics/fixture.rs", "util/fixture.rs"] {
+        let fs = audit_fixture("bad_r4.rs", rel);
+        assert_eq!(unwaived_of(&fs, Rule::R4), 1, "R4 must fire under {rel}: {fs:?}");
+    }
+}
+
+#[test]
+fn waived_r4_suppresses_but_reports() {
+    let fs = audit_fixture("waived_r4.rs", "metrics/fixture.rs");
+    assert_eq!(unwaived_of(&fs, Rule::R4), 0, "{fs:?}");
+    assert_eq!(waived_of(&fs, Rule::R4), 1);
+}
+
+// --- R5: foreign randomness ----------------------------------------------
+
+#[test]
+fn bad_r5_flags_each_matched_pattern() {
+    let fs = audit_fixture("bad_r5.rs", "util/fixture.rs");
+    // one line matches both "rand::" and "thread_rng"
+    assert_eq!(unwaived_of(&fs, Rule::R5), 2, "{fs:?}");
+}
+
+#[test]
+fn waived_r5_covers_all_patterns_on_target_line() {
+    let fs = audit_fixture("waived_r5.rs", "util/fixture.rs");
+    assert_eq!(unwaived_of(&fs, Rule::R5), 0, "{fs:?}");
+    assert_eq!(waived_of(&fs, Rule::R5), 2, "one waiver, both patterns reported waived");
+}
+
+// --- W0: waiver protocol --------------------------------------------------
+
+#[test]
+fn reasonless_waiver_suppresses_nothing_and_is_w0() {
+    let fs = audit_fixture("reasonless.rs", "trainer/fixture.rs");
+    assert_eq!(unwaived_of(&fs, Rule::R2), 1, "original finding stays live: {fs:?}");
+    assert_eq!(unwaived_of(&fs, Rule::W0), 1, "reasonless waiver is itself a finding");
+    assert!(fs.iter().all(|f| !f.is_waived()), "W0 is not waivable");
+}
+
+// --- self-audit: the shipped tree ----------------------------------------
+
+#[test]
+fn shipped_tree_audits_clean_with_documented_waivers() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let report = audit_tree(&root).expect("audit rust/src");
+    assert!(report.files_scanned >= 30, "walk looks truncated: {}", report.files_scanned);
+
+    let unwaived = report.unwaived();
+    assert!(
+        unwaived.is_empty(),
+        "shipped tree must audit clean; unwaived findings:\n{}",
+        unwaived
+            .iter()
+            .map(|f| format!("  {} {}:{} [{}] {}", f.rule.id(), f.file, f.line, f.what, f.excerpt))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(report.clean());
+
+    // exactly the four justified exceptions the contract documents —
+    // adding a waiver anywhere in rust/src must update this list (and the
+    // DESIGN.md table) to stay green
+    let mut got: Vec<(String, &'static str)> =
+        report.waivers().iter().map(|f| (f.file.clone(), f.rule.id())).collect();
+    got.sort();
+    let want = vec![
+        ("adaptive/ratio.rs".to_string(), "R3"),
+        ("runtime/native.rs".to_string(), "R3"),
+        ("util/cli.rs".to_string(), "R2"),
+        ("util/rng.rs".to_string(), "R1"),
+    ];
+    assert_eq!(got, want, "shipped waiver set drifted");
+    // every effective waiver carries a non-empty reason (audit.json shape)
+    assert!(report
+        .waivers()
+        .iter()
+        .all(|f| !f.waiver.as_deref().unwrap_or("").trim().is_empty()));
+
+    // audit.json reflects the same state machine-readably
+    let j = report.to_json();
+    assert!(j.get("clean").unwrap().as_bool().unwrap());
+    assert_eq!(j.get("findings").unwrap().as_arr().unwrap().len(), 0);
+    assert_eq!(j.get("waivers").unwrap().as_arr().unwrap().len(), 4);
+}

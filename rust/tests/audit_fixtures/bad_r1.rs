@@ -1,0 +1,7 @@
+// R1 fixture: order-unstable collection in a deterministic-core module.
+// MUST flag when audited under a core rel path (e.g. "trainer/fixture.rs").
+use std::collections::HashMap;
+
+fn residual_index() -> HashMap<usize, f32> {
+    HashMap::new()
+}

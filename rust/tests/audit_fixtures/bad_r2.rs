@@ -1,0 +1,6 @@
+// R2 fixture: wall-clock read outside the util::clock funnel. MUST flag
+// under any rel path except "util/clock.rs".
+
+fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}

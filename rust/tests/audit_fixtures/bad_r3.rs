@@ -1,0 +1,7 @@
+// R3 fixture: float accumulation in core, outside the fixed-order sites
+// runtime/kernels.rs and collectives/sparse_agg.rs. MUST flag under a core
+// rel path; MUST NOT flag under those two whitelisted paths.
+
+fn norm(xs: &[f32]) -> f32 {
+    xs.iter().map(|x| x * x).sum::<f32>()
+}

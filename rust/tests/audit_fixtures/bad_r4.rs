@@ -1,0 +1,7 @@
+// R4 fixture: unsafe is forbidden crate-wide, so this flags under EVERY
+// rel path, core or not.
+
+fn transmute_len(v: &[u8]) -> usize {
+    unsafe { v.get_unchecked(0); }
+    v.len()
+}

@@ -1,0 +1,8 @@
+// R5 fixture: randomness source other than util::rng::Rng. The single
+// line below matches two R5 patterns ("rand::" and "thread_rng") — the
+// audit reports both, one finding per matched pattern.
+
+fn noise() -> f64 {
+    let mut r = rand::thread_rng();
+    r.gen()
+}

@@ -1,0 +1,7 @@
+// W0 fixture: a waiver with no reason suppresses NOTHING — the original
+// finding stays unwaived AND the waiver itself becomes a W0 finding, so
+// the audit reports two problems for this file.
+
+fn stamp() -> std::time::Instant {
+    std::time::Instant::now() // lags-audit: allow(R2)
+}

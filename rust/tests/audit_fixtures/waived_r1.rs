@@ -1,0 +1,10 @@
+// R1 fixture: same violation, suppressed by a reasoned waiver on the
+// comment line directly above. MUST suppress (report clean) but still
+// surface in the waiver list.
+
+// lags-audit: allow(R1) reason="fixture: membership-only set, never iterated"
+use std::collections::HashSet as Seen;
+
+fn fresh(seen: &Seen<usize>, i: usize) -> bool {
+    !seen.contains(&i)
+}

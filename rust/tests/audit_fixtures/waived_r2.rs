@@ -1,0 +1,5 @@
+// R2 fixture: same-line waiver form (comment trails the violating code).
+
+fn stamp() -> std::time::Instant {
+    std::time::Instant::now() // lags-audit: allow(R2) reason="fixture: boundary probe, value never reaches deterministic state"
+}

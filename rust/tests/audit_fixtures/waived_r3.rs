@@ -1,0 +1,6 @@
+// R3 fixture: waiver on the comment line directly above the accumulation.
+
+fn largest(xs: &[f64]) -> f64 {
+    // lags-audit: allow(R3) reason="fixture: max-fold is order-insensitive"
+    xs.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b))
+}

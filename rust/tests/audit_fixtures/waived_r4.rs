@@ -1,0 +1,8 @@
+// R4 fixture: waivered unsafe. The scanner suppresses it (and reports the
+// waiver); the compiler-level #![forbid(unsafe_code)] backstop would still
+// reject it, which is exactly the defense-in-depth the contract wants.
+
+fn peek(v: &[u8]) -> u8 {
+    // lags-audit: allow(R4) reason="fixture: demonstrates waiver plumbing only"
+    unsafe { *v.get_unchecked(0) }
+}

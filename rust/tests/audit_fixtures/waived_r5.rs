@@ -1,0 +1,8 @@
+// R5 fixture: a waiver suppresses every matching pattern on its target
+// line — both the "rand::" and "thread_rng" hits below end up waived.
+
+fn noise() -> u64 {
+    // lags-audit: allow(R5) reason="fixture: exercising multi-pattern waiver"
+    let mut r = rand::thread_rng();
+    r.next_u64()
+}

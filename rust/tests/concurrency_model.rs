@@ -1,0 +1,264 @@
+//! Exhaustive-interleaving model of the overlap pipeline's shared state
+//! (`lags::analysis::interleave` — the in-repo mini-loom that runs under
+//! plain `cargo test`; the real-loom twin lives in `loom_model.rs` behind
+//! `--cfg loom`).
+//!
+//! The overlap path's concurrency contract: P worker threads publish
+//! per-layer messages into an mpsc channel in backprop order, racing each
+//! other; the aggregator thread lands them in the `StreamAggregator`'s
+//! rank-indexed slots and fires layers strictly in backprop order, staging
+//! completions in the `MergeBuffer`. Determinism demands that NOTHING
+//! observable — fired order, per-layer reductions, merge grouping —
+//! depends on the cross-thread interleaving. These tests replay every
+//! schedule of the per-thread publish sequences and assert bit-identical
+//! outcomes, which is exactly the property `cargo test` cannot establish
+//! by running threads (one execution = one schedule).
+
+use lags::analysis::interleave::{count, for_each_schedule};
+use lags::collectives::pipeline::{LayerMsg, StreamAggregator};
+use lags::collectives::sparse_agg;
+use lags::pipeline::merge::MergeBuffer;
+use lags::sparsify::sparse::SparseVec;
+use lags::util::clock;
+use lags::util::rng::Rng;
+
+const LAYER_N: usize = 16;
+
+/// Deterministic per-(rank, layer) sparse message — same values every
+/// replay, distinct across (rank, layer).
+fn msg(rank: usize, layer: usize) -> SparseVec {
+    let mut rng = Rng::new(0x5EED + (rank * 31 + layer) as u64);
+    let mut dense = vec![0.0f32; LAYER_N];
+    for i in rng.sample_distinct(LAYER_N, 5) {
+        dense[i] = rng.normal_f32();
+    }
+    SparseVec::from_dense(&dense)
+}
+
+fn layer_msg(rank: usize, layer: usize) -> LayerMsg {
+    LayerMsg { rank, layer, msg: msg(rank, layer), sent: clock::now() }
+}
+
+/// The barrier reference: rank-ordered reduction of `ranks`' messages for
+/// each layer, laid out back to back.
+fn reference(layers: usize, ranks: &[usize]) -> Vec<f32> {
+    let mut out = vec![0.0f32; layers * LAYER_N];
+    for li in 0..layers {
+        let msgs: Vec<SparseVec> = ranks.iter().map(|&r| msg(r, li)).collect();
+        sparse_agg::sparse_add_rank_ordered(
+            msgs.iter(),
+            &mut out[li * LAYER_N..(li + 1) * LAYER_N],
+        );
+    }
+    out
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Replay one publish schedule through a fresh aggregator: thread `t`'s
+/// j-th op publishes layer `layers-1-j` from rank `t` (backprop order, as
+/// the worker loop does). Returns (fired order, reduced flat aggregate).
+fn replay(agg: &mut StreamAggregator, layers: usize, schedule: &[usize]) -> (Vec<usize>, Vec<f32>) {
+    let mut next_op = vec![0usize; agg.workers()];
+    let mut fired = Vec::new();
+    let mut out = vec![0.0f32; layers * LAYER_N];
+    for &t in schedule {
+        let li = layers - 1 - next_op[t];
+        next_op[t] += 1;
+        agg.push(layer_msg(t, li), |l, _slots| fired.push(l));
+    }
+    // reduce in fired order (the callback order IS the reduction order in
+    // drain_stream; doing it after the replay is equivalent because slots
+    // are never overwritten once landed)
+    for &li in &fired {
+        let required = agg.required().to_vec();
+        let msgs: Vec<&SparseVec> = agg
+            .layer_slots(li)
+            .iter()
+            .zip(required.iter())
+            .filter(|(_, &req)| req)
+            .map(|(s, _)| s.as_ref().expect("required slot"))
+            .collect();
+        sparse_agg::sparse_add_rank_ordered(
+            msgs.into_iter(),
+            &mut out[li * LAYER_N..(li + 1) * LAYER_N],
+        );
+    }
+    (fired, out)
+}
+
+#[test]
+fn stream_aggregator_invariant_under_all_interleavings_p3_l3() {
+    let (layers, p) = (3usize, 3usize);
+    let want_fired: Vec<usize> = (0..layers).rev().collect();
+    let want = bits(&reference(layers, &[0, 1, 2]));
+    let lens = vec![layers; p];
+    assert_eq!(count(&lens), 1680, "multinomial (9)!/(3!)^3");
+    let mut agg = StreamAggregator::new(layers, p);
+    let n = for_each_schedule(&lens, |schedule| {
+        agg.reset();
+        let (fired, out) = replay(&mut agg, layers, schedule);
+        assert_eq!(fired, want_fired, "backprop fire order, schedule {schedule:?}");
+        assert!(agg.finished());
+        assert_eq!(bits(&out), want, "bit-identical reduction, schedule {schedule:?}");
+    });
+    assert_eq!(n, 1680);
+}
+
+#[test]
+fn quorum_mask_excludes_straggler_under_all_interleavings() {
+    // rank 1 is quorum-excluded: its publishes land in slots (for the
+    // residual-reclaim path) but must neither gate nor enter the
+    // reduction, under EVERY interleaving of the three publishers.
+    let (layers, p) = (3usize, 3usize);
+    let want_fired: Vec<usize> = (0..layers).rev().collect();
+    let want = bits(&reference(layers, &[0, 2]));
+    let mask = [true, false, true];
+    let lens = vec![layers; p];
+    let mut agg = StreamAggregator::new(layers, p);
+    let n = for_each_schedule(&lens, |schedule| {
+        agg.reset();
+        agg.arm_participants(&mask);
+        assert_eq!(agg.required_count(), 2);
+        let (fired, out) = replay(&mut agg, layers, schedule);
+        assert_eq!(fired, want_fired, "schedule {schedule:?}");
+        assert!(agg.finished(), "all layers fire on the 2-rank quorum");
+        assert_eq!(bits(&out), want, "excluded rank never reduced, schedule {schedule:?}");
+        // the straggler's buffers stayed reclaimable
+        for li in 0..layers {
+            assert!(agg.layer_slots(li)[1].is_some(), "excluded slot retained");
+        }
+    });
+    assert_eq!(n, 1680);
+}
+
+#[test]
+fn late_quorum_straggler_never_refires_a_layer() {
+    // straggler's ops all land AFTER every required publish: each of its
+    // messages hits an already-fired layer and must not re-fire it
+    let (layers, p) = (2usize, 3usize);
+    let mut agg = StreamAggregator::new(layers, p);
+    agg.arm_participants(&[true, false, true]);
+    let mut fired = Vec::new();
+    for li in (0..layers).rev() {
+        for rank in [0usize, 2] {
+            agg.push(layer_msg(rank, li), |l, _| fired.push(l));
+        }
+    }
+    assert_eq!(fired, vec![1, 0]);
+    assert!(agg.finished());
+    for li in (0..layers).rev() {
+        agg.push(layer_msg(1, li), |l, _| fired.push(l));
+    }
+    assert_eq!(fired, vec![1, 0], "late arrivals fire nothing");
+}
+
+#[test]
+fn merge_grouping_is_schedule_invariant() {
+    // the merge buffer's grouping consumes completions, which arrive in
+    // backprop order regardless of the publish interleaving — so the §5
+    // group partition (and with it MessageStats) must be identical across
+    // every schedule. Capacity chosen so the partition is non-trivial:
+    // push_with stages then checks, so layers 2+1 fill the first group
+    // and layer 0 rides the end-of-backprop flush.
+    let (layers, p) = (3usize, 2usize);
+    let bytes: Vec<usize> = (0..layers).map(|li| msg(0, li).wire_bytes() * p).collect();
+    let capacity = bytes[2] + bytes[1]; // first group fills on the second staging
+    let lens = vec![layers; p];
+    let mut expected: Option<Vec<Vec<usize>>> = None;
+    let mut agg = StreamAggregator::new(layers, p);
+    let n = for_each_schedule(&lens, |schedule| {
+        agg.reset();
+        let mut merge: MergeBuffer<usize> = MergeBuffer::new(capacity);
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        let mut next_op = vec![0usize; p];
+        for &t in schedule {
+            let li = layers - 1 - next_op[t];
+            next_op[t] += 1;
+            let mut completed = Vec::new();
+            agg.push(layer_msg(t, li), |l, _| completed.push(l));
+            for l in completed {
+                merge.push_with(l, bytes[l], l);
+            }
+            for g in merge.take_groups() {
+                groups.push(g.layer_indices);
+            }
+        }
+        merge.flush();
+        for g in merge.take_groups() {
+            groups.push(g.layer_indices);
+        }
+        // every layer staged exactly once, in backprop order overall
+        let flat: Vec<usize> = groups.iter().flatten().copied().collect();
+        assert_eq!(flat, vec![2, 1, 0], "schedule {schedule:?}");
+        match &expected {
+            None => expected = Some(groups),
+            Some(e) => assert_eq!(e, &groups, "grouping differs for schedule {schedule:?}"),
+        }
+    });
+    assert_eq!(n, count(&lens));
+    let e = expected.unwrap();
+    assert_eq!(e.len(), 2, "partition is non-trivial: [2, 1], [0]");
+    assert_eq!(e[0], vec![2, 1]);
+}
+
+#[test]
+fn merge_capacity_resize_interleaved_with_pushes_conserves_layers() {
+    // elastic membership resizes the live merge capacity between layer
+    // completions; model a shrink racing the push sequence. Whatever the
+    // interleaving: each layer lands in exactly one group, groups preserve
+    // backprop order, and the final flush leaves nothing staged.
+    let layers = 3usize;
+    let bytes = [40usize, 40, 40];
+    // thread 0: stage layers 2, 1, 0; thread 1: one capacity shrink
+    let lens = vec![layers, 1];
+    let n = for_each_schedule(&lens, |schedule| {
+        let mut merge: MergeBuffer<usize> = MergeBuffer::new(1000);
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        let mut staged = 0usize;
+        for &t in schedule {
+            if t == 0 {
+                let li = layers - 1 - staged;
+                staged += 1;
+                merge.push_with(li, bytes[li], li);
+            } else {
+                merge.set_capacity(50); // shrink below one staged layer's bytes
+            }
+            for g in merge.take_groups() {
+                groups.push(g.layer_indices);
+            }
+        }
+        merge.flush();
+        for g in merge.take_groups() {
+            groups.push(g.layer_indices);
+        }
+        assert_eq!(merge.pending_bytes(), 0, "schedule {schedule:?}");
+        let flat: Vec<usize> = groups.iter().flatten().copied().collect();
+        assert_eq!(flat, vec![2, 1, 0], "conservation + order, schedule {schedule:?}");
+    });
+    assert_eq!(n, 4, "C(4,1) placements of the resize among 3 pushes");
+}
+
+#[test]
+fn resize_between_steps_replays_cleanly() {
+    // elastic membership: the live aggregator is resized between steps;
+    // the post-resize step must satisfy the same all-interleavings
+    // invariant as a freshly constructed one.
+    let mut agg = StreamAggregator::new(2, 2);
+    let (fired, _) = replay(&mut agg, 2, &[0, 1, 0, 1]);
+    assert_eq!(fired, vec![1, 0]);
+    agg.resize(3, 2);
+    assert!(!agg.finished());
+    let layers = 3;
+    let want = bits(&reference(layers, &[0, 1]));
+    let lens = vec![layers; 2];
+    let n = for_each_schedule(&lens, |schedule| {
+        agg.reset();
+        let (fired, out) = replay(&mut agg, layers, schedule);
+        assert_eq!(fired, vec![2, 1, 0]);
+        assert_eq!(bits(&out), want, "schedule {schedule:?}");
+    });
+    assert_eq!(n, 20, "multinomial (6)!/(3!)^2");
+}

@@ -1,0 +1,185 @@
+//! Real-loom model of the overlap pipeline's cross-thread protocol.
+//!
+//! Compiled out unless `RUSTFLAGS="--cfg loom"` — the vendored build image
+//! has no network, so `loom` cannot ship as a default dev-dependency; the
+//! scheduled CI deep tier runs `cargo add loom --dev` and then executes
+//! this harness (see .github/workflows/ci.yml, job `loom`). The plain
+//! `cargo test` twin — same invariants, schedule enumeration instead of
+//! loom's C11-model exploration — is `concurrency_model.rs`.
+//!
+//! What loom adds over the mini-loom sweep: it explores atomics/fence
+//! reorderings and lock acquisition orders of the REAL synchronization
+//! primitives, not just message-arrival permutations — so a missing
+//! happens-before edge between a worker's publish and the aggregator's
+//! slot read would surface here even though every arrival order looks
+//! fine to the schedule enumerator.
+#![cfg(loom)]
+
+use loom::sync::{Arc, Mutex};
+use loom::thread;
+
+use lags::collectives::pipeline::{LayerMsg, StreamAggregator};
+use lags::collectives::sparse_agg;
+use lags::pipeline::merge::MergeBuffer;
+use lags::sparsify::sparse::SparseVec;
+use lags::util::clock;
+use lags::util::rng::Rng;
+
+const LAYER_N: usize = 8;
+
+fn msg(rank: usize, layer: usize) -> SparseVec {
+    let mut rng = Rng::new(0x10c0 + (rank * 17 + layer) as u64);
+    let mut dense = vec![0.0f32; LAYER_N];
+    for i in rng.sample_distinct(LAYER_N, 3) {
+        dense[i] = rng.normal_f32();
+    }
+    SparseVec::from_dense(&dense)
+}
+
+fn reference(layers: usize, ranks: &[usize]) -> Vec<u32> {
+    let mut out = vec![0.0f32; layers * LAYER_N];
+    for li in 0..layers {
+        let msgs: Vec<SparseVec> = ranks.iter().map(|&r| msg(r, li)).collect();
+        sparse_agg::sparse_add_rank_ordered(
+            msgs.iter(),
+            &mut out[li * LAYER_N..(li + 1) * LAYER_N],
+        );
+    }
+    out.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Two racing publishers + the shared aggregator behind a lock: every
+/// loom execution must fire layers in backprop order and reduce to the
+/// same bits.
+#[test]
+fn loom_stream_aggregator_publish_fire_order() {
+    let layers = 2usize;
+    let p = 2usize;
+    let want = reference(layers, &[0, 1]);
+    loom::model(move || {
+        let agg = Arc::new(Mutex::new(StreamAggregator::new(layers, p)));
+        let fired = Arc::new(Mutex::new(Vec::<usize>::new()));
+        let mut handles = Vec::new();
+        for rank in 0..p {
+            let agg = Arc::clone(&agg);
+            let fired = Arc::clone(&fired);
+            handles.push(thread::spawn(move || {
+                for li in (0..layers).rev() {
+                    let m = LayerMsg { rank, layer: li, msg: msg(rank, li), sent: clock::now() };
+                    let mut a = agg.lock().unwrap();
+                    let mut f = fired.lock().unwrap();
+                    a.push(m, |l, _| f.push(l));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let a = agg.lock().unwrap();
+        let f = fired.lock().unwrap();
+        assert_eq!(*f, vec![1, 0], "backprop fire order on every loom execution");
+        assert!(a.finished());
+        let mut out = vec![0.0f32; layers * LAYER_N];
+        for li in 0..layers {
+            let msgs: Vec<&SparseVec> =
+                a.layer_slots(li).iter().map(|s| s.as_ref().unwrap()).collect();
+            sparse_agg::sparse_add_rank_ordered(
+                msgs.into_iter(),
+                &mut out[li * LAYER_N..(li + 1) * LAYER_N],
+            );
+        }
+        let got: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, want, "bit-identical reduction on every loom execution");
+    });
+}
+
+/// arm_participants vs a quorum-excluded straggler's late publishes: the
+/// mask is armed before any push (the trainer's contract), the straggler
+/// races the participants, and no execution lets it gate or refire.
+#[test]
+fn loom_quorum_mask_vs_straggler() {
+    let layers = 2usize;
+    let p = 3usize;
+    let want = reference(layers, &[0, 2]);
+    loom::model(move || {
+        let agg = Arc::new(Mutex::new(StreamAggregator::new(layers, p)));
+        agg.lock().unwrap().arm_participants(&[true, false, true]);
+        let fired = Arc::new(Mutex::new(Vec::<usize>::new()));
+        let mut handles = Vec::new();
+        for rank in 0..p {
+            let agg = Arc::clone(&agg);
+            let fired = Arc::clone(&fired);
+            handles.push(thread::spawn(move || {
+                for li in (0..layers).rev() {
+                    let m = LayerMsg { rank, layer: li, msg: msg(rank, li), sent: clock::now() };
+                    let mut a = agg.lock().unwrap();
+                    let mut f = fired.lock().unwrap();
+                    a.push(m, |l, _| f.push(l));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let a = agg.lock().unwrap();
+        assert_eq!(*fired.lock().unwrap(), vec![1, 0]);
+        assert!(a.finished());
+        let mut out = vec![0.0f32; layers * LAYER_N];
+        for li in 0..layers {
+            let msgs: Vec<&SparseVec> = a
+                .layer_slots(li)
+                .iter()
+                .zip(a.required())
+                .filter(|(_, &req)| req)
+                .map(|(s, _)| s.as_ref().unwrap())
+                .collect();
+            sparse_agg::sparse_add_rank_ordered(
+                msgs.into_iter(),
+                &mut out[li * LAYER_N..(li + 1) * LAYER_N],
+            );
+        }
+        let got: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, want);
+    });
+}
+
+/// MergeBuffer capacity-resize racing a staging sequence: layers are
+/// conserved (each in exactly one group, backprop order) and nothing is
+/// left staged after the final flush, on every execution.
+#[test]
+fn loom_merge_capacity_resize() {
+    let layers = 3usize;
+    loom::model(move || {
+        let merge = Arc::new(Mutex::new(MergeBuffer::<usize>::new(1000)));
+        let groups = Arc::new(Mutex::new(Vec::<Vec<usize>>::new()));
+        let pusher = {
+            let merge = Arc::clone(&merge);
+            let groups = Arc::clone(&groups);
+            thread::spawn(move || {
+                for li in (0..layers).rev() {
+                    let mut m = merge.lock().unwrap();
+                    m.push_with(li, 40, li);
+                    for g in m.take_groups() {
+                        groups.lock().unwrap().push(g.layer_indices);
+                    }
+                }
+            })
+        };
+        let resizer = {
+            let merge = Arc::clone(&merge);
+            thread::spawn(move || {
+                merge.lock().unwrap().set_capacity(50);
+            })
+        };
+        pusher.join().unwrap();
+        resizer.join().unwrap();
+        let mut m = merge.lock().unwrap();
+        m.flush();
+        for g in m.take_groups() {
+            groups.lock().unwrap().push(g.layer_indices);
+        }
+        assert_eq!(m.pending_bytes(), 0);
+        let flat: Vec<usize> = groups.lock().unwrap().iter().flatten().copied().collect();
+        assert_eq!(flat, vec![2, 1, 0], "conservation + backprop order");
+    });
+}

@@ -20,7 +20,8 @@ use lags::models::{zoo, LayerProfile, ModelProfile};
 use lags::pipeline::desim::{simulate, Schedule, SimParams};
 use lags::runtime::kernels;
 use lags::runtime::native::{
-    conv2d_backward, conv2d_forward, elman_backward, elman_forward, ConvDims,
+    conv2d_backward, conv2d_forward, elman_backward, elman_forward, ConvDims, ConvGrads,
+    ConvScratch, ElmanDims, ElmanGrads, ElmanScratch, ElmanWeights,
 };
 use lags::runtime::Runtime;
 use lags::sparsify::{randk, sparse::SparseVec, topk, ErrorFeedback};
@@ -252,7 +253,7 @@ fn prop_stream_aggregator_arrival_order_invariant() {
     // layer is reduced rank-ordered once complete. Reference: the
     // layer-major rank-ordered barrier reduction.
     use lags::collectives::pipeline::{LayerMsg, StreamAggregator};
-    use std::time::Instant;
+    use lags::util::clock;
     quick("stream-arrival-invariant", 4, 256, |c: &mut Case| {
         let layers = 1 + c.rng.below(6);
         let p = 1 + c.rng.below(8);
@@ -304,7 +305,7 @@ fn prop_stream_aggregator_arrival_order_invariant() {
                 rank,
                 layer,
                 msg: msgs_table[rank][layer].clone(),
-                sent: Instant::now(),
+                sent: clock::now(),
             };
             agg.push(msg, |li, slots| {
                 let (o, n) = spans[li];
@@ -641,7 +642,7 @@ fn prop_im2col_conv_forward_matches_naive() {
         let bias = randvec(&mut c.rng, d.cout);
         let mut col = Vec::new();
         let mut out = vec![0.0f32; batch * d.out_len()];
-        conv2d_forward(&d, &w, &bias, &x, batch, &mut col, &mut out, false);
+        conv2d_forward(&d, &w, &bias, &x, batch, &mut col, &mut out);
         let (ho, wo) = (d.out_h(), d.out_w());
         for n in 0..batch {
             let xn = &x[n * d.in_len()..(n + 1) * d.in_len()];
@@ -698,10 +699,9 @@ fn prop_conv_backward_matches_naive() {
         let mut dw = vec![0.0f32; d.weight_len()];
         let mut db = vec![0.0f32; d.cout];
         let mut dx = vec![0.0f32; batch * d.in_len()];
-        conv2d_backward(
-            &d, &w, &x, batch, &delta, &mut col, &mut dcol, &mut wt, &mut dw, &mut db,
-            Some(&mut dx[..]),
-        );
+        let mut scr = ConvScratch { col: &mut col, dcol: &mut dcol, wt: &mut wt };
+        let mut g = ConvGrads { dw: &mut dw, db: &mut db, dx: Some(&mut dx[..]) };
+        conv2d_backward(&d, &w, &x, batch, &delta, &mut scr, &mut g);
         // f64 references
         let mut rdw = vec![0.0f64; d.weight_len()];
         let mut rdb = vec![0.0f64; d.cout];
@@ -774,7 +774,9 @@ fn prop_elman_bptt_matches_unrolled_reference() {
         let bias = randvec(&mut c.rng, hidden);
         let x = randvec(&mut c.rng, batch * t * in_dim);
         let mut hs = vec![0.0f32; batch * t * hidden];
-        elman_forward(t, in_dim, hidden, &wx, &wh, &bias, &x, batch, &mut hs);
+        let e = ElmanDims { batch, t, in_dim, hidden };
+        let weights = ElmanWeights { wx: &wx, wh: &wh };
+        elman_forward(&e, &weights, &bias, &x, &mut hs);
         let delta = randvec(&mut c.rng, batch * t * hidden);
 
         let (mut dh, mut carry, mut wt) = (Vec::new(), Vec::new(), Vec::new());
@@ -782,10 +784,10 @@ fn prop_elman_bptt_matches_unrolled_reference() {
         let mut dwh = vec![0.0f32; hidden * hidden];
         let mut db = vec![0.0f32; hidden];
         let mut dx = vec![0.0f32; batch * t * in_dim];
-        elman_backward(
-            t, in_dim, hidden, &wx, &wh, &x, &hs, batch, &delta, &mut dh, &mut carry, &mut wt,
-            &mut dwx, &mut dwh, &mut db, Some(&mut dx[..]),
-        );
+        let mut scr = ElmanScratch { dh: &mut dh, carry: &mut carry, wt: &mut wt };
+        let mut g =
+            ElmanGrads { dwx: &mut dwx, dwh: &mut dwh, db: &mut db, dx: Some(&mut dx[..]) };
+        elman_backward(&e, &weights, &x, &hs, &delta, &mut scr, &mut g);
 
         // unrolled reference: contributions of each output timestep s_out
         // to every earlier timestep's parameters, chained explicitly
