@@ -1,0 +1,63 @@
+//! COMPRESSOR ZOO bench: split() throughput per zoo member.
+//!
+//! One synthetic 1 M-element layer (seeded N(0,1) accumulator), c = 100
+//! (k = 10 000), measured per zoo member through the exact trait path the
+//! trainer's hot loop drives: `begin_step` once per iteration, then
+//! `split` into reused scratch. Rows report median split time, elements/s
+//! and the realized kept count + bytes-on-wire under the member's
+//! [`WireFormat`] — the table that shows what qsgd-topk's narrower
+//! encoding costs in CPU and buys in bytes.
+//!
+//!     cargo bench --bench compressor_zoo
+
+use lags::sparsify::{Compressor, CompressorKind, LayerCtx, SparseVec};
+use lags::util::bench;
+use lags::util::rng::Rng;
+
+const N: usize = 1 << 20;
+const K: usize = N / 100;
+
+fn main() {
+    let kinds = [
+        CompressorKind::HostExact,
+        CompressorKind::HostSampled,
+        CompressorKind::AdaptiveStoch,
+        CompressorKind::GlobalTopk,
+        CompressorKind::QsgdTopk,
+        CompressorKind::BottomK,
+    ];
+
+    let mut rng = Rng::new(7);
+    let acc: Vec<f32> = (0..N).map(|_| rng.normal_f32()).collect();
+    let zeros = vec![0.0f32; N];
+
+    println!("# compressor zoo: split() on one {N}-element layer, k={K}");
+    bench::table_header(&["compressor", "split_ms", "Melem_s", "kept", "wire_bytes"]);
+    for kind in kinds {
+        let name = format!("zoo_{}", kind.name());
+        let mut comp = kind.build(8);
+        let mut msg = SparseVec::new(N);
+        let mut resid = vec![0.0f32; N];
+        let mut step = 0u64;
+        let mut kept = 0usize;
+        let stats = bench::run_items(&name, N, || {
+            comp.begin_step(&zeros, &acc, 1.0, K);
+            let ctx = LayerCtx { seed: 42, uid: 0, step, layer: 0 };
+            kept = comp.split(&ctx, &acc, K, &mut msg, &mut resid).kept;
+            step += 1;
+        });
+        let wf = kind.wire();
+        let wire_bytes = wf.message_bytes(kept);
+        bench::annotate(&name, "kept", kept as f64);
+        bench::annotate(&name, "wire_bytes", wire_bytes as f64);
+        bench::table_row(&[
+            kind.name().to_string(),
+            format!("{:.3}", stats.median * 1e3),
+            format!("{:.1}", N as f64 / stats.median / 1e6),
+            format!("{kept}"),
+            format!("{wire_bytes}"),
+        ]);
+    }
+
+    bench::write_json("BENCH_compressor_zoo.json").expect("write BENCH_compressor_zoo.json");
+}

@@ -27,7 +27,11 @@
 //!   `#![forbid(unsafe_code)]`; the lint also catches attempts to relax
 //!   that attribute in any module).
 //! * **R5** — no randomness source other than `util::rng::Rng` (no
-//!   `rand::`, `thread_rng`, `getrandom`, `RandomState`, `chrono::`).
+//!   `rand::`, `thread_rng`, `getrandom`, `RandomState`, `chrono::`),
+//!   and no hand-rolled generators either: the multiplier/gamma
+//!   constants of xorshift64*, splitmix64, the MMIX LCG/PCG and wyrand
+//!   are fingerprints — stochastic code (e.g. compressors) must draw
+//!   from `util::rng`'s forked streams, never a private PRNG.
 //! * **W0** — waiver-protocol violations (a waiver that lacks a
 //!   `reason="..."`, names an unknown rule, or cannot be parsed). W0 is
 //!   not waivable.
@@ -80,7 +84,7 @@ impl Rule {
             Rule::R2 => "no wall-clock or environment reads outside util::clock::now",
             Rule::R3 => "no float accumulation outside runtime::kernels / collectives::sparse_agg",
             Rule::R4 => "unsafe forbidden crate-wide",
-            Rule::R5 => "no randomness source other than util::rng::Rng",
+            Rule::R5 => "no randomness source other than util::rng::Rng (incl. hand-rolled PRNGs)",
             Rule::W0 => "waiver protocol: waivers must parse, name known rules, and carry a reason",
         }
     }
@@ -104,7 +108,27 @@ impl Rule {
             Rule::R2 => &["Instant::now", "SystemTime", "std::env"],
             Rule::R3 => &[".fold(", ".sum::<f32>", ".sum::<f64>"],
             Rule::R4 => &["unsafe"],
-            Rule::R5 => &["rand::", "thread_rng", "from_entropy", "getrandom", "RandomState", "chrono::"],
+            Rule::R5 => &[
+                "rand::",
+                "thread_rng",
+                "from_entropy",
+                "getrandom",
+                "RandomState",
+                "chrono::",
+                // hand-rolled PRNG fingerprints (both hex cases; the
+                // token-boundary check keeps suffixed lookalikes out):
+                // xorshift64* multiplier
+                "0x2545F4914F6CDD1D",
+                "0x2545f4914f6cdd1d",
+                // splitmix64 golden gamma (util/rng.rs is the one funnel)
+                "0x9E3779B97F4A7C15",
+                "0x9e3779b97f4a7c15",
+                // MMIX LCG / PCG default multiplier
+                "6364136223846793005",
+                // wyrand increment
+                "0xA0761D6478BD642F",
+                "0xa0761d6478bd642f",
+            ],
             Rule::W0 => &[],
         }
     }

@@ -22,7 +22,14 @@
 //!   scheduled CI tier cover the memory-model layer below this
 //!   (DESIGN.md §Determinism contract and enforcement).
 
+//! * [`validate`] — `lags validate`, the Assumption-1 convergence gate:
+//!   runs the (zoo model × compressor) matrix, records per-layer δ^(l)
+//!   with the ACTUAL compressor in the numerator, and emits the
+//!   `validation.json` artifact CI fails on when δ > 1 + tol.
+
 pub mod audit;
 pub mod interleave;
+pub mod validate;
 
 pub use audit::{audit_tree, AuditReport, Finding, Rule};
+pub use validate::{ValidateSpec, ValidationReport};

@@ -1,0 +1,407 @@
+//! `lags validate` — the Assumption-1 convergence-validation harness.
+//!
+//! Runs a matrix of (zoo model × compressor) short training jobs, records
+//! the per-layer δ^(l) series (Eq. 20) with the ACTUAL compressor's
+//! compression error in the numerator (via the generalized
+//! [`crate::metrics::delta_metric_with`]), and gates on δ^(l) ≤ 1 + tol
+//! at every sampled step. The emitted `validation.json` is the artifact
+//! the fast CI tier parses and fails on.
+//!
+//! Tolerance rationale: Assumption 1 compares the compressor's error to
+//! the EXPECTED RandK error. A compressor can sit epsilon above 1 without
+//! breaking the §4 convergence argument in practice — e.g. `global-topk`
+//! starves a layer whose coordinates all fall below the model-wide
+//! threshold, giving δ = 1/(1 − k/n) ≈ 1.01 at c = 100 — while a genuine
+//! Assumption-1 violator (the `bottom-k` negative control at c = 2) lands
+//! at δ ≈ 2. `DELTA_TOL` = 0.15 separates those regimes with wide margin
+//! on both sides.
+
+use crate::config::TrainConfig;
+use crate::metrics::delta_to_json;
+use crate::runtime::Runtime;
+use crate::sparsify::CompressorKind;
+use crate::trainer::{Algorithm, Trainer};
+use crate::util::json::Json;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Bumped whenever the validation.json shape changes; CI greps for it.
+pub const SCHEMA_VERSION: usize = 1;
+
+/// The δ ≤ 1 + DELTA_TOL acceptance band (module docs for the rationale).
+pub const DELTA_TOL: f64 = 0.15;
+
+/// The compressors every validation tier must clear — the shipped zoo
+/// (host paths only: XLA compressors share the host TopK semantics and
+/// need a PJRT device, so they are exercised by the runtime tests
+/// instead).
+pub const ZOO: [CompressorKind; 5] = [
+    CompressorKind::HostExact,
+    CompressorKind::HostSampled,
+    CompressorKind::AdaptiveStoch,
+    CompressorKind::GlobalTopk,
+    CompressorKind::QsgdTopk,
+];
+
+/// One validation matrix: which models × compressors, for how long.
+#[derive(Debug, Clone)]
+pub struct ValidateSpec {
+    pub models: Vec<String>,
+    pub compressors: Vec<CompressorKind>,
+    pub steps: usize,
+    pub workers: usize,
+    /// δ sampling cadence (steps)
+    pub delta_every: usize,
+    pub tolerance: f64,
+    pub seed: u64,
+    /// "quick" | "full" — recorded in validation.json
+    pub mode: String,
+    /// append the `bottom-k` negative-control leg (c = 2, keeps the
+    /// SMALLEST coordinates): the run must then FAIL the δ gate — CI's
+    /// check that the gate actually has teeth
+    pub inject_violation: bool,
+}
+
+impl ValidateSpec {
+    /// The PR-tier matrix: the two cheap models × the full zoo.
+    pub fn quick(seed: u64) -> ValidateSpec {
+        ValidateSpec {
+            models: vec!["mlp".into(), "convnet".into()],
+            compressors: ZOO.to_vec(),
+            steps: 30,
+            workers: 4,
+            delta_every: 5,
+            tolerance: DELTA_TOL,
+            seed,
+            mode: "quick".into(),
+            inject_violation: false,
+        }
+    }
+
+    /// The scheduled-tier matrix: every native zoo model × the full zoo.
+    pub fn full(seed: u64) -> ValidateSpec {
+        ValidateSpec {
+            models: vec![
+                "mlp".into(),
+                "mlp_deep".into(),
+                "convnet".into(),
+                "convnet_deep".into(),
+                "rnn".into(),
+            ],
+            steps: 60,
+            mode: "full".into(),
+            ..ValidateSpec::quick(seed)
+        }
+    }
+}
+
+/// Per-layer δ statistics over one leg's sampled series.
+#[derive(Debug, Clone)]
+pub struct LayerDelta {
+    pub layer: String,
+    /// max and mean can be `f64::INFINITY` for a degenerate sample
+    /// (den == 0 with a nonzero numerator) — serialized via the tagged
+    /// sentinel, never as a bare IEEE special
+    pub max_delta: f64,
+    pub mean_delta: f64,
+    pub samples: usize,
+    /// steps where δ > 1 + tolerance
+    pub violations: Vec<usize>,
+}
+
+impl LayerDelta {
+    fn from_series(layer: &str, series: &[(usize, f64)], tolerance: f64) -> LayerDelta {
+        let mut max_delta = 0.0f64;
+        let mut sum = 0.0f64;
+        let mut violations = Vec::new();
+        for &(step, d) in series {
+            max_delta = max_delta.max(d);
+            sum += d;
+            // NaN/inf-robust: a degenerate sample is never "holding"
+            if !(d <= 1.0 + tolerance) {
+                violations.push(step);
+            }
+        }
+        let mean_delta = if series.is_empty() { 0.0 } else { sum / series.len() as f64 };
+        let layer = layer.to_string();
+        LayerDelta { layer, max_delta, mean_delta, samples: series.len(), violations }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("layer", Json::Str(self.layer.clone())),
+            ("max_delta", delta_to_json(self.max_delta)),
+            ("mean_delta", delta_to_json(self.mean_delta)),
+            ("samples", Json::Num(self.samples as f64)),
+            (
+                "violations",
+                Json::Arr(self.violations.iter().map(|&s| Json::Num(s as f64)).collect()),
+            ),
+        ])
+    }
+}
+
+/// One (model × compressor) leg of the matrix.
+#[derive(Debug, Clone)]
+pub struct LegResult {
+    pub model: String,
+    pub compressor: String,
+    pub final_loss: f64,
+    /// the dense same-seed same-budget baseline's final loss
+    pub dense_final_loss: f64,
+    /// final_loss − dense_final_loss (positive = sparsification cost)
+    pub loss_gap: f64,
+    /// fraction of δ samples ≤ 1 exactly (the monitor's strict count;
+    /// the gate itself uses the tolerance band)
+    pub delta_fraction_holding: Option<f64>,
+    pub layers: Vec<LayerDelta>,
+    pub pass: bool,
+}
+
+impl LegResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("compressor", Json::Str(self.compressor.clone())),
+            ("final_loss", Json::Num(self.final_loss)),
+            ("dense_final_loss", Json::Num(self.dense_final_loss)),
+            ("loss_gap", Json::Num(self.loss_gap)),
+            (
+                "delta_fraction_holding",
+                self.delta_fraction_holding.map(delta_to_json).unwrap_or(Json::Null),
+            ),
+            ("layers", Json::Arr(self.layers.iter().map(LayerDelta::to_json).collect())),
+            ("pass", Json::Bool(self.pass)),
+        ])
+    }
+
+    pub fn summary_line(&self) -> String {
+        let max = self.layers.iter().map(|l| l.max_delta).fold(0.0f64, f64::max);
+        let violations: usize = self.layers.iter().map(|l| l.violations.len()).sum();
+        format!(
+            "validate {:<13} {:<14} max_delta={:.4} violations={} loss_gap={:+.4} {}",
+            self.model,
+            self.compressor,
+            max,
+            violations,
+            self.loss_gap,
+            if self.pass { "PASS" } else { "FAIL" }
+        )
+    }
+}
+
+/// The whole matrix's outcome — what `validation.json` serializes.
+#[derive(Debug, Clone)]
+pub struct ValidationReport {
+    pub mode: String,
+    pub tolerance: f64,
+    pub results: Vec<LegResult>,
+    pub pass: bool,
+}
+
+impl ValidationReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+            ("mode", Json::Str(self.mode.clone())),
+            ("tolerance", Json::Num(self.tolerance)),
+            ("results", Json::Arr(self.results.iter().map(LegResult::to_json).collect())),
+            ("pass", Json::Bool(self.pass)),
+        ])
+    }
+}
+
+/// The training config of one leg. `compressor: None` is the dense
+/// baseline (no δ monitor). The `bottom-k` negative control runs at
+/// c = 2: at c = 100 even an inverted selection leaves so little mass
+/// behind that δ ≈ 1/(1 − k/n) sits inside the tolerance band — keeping
+/// half the coordinates (the SMALLEST half) pushes δ toward 2.
+fn leg_config(spec: &ValidateSpec, model: &str, compressor: Option<CompressorKind>) -> TrainConfig {
+    let mut cfg = TrainConfig::default_for(model);
+    cfg.workers = spec.workers;
+    cfg.steps = spec.steps;
+    cfg.seed = spec.seed;
+    cfg.eval_every = 0;
+    cfg.verbose = false;
+    match compressor {
+        None => {
+            cfg.algorithm = Algorithm::Dense;
+            cfg.delta_every = 0;
+        }
+        Some(kind) => {
+            cfg.algorithm = Algorithm::Lags;
+            cfg.compressor = kind;
+            cfg.delta_every = spec.delta_every;
+            // the gate compares against Eq. 20's EXPECTED RandK error,
+            // not one draw: deterministic closed-form denominator
+            cfg.delta_expectation = true;
+            if kind == CompressorKind::BottomK {
+                cfg.compression = 2.0;
+            }
+        }
+    }
+    cfg
+}
+
+/// Run one Lags leg and fold its δ series into a [`LegResult`].
+fn run_leg(
+    rt: &Arc<Runtime>,
+    spec: &ValidateSpec,
+    model: &str,
+    kind: CompressorKind,
+    dense_final_loss: f64,
+) -> Result<LegResult> {
+    let mut t = Trainer::with_runtime(rt, leg_config(spec, model, Some(kind)))?;
+    let report = t.run()?;
+    let series = t.delta_series().expect("validate legs always monitor delta");
+    let names: Vec<String> = t.model_manifest().layers.iter().map(|l| l.name.clone()).collect();
+    let layers: Vec<LayerDelta> = series
+        .iter()
+        .enumerate()
+        .map(|(li, s)| LayerDelta::from_series(&names[li], s, spec.tolerance))
+        .collect();
+    let pass = layers.iter().all(|l| l.violations.is_empty());
+    Ok(LegResult {
+        model: model.to_string(),
+        compressor: kind.name().to_string(),
+        final_loss: report.final_loss,
+        dense_final_loss,
+        loss_gap: report.final_loss - dense_final_loss,
+        delta_fraction_holding: report.delta_fraction_holding,
+        layers,
+        pass,
+    })
+}
+
+/// Run the whole matrix against the artifacts in `dir` ("native" for the
+/// built-in zoo). Returns the report; the caller decides the exit code
+/// from `report.pass` (and writes validation.json).
+pub fn run(dir: &str, spec: &ValidateSpec) -> Result<ValidationReport> {
+    let mut rt = Runtime::open(dir, spec.seed)?;
+    // same calibration policy as `train` without --calibrate: load an
+    // existing calibration file if present, else the documented fallback
+    rt.calibrate(false)?;
+    let rt = Arc::new(rt);
+    let mut results = Vec::new();
+    for (mi, model) in spec.models.iter().enumerate() {
+        // one dense same-seed baseline per model, shared by every leg
+        let dense_final_loss =
+            Trainer::with_runtime(&rt, leg_config(spec, model, None))?.run()?.final_loss;
+        for &kind in &spec.compressors {
+            results.push(run_leg(&rt, spec, model, kind, dense_final_loss)?);
+        }
+        if spec.inject_violation && mi == 0 {
+            results.push(run_leg(&rt, spec, model, CompressorKind::BottomK, dense_final_loss)?);
+        }
+    }
+    let pass = results.iter().all(|r| r.pass);
+    Ok(ValidationReport { mode: spec.mode.clone(), tolerance: spec.tolerance, results, pass })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_cover_the_shipped_zoo() {
+        let q = ValidateSpec::quick(42);
+        assert_eq!(q.compressors, ZOO.to_vec());
+        assert_eq!(q.models, vec!["mlp".to_string(), "convnet".to_string()]);
+        assert!(!q.inject_violation);
+        let f = ValidateSpec::full(42);
+        assert_eq!(f.compressors, ZOO.to_vec());
+        assert_eq!(f.models.len(), 5);
+        assert!(f.steps > q.steps);
+        // the negative control is NOT part of either shipped matrix
+        assert!(!q.compressors.contains(&CompressorKind::BottomK));
+        assert!(!f.compressors.contains(&CompressorKind::BottomK));
+    }
+
+    #[test]
+    fn layer_delta_flags_violations_and_degenerates() {
+        let series = vec![(0, 0.5), (5, 1.0), (10, 1.149), (15, 1.2), (20, f64::INFINITY)];
+        let l = LayerDelta::from_series("fc1", &series, DELTA_TOL);
+        assert_eq!(l.samples, 5);
+        assert_eq!(l.violations, vec![15, 20]);
+        assert_eq!(l.max_delta, f64::INFINITY);
+        // degenerate aggregates serialize via the tagged sentinel
+        let j = l.to_json();
+        assert_eq!(
+            j.get("max_delta").unwrap().to_string_compact(),
+            "{\"degenerate\":\"infinite\"}"
+        );
+        assert_eq!(j.get("violations").unwrap().as_arr().unwrap().len(), 2);
+        // a NaN sample is a violation too, never silently "holding"
+        let l = LayerDelta::from_series("fc1", &[(0, f64::NAN)], DELTA_TOL);
+        assert_eq!(l.violations, vec![0]);
+    }
+
+    #[test]
+    fn report_json_schema_is_stable() {
+        let report = ValidationReport {
+            mode: "quick".into(),
+            tolerance: DELTA_TOL,
+            results: vec![LegResult {
+                model: "mlp".into(),
+                compressor: "host".into(),
+                final_loss: 0.5,
+                dense_final_loss: 0.45,
+                loss_gap: 0.05,
+                delta_fraction_holding: Some(1.0),
+                layers: vec![LayerDelta {
+                    layer: "fc1".into(),
+                    max_delta: 0.8,
+                    mean_delta: 0.6,
+                    samples: 6,
+                    violations: vec![],
+                }],
+                pass: true,
+            }],
+            pass: true,
+        };
+        let j = report.to_json();
+        // field names are the CI contract — schema_version pins the shape
+        assert_eq!(j.get("schema_version").unwrap().as_usize().unwrap(), SCHEMA_VERSION);
+        assert_eq!(j.get("mode").unwrap().as_str().unwrap(), "quick");
+        assert!(j.get("pass").unwrap().as_bool().unwrap());
+        let leg = &j.get("results").unwrap().as_arr().unwrap()[0];
+        for key in [
+            "model",
+            "compressor",
+            "final_loss",
+            "dense_final_loss",
+            "loss_gap",
+            "delta_fraction_holding",
+            "layers",
+            "pass",
+        ] {
+            assert!(leg.get(key).is_ok(), "missing leg field {key}");
+        }
+        let layer = &leg.get("layers").unwrap().as_arr().unwrap()[0];
+        for key in ["layer", "max_delta", "mean_delta", "samples", "violations"] {
+            assert!(layer.get(key).is_ok(), "missing layer field {key}");
+        }
+        // the whole report round-trips through the serializer
+        let text = j.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert!(back.get("pass").unwrap().as_bool().unwrap());
+        // summary line carries the PASS/FAIL verdict CI logs show
+        assert!(report.results[0].summary_line().contains("PASS"));
+    }
+
+    #[test]
+    fn bottomk_control_runs_at_half_compression() {
+        let spec = ValidateSpec::quick(42);
+        let cfg = leg_config(&spec, "mlp", Some(CompressorKind::BottomK));
+        assert_eq!(cfg.compression, 2.0);
+        assert!(cfg.delta_expectation);
+        assert_eq!(cfg.algorithm, Algorithm::Lags);
+        // shipped zoo members keep the default budget
+        let cfg = leg_config(&spec, "mlp", Some(CompressorKind::QsgdTopk));
+        assert_eq!(cfg.compression, 100.0);
+        // the dense baseline never monitors δ
+        let cfg = leg_config(&spec, "mlp", None);
+        assert_eq!(cfg.algorithm, Algorithm::Dense);
+        assert_eq!(cfg.delta_every, 0);
+    }
+}

@@ -12,7 +12,7 @@ pub mod faults;
 
 use crate::collectives::pipeline::LayerMsg;
 use crate::runtime::native::{CompressScratch, GradScratch};
-use crate::sparsify::{ErrorFeedback, SparseVec};
+use crate::sparsify::{Compressor, CompressorKind, ErrorFeedback, SparseVec};
 use crate::util::clock;
 use anyhow::{ensure, Result};
 use std::sync::mpsc::Sender;
@@ -32,6 +32,10 @@ pub struct Worker {
     pub id: usize,
     /// error-feedback residuals over the flat parameter vector
     pub ef: ErrorFeedback,
+    /// this worker's sparsification scheme (DESIGN.md §Compressor zoo);
+    /// owns its scratch, draws randomness only from per-call
+    /// `(seed, uid, step, layer)` streams, so it needs no checkpoint state
+    pub comp: Box<dyn Compressor>,
     /// scratch: last computed gradient (flat)
     pub grad: Vec<f32>,
     /// scratch: per-layer outgoing sparse messages (LAGS wire format,
@@ -83,10 +87,11 @@ impl Worker {
 }
 
 impl Worker {
-    pub fn new(id: usize, d: usize, sample_stride: usize) -> Worker {
+    pub fn new(id: usize, d: usize, sample_stride: usize, kind: CompressorKind) -> Worker {
         Worker {
             id,
             ef: ErrorFeedback::new(d, sample_stride),
+            comp: kind.build(sample_stride),
             grad: vec![0.0; d],
             msgs: Vec::new(),
             msg_flat: SparseVec::new(d),
@@ -137,8 +142,8 @@ pub struct Cluster {
 }
 
 impl Cluster {
-    pub fn new(p: usize, d: usize, sample_stride: usize) -> Cluster {
-        Cluster { workers: (0..p).map(|i| Worker::new(i, d, sample_stride)).collect() }
+    pub fn new(p: usize, d: usize, sample_stride: usize, kind: CompressorKind) -> Cluster {
+        Cluster { workers: (0..p).map(|i| Worker::new(i, d, sample_stride, kind)).collect() }
     }
 
     pub fn size(&self) -> usize {
@@ -203,10 +208,11 @@ impl Cluster {
         uid: usize,
         d: usize,
         sample_stride: usize,
+        kind: CompressorKind,
         layer_sizes: &[usize],
     ) -> Result<()> {
         ensure!(self.workers.iter().all(|w| w.id != uid), "join of already-present worker {uid}");
-        let mut w = Worker::new(uid, d, sample_stride);
+        let mut w = Worker::new(uid, d, sample_stride, kind);
         w.ensure_message_scratch(layer_sizes);
         self.workers.push(w);
         Ok(())
@@ -216,10 +222,11 @@ impl Cluster {
 #[cfg(test)]
 mod tests {
     use super::*;
+    const KIND: CompressorKind = CompressorKind::HostExact;
 
     #[test]
     fn construction() {
-        let c = Cluster::new(4, 100, 16);
+        let c = Cluster::new(4, 100, 16, KIND);
         assert_eq!(c.size(), 4);
         assert_eq!(c.workers[3].id, 3);
         assert_eq!(c.workers[0].ef.dim(), 100);
@@ -229,7 +236,7 @@ mod tests {
 
     #[test]
     fn message_scratch_sized_per_layer() {
-        let mut c = Cluster::new(2, 100, 16);
+        let mut c = Cluster::new(2, 100, 16, KIND);
         for w in &mut c.workers {
             w.ensure_message_scratch(&[40, 60]);
         }
@@ -242,7 +249,7 @@ mod tests {
     #[test]
     fn publish_moves_message_and_stamps_rank() {
         use std::sync::mpsc;
-        let mut c = Cluster::new(2, 10, 1);
+        let mut c = Cluster::new(2, 10, 1, KIND);
         for w in &mut c.workers {
             w.ensure_message_scratch(&[4, 6]);
         }
@@ -264,7 +271,7 @@ mod tests {
     #[test]
     fn drop_worker_conserves_residual_mass_and_interleaves() {
         let d = 10;
-        let mut c = Cluster::new(3, d, 1);
+        let mut c = Cluster::new(3, d, 1, KIND);
         // seed distinct residuals on every worker
         for (w, worker) in c.workers.iter_mut().enumerate() {
             let r: Vec<f32> = (0..d).map(|i| (w * 100 + i) as f32 * 0.25 + 0.5).collect();
@@ -291,18 +298,18 @@ mod tests {
 
     #[test]
     fn join_worker_gets_fresh_state_and_unique_uid() {
-        let mut c = Cluster::new(2, 8, 1);
-        c.join_worker(5, 8, 1, &[3, 5]).unwrap();
+        let mut c = Cluster::new(2, 8, 1, KIND);
+        c.join_worker(5, 8, 1, KIND, &[3, 5]).unwrap();
         assert_eq!(c.size(), 3);
         let w = &c.workers[2];
         assert_eq!((w.id, w.ef.dim(), w.msgs.len()), (5, 8, 2));
         assert_eq!(w.ef.residual_norm_sq(), 0.0);
-        assert!(c.join_worker(0, 8, 1, &[3, 5]).is_err(), "uid collision must fail");
+        assert!(c.join_worker(0, 8, 1, KIND, &[3, 5]).is_err(), "uid collision must fail");
     }
 
     #[test]
     fn mean_loss() {
-        let mut c = Cluster::new(2, 10, 1);
+        let mut c = Cluster::new(2, 10, 1, KIND);
         c.workers[0].last_loss = 1.0;
         c.workers[1].last_loss = 3.0;
         assert_eq!(c.mean_loss(), 2.0);

@@ -59,13 +59,20 @@ impl NetworkModel {
     }
 
     /// Sparse allgather time where each worker contributes `k` nonzeros
-    /// (8 bytes each on the wire).
+    /// (8 bytes each on the wire — the index+value encoding).
     pub fn allgather_sparse(&self, k: f64) -> f64 {
+        self.allgather_sparse_encoded(k, 8.0)
+    }
+
+    /// Sparse allgather time at an explicit wire encoding of
+    /// `bytes_per_elem` bytes per transmitted nonzero (8 = u32 idx +
+    /// f32 val, 5 = u32 idx + u8 quantization level).
+    pub fn allgather_sparse_encoded(&self, k: f64, bytes_per_elem: f64) -> f64 {
         let p = self.workers as f64;
         if self.workers <= 1 {
             return 0.0;
         }
-        let msg = 8.0 * k;
+        let msg = bytes_per_elem * k;
         (p - 1.0) * (self.alpha + msg / self.bandwidth)
     }
 
@@ -151,6 +158,20 @@ mod tests {
             assert!(t <= last);
             last = t;
         }
+    }
+
+    #[test]
+    fn encoded_allgather_generalizes_legacy() {
+        let net = NetworkModel::gige_16();
+        // the legacy 8-byte call is exactly the encoded one at 8.0
+        assert_eq!(net.allgather_sparse(5e4), net.allgather_sparse_encoded(5e4, 8.0));
+        // a narrower encoding is strictly cheaper at equal nnz (same α)
+        let wide = net.allgather_sparse_encoded(5e4, 8.0);
+        let narrow = net.allgather_sparse_encoded(5e4, 5.0);
+        assert!(narrow < wide);
+        let p = net.workers as f64;
+        let expect = (p - 1.0) * (net.alpha + 5.0 * 5e4 / net.bandwidth);
+        assert!((narrow - expect).abs() < 1e-15);
     }
 
     #[test]

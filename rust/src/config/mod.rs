@@ -122,6 +122,10 @@ pub struct TrainConfig {
     pub eval_batches: usize,
     /// record delta^(l) every N steps (0 = never)
     pub delta_every: usize,
+    /// δ denominator mode: true = closed-form E‖RandK error‖² (Eq. 20's
+    /// expectation — what `lags validate` gates on), false = a single
+    /// RandK draw per sample (the cheap per-run spot check)
+    pub delta_expectation: bool,
     /// §5 merge-buffer capacity in wire bytes per rank: consecutive layer
     /// messages are grouped up to this size before reduction (real
     /// trainer AND the DES prediction). 0 (the default) = per-layer
@@ -200,6 +204,7 @@ impl TrainConfig {
             eval_every: 50,
             eval_batches: 4,
             delta_every: 0,
+            delta_expectation: false,
             merge_bytes: 0,
             faults: FaultPlan::none(),
             quorum: 0,
@@ -248,6 +253,7 @@ impl TrainConfig {
                 "eval_every" => self.eval_every = val.as_usize()?,
                 "eval_batches" => self.eval_batches = val.as_usize()?,
                 "delta_every" => self.delta_every = val.as_usize()?,
+                "delta_expectation" => self.delta_expectation = val.as_bool()?,
                 "merge_bytes" => self.merge_bytes = val.as_usize()?,
                 "checkpoint_every" => self.checkpoint_every = val.as_usize()?,
                 "checkpoint_dir" => self.checkpoint_dir = val.as_str()?.to_string(),
@@ -313,6 +319,9 @@ impl TrainConfig {
         self.eval_every = args.usize_or("eval-every", self.eval_every)?;
         self.eval_batches = args.usize_or("eval-batches", self.eval_batches)?;
         self.delta_every = args.usize_or("delta-every", self.delta_every)?;
+        if args.bool("delta-expectation") {
+            self.delta_expectation = true;
+        }
         self.merge_bytes = args.usize_or("merge-bytes", self.merge_bytes)?;
         if let Some(path) = args.get("faults") {
             // --workers is resolved above, so the load-time validation
@@ -428,6 +437,7 @@ impl TrainConfig {
             ("eval_every", Json::Num(self.eval_every as f64)),
             ("eval_batches", Json::Num(self.eval_batches as f64)),
             ("delta_every", Json::Num(self.delta_every as f64)),
+            ("delta_expectation", Json::Bool(self.delta_expectation)),
             ("merge_bytes", Json::Num(self.merge_bytes as f64)),
             ("faults", self.faults.to_json()),
             ("quorum", Json::Num(self.quorum as f64)),
@@ -526,6 +536,7 @@ mod tests {
         cfg.eval_every = 13;
         cfg.eval_batches = 3;
         cfg.delta_every = 4;
+        cfg.delta_expectation = true;
         cfg.merge_bytes = 4096;
         cfg.faults = FaultPlan {
             seed: 13,

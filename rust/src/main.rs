@@ -12,6 +12,7 @@
 //!   calibrate — measure sustained device flops at the zoo's GEMM shapes
 //!   smax      — Eq. 19 S_max sweep over r = t_c/t_b
 //!   audit     — static determinism-contract lint over rust/src (R1–R5)
+//!   validate  — Assumption-1 δ-gate over the (model × compressor) matrix
 
 #![forbid(unsafe_code)]
 
@@ -41,8 +42,10 @@ USAGE: lags <subcommand> [flags]
            [--adaptive] [--c-max C] [--reselect-every N]
            [--net gige16|tengige|infiniband] [--net-alpha F]
            [--net-bandwidth F] [--merge-bytes B]
-           [--compressor host|host-sampled|xla|xla-sampled]
-           [--delta-every N] [--eval-every N] [--seed S] [--verbose]
+           [--compressor host|host-sampled|xla|xla-sampled|
+                         adaptive-stoch|global-topk|qsgd-topk|bottom-k]
+           [--delta-every N] [--delta-expectation] [--eval-every N]
+           [--seed S] [--verbose]
            [--faults FILE.json] [--faults-trace FILE.json]
            [--quorum Q] [--staleness-bound S]
            [--checkpoint-every N] [--checkpoint-dir DIR] [--resume]
@@ -178,6 +181,22 @@ USAGE: lags <subcommand> [flags]
            Inline waivers suppress findings but are always emitted into
            the machine-readable audit.json; exits non-zero on any
            unwaived finding (gates the fast CI tier)
+  validate [--quick] [--steps N] [--workers P] [--seed S] [--out DIR]
+           [--artifacts DIR] [--inject-violation]
+
+           Assumption-1 convergence gate: runs the (zoo model x
+           compressor) matrix for a short step budget with the delta^(l)
+           monitor in expectation mode, checks delta <= 1 + tol at every
+           sampled (layer, step) with the ACTUAL compressor's error in
+           the numerator, and writes validation.json (per model x
+           compressor x layer: max/mean delta, violation steps, final
+           loss vs the dense same-seed baseline). Exits non-zero on any
+           violation. The fast CI tier gates on --quick (mlp + convnet
+           x the full zoo: host, host-sampled, adaptive-stoch,
+           global-topk, qsgd-topk); the scheduled tier runs the full
+           5-model matrix. --inject-violation appends the bottom-k
+           negative control (keeps the SMALLEST coordinates at c = 2),
+           which must FAIL the gate — CI's proof the gate has teeth
 ";
 
 fn main() {
@@ -213,6 +232,7 @@ fn run(args: &Args) -> Result<()> {
         Some("smax") => cmd_smax(args),
         Some("sweep") => cmd_sweep(args),
         Some("audit") => cmd_audit(args),
+        Some("validate") => cmd_validate(args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -703,6 +723,50 @@ fn cmd_audit(args: &Args) -> Result<()> {
     let root = args.str_or("root", "rust/src");
     let json = args.str_or("json", "audit.json");
     lags::analysis::audit::run_cli(std::path::Path::new(&root), Some(std::path::Path::new(&json)))
+}
+
+/// `lags validate` — the Assumption-1 δ-gate over the compressor zoo.
+/// Writes validation.json and exits non-zero on any δ > 1 + tol sample
+/// (see `analysis::validate` for the matrix and tolerance rationale).
+fn cmd_validate(args: &Args) -> Result<()> {
+    let seed = args.usize_or("seed", 42)? as u64;
+    let mut spec = if args.bool("quick") {
+        lags::analysis::ValidateSpec::quick(seed)
+    } else {
+        lags::analysis::ValidateSpec::full(seed)
+    };
+    spec.steps = args.usize_or("steps", spec.steps)?;
+    spec.workers = args.usize_or("workers", spec.workers)?;
+    spec.inject_violation = args.bool("inject-violation");
+    anyhow::ensure!(spec.steps > spec.delta_every, "--steps must exceed the delta cadence");
+    let dir = artifacts_dir(args);
+    println!(
+        "validate ({} matrix): {} model(s) x {} compressor(s), {} steps, tol {}",
+        spec.mode,
+        spec.models.len(),
+        spec.compressors.len() + usize::from(spec.inject_violation),
+        spec.steps,
+        spec.tolerance
+    );
+    let report = lags::analysis::validate::run(&dir, &spec)?;
+    for leg in &report.results {
+        println!("{}", leg.summary_line());
+    }
+    let out = args.str_or("out", "validation");
+    let w = ResultWriter::new(&out)?;
+    w.write_json("validation.json", &report.to_json())?;
+    println!("wrote {}/validation.json", out);
+    anyhow::ensure!(
+        report.pass,
+        "Assumption-1 gate FAILED: {} of {} legs have delta > 1 + {} samples \
+         (see {}/validation.json)",
+        report.results.iter().filter(|r| !r.pass).count(),
+        report.results.len(),
+        report.tolerance,
+        out
+    );
+    println!("Assumption-1 gate PASSED ({} legs)", report.results.len());
+    Ok(())
 }
 
 fn cmd_smax(args: &Args) -> Result<()> {

@@ -12,37 +12,64 @@
 //! (faithful) and the closed-form expectation (variance-free).
 
 use crate::sparsify::{randk, topk};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// δ^(l) for one layer given the P workers' accumulators (each length n)
 /// and the layer's k. `expectation` selects the closed-form denominator.
+/// The numerator is the Eq. 20 TopK loss; [`delta_metric_with`] is the
+/// generalized form for arbitrary compressors.
 pub fn delta_metric(
     accs: &[Vec<f32>],
     k: usize,
     rng: &mut Rng,
     expectation: bool,
 ) -> f64 {
+    let mut kept = vec![0.0f32; accs.first().map(|a| a.len()).unwrap_or(0)];
+    delta_metric_with(accs, k, rng, expectation, |_, acc, k, out| {
+        topk::topk_mask_into(acc, k, &mut kept);
+        out.copy_from_slice(&kept);
+    })
+}
+
+/// Generalized δ^(l): the numerator is the aggregate loss of an ARBITRARY
+/// per-worker compressor, supplied as `keep(p, acc, k, out)` — write into
+/// `out` the densified part worker `p` would transmit for accumulator
+/// `acc` under budget `k`. With a TopK keep this is exactly
+/// [`delta_metric`]; `lags validate` probes each zoo member's real
+/// `Compressor::probe` here, so Assumption 1 is checked against what
+/// actually crosses the wire (DESIGN.md §Compressor zoo and validation).
+pub fn delta_metric_with<F>(
+    accs: &[Vec<f32>],
+    k: usize,
+    rng: &mut Rng,
+    expectation: bool,
+    mut keep: F,
+) -> f64
+where
+    F: FnMut(usize, &[f32], usize, &mut [f32]),
+{
     let p = accs.len();
     assert!(p > 0);
     let n = accs[0].len();
 
-    // Σ_p x^p and Σ_p TopK(x^p, k)
+    // Σ_p x^p and Σ_p keep(x^p, k)
     let mut agg = vec![0.0f32; n];
-    let mut agg_topk = vec![0.0f32; n];
+    let mut agg_kept = vec![0.0f32; n];
     let mut kept = vec![0.0f32; n];
-    for acc in accs {
+    for (pi, acc) in accs.iter().enumerate() {
         debug_assert_eq!(acc.len(), n);
         for i in 0..n {
             agg[i] += acc[i];
         }
-        topk::topk_mask_into(acc, k, &mut kept);
+        keep(pi, acc, k, &mut kept);
         for i in 0..n {
-            agg_topk[i] += kept[i];
+            agg_kept[i] += kept[i];
         }
     }
 
     let num: f64 =
-        agg.iter().zip(agg_topk.iter()).map(|(&a, &s)| ((a - s) as f64).powi(2)).sum();
+        agg.iter().zip(agg_kept.iter()).map(|(&a, &s)| ((a - s) as f64).powi(2)).sum();
     let den: f64 = if expectation {
         randk::randk_expected_error_sq(&agg, k)
     } else {
@@ -56,6 +83,34 @@ pub fn delta_metric(
         return f64::INFINITY;
     }
     num / den
+}
+
+/// Serialize a δ value for JSON. Finite values pass through as numbers;
+/// the degenerate cases — `+∞` (RandK denominator exactly zero while the
+/// compressor still lost mass) and NaN — are NOT representable in JSON
+/// (`util::json` would emit the invalid literals `inf`/`NaN`), so they
+/// become a tagged sentinel object `{"degenerate": "infinite"|"nan"}`.
+pub fn delta_to_json(d: f64) -> Json {
+    if d.is_finite() {
+        Json::Num(d)
+    } else {
+        let tag = if d.is_nan() { "nan" } else { "infinite" };
+        Json::obj(vec![("degenerate", Json::Str(tag.to_string()))])
+    }
+}
+
+/// Inverse of [`delta_to_json`]: numbers parse as themselves, sentinel
+/// objects map back to `f64::INFINITY`/`NAN`. Returns `None` for any
+/// other shape.
+pub fn delta_from_json(j: &Json) -> Option<f64> {
+    if let Json::Num(n) = j {
+        return Some(*n);
+    }
+    match j.opt("degenerate").and_then(|t| t.as_str().ok()) {
+        Some("infinite") => Some(f64::INFINITY),
+        Some("nan") => Some(f64::NAN),
+        _ => None,
+    }
 }
 
 /// Streaming per-layer δ monitor used by the LAGS trainer (Fig. 2 series).
@@ -84,6 +139,25 @@ impl DeltaMonitor {
     /// Record δ for layer `layer` at `step` from the workers' accumulators.
     pub fn record(&mut self, layer: usize, step: usize, accs: &[Vec<f32>], k: usize) {
         let d = delta_metric(accs, k, &mut self.rng, self.expectation);
+        self.series[layer].push((step, d));
+    }
+
+    /// Record δ with a caller-supplied numerator (the actual compressor's
+    /// kept part per worker — see [`delta_metric_with`]). The denominator
+    /// draw consumes this monitor's RNG stream exactly like
+    /// [`Self::record`], so checkpoint snapshot/restore is unaffected by
+    /// which variant recorded a sample.
+    pub fn record_with<F>(
+        &mut self,
+        layer: usize,
+        step: usize,
+        accs: &[Vec<f32>],
+        k: usize,
+        keep: F,
+    ) where
+        F: FnMut(usize, &[f32], usize, &mut [f32]),
+    {
+        let d = delta_metric_with(accs, k, &mut self.rng, self.expectation, keep);
         self.series[layer].push((step, d));
     }
 
@@ -202,5 +276,83 @@ mod tests {
         assert!(m.should_sample(0));
         assert!(!m.should_sample(5));
         assert!(m.should_sample(20));
+    }
+
+    #[test]
+    fn generalized_numerator_with_topk_keep_matches_legacy() {
+        let accs = gaussian_accs(8, 512, 21);
+        let mut r1 = Rng::new(22);
+        let mut r2 = Rng::new(22);
+        for expectation in [true, false] {
+            let legacy = delta_metric(&accs, 32, &mut r1, expectation);
+            let mut kept = vec![0.0f32; 512];
+            let general =
+                delta_metric_with(&accs, 32, &mut r2, expectation, |_, acc, k, out| {
+                    topk::topk_mask_into(acc, k, &mut kept);
+                    out.copy_from_slice(&kept);
+                });
+            assert_eq!(legacy.to_bits(), general.to_bits(), "expectation={expectation}");
+        }
+    }
+
+    #[test]
+    fn keep_nothing_compressor_blows_past_one() {
+        // a compressor that transmits nothing loses ALL mass — δ must
+        // exceed 1 (the RandK baseline keeps k/n of the energy)
+        let accs = gaussian_accs(4, 256, 23);
+        let mut rng = Rng::new(24);
+        let d = delta_metric_with(&accs, 32, &mut rng, true, |_, _, _, out| {
+            out.iter_mut().for_each(|v| *v = 0.0);
+        });
+        assert!(d > 1.0, "delta={d}");
+    }
+
+    #[test]
+    fn degenerate_delta_round_trips_as_sentinel_json() {
+        // +∞ δ: k = n makes the RandK denominator exactly zero while the
+        // keep-nothing numerator stays positive
+        let accs = gaussian_accs(2, 16, 25);
+        let mut rng = Rng::new(26);
+        let d = delta_metric_with(&accs, 16, &mut rng, true, |_, _, _, out| {
+            out.iter_mut().for_each(|v| *v = 0.0);
+        });
+        assert!(d.is_infinite());
+
+        for (v, repr) in [
+            (d, r#"{"degenerate":"infinite"}"#),
+            (f64::NAN, r#"{"degenerate":"nan"}"#),
+            (0.75, "0.75"),
+        ] {
+            let j = delta_to_json(v);
+            let text = j.to_string_compact();
+            assert_eq!(text, repr);
+            // the serialized form must PARSE as valid JSON (the raw
+            // `Json::Num(inf)` path emitted the invalid literal `inf`)
+            let parsed = crate::util::json::Json::parse(&text).expect("valid JSON");
+            let back = delta_from_json(&parsed).expect("sentinel decodes");
+            if v.is_nan() {
+                assert!(back.is_nan());
+            } else {
+                assert_eq!(back, v);
+            }
+        }
+        assert_eq!(delta_from_json(&Json::Str("x".into())), None);
+    }
+
+    #[test]
+    fn monitor_record_with_consumes_same_rng_stream() {
+        // a record_with draw must advance the monitor RNG exactly like
+        // record, so mixing variants cannot shift later samples
+        let accs = gaussian_accs(4, 128, 27);
+        let mut a = DeltaMonitor::new(1, 1, false, 28);
+        let mut b = DeltaMonitor::new(1, 1, false, 28);
+        a.record(0, 0, &accs, 8);
+        let mut kept = vec![0.0f32; 128];
+        b.record_with(0, 0, &accs, 8, |_, acc, k, out| {
+            topk::topk_mask_into(acc, k, &mut kept);
+            out.copy_from_slice(&kept);
+        });
+        assert_eq!(a.rng_snapshot(), b.rng_snapshot());
+        assert_eq!(a.series, b.series);
     }
 }

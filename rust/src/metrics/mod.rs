@@ -4,5 +4,5 @@
 pub mod delta;
 pub mod recorder;
 
-pub use delta::{delta_metric, DeltaMonitor};
+pub use delta::{delta_from_json, delta_metric, delta_metric_with, delta_to_json, DeltaMonitor};
 pub use recorder::{CurveRecorder, ResultWriter};

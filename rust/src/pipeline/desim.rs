@@ -93,6 +93,11 @@ pub struct SimParams {
     /// sparsification overhead: t_spar(l) = spar_fixed + spar_per_elem * d_l
     pub spar_fixed: f64,
     pub spar_per_elem: f64,
+    /// wire bytes per transmitted sparse element (index + value encoding;
+    /// 8 = u32 index + f32 value, 5 = u32 index + u8 quantization level).
+    /// Ignored by the dense schedules. Per-message header overhead is
+    /// negligible at DES granularity and not modeled.
+    pub wire_bytes_per_elem: f64,
     /// per-worker multiplicative compute skews (`cluster::faults`); empty
     /// = homogeneous cluster. A synchronous step's compute stream is paced
     /// by the slowest participant, so the gating skew scales t_f and every
@@ -116,6 +121,7 @@ impl SimParams {
             // P102-100 class GPU
             spar_fixed: 5e-5,
             spar_per_elem: 4e-9,
+            wire_bytes_per_elem: 8.0,
             skews: Vec::new(),
             quorum: 0,
         }
@@ -129,6 +135,7 @@ impl SimParams {
             merge_bytes: 64.0 * 1024.0 * 1024.0,
             spar_fixed: 0.0,
             spar_per_elem: 0.0,
+            wire_bytes_per_elem: 8.0,
             skews: Vec::new(),
             quorum: 0,
         }
@@ -250,17 +257,22 @@ pub fn simulate(
             // whole-model selection cost is paid serially before the send
             let k_total: f64 = (0..l).map(k_of).sum();
             let spar = params.spar_fixed + params.spar_per_elem * model.d() as f64;
+            let wb = params.wire_bytes_per_elem;
             msgs = vec![Msg {
                 name: "all".into(),
                 ready: comp_done,
-                bytes: 8.0 * k_total,
-                time: spar + net.allgather_sparse(k_total),
+                bytes: wb * k_total,
+                time: spar + net.allgather_sparse_encoded(k_total, wb),
             }];
         }
         Schedule::Lags => {
             // merge consecutive ready layers until the buffer fills or
-            // backprop ends (§5 heuristic 1); wire load = 8 bytes per kept
-            msgs = grouped(&|i| 8.0 * k_of(i), &|bytes| (bytes, net.allgather_sparse(bytes / 8.0)));
+            // backprop ends (§5 heuristic 1); wire load = wire_bytes_per_elem
+            // bytes per kept coordinate (8 for index+value, 5 for index+level)
+            let wb = params.wire_bytes_per_elem;
+            msgs = grouped(&|i| wb * k_of(i), &|bytes| {
+                (bytes, net.allgather_sparse_encoded(bytes / wb, wb))
+            });
         }
     }
 
@@ -430,6 +442,24 @@ mod tests {
         assert!((p.skew_gate() - 1.0).abs() < 1e-12);
         let quorum = simulate(&m, &net(), Schedule::Lags, &p);
         assert!((quorum.iter_time - base.iter_time).abs() < 1e-12);
+    }
+
+    #[test]
+    fn narrower_wire_encoding_cheapens_sparse_comm() {
+        let m = zoo::resnet50();
+        let mut p = SimParams::uniform(&m, 1000.0);
+        let wide_l = simulate(&m, &net(), Schedule::Lags, &p);
+        let wide_s = simulate(&m, &net(), Schedule::Slgs, &p);
+        // index+level encoding (qsgd-topk): 5 bytes/elem instead of 8
+        p.wire_bytes_per_elem = 5.0;
+        let narrow_l = simulate(&m, &net(), Schedule::Lags, &p);
+        let narrow_s = simulate(&m, &net(), Schedule::Slgs, &p);
+        assert!(narrow_l.t_comm < wide_l.t_comm);
+        assert!(narrow_s.t_comm < wide_s.t_comm);
+        let sum = |b: &IterationBreakdown| b.events.iter().map(|e| e.wire_bytes).sum::<f64>();
+        assert!(sum(&narrow_l) < sum(&wide_l));
+        // SLGS bytes scale exactly with the encoding (single message)
+        assert!((sum(&narrow_s) / sum(&wide_s) - 5.0 / 8.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,714 @@
+//! First-class compressor abstraction — the seam every sparsification
+//! scheme plugs into (DESIGN.md §Compressor zoo and validation).
+//!
+//! A [`Compressor`] turns one layer's error-feedback accumulator
+//! `acc = eps + lr·grad` into a sparse wire message plus a new residual,
+//! under the hard contract
+//!
+//! ```text
+//! densify(msg) + resid == acc      (bit-exact, per coordinate)
+//! ```
+//!
+//! so no gradient mass is ever created or destroyed — the invariant the
+//! EF convergence argument (arxiv 1809.10505) and the repo's
+//! conservation tests rest on. Implementations own their scratch (no
+//! allocation in the steady-state hot loop) and draw any randomness from
+//! a per-call stream forked from `(seed, uid, step, layer)` via
+//! [`LayerCtx::rng`] — never from ambient state — so results are
+//! bit-identical across thread counts, pipeline modes and reruns, and
+//! checkpoints need no compressor RNG state at all.
+//!
+//! The zoo:
+//!
+//! * [`TopK`] — exact or double-sampling-threshold Top-k (the paper's
+//!   Algorithm 1 operator; `host`/`host-sampled`, and the host half of
+//!   the `xla*` kinds).
+//! * [`AdaptiveStoch`] — adaptive-sparsity stochastic compression (arxiv
+//!   2112.04088): the kept-set size floats with the gradient's
+//!   participation ratio `‖a‖₁²/‖a‖₂²` under the layer budget `k`;
+//!   coordinates are kept with magnitude-proportional probability.
+//! * [`GlobalTopk`] — one global threshold across ALL layers (arxiv
+//!   2009.09271) with per-layer error feedback; [`Compressor::begin_step`]
+//!   caches the model-wide k_total-th magnitude, per-layer splits reuse it.
+//! * [`QsgdTopk`] — a QSGD-style stochastic quantizer composed on exact
+//!   TopK values; quantization error folds into the EF residual
+//!   **exactly** (a Sterbenz-lemma construction, see the impl).
+//! * [`BottomK`] — keeps the k SMALLEST magnitudes: a deliberately
+//!   δ-violating negative control for the `lags validate` gate.
+
+use super::error_feedback::CompressStats;
+use super::sparse::SparseVec;
+use super::threshold::SampledThreshold;
+use super::topk;
+use crate::util::rng::Rng;
+
+/// Deterministic identity of one compression call. The RNG stream is a
+/// pure function of these four coordinates, so a compressor invoked for
+/// the same (seed, worker uid, step, layer) draws the same randomness on
+/// any thread, in any pipeline mode, on any rerun — and a resumed run
+/// replays the stream with no checkpointed RNG state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerCtx {
+    pub seed: u64,
+    /// stable worker uid (not rank: ranks shift under elastic membership)
+    pub uid: u64,
+    pub step: u64,
+    pub layer: u64,
+}
+
+impl LayerCtx {
+    /// The per-call PRNG stream: seed → uid → step → layer forks.
+    pub fn rng(&self) -> Rng {
+        Rng::new(self.seed).fork(self.uid).fork(self.step).fork(self.layer)
+    }
+}
+
+/// Bytes-on-wire accounting for one compressor's message encoding. The
+/// in-memory [`SparseVec`] always carries f32 values; the wire format is
+/// what the DES and `MessageStats` price — index+value pairs for the
+/// plain schemes, index+sign+level (plus a per-message shared norm) for
+/// the quantized one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireFormat {
+    /// bytes per transmitted element
+    pub elem_bytes: usize,
+    /// fixed per-message overhead (e.g. the QSGD norm scalar)
+    pub msg_overhead: usize,
+}
+
+impl WireFormat {
+    /// The legacy (u32 index, f32 value) pair — 8 bytes per element.
+    pub const INDEX_VALUE: WireFormat = WireFormat { elem_bytes: 8, msg_overhead: 0 };
+    /// QSGD-on-TopK: u32 index + 1 byte (sign + 7-bit level) per element,
+    /// plus one f32 norm scalar per message.
+    pub const INDEX_LEVEL: WireFormat = WireFormat { elem_bytes: 5, msg_overhead: 4 };
+
+    /// Wire bytes for a message with `nnz` transmitted elements.
+    pub fn message_bytes(&self, nnz: usize) -> usize {
+        self.msg_overhead + self.elem_bytes * nnz
+    }
+}
+
+/// One sparsification scheme. Object-safe; boxed per worker.
+///
+/// Contract (enforced by `rust/tests/compressor_contract.rs`):
+/// 1. `densify(msg) + resid == acc` bit-exact after [`Self::split`];
+/// 2. the kept count respects the scheme's budget;
+/// 3. identical `(ctx, acc, k)` ⇒ identical output, regardless of
+///    thread, pipeline mode, or process;
+/// 4. all randomness comes from `ctx.rng()` (audit rule R5).
+pub trait Compressor: Send {
+    /// Once per worker per step, BEFORE any per-layer split: global
+    /// schemes cache model-wide state here (e.g. the global threshold).
+    /// `resid`/`grad` are the worker's full flat vectors; the default is
+    /// a no-op. Must be idempotent — the trainer's δ-instrumentation
+    /// pre-pass re-arms it before the compression phase does.
+    fn begin_step(&mut self, _resid: &[f32], _grad: &[f32], _lr: f32, _k_total: usize) {}
+
+    /// Split one layer's accumulator into a sparse message (indices local
+    /// to the layer) and the new residual. `msg` and `resid` are fully
+    /// overwritten; `acc.len() == resid.len()`.
+    fn split(
+        &mut self,
+        ctx: &LayerCtx,
+        acc: &[f32],
+        k: usize,
+        msg: &mut SparseVec,
+        resid: &mut [f32],
+    ) -> CompressStats;
+
+    /// Densified kept part for `acc` WITHOUT touching any error-feedback
+    /// state — the generalized δ^(l) numerator (Eq. 20). Because the RNG
+    /// is re-derived from `ctx`, the probe reproduces exactly what
+    /// [`Self::split`] will transmit for the same call coordinates. The
+    /// default routes through `split` on local scratch; probing runs on
+    /// the δ sampling cadence, so the allocation is off the hot path.
+    fn probe(&mut self, ctx: &LayerCtx, acc: &[f32], k: usize, out: &mut [f32]) {
+        let n = acc.len();
+        debug_assert_eq!(out.len(), n);
+        let mut msg = SparseVec::new(n);
+        let mut resid = vec![0.0f32; n];
+        self.split(ctx, acc, k, &mut msg, &mut resid);
+        out.iter_mut().for_each(|v| *v = 0.0);
+        for (&i, &v) in msg.idx.iter().zip(msg.val.iter()) {
+            out[i as usize] = v;
+        }
+    }
+
+    /// This scheme's wire encoding (bytes accounting).
+    fn wire(&self) -> WireFormat {
+        WireFormat::INDEX_VALUE
+    }
+}
+
+/// Shared one-pass threshold split: coordinates with `|v| >= thr` go on
+/// the wire, the rest become residual. Exactly the split
+/// `ErrorFeedback::compress_layer_sparse` performs, including tie
+/// behaviour (every `|v| == thr` is kept) and NaN handling (NaN is never
+/// kept — comparisons with NaN are false).
+fn threshold_split(acc: &[f32], thr: f32, msg: &mut SparseVec, resid: &mut [f32]) -> usize {
+    msg.len = acc.len();
+    msg.idx.clear();
+    msg.val.clear();
+    for (i, (&v, r)) in acc.iter().zip(resid.iter_mut()).enumerate() {
+        if v.abs() >= thr {
+            msg.idx.push(i as u32);
+            msg.val.push(v);
+            *r = 0.0;
+        } else {
+            *r = v;
+        }
+    }
+    msg.nnz()
+}
+
+/// Exact or sampled-threshold Top-k — Algorithm 1's operator, the
+/// baseline every other zoo member is validated against. Deterministic;
+/// never touches the ctx RNG.
+pub struct TopK {
+    exact: bool,
+    sampler: SampledThreshold,
+    mags: Vec<f32>,
+}
+
+impl TopK {
+    pub fn new(exact: bool, sample_stride: usize) -> Self {
+        TopK { exact, sampler: SampledThreshold::new(sample_stride), mags: Vec::new() }
+    }
+}
+
+impl Compressor for TopK {
+    fn split(
+        &mut self,
+        _ctx: &LayerCtx,
+        acc: &[f32],
+        k: usize,
+        msg: &mut SparseVec,
+        resid: &mut [f32],
+    ) -> CompressStats {
+        let thr = if self.exact {
+            topk::kth_largest_abs_with_buf(acc, k, &mut self.mags)
+        } else {
+            self.sampler.estimate(acc, k)
+        };
+        let kept = threshold_split(acc, thr, msg, resid);
+        CompressStats { threshold: thr, kept }
+    }
+}
+
+/// Adaptive-sparsity stochastic compression (arxiv 2112.04088): the
+/// effective kept-set size floats with the gradient's participation
+/// ratio `s = ‖a‖₁² / ‖a‖₂² ∈ [1, n]` (≈ the count of "active"
+/// coordinates), clamped to the layer budget `k`. Each coordinate is
+/// kept with probability `min(1, k_eff·|a_i|/‖a‖₁)` — magnitude-
+/// proportional importance sampling — with a hard stop at `k` keeps, so
+/// the budget is never exceeded. Kept coordinates transmit their RAW
+/// accumulator value (no 1/p reweighting): the selection bias lands in
+/// the residual and is corrected by error feedback, which keeps the
+/// mass-conservation contract bit-exact.
+pub struct AdaptiveStoch;
+
+impl Compressor for AdaptiveStoch {
+    fn split(
+        &mut self,
+        ctx: &LayerCtx,
+        acc: &[f32],
+        k: usize,
+        msg: &mut SparseVec,
+        resid: &mut [f32],
+    ) -> CompressStats {
+        msg.len = acc.len();
+        msg.idx.clear();
+        msg.val.clear();
+        let mut l1 = 0.0f64;
+        let mut l2 = 0.0f64;
+        for &v in acc {
+            let a = v.abs() as f64;
+            l1 += a;
+            l2 += a * a;
+        }
+        if l2 == 0.0 || !l2.is_finite() || k == 0 {
+            resid.copy_from_slice(acc);
+            return CompressStats { threshold: 0.0, kept: 0 };
+        }
+        let participation = (l1 * l1 / l2).round() as usize;
+        let k_eff = participation.clamp(1, k);
+        // one uniform draw per coordinate, in index order, whether or not
+        // the budget is already exhausted — the stream position is a pure
+        // function of the coordinate index, so the kept set is too
+        let mut rng = ctx.rng();
+        let mut kept = 0usize;
+        for (i, (&v, r)) in acc.iter().zip(resid.iter_mut()).enumerate() {
+            let p = (k_eff as f64 * v.abs() as f64 / l1).min(1.0);
+            let u = rng.uniform();
+            if kept < k && u < p {
+                msg.idx.push(i as u32);
+                msg.val.push(v);
+                *r = 0.0;
+                kept += 1;
+            } else {
+                *r = v;
+            }
+        }
+        CompressStats { threshold: 0.0, kept }
+    }
+}
+
+/// Global-threshold selection (arxiv 2009.09271): one magnitude
+/// threshold — the model-wide k_total-th largest |eps + lr·g| — shared
+/// by every layer's split, with per-layer error feedback. Contrasts with
+/// LAGS's layer-wise selection: a layer whose magnitudes are globally
+/// small may send (almost) nothing this step, its mass deferring through
+/// the residual until it competes globally.
+pub struct GlobalTopk {
+    thr: f32,
+    acc: Vec<f32>,
+    mags: Vec<f32>,
+}
+
+impl GlobalTopk {
+    pub fn new() -> Self {
+        GlobalTopk { thr: f32::INFINITY, acc: Vec::new(), mags: Vec::new() }
+    }
+}
+
+impl Default for GlobalTopk {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Compressor for GlobalTopk {
+    fn begin_step(&mut self, resid: &[f32], grad: &[f32], lr: f32, k_total: usize) {
+        self.acc.clear();
+        self.acc.extend(resid.iter().zip(grad.iter()).map(|(&r, &g)| r + lr * g));
+        self.thr = topk::kth_largest_abs_with_buf(&self.acc, k_total, &mut self.mags);
+    }
+
+    fn split(
+        &mut self,
+        _ctx: &LayerCtx,
+        acc: &[f32],
+        _k: usize,
+        msg: &mut SparseVec,
+        resid: &mut [f32],
+    ) -> CompressStats {
+        let kept = threshold_split(acc, self.thr, msg, resid);
+        CompressStats { threshold: self.thr, kept }
+    }
+}
+
+/// QSGD levels per power-of-two norm bracket. A power of two, so the
+/// level spacing Δ is itself an exact power of two — the keystone of the
+/// exact-residual construction below.
+const QSGD_LEVELS: u32 = 128;
+
+/// Smallest power of two >= x, exactly, via the exponent bits. `None`
+/// when x is zero/subnormal/non-finite or the next power would overflow
+/// (callers fall back to unquantized TopK — correct, just not quantized).
+fn pow2_at_least(x: f32) -> Option<f32> {
+    if !x.is_finite() || x < f32::MIN_POSITIVE {
+        return None;
+    }
+    let bits = x.to_bits();
+    let exp = ((bits >> 23) & 0xff) as i32 - 127;
+    let e = if bits & 0x7f_ffff == 0 { exp } else { exp + 1 };
+    if e > 127 {
+        return None;
+    }
+    Some(f32::from_bits(((e + 127) as u32) << 23))
+}
+
+/// QSGD-style stochastic quantization (arxiv 1610.02132) composed on
+/// exact TopK: selection picks the k largest magnitudes, then each kept
+/// value is stochastically rounded onto the grid `±ℓ·Δ`,
+/// `Δ = norm'/128`, where `norm'` is `max|a_i|` rounded UP to a power of
+/// two. Quantization error folds into the EF residual **bit-exactly**:
+///
+/// * Δ is a power of two, so every grid point `ℓ·Δ` (ℓ ≤ 128 = 2⁷) is
+///   exactly representable in f32;
+/// * for ℓ̂ ≥ 1 the rounded grid point g satisfies `g/2 ≤ |a| ≤ 2g`
+///   (round-down: `g ≤ |a| < 2g`; round-up from ℓ ≥ 1:
+///   `g/2 ≤ ℓΔ ≤ |a| < g`; round-up from ℓ = 0 is only taken when
+///   `|a| ≥ Δ/2`), so by the Sterbenz lemma `fl(a − g) = a − g` exactly;
+/// * ℓ̂ = 0 means the coordinate is omitted from the wire and its
+///   residual is `a` itself — also exact.
+///
+/// So `densify(msg) + resid == acc` holds bit-for-bit even though values
+/// are quantized, and the wire only needs index + sign + 7-bit level per
+/// element plus one norm scalar per message ([`WireFormat::INDEX_LEVEL`]).
+/// The round-trip error per kept coordinate is bounded by the level
+/// spacing: `|a − q| ≤ Δ ≤ 2·max|a| / 128`.
+pub struct QsgdTopk {
+    mags: Vec<f32>,
+}
+
+impl QsgdTopk {
+    pub fn new() -> Self {
+        QsgdTopk { mags: Vec::new() }
+    }
+}
+
+impl Default for QsgdTopk {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Compressor for QsgdTopk {
+    fn split(
+        &mut self,
+        ctx: &LayerCtx,
+        acc: &[f32],
+        k: usize,
+        msg: &mut SparseVec,
+        resid: &mut [f32],
+    ) -> CompressStats {
+        let thr = topk::kth_largest_abs_with_buf(acc, k, &mut self.mags);
+        // plain max loop (order-insensitive), not a float fold — audit R3
+        let mut norm = 0.0f32;
+        for &v in acc {
+            norm = norm.max(v.abs());
+        }
+        let delta = match pow2_at_least(norm) {
+            Some(p) => p / QSGD_LEVELS as f32, // exact: both are powers of two
+            None => {
+                // zero/degenerate layer: plain TopK split, nothing to quantize
+                let kept = threshold_split(acc, thr, msg, resid);
+                return CompressStats { threshold: thr, kept };
+            }
+        };
+        msg.len = acc.len();
+        msg.idx.clear();
+        msg.val.clear();
+        let mut rng = ctx.rng();
+        for (i, (&v, r)) in acc.iter().zip(resid.iter_mut()).enumerate() {
+            if v.abs() >= thr {
+                let t = v.abs() / delta; // exact power-of-two scaling, t <= 128
+                let level = t.floor();
+                let frac = (t - level) as f64;
+                // one draw per SELECTED coordinate (stream position is a
+                // pure function of the kept set, which is deterministic)
+                let up = rng.uniform() < frac;
+                let mut lv = level + if up { 1.0 } else { 0.0 };
+                if level == 0.0 && v.abs() < 0.5 * delta {
+                    // below Δ/2 the Sterbenz window doesn't cover a
+                    // round-up; drop deterministically (resid = a, exact)
+                    lv = 0.0;
+                }
+                if lv == 0.0 {
+                    *r = v;
+                } else {
+                    let q = (lv * delta).copysign(v); // grid point, exact
+                    msg.idx.push(i as u32);
+                    msg.val.push(q);
+                    *r = v - q; // exact by Sterbenz
+                }
+            } else {
+                *r = v;
+            }
+        }
+        CompressStats { threshold: thr, kept: msg.nnz() }
+    }
+
+    fn wire(&self) -> WireFormat {
+        WireFormat::INDEX_LEVEL
+    }
+}
+
+/// Negative control: keeps the k SMALLEST magnitudes, maximally
+/// violating Assumption 1 (δ ≫ 1 — almost all mass is lost relative to
+/// RandK). Exists so `lags validate --inject-violation` can prove the
+/// δ-gate actually fails a bad compressor; never a sane training choice.
+pub struct BottomK {
+    mags: Vec<f32>,
+}
+
+impl BottomK {
+    pub fn new() -> Self {
+        BottomK { mags: Vec::new() }
+    }
+}
+
+impl Default for BottomK {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Compressor for BottomK {
+    fn split(
+        &mut self,
+        _ctx: &LayerCtx,
+        acc: &[f32],
+        k: usize,
+        msg: &mut SparseVec,
+        resid: &mut [f32],
+    ) -> CompressStats {
+        msg.len = acc.len();
+        msg.idx.clear();
+        msg.val.clear();
+        let n = acc.len();
+        if n == 0 || k == 0 {
+            resid.copy_from_slice(acc);
+            return CompressStats { threshold: 0.0, kept: 0 };
+        }
+        let k = k.min(n);
+        self.mags.clear();
+        self.mags.extend(acc.iter().map(|v| v.abs()));
+        let (_, kth, _) = self.mags.select_nth_unstable_by(k - 1, f32::total_cmp);
+        let thr = *kth; // k-th SMALLEST |acc|
+        for (i, (&v, r)) in acc.iter().zip(resid.iter_mut()).enumerate() {
+            if v.abs() <= thr {
+                msg.idx.push(i as u32);
+                msg.val.push(v);
+                *r = 0.0;
+            } else {
+                *r = v;
+            }
+        }
+        CompressStats { threshold: thr, kept: msg.nnz() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(layer: u64) -> LayerCtx {
+        LayerCtx { seed: 42, uid: 1, step: 3, layer }
+    }
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal_f32()).collect()
+    }
+
+    fn densify(msg: &SparseVec) -> Vec<f32> {
+        let mut out = vec![0.0f32; msg.len];
+        for (&i, &v) in msg.idx.iter().zip(msg.val.iter()) {
+            out[i as usize] = v;
+        }
+        out
+    }
+
+    #[test]
+    fn ctx_rng_streams_are_distinct_per_coordinate() {
+        let base = ctx(0);
+        let mut seen = std::vec::Vec::new();
+        for (seed, uid, step, layer) in
+            [(42, 1, 3, 0), (43, 1, 3, 0), (42, 2, 3, 0), (42, 1, 4, 0), (42, 1, 3, 1)]
+        {
+            let mut r = LayerCtx { seed, uid, step, layer }.rng();
+            seen.push(r.next_u64());
+        }
+        let mut again = base.rng();
+        assert_eq!(seen[0], again.next_u64(), "same ctx must replay the stream");
+        for i in 0..seen.len() {
+            for j in (i + 1)..seen.len() {
+                assert_ne!(seen[i], seen[j], "streams {i} and {j} collide");
+            }
+        }
+    }
+
+    #[test]
+    fn topk_matches_error_feedback_split() {
+        // the trait-based TopK must be bit-identical to the historical
+        // compress_layer_sparse split (same threshold, same kept set)
+        use crate::sparsify::ErrorFeedback;
+        let n = 512;
+        let grad = randvec(n, 9);
+        for exact in [true, false] {
+            let mut ef = ErrorFeedback::new(n, 8);
+            let mut msg_ref = SparseVec::new(n);
+            let s_ref = ef.compress_layer_sparse(0, &grad, 0.1, 24, exact, &mut msg_ref);
+
+            let mut comp = TopK::new(exact, 8);
+            let acc: Vec<f32> = grad.iter().map(|&g| 0.1 * g).collect();
+            let mut msg = SparseVec::new(n);
+            let mut resid = vec![0.0f32; n];
+            let s = comp.split(&ctx(0), &acc, 24, &mut msg, &mut resid);
+            assert_eq!(s.threshold, s_ref.threshold, "exact={exact}");
+            assert_eq!(s.kept, s_ref.kept, "exact={exact}");
+            assert_eq!(msg.idx, msg_ref.idx, "exact={exact}");
+            assert_eq!(msg.val, msg_ref.val, "exact={exact}");
+        }
+    }
+
+    #[test]
+    fn every_compressor_conserves_mass_bit_exactly() {
+        let n = 300;
+        let acc = randvec(n, 11);
+        let k = 30;
+        let k_total = 60;
+        let mut zoo: Vec<Box<dyn Compressor>> = vec![
+            Box::new(TopK::new(true, 4)),
+            Box::new(TopK::new(false, 4)),
+            Box::new(AdaptiveStoch),
+            Box::new(GlobalTopk::new()),
+            Box::new(QsgdTopk::new()),
+            Box::new(BottomK::new()),
+        ];
+        for (ci, comp) in zoo.iter_mut().enumerate() {
+            let grad: Vec<f32> = acc.clone();
+            comp.begin_step(&vec![0.0; n], &grad, 1.0, k_total);
+            let mut msg = SparseVec::new(n);
+            let mut resid = vec![0.0f32; n];
+            comp.split(&ctx(0), &acc, k, &mut msg, &mut resid);
+            let dense = densify(&msg);
+            for i in 0..n {
+                assert_eq!(
+                    (dense[i] + resid[i]).to_bits(),
+                    acc[i].to_bits(),
+                    "compressor {ci} coordinate {i}: {} + {} != {}",
+                    dense[i],
+                    resid[i],
+                    acc[i]
+                );
+                assert!(dense[i] == 0.0 || resid[i] == 0.0 || ci == 4, "disjoint split");
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_stoch_respects_budget_and_replays() {
+        let n = 2048;
+        let acc = randvec(n, 13);
+        let k = 64;
+        let mut a = AdaptiveStoch;
+        let mut m1 = SparseVec::new(n);
+        let mut r1 = vec![0.0f32; n];
+        let s1 = a.split(&ctx(5), &acc, k, &mut m1, &mut r1);
+        assert!(s1.kept <= k, "kept {} > budget {k}", s1.kept);
+        assert!(s1.kept > 0, "nothing kept on a dense gaussian layer");
+        // same ctx ⇒ bit-identical; different layer ⇒ different draw
+        let mut m2 = SparseVec::new(n);
+        let mut r2 = vec![0.0f32; n];
+        a.split(&ctx(5), &acc, k, &mut m2, &mut r2);
+        assert_eq!(m1.idx, m2.idx);
+        assert_eq!(m1.val, m2.val);
+        let mut m3 = SparseVec::new(n);
+        let mut r3 = vec![0.0f32; n];
+        a.split(&ctx(6), &acc, k, &mut m3, &mut r3);
+        assert_ne!(m1.idx, m3.idx, "layer fork must change the kept set");
+    }
+
+    #[test]
+    fn adaptive_stoch_floats_below_budget_on_peaked_input() {
+        // one dominant coordinate ⇒ participation ratio ≈ 1 ⇒ k_eff ≈ 1:
+        // the kept count must float far below the budget
+        let n = 1024;
+        let mut acc = vec![1e-4f32; n];
+        acc[17] = 100.0;
+        let mut a = AdaptiveStoch;
+        let mut msg = SparseVec::new(n);
+        let mut resid = vec![0.0f32; n];
+        let s = a.split(&ctx(1), &acc, 256, &mut msg, &mut resid);
+        assert!(s.kept <= 4, "peaked input kept {} of budget 256", s.kept);
+        assert!(msg.idx.contains(&17), "the dominant coordinate must be kept");
+    }
+
+    #[test]
+    fn global_topk_threshold_is_model_wide() {
+        // two "layers": all large magnitudes live in layer 0. With
+        // k_total = 4 the global threshold must select only layer-0 mass.
+        let l0 = vec![5.0f32, -6.0, 7.0, -8.0];
+        let l1 = vec![0.1f32, -0.2, 0.3, -0.4];
+        let flat: Vec<f32> = l0.iter().chain(l1.iter()).copied().collect();
+        let mut g = GlobalTopk::new();
+        g.begin_step(&vec![0.0; 8], &flat, 1.0, 4);
+        let mut msg = SparseVec::new(4);
+        let mut resid = vec![0.0f32; 4];
+        let s0 = g.split(&ctx(0), &l0, 2, &mut msg, &mut resid);
+        assert_eq!(s0.kept, 4, "every layer-0 coordinate beats the global threshold");
+        let s1 = g.split(&ctx(1), &l1, 2, &mut msg, &mut resid);
+        assert_eq!(s1.kept, 0, "layer 1 sends nothing; its mass defers via EF");
+        assert_eq!(resid, l1, "starved layer keeps its whole accumulator as residual");
+    }
+
+    #[test]
+    fn qsgd_error_bounded_by_level_spacing() {
+        let n = 4096;
+        let acc = randvec(n, 17);
+        let norm = acc.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let delta = pow2_at_least(norm).unwrap() / QSGD_LEVELS as f32;
+        let mut q = QsgdTopk::new();
+        let mut msg = SparseVec::new(n);
+        let mut resid = vec![0.0f32; n];
+        let s = q.split(&ctx(2), &acc, 256, &mut msg, &mut resid);
+        assert!(s.kept > 0 && s.kept <= 257, "kept={}", s.kept);
+        for (&i, &v) in msg.idx.iter().zip(msg.val.iter()) {
+            let a = acc[i as usize];
+            assert!((a - v).abs() <= delta, "i={i} |{a} - {v}| > Δ={delta}");
+            // transmitted values sit exactly on the ±ℓΔ grid
+            let l = (v.abs() / delta).round();
+            assert_eq!(v.abs(), l * delta, "off-grid value {v}");
+            assert!(l >= 1.0 && l <= QSGD_LEVELS as f32);
+        }
+        // selected-but-dropped coordinates (ℓ̂ = 0) are bounded too
+        let dense = densify(&msg);
+        let thr = s.threshold;
+        for i in 0..n {
+            if acc[i].abs() >= thr && dense[i] == 0.0 {
+                assert!(acc[i].abs() < delta, "dropped large value {}", acc[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn qsgd_wire_format_is_narrower() {
+        let q = QsgdTopk::new();
+        assert_eq!(q.wire(), WireFormat::INDEX_LEVEL);
+        assert_eq!(WireFormat::INDEX_VALUE.message_bytes(10), 80);
+        assert_eq!(WireFormat::INDEX_LEVEL.message_bytes(10), 54);
+        assert_eq!(TopK::new(true, 1).wire(), WireFormat::INDEX_VALUE);
+    }
+
+    #[test]
+    fn pow2_at_least_exact_brackets() {
+        assert_eq!(pow2_at_least(1.0), Some(1.0));
+        assert_eq!(pow2_at_least(1.5), Some(2.0));
+        assert_eq!(pow2_at_least(0.25), Some(0.25));
+        assert_eq!(pow2_at_least(0.26), Some(0.5));
+        assert_eq!(pow2_at_least(3.0e38), None, "next power overflows");
+        assert_eq!(pow2_at_least(0.0), None);
+        assert_eq!(pow2_at_least(f32::NAN), None);
+        for x in [1e-30f32, 7.3, 1234.5, 3.0e30] {
+            let p = pow2_at_least(x).unwrap();
+            assert!(p >= x && p / 2.0 < x, "x={x} p={p}");
+        }
+    }
+
+    #[test]
+    fn probe_matches_split_transmission() {
+        let n = 512;
+        let acc = randvec(n, 23);
+        for comp in [
+            Box::new(TopK::new(true, 4)) as Box<dyn Compressor>,
+            Box::new(AdaptiveStoch),
+            Box::new(QsgdTopk::new()),
+        ]
+        .iter_mut()
+        {
+            let c = ctx(7);
+            let mut probed = vec![9.0f32; n];
+            comp.probe(&c, &acc, 32, &mut probed);
+            let mut msg = SparseVec::new(n);
+            let mut resid = vec![0.0f32; n];
+            comp.split(&c, &acc, 32, &mut msg, &mut resid);
+            assert_eq!(probed, densify(&msg), "probe must equal the real transmission");
+        }
+    }
+
+    #[test]
+    fn bottomk_inverts_selection() {
+        let acc = vec![10.0f32, -0.1, 5.0, 0.2, -8.0, 0.05];
+        let mut b = BottomK::new();
+        let mut msg = SparseVec::new(6);
+        let mut resid = vec![0.0f32; 6];
+        let s = b.split(&ctx(0), &acc, 3, &mut msg, &mut resid);
+        assert_eq!(s.kept, 3);
+        assert_eq!(msg.idx, vec![1, 3, 5], "the three smallest magnitudes");
+        assert_eq!(resid, vec![10.0, 0.0, 5.0, 0.0, -8.0, 0.0]);
+    }
+}

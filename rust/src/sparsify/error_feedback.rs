@@ -150,6 +150,21 @@ impl ErrorFeedback {
         CompressStats { threshold: thr, kept: msg.nnz() }
     }
 
+    /// Form one layer's accumulator `acc = resid + lr*grad` in the scratch
+    /// buffer and hand back `(acc, resid)` as simultaneously-borrowed
+    /// slices (disjoint fields, so the borrows coexist). This is the
+    /// entry point for trait-based compressors: the caller follows up
+    /// with `Compressor::split(ctx, acc, k, msg, resid)`, which overwrites
+    /// the residual — exactly the state transition
+    /// [`Self::compress_layer_sparse`] performs for TopK.
+    pub fn accumulate(&mut self, off: usize, grad: &[f32], lr: f32) -> (&[f32], &mut [f32]) {
+        let n = grad.len();
+        let resid = &mut self.resid[off..off + n];
+        self.acc.clear();
+        self.acc.extend(resid.iter().zip(grad.iter()).map(|(&r, &g)| r + lr * g));
+        (&self.acc, resid)
+    }
+
     /// The accumulator (resid + lr*grad) for a layer WITHOUT updating state.
     /// Used by the delta^(l) measurement (Eq. 20), which needs x^{p,(l)} =
     /// G^p + eps^p before compression.

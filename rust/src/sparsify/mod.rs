@@ -12,13 +12,21 @@
 //! (`CompressorKind::Host*`) or through the AOT Pallas artifacts
 //! (`CompressorKind::Xla*`); both produce identical dense-masked results,
 //! which `rust/tests/integration_runtime.rs` asserts.
+//!
+//! Beyond the TopK family, [`compressor`] hosts the zoo behind the
+//! [`Compressor`] trait — adaptive-sparsity stochastic compression,
+//! global-threshold selection, QSGD-on-TopK quantization, and the
+//! `bottom-k` negative control used by `lags validate`'s δ-gate tests
+//! (DESIGN.md §Compressor zoo and validation).
 
+pub mod compressor;
 pub mod error_feedback;
 pub mod randk;
 pub mod sparse;
 pub mod threshold;
 pub mod topk;
 
+pub use compressor::{Compressor, LayerCtx, WireFormat};
 pub use error_feedback::ErrorFeedback;
 pub use randk::randk_mask;
 pub use sparse::SparseVec;
@@ -36,6 +44,15 @@ pub enum CompressorKind {
     XlaExact,
     /// AOT Pallas compress artifact with strided double-sampling.
     XlaSampled,
+    /// Adaptive-sparsity stochastic compression (arxiv 2112.04088).
+    AdaptiveStoch,
+    /// One global threshold across all layers, per-layer EF (arxiv 2009.09271).
+    GlobalTopk,
+    /// QSGD stochastic quantizer composed on exact TopK values.
+    QsgdTopk,
+    /// Negative control: keeps the k SMALLEST magnitudes (δ ≫ 1).
+    /// Exists only so the validation gate's failure path stays tested.
+    BottomK,
 }
 
 impl CompressorKind {
@@ -45,8 +62,13 @@ impl CompressorKind {
             "host-sampled" => Self::HostSampled,
             "xla" | "xla-exact" => Self::XlaExact,
             "xla-sampled" => Self::XlaSampled,
+            "adaptive-stoch" => Self::AdaptiveStoch,
+            "global-topk" => Self::GlobalTopk,
+            "qsgd-topk" => Self::QsgdTopk,
+            "bottom-k" => Self::BottomK,
             _ => anyhow::bail!(
-                "unknown compressor {s:?} (host|host-sampled|xla|xla-sampled)"
+                "unknown compressor {s:?} (host|host-sampled|xla|xla-sampled|\
+                 adaptive-stoch|global-topk|qsgd-topk|bottom-k)"
             ),
         })
     }
@@ -59,10 +81,41 @@ impl CompressorKind {
             Self::HostSampled => "host-sampled",
             Self::XlaExact => "xla",
             Self::XlaSampled => "xla-sampled",
+            Self::AdaptiveStoch => "adaptive-stoch",
+            Self::GlobalTopk => "global-topk",
+            Self::QsgdTopk => "qsgd-topk",
+            Self::BottomK => "bottom-k",
         }
     }
 
     pub fn is_xla(self) -> bool {
         matches!(self, Self::XlaExact | Self::XlaSampled)
+    }
+
+    /// Instantiate this kind's host-side [`Compressor`]. The `Xla*` kinds
+    /// map to their host TopK twins: the device path runs through the AOT
+    /// artifacts, but the δ-probe and the trait contract tests still need
+    /// a host implementation with identical selection semantics.
+    pub fn build(self, sample_stride: usize) -> Box<dyn Compressor> {
+        match self {
+            Self::HostExact | Self::XlaExact => {
+                Box::new(compressor::TopK::new(true, sample_stride))
+            }
+            Self::HostSampled | Self::XlaSampled => {
+                Box::new(compressor::TopK::new(false, sample_stride))
+            }
+            Self::AdaptiveStoch => Box::new(compressor::AdaptiveStoch),
+            Self::GlobalTopk => Box::new(compressor::GlobalTopk::new()),
+            Self::QsgdTopk => Box::new(compressor::QsgdTopk::new()),
+            Self::BottomK => Box::new(compressor::BottomK::new()),
+        }
+    }
+
+    /// Bytes-on-wire encoding for this kind (DES + MessageStats pricing).
+    pub fn wire(self) -> WireFormat {
+        match self {
+            Self::QsgdTopk => WireFormat::INDEX_LEVEL,
+            _ => WireFormat::INDEX_VALUE,
+        }
     }
 }

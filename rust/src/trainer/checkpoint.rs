@@ -301,7 +301,7 @@ impl Checkpoint {
                     ws.uid,
                     ws.residual.len()
                 );
-                let mut w = Worker::new(ws.uid, d, t.cfg.sample_stride);
+                let mut w = Worker::new(ws.uid, d, t.cfg.sample_stride, t.cfg.compressor);
                 w.ensure_message_scratch(&layer_sizes);
                 w.ef.write_residual(0, &ws.residual);
                 w.local_mom = ws.local_mom.clone();

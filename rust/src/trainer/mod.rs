@@ -70,7 +70,7 @@ use crate::models::ModelProfile;
 use crate::pipeline::desim::{simulate, Schedule, SimParams};
 use crate::pipeline::merge::{MergeBuffer, MergedGroup};
 use crate::runtime::{GradJob, Metric, ModelRuntime, Runtime};
-use crate::sparsify::CompressorKind;
+use crate::sparsify::{CompressorKind, LayerCtx, WireFormat};
 use crate::util::{clock, ParallelExecutor};
 use anyhow::{Context, Result};
 use std::collections::{BTreeMap, BTreeSet};
@@ -216,11 +216,14 @@ fn fire_group(
 /// rank-ordered) while workers are still compressing earlier layers. One
 /// merged message per rank is accounted per group, so `merge_bytes`
 /// shapes the real trainer's message granularity exactly like the DES's.
+/// Wire bytes are priced by the active compressor's [`WireFormat`] (a
+/// quantized scheme's elements are narrower than (u32, f32) pairs).
 /// Returns (wire bytes, message count, measured overlap).
 fn drain_stream(
     rx: mpsc::Receiver<LayerMsg>,
     stream: &mut StreamAggregator,
     merge: &mut MergeBuffer<usize>,
+    wf: WireFormat,
     mut ctx: StepCtx<'_>,
 ) -> (usize, usize, OverlapMeasure) {
     let mut timer = OverlapTimer::new();
@@ -242,7 +245,7 @@ fn drain_stream(
                         .iter()
                         .zip(stream.required())
                         .filter(|(_, &req)| req)
-                        .map(|(s, _)| s.as_ref().expect("required slot").wire_bytes())
+                        .map(|(s, _)| wf.message_bytes(s.as_ref().expect("required slot").nnz()))
                         .sum();
                     merge.push_with(li, layer_bytes, layer_bytes);
                 }
@@ -383,7 +386,7 @@ impl Trainer {
         let mm = &model.mm;
         let d = mm.d;
         let data = Synthetic::for_model(mm, cfg.seed)?;
-        let mut cluster = Cluster::new(cfg.workers, d, cfg.sample_stride);
+        let mut cluster = Cluster::new(cfg.workers, d, cfg.sample_stride, cfg.compressor);
         let layer_sizes: Vec<usize> = mm.layers.iter().map(|l| l.size).collect();
         for w in &mut cluster.workers {
             w.ensure_message_scratch(&layer_sizes);
@@ -428,7 +431,12 @@ impl Trainer {
         let layer_meta: Vec<(usize, usize)> = mm.layers.iter().map(|l| (l.offset, l.size)).collect();
 
         let delta = if cfg.delta_every > 0 && cfg.algorithm == Algorithm::Lags {
-            Some(DeltaMonitor::new(mm.layers.len(), cfg.delta_every, false, cfg.seed ^ 0xde17a))
+            Some(DeltaMonitor::new(
+                mm.layers.len(),
+                cfg.delta_every,
+                cfg.delta_expectation,
+                cfg.seed ^ 0xde17a,
+            ))
         } else {
             None
         };
@@ -667,9 +675,13 @@ impl Trainer {
         for ev in events {
             match ev.action {
                 MembershipAction::Drop => self.cluster.drop_worker(ev.worker)?,
-                MembershipAction::Join => {
-                    self.cluster.join_worker(ev.worker, d, self.cfg.sample_stride, &layer_sizes)?
-                }
+                MembershipAction::Join => self.cluster.join_worker(
+                    ev.worker,
+                    d,
+                    self.cfg.sample_stride,
+                    self.cfg.compressor,
+                    &layer_sizes,
+                )?,
             }
             self.robust_membership_log.push(MembershipChange {
                 step: t,
@@ -941,10 +953,8 @@ impl Trainer {
         let lr = self.cfg.lr as f32;
         let k_total: usize =
             (0..self.ks.len()).map(|li| self.k_at(li, t)).sum::<usize>().clamp(1, d);
-        let exact = !matches!(
-            self.cfg.compressor,
-            CompressorKind::HostSampled | CompressorKind::XlaSampled
-        );
+        let seed = self.cfg.seed;
+        let wf = self.cfg.compressor.wire();
         let delays = self.straggler_delays(t);
         // --record-trace times each worker's whole per-worker phase
         // (straggler sleep included — the recorded profile should carry
@@ -959,14 +969,11 @@ impl Trainer {
                             std::thread::sleep(ds[rank]);
                         }
                     }
-                    worker.ef.compress_layer_sparse(
-                        0,
-                        &worker.grad,
-                        lr,
-                        k_total,
-                        exact,
-                        &mut worker.msg_flat,
-                    );
+                    worker.comp.begin_step(worker.ef.residual(), &worker.grad, lr, k_total);
+                    let ctx =
+                        LayerCtx { seed, uid: worker.id as u64, step: t as u64, layer: 0 };
+                    let (acc, resid) = worker.ef.accumulate(0, &worker.grad, lr);
+                    worker.comp.split(&ctx, acc, k_total, &mut worker.msg_flat, resid);
                     if let Some(w0) = w0 {
                         worker.step_secs = w0.elapsed().as_secs_f64();
                     }
@@ -978,7 +985,7 @@ impl Trainer {
                     &mut self.agg,
                 );
                 let bytes: usize =
-                    self.cluster.workers.iter().map(|w| w.msg_flat.wire_bytes()).sum();
+                    self.cluster.workers.iter().map(|w| wf.message_bytes(w.msg_flat.nnz())).sum();
                 self.msg_stats.record(bytes, self.cluster.size());
                 self.apply_full();
             }
@@ -1011,21 +1018,18 @@ impl Trainer {
                                 std::thread::sleep(ds[rank]);
                             }
                         }
-                        worker.ef.compress_layer_sparse(
-                            0,
-                            &worker.grad,
-                            lr,
-                            k_total,
-                            exact,
-                            &mut worker.msg_flat,
-                        );
+                        worker.comp.begin_step(worker.ef.residual(), &worker.grad, lr, k_total);
+                        let ctx =
+                            LayerCtx { seed, uid: worker.id as u64, step: t as u64, layer: 0 };
+                        let (acc, resid) = worker.ef.accumulate(0, &worker.grad, lr);
+                        worker.comp.split(&ctx, acc, k_total, &mut worker.msg_flat, resid);
                         if let Some(w0) = w0 {
                             worker.step_secs = w0.elapsed().as_secs_f64();
                         }
                         worker.publish_flat(rank, tx);
                         Ok(())
                     },
-                    move || drain_stream(rx, stream, merge, ctx),
+                    move || drain_stream(rx, stream, merge, wf, ctx),
                 )?;
                 anyhow::ensure!(self.stream.finished(), "streamed SLGS reduction incomplete");
                 self.msg_stats.record(bytes, messages);
@@ -1052,6 +1056,7 @@ impl Trainer {
     fn reduce_apply_barrier_lags(&mut self) {
         let nl = self.layer_meta.len();
         let measure = self.measuring_at(self.step_idx);
+        let wf = self.cfg.compressor.wire();
         // participant-filtered: with a quorum armed only participating
         // ranks reduce (and account wire bytes); full participation passes
         // every rank through, bit-identical to the unfiltered path
@@ -1080,7 +1085,7 @@ impl Trainer {
                 .iter()
                 .zip(&self.participants)
                 .filter(|(_, &part)| part)
-                .map(|(w, _)| w.msgs[li].wire_bytes())
+                .map(|(w, _)| wf.message_bytes(w.msgs[li].nnz()))
                 .sum();
             self.merge.push_with(li, layer_bytes, layer_bytes);
         }
@@ -1114,25 +1119,38 @@ impl Trainer {
             self.cfg.compressor,
             CompressorKind::HostSampled | CompressorKind::XlaSampled
         );
+        let seed = self.cfg.seed;
+        let wf = self.cfg.compressor.wire();
+        let k_total: usize = self.ks_t.iter().sum();
 
         // Fig. 2 instrumentation pre-pass: peek_acc only reads this
         // layer's residual slice and compression of other layers never
         // touches it, so collecting all layers before any compression
         // sees the same accumulators the interleaved loop saw — and the
         // monitor's RNG stays on the sequential path (in both pipeline
-        // modes).
+        // modes). The numerator probes the ACTUAL compressor: begin_step
+        // is armed first (idempotent — the compression phase re-arms it
+        // with the same inputs), and each probe re-derives the same
+        // `(seed, uid, step, layer)` stream the real split will draw, so
+        // δ measures exactly what goes on the wire.
         if self.delta.as_ref().map(|m| m.should_sample(t)).unwrap_or(false) {
+            for w in &mut self.cluster.workers {
+                w.comp.begin_step(w.ef.residual(), &w.grad, lr, k_total);
+            }
+            let workers = &mut self.cluster.workers;
+            let monitor = self.delta.as_mut().expect("sampling implies monitor");
             for li in (0..nl).rev() {
                 let (off, n) = self.layer_meta[li];
-                let accs: Vec<Vec<f32>> = self
-                    .cluster
-                    .workers
+                let accs: Vec<Vec<f32>> = workers
                     .iter()
                     .map(|w| w.ef.peek_acc(off, &w.grad[off..off + n], lr))
                     .collect();
-                if let Some(m) = self.delta.as_mut() {
-                    m.record(li, t, &accs, self.ks_t[li]);
-                }
+                monitor.record_with(li, t, &accs, self.ks_t[li], |p, acc, k, out| {
+                    let w = &mut workers[p];
+                    let ctx =
+                        LayerCtx { seed, uid: w.id as u64, step: t as u64, layer: li as u64 };
+                    w.comp.probe(&ctx, acc, k, out);
+                });
             }
         }
 
@@ -1181,7 +1199,6 @@ impl Trainer {
             return Ok(());
         }
 
-        let exact = !sampled;
         let delays = self.straggler_delays(t);
         match self.cfg.pipeline {
             PipelineMode::Barrier => {
@@ -1196,17 +1213,19 @@ impl Trainer {
                             std::thread::sleep(ds[rank]);
                         }
                     }
+                    worker.comp.begin_step(worker.ef.residual(), &worker.grad, lr, k_total);
                     for li in (0..meta.len()).rev() {
                         let (off, n) = meta[li];
                         let c0 = measure.then(clock::now);
-                        worker.ef.compress_layer_sparse(
-                            off,
-                            &worker.grad[off..off + n],
-                            lr,
-                            ks_t[li],
-                            exact,
-                            &mut worker.msgs[li],
-                        );
+                        let ctx = LayerCtx {
+                            seed,
+                            uid: worker.id as u64,
+                            step: t as u64,
+                            layer: li as u64,
+                        };
+                        let (acc, resid) =
+                            worker.ef.accumulate(off, &worker.grad[off..off + n], lr);
+                        worker.comp.split(&ctx, acc, ks_t[li], &mut worker.msgs[li], resid);
                         if let Some(c0) = c0 {
                             worker.compress_secs[li] = c0.elapsed().as_secs_f64();
                         }
@@ -1251,17 +1270,19 @@ impl Trainer {
                                 std::thread::sleep(ds[rank]);
                             }
                         }
+                        worker.comp.begin_step(worker.ef.residual(), &worker.grad, lr, k_total);
                         for li in (0..meta.len()).rev() {
                             let (off, n) = meta[li];
                             let c0 = measure.then(clock::now);
-                            worker.ef.compress_layer_sparse(
-                                off,
-                                &worker.grad[off..off + n],
-                                lr,
-                                ks_t[li],
-                                exact,
-                                &mut worker.msgs[li],
-                            );
+                            let ctx = LayerCtx {
+                                seed,
+                                uid: worker.id as u64,
+                                step: t as u64,
+                                layer: li as u64,
+                            };
+                            let (acc, resid) =
+                                worker.ef.accumulate(off, &worker.grad[off..off + n], lr);
+                            worker.comp.split(&ctx, acc, ks_t[li], &mut worker.msgs[li], resid);
                             if let Some(c0) = c0 {
                                 worker.compress_secs[li] = c0.elapsed().as_secs_f64();
                             }
@@ -1272,7 +1293,7 @@ impl Trainer {
                         }
                         Ok(())
                     },
-                    move || drain_stream(rx, stream, merge, ctx),
+                    move || drain_stream(rx, stream, merge, wf, ctx),
                 )?;
                 anyhow::ensure!(self.stream.finished(), "streamed LAGS reduction incomplete");
                 self.msg_stats.record(bytes, messages);
@@ -1322,6 +1343,9 @@ impl Trainer {
                 // backprop order = reversed manifest order
                 p.ratios = self.ratios.iter().rev().cloned().collect();
                 p.merge_bytes = self.cfg.merge_bytes as f64;
+                // a quantized wire format narrows every sparse message
+                // (per-message overhead is negligible at DES granularity)
+                p.wire_bytes_per_elem = self.cfg.compressor.wire().elem_bytes as f64;
                 if self.robustness_active() {
                     // the LIVE membership's skews: the DES predicts the
                     // straggler-degraded (and quorum-recovered) step on

@@ -1,7 +1,7 @@
 //! Training run reports: everything the experiment harnesses print/save.
 
 use super::Algorithm;
-use crate::metrics::CurveRecorder;
+use crate::metrics::{delta_to_json, CurveRecorder};
 use crate::util::json::Json;
 
 /// Communication volume accounting (what crossed the simulated wire).
@@ -241,9 +241,9 @@ impl TrainReport {
             ("metric_name", Json::Str(self.metric_name.clone())),
             (
                 "delta_fraction_holding",
-                self.delta_fraction_holding.map(Json::Num).unwrap_or(Json::Null),
+                self.delta_fraction_holding.map(delta_to_json).unwrap_or(Json::Null),
             ),
-            ("delta_max", self.delta_max.map(Json::Num).unwrap_or(Json::Null)),
+            ("delta_max", self.delta_max.map(delta_to_json).unwrap_or(Json::Null)),
             ("bytes_per_iter", Json::Num(self.msg_stats.bytes_per_iter())),
             ("messages_per_iter", Json::Num(self.msg_stats.messages_per_iter())),
             ("wall_seconds", Json::Num(self.wall_seconds)),
@@ -347,6 +347,15 @@ mod tests {
         let rb = j.get("robustness").unwrap();
         assert_eq!(rb.get("quorum").unwrap().as_f64().unwrap(), 0.0);
         assert!(rb.get("membership_log").unwrap().as_arr().unwrap().is_empty());
+        // a degenerate (den==0) delta must serialize as the tagged sentinel,
+        // never as a bare IEEE infinity (invalid JSON)
+        let mut r2 = r.clone();
+        r2.delta_max = Some(f64::INFINITY);
+        let j2 = r2.to_json();
+        assert_eq!(
+            j2.get("delta_max").unwrap().to_string_compact(),
+            "{\"degenerate\":\"infinite\"}"
+        );
     }
 
     #[test]

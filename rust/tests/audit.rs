@@ -123,6 +123,24 @@ fn waived_r5_covers_all_patterns_on_target_line() {
     assert_eq!(waived_of(&fs, Rule::R5), 2, "one waiver, both patterns reported waived");
 }
 
+#[test]
+fn bad_r5_prng_constant_flags_outside_the_rng_funnel() {
+    // a hand-rolled xorshift64* — its multiplier constant is the R5
+    // fingerprint; stochastic compressors must fork util::rng streams
+    let fs = audit_fixture("bad_r5_prng.rs", "sparsify/fixture.rs");
+    assert_eq!(unwaived_of(&fs, Rule::R5), 1, "{fs:?}");
+    // the one sanctioned generator is structurally exempt
+    assert!(audit_fixture("bad_r5_prng.rs", "util/rng.rs").is_empty());
+}
+
+#[test]
+fn waived_r5_prng_constant_suppresses_but_reports() {
+    let fs = audit_fixture("waived_r5_prng.rs", "metrics/fixture.rs");
+    assert_eq!(unwaived_of(&fs, Rule::R5), 0, "{fs:?}");
+    assert_eq!(waived_of(&fs, Rule::R5), 1);
+    assert!(fs[0].waiver.as_deref().unwrap().contains("pinned stream constant"));
+}
+
 // --- W0: waiver protocol --------------------------------------------------
 
 #[test]

@@ -1,0 +1,11 @@
+// R5 fixture: a hand-rolled xorshift64* generator. All randomness must
+// flow through util::rng's forked streams; the multiplier constant below
+// is the fingerprint the audit keys on, so this file MUST flag exactly
+// one unwaived R5 finding (outside util/rng.rs).
+
+fn xorshift_star(mut s: u64) -> u64 {
+    s ^= s >> 12;
+    s ^= s << 25;
+    s ^= s >> 27;
+    s.wrapping_mul(0x2545F4914F6CDD1D)
+}

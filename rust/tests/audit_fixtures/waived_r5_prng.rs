@@ -1,0 +1,8 @@
+// R5 fixture: the splitmix64 gamma constant outside util/rng.rs, with a
+// waiver — e.g. a golden test pinning the stream constant. The finding
+// must be suppressed but still reported into audit.json.
+
+fn gamma() -> u64 {
+    // lags-audit: allow(R5) reason="fixture: pinned stream constant, not a generator"
+    0x9e3779b97f4a7c15
+}

@@ -1,0 +1,305 @@
+//! Property suite for the [`lags::sparsify::Compressor`] trait contract
+//! (DESIGN.md §Compressor zoo and validation):
+//!
+//! 1. `densify(msg) + resid == acc` bit-exact, for every zoo member, on
+//!    every shape (including degenerate all-zero layers);
+//! 2. the kept count respects the scheme's budget (`<= k` for the
+//!    budgeted schemes; adaptive-stoch floats BELOW `k`);
+//! 3. identical `(seed, uid, step, layer)` ⇒ bit-identical output across
+//!    fresh instances, OS threads, pipeline modes and whole reruns;
+//! 4. the QSGD quantizer's round-trip error is bounded by the level
+//!    spacing `Δ <= 2·max|acc|/128`;
+//! 5. bytes-on-wire accounting follows the compressor's [`WireFormat`]
+//!    end-to-end (index+level is cheaper than index+value at equal k).
+
+use lags::collectives::PipelineMode;
+use lags::config::TrainConfig;
+use lags::runtime::Runtime;
+use lags::sparsify::{Compressor, CompressorKind, LayerCtx, SparseVec};
+use lags::trainer::{Algorithm, Trainer};
+use lags::util::rng::Rng;
+use std::sync::Arc;
+
+/// Every kind the factory can build (the `xla*` kinds build their host
+/// TopK twins — same selection semantics, same contract).
+const ALL_KINDS: [CompressorKind; 8] = [
+    CompressorKind::HostExact,
+    CompressorKind::HostSampled,
+    CompressorKind::XlaExact,
+    CompressorKind::XlaSampled,
+    CompressorKind::AdaptiveStoch,
+    CompressorKind::GlobalTopk,
+    CompressorKind::QsgdTopk,
+    CompressorKind::BottomK,
+];
+
+/// The kinds whose split consumes the ctx RNG stream.
+const STOCHASTIC: [CompressorKind; 2] =
+    [CompressorKind::AdaptiveStoch, CompressorKind::QsgdTopk];
+
+fn ctx(seed: u64, uid: u64, step: u64, layer: u64) -> LayerCtx {
+    LayerCtx { seed, uid, step, layer }
+}
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| r.normal_f32()).collect()
+}
+
+fn densify(msg: &SparseVec) -> Vec<f32> {
+    let mut out = vec![0.0f32; msg.len];
+    for (&i, &v) in msg.idx.iter().zip(msg.val.iter()) {
+        out[i as usize] = v;
+    }
+    out
+}
+
+/// Build a fresh compressor of `kind`, arm it, and split one layer.
+fn split_with(
+    kind: CompressorKind,
+    c: &LayerCtx,
+    acc: &[f32],
+    k: usize,
+) -> (SparseVec, Vec<f32>, usize) {
+    let n = acc.len();
+    let mut comp = kind.build(8);
+    // single-layer model: the layer IS the flat vector, k_total = k
+    let zero_resid = vec![0.0f32; n];
+    comp.begin_step(&zero_resid, acc, 1.0, k);
+    let mut msg = SparseVec::new(n);
+    let mut resid = vec![0.0f32; n];
+    let stats = comp.split(c, acc, k, &mut msg, &mut resid);
+    (msg, resid, stats.kept)
+}
+
+#[test]
+fn mass_conservation_is_bit_exact_for_every_kind_and_shape() {
+    for kind in ALL_KINDS {
+        for (si, n) in [8usize, 33, 257, 1024].into_iter().enumerate() {
+            let acc = randvec(n, 100 + si as u64);
+            let k = (n / 8).max(1);
+            let c = ctx(42, 1, 3, si as u64);
+            let (msg, resid, kept) = split_with(kind, &c, &acc, k);
+            let dense = densify(&msg);
+            for i in 0..n {
+                assert_eq!(
+                    (dense[i] + resid[i]).to_bits(),
+                    acc[i].to_bits(),
+                    "{} n={n} i={i}: {} + {} != {}",
+                    kind.name(),
+                    dense[i],
+                    resid[i],
+                    acc[i]
+                );
+            }
+            assert!(kept <= n, "{} kept {} > n {}", kind.name(), kept, n);
+        }
+    }
+}
+
+#[test]
+fn degenerate_all_zero_layer_conserves_and_sends_nothing_stochastic() {
+    // all-zero accumulator: no mass to move; the contract still holds
+    // and nothing panics (QSGD's pow2 guard falls back to plain TopK)
+    let n = 64;
+    let acc = vec![0.0f32; n];
+    for kind in ALL_KINDS {
+        let (msg, resid, _) = split_with(kind, &ctx(1, 2, 3, 4), &acc, 8);
+        let dense = densify(&msg);
+        for i in 0..n {
+            assert_eq!((dense[i] + resid[i]).to_bits(), acc[i].to_bits(), "{}", kind.name());
+        }
+        // whatever is transmitted carries zero mass (threshold-based
+        // kinds keep |v| >= 0 here, but only exact zeros)
+        assert!(msg.val.iter().all(|&v| v == 0.0), "{} sent nonzero mass", kind.name());
+    }
+    // adaptive-stoch's degenerate guard sends nothing at all
+    let (msg, _, kept) = split_with(CompressorKind::AdaptiveStoch, &ctx(1, 2, 3, 4), &acc, 8);
+    assert_eq!(msg.nnz(), 0);
+    assert_eq!(kept, 0);
+}
+
+#[test]
+fn budgeted_kinds_never_exceed_k() {
+    // exact selection kinds keep exactly-k-or-fewer; adaptive-stoch is
+    // hard-capped below k; only the sampled-threshold estimate may
+    // legitimately overshoot (that's its documented trade)
+    let n = 2048;
+    let acc = randvec(n, 7);
+    for kind in [
+        CompressorKind::HostExact,
+        CompressorKind::XlaExact,
+        CompressorKind::AdaptiveStoch,
+        CompressorKind::QsgdTopk,
+        CompressorKind::BottomK,
+    ] {
+        for k in [1usize, 16, 256] {
+            let (_, _, kept) = split_with(kind, &ctx(9, 0, 1, 0), &acc, k);
+            assert!(kept <= k, "{} kept {} > budget {}", kind.name(), kept, k);
+        }
+    }
+}
+
+#[test]
+fn same_ctx_is_bit_identical_across_fresh_instances_and_threads() {
+    let n = 1024;
+    let acc = randvec(n, 21);
+    let k = 96;
+    for kind in ALL_KINDS {
+        let c = ctx(42, 5, 17, 2);
+        let (m_ref, r_ref, _) = split_with(kind, &c, &acc, k);
+        // fresh instance, same ctx → identical
+        let (m2, r2, _) = split_with(kind, &c, &acc, k);
+        assert_eq!(m_ref.idx, m2.idx, "{}", kind.name());
+        assert_eq!(m_ref.val, m2.val, "{}", kind.name());
+        assert_eq!(r_ref, r2, "{}", kind.name());
+        // four OS threads, each with its own instance, same ctx →
+        // identical to the reference (no ambient/shared RNG state)
+        let acc_arc = Arc::new(acc.clone());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let acc = Arc::clone(&acc_arc);
+                std::thread::spawn(move || split_with(kind, &c, &acc, k))
+            })
+            .collect();
+        for h in handles {
+            let (m, r, _) = h.join().expect("thread");
+            assert_eq!(m_ref.idx, m.idx, "{} diverged across threads", kind.name());
+            assert_eq!(m_ref.val, m.val, "{} diverged across threads", kind.name());
+            assert_eq!(r_ref, r, "{} residual diverged across threads", kind.name());
+        }
+    }
+}
+
+#[test]
+fn stochastic_streams_fork_on_every_ctx_coordinate() {
+    // perturbing any one of (seed, uid, step, layer) must change a
+    // stochastic compressor's kept set — the four forks are all live
+    let n = 4096;
+    let acc = randvec(n, 31);
+    let k = 128;
+    let base = ctx(42, 1, 3, 0);
+    for kind in STOCHASTIC {
+        let (m0, _, _) = split_with(kind, &base, &acc, k);
+        for (label, c) in [
+            ("seed", ctx(43, 1, 3, 0)),
+            ("uid", ctx(42, 2, 3, 0)),
+            ("step", ctx(42, 1, 4, 0)),
+            ("layer", ctx(42, 1, 3, 1)),
+        ] {
+            let (m, _, _) = split_with(kind, &c, &acc, k);
+            assert!(
+                m.idx != m0.idx || m.val != m0.val,
+                "{}: {label} fork did not change the message",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn qsgd_round_trip_error_is_bounded_by_level_spacing() {
+    // |a - q| <= Δ for every transmitted coordinate, with
+    // Δ = pow2_at_least(max|a|)/128 <= 2·max|a|/128; residuals of kept
+    // coordinates obey the same bound (they ARE a - q, exactly)
+    for trial in 0..8u64 {
+        let n = 2048;
+        let acc = randvec(n, 200 + trial);
+        let norm = acc.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let delta_max = 2.0 * norm / 128.0;
+        let (msg, resid, _) = split_with(CompressorKind::QsgdTopk, &ctx(5, 1, trial, 0), &acc, 256);
+        assert!(msg.nnz() > 0, "trial {trial}: quantizer sent nothing");
+        for (&i, &q) in msg.idx.iter().zip(msg.val.iter()) {
+            let a = acc[i as usize];
+            assert!(
+                (a - q).abs() <= delta_max,
+                "trial {trial} i={i}: |{a} - {q}| > {delta_max}"
+            );
+            assert_eq!(resid[i as usize], a - q, "residual must be the exact rounding error");
+            assert_eq!(a.signum(), q.signum(), "quantization must preserve sign");
+        }
+    }
+}
+
+fn train_cfg(
+    kind: CompressorKind,
+    alg: Algorithm,
+    mode: PipelineMode,
+    threads: usize,
+) -> TrainConfig {
+    let mut c = TrainConfig::default_for("mlp");
+    c.algorithm = alg;
+    c.compressor = kind;
+    c.pipeline = mode;
+    c.threads = threads;
+    c.workers = 3;
+    c.steps = 6;
+    c.lr = 0.1;
+    c.compression = 10.0;
+    c.eval_every = 0;
+    c
+}
+
+type RunFingerprint = (Vec<f64>, Vec<f32>, lags::trainer::MessageStats);
+
+fn run_losses(rt: &Arc<Runtime>, cfg: TrainConfig) -> RunFingerprint {
+    let mut t = Trainer::with_runtime(rt, cfg).expect("trainer");
+    let mut losses = Vec::new();
+    for _ in 0..t.cfg.steps {
+        losses.push(t.step().expect("step"));
+    }
+    (losses, t.params().to_vec(), t.msg_stats().clone())
+}
+
+#[test]
+fn training_is_bit_identical_across_pipeline_modes_and_threads() {
+    // the end-to-end determinism contract for every NEW zoo member: the
+    // barrier single-thread run is the reference; overlap + multi-thread
+    // must reproduce losses, params and message accounting bit-for-bit
+    // (TopK kinds already have this matrix in integration_parallel.rs)
+    let rt = Arc::new(Runtime::native(77));
+    for kind in [
+        CompressorKind::AdaptiveStoch,
+        CompressorKind::GlobalTopk,
+        CompressorKind::QsgdTopk,
+        CompressorKind::BottomK,
+    ] {
+        let (l0, p0, s0) =
+            run_losses(&rt, train_cfg(kind, Algorithm::Lags, PipelineMode::Barrier, 1));
+        assert!(l0.iter().all(|l| l.is_finite()), "{}: non-finite loss", kind.name());
+        for (mode, threads) in
+            [(PipelineMode::Barrier, 3), (PipelineMode::Overlap, 1), (PipelineMode::Overlap, 3)]
+        {
+            let (l, p, s) = run_losses(&rt, train_cfg(kind, Algorithm::Lags, mode, threads));
+            let tag = format!("{} {} threads={threads}", kind.name(), mode.name());
+            assert_eq!(l0, l, "losses diverged: {tag}");
+            assert_eq!(p0, p, "params diverged: {tag}");
+            assert_eq!(s0, s, "message stats diverged: {tag}");
+        }
+    }
+    // the whole-model SLGS path drives the same trait machinery
+    let qsgd = CompressorKind::QsgdTopk;
+    let (l0, p0, s0) = run_losses(&rt, train_cfg(qsgd, Algorithm::Slgs, PipelineMode::Barrier, 1));
+    let (l1, p1, s1) = run_losses(&rt, train_cfg(qsgd, Algorithm::Slgs, PipelineMode::Overlap, 2));
+    assert_eq!(l0, l1, "slgs qsgd-topk diverged across modes");
+    assert_eq!(p0, p1);
+    assert_eq!(s0, s1);
+}
+
+#[test]
+fn wire_format_prices_the_narrow_encoding_cheaper() {
+    // same model, same budget: qsgd-topk's index+level encoding must put
+    // fewer bytes on the wire than host TopK's index+value (5k + 4 < 8k
+    // per layer message at any k >= 2)
+    let rt = Arc::new(Runtime::native(78));
+    let cfg = |kind| train_cfg(kind, Algorithm::Lags, PipelineMode::Barrier, 1);
+    let (_, _, host) = run_losses(&rt, cfg(CompressorKind::HostExact));
+    let (_, _, qsgd) = run_losses(&rt, cfg(CompressorKind::QsgdTopk));
+    assert!(host.total_bytes > 0 && qsgd.total_bytes > 0);
+    assert!(
+        qsgd.total_bytes < host.total_bytes,
+        "index+level ({}) must beat index+value ({})",
+        qsgd.total_bytes,
+        host.total_bytes
+    );
+}

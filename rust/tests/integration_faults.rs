@@ -98,7 +98,7 @@ fn drop_resharding_conserves_residual_coordinate_sums() {
     // coordinate's cluster-wide sum is preserved (up to one f32 add),
     // and a join (fresh zero residual) changes nothing
     let d = 101usize;
-    let mut c = Cluster::new(3, d, 16);
+    let mut c = Cluster::new(3, d, 16, CompressorKind::HostExact);
     for w in &mut c.workers {
         for i in 0..d {
             w.ef.add_residual_at(i, (w.id + 1) as f32 * 0.01 * (i as f32 - 50.0));
@@ -111,7 +111,7 @@ fn drop_resharding_conserves_residual_coordinate_sums() {
     for (i, (a, b)) in before.iter().zip(after.iter()).enumerate() {
         assert!((a - b).abs() < 1e-5, "coordinate {i} lost mass: {a} -> {b}");
     }
-    c.join_worker(7, d, 16, &[50, 51]).unwrap();
+    c.join_worker(7, d, 16, CompressorKind::HostExact, &[50, 51]).unwrap();
     assert_eq!(c.size(), 3);
     assert_eq!(after, c.residual_coordinate_sums(), "a joiner must not shift residual mass");
     // dropping the last worker or an absent uid is refused

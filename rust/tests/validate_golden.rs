@@ -1,0 +1,196 @@
+//! Golden δ-series snapshots + end-to-end `lags validate` coverage.
+//!
+//! The δ^(l) series (Eq. 20, actual-compressor numerator over the
+//! expected-RandK denominator) is a pure function of
+//! `(model, compressor, seed, steps, workers)` under the determinism
+//! contract. These tests pin it three ways:
+//!
+//! 1. **Golden snapshot** (bless-on-absence): a seeded 30-step mlp run
+//!    per zoo compressor renders every sample's exact f64 bit pattern
+//!    into `rust/tests/golden/`. First run writes the file; every later
+//!    run must match byte-for-byte. Delete a file to re-bless after an
+//!    intentional numeric change.
+//! 2. **Invariance**: reruns and pipeline modes (barrier vs overlap)
+//!    must reproduce the series bit-identically.
+//! 3. **Harness**: `analysis::validate::run` passes the shipped zoo on a
+//!    reduced matrix and FAILS it when the bottom-k violation is
+//!    injected — the negative test CI relies on.
+
+use lags::analysis::validate::{self, ValidateSpec, DELTA_TOL, ZOO};
+use lags::collectives::PipelineMode;
+use lags::config::TrainConfig;
+use lags::runtime::Runtime;
+use lags::sparsify::CompressorKind;
+use lags::trainer::{Algorithm, Trainer};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const SEED: u64 = 4242;
+const STEPS: usize = 30;
+const DELTA_EVERY: usize = 5;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
+}
+
+fn delta_cfg(kind: CompressorKind, mode: PipelineMode, expectation: bool) -> TrainConfig {
+    let mut c = TrainConfig::default_for("mlp");
+    c.algorithm = Algorithm::Lags;
+    c.compressor = kind;
+    c.pipeline = mode;
+    c.threads = 1;
+    c.workers = 3;
+    c.steps = STEPS;
+    c.seed = SEED;
+    c.delta_every = DELTA_EVERY;
+    c.delta_expectation = expectation;
+    c.eval_every = 0;
+    c.verbose = false;
+    c
+}
+
+fn run_series(rt: &Arc<Runtime>, cfg: TrainConfig) -> Vec<Vec<(usize, f64)>> {
+    let mut t = Trainer::with_runtime(rt, cfg).expect("trainer");
+    t.run().expect("train");
+    t.delta_series().expect("delta monitor armed").to_vec()
+}
+
+/// Render a δ-series with exact bit patterns (the golden file format).
+fn render(series: &[Vec<(usize, f64)>]) -> String {
+    let mut out = String::new();
+    out.push_str("# lags golden delta series v1: layer step bits(hex) value\n");
+    for (li, layer) in series.iter().enumerate() {
+        for &(step, d) in layer {
+            out.push_str(&format!("{li} {step} {:016x} {d:.17e}\n", d.to_bits()));
+        }
+    }
+    out
+}
+
+#[test]
+fn golden_delta_series_pins_the_zoo_on_mlp() {
+    let rt = Arc::new(Runtime::native(SEED));
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).expect("mkdir golden");
+    for kind in ZOO {
+        let series = run_series(&rt, delta_cfg(kind, PipelineMode::Barrier, true));
+        // teeth independent of the snapshot: every sample is finite and
+        // inside the Assumption-1 band for every shipped zoo member
+        assert!(!series.is_empty() && series.iter().any(|l| !l.is_empty()), "{}", kind.name());
+        for (li, layer) in series.iter().enumerate() {
+            for &(step, d) in layer {
+                assert!(
+                    d.is_finite() && d <= 1.0 + DELTA_TOL,
+                    "{} layer {li} step {step}: delta {d} outside band",
+                    kind.name()
+                );
+            }
+        }
+        let got = render(&series);
+        let path = dir.join(format!("delta_mlp_{}.golden", kind.name()));
+        match std::fs::read_to_string(&path) {
+            Ok(want) => assert_eq!(
+                want,
+                got,
+                "{}: delta series drifted from {} — if the numeric change \
+                 is intentional, delete the golden file to re-bless",
+                kind.name(),
+                path.display()
+            ),
+            Err(_) => {
+                std::fs::write(&path, &got).expect("bless golden");
+                eprintln!("blessed {}", path.display());
+            }
+        }
+    }
+}
+
+#[test]
+fn delta_series_is_invariant_across_reruns_and_pipeline_modes() {
+    let rt = Arc::new(Runtime::native(SEED));
+    let stochastic =
+        [CompressorKind::AdaptiveStoch, CompressorKind::GlobalTopk, CompressorKind::QsgdTopk];
+    for kind in stochastic {
+        let a = run_series(&rt, delta_cfg(kind, PipelineMode::Barrier, true));
+        let b = run_series(&rt, delta_cfg(kind, PipelineMode::Barrier, true));
+        let c = run_series(&rt, delta_cfg(kind, PipelineMode::Overlap, true));
+        let bits = |s: &[Vec<(usize, f64)>]| -> Vec<Vec<(usize, u64)>> {
+            s.iter().map(|l| l.iter().map(|&(st, d)| (st, d.to_bits())).collect()).collect()
+        };
+        assert_eq!(bits(&a), bits(&b), "{}: rerun drift", kind.name());
+        assert_eq!(bits(&a), bits(&c), "{}: pipeline-mode drift", kind.name());
+    }
+}
+
+#[test]
+fn expectation_denominator_agrees_with_single_draw_statistically() {
+    // delta_expectation=true swaps one RandK draw's error for the
+    // closed-form E‖·‖². The two series share sample points and must
+    // agree in aggregate (the draw concentrates around its mean) even
+    // though individual samples differ.
+    let rt = Arc::new(Runtime::native(SEED));
+    let exp = run_series(&rt, delta_cfg(CompressorKind::HostExact, PipelineMode::Barrier, true));
+    let draw = run_series(&rt, delta_cfg(CompressorKind::HostExact, PipelineMode::Barrier, false));
+    assert_eq!(exp.len(), draw.len());
+    let mut ratios = Vec::new();
+    for (le, ld) in exp.iter().zip(draw.iter()) {
+        assert_eq!(le.len(), ld.len(), "sample cadence must not depend on the mode");
+        for (&(se, de), &(sd, dd)) in le.iter().zip(ld.iter()) {
+            assert_eq!(se, sd);
+            assert!(de.is_finite() && dd.is_finite() && de > 0.0 && dd > 0.0);
+            ratios.push(de / dd);
+        }
+    }
+    assert!(!ratios.is_empty());
+    let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    assert!(
+        (0.25..=4.0).contains(&mean),
+        "expectation vs single-draw denominators disagree wildly: mean ratio {mean}"
+    );
+}
+
+fn tiny_spec(inject: bool) -> ValidateSpec {
+    let mut spec = ValidateSpec::quick(77);
+    spec.models = vec!["mlp".into()];
+    spec.compressors =
+        vec![CompressorKind::HostExact, CompressorKind::AdaptiveStoch, CompressorKind::QsgdTopk];
+    spec.steps = 15;
+    spec.workers = 2;
+    spec.mode = "test".into();
+    spec.inject_violation = inject;
+    spec
+}
+
+#[test]
+fn validate_run_passes_the_zoo_on_a_reduced_matrix() {
+    let spec = tiny_spec(false);
+    let report = validate::run("native", &spec).expect("validate");
+    assert_eq!(report.results.len(), 3);
+    assert!(report.pass, "shipped zoo must clear the delta gate");
+    for leg in &report.results {
+        assert!(leg.pass, "{} failed: {}", leg.compressor, leg.summary_line());
+        assert!(leg.final_loss.is_finite() && leg.dense_final_loss.is_finite());
+        assert!(!leg.layers.is_empty());
+    }
+    // the report is valid JSON with the pinned schema tag
+    let text = report.to_json().to_string_pretty();
+    assert!(text.contains("\"schema_version\": 1"));
+}
+
+#[test]
+fn validate_run_fails_when_the_violation_is_injected() {
+    let spec = tiny_spec(true);
+    let report = validate::run("native", &spec).expect("validate");
+    assert_eq!(report.results.len(), 4, "the bottom-k control leg must be appended");
+    assert!(!report.pass, "the gate must have teeth");
+    let control = report
+        .results
+        .iter()
+        .find(|l| l.compressor == "bottom-k")
+        .expect("bottom-k leg present");
+    assert!(!control.pass);
+    let max = control.layers.iter().map(|l| l.max_delta).fold(0.0f64, f64::max);
+    assert!(max > 1.0 + spec.tolerance, "bottom-k max delta {max} should breach the band");
+    // only the injected control fails — the genuine zoo legs still pass
+    assert!(report.results.iter().filter(|l| l.compressor != "bottom-k").all(|l| l.pass));
+}
