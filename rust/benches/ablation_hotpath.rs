@@ -18,6 +18,7 @@
 
 use lags::collectives::dense::ring_allreduce_mean;
 use lags::config::TrainConfig;
+use lags::runtime::simd::{self, Isa};
 use lags::runtime::{kernels, native::NativeNet, Runtime};
 use lags::sparsify::{sparse::SparseVec, threshold, topk, ErrorFeedback};
 use lags::trainer::{Algorithm, Trainer};
@@ -72,12 +73,20 @@ fn gemm_naive_branchy(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n
 }
 
 fn main() {
+    // optional positional family filter: `cargo bench --bench
+    // ablation_hotpath -- gemm` runs ONLY the GEMM/SIMD family and its
+    // BENCH_gemm.json snapshot (the CI perf-trend step's fast path)
+    let gemm_only = matches!(std::env::args().nth(1).as_deref(), Some("gemm"));
+
     // --- naive vs blocked GEMM at the zoo's actual hot-loop shapes.
     // Runs FIRST so the BENCH_gemm.json snapshot below contains exactly
     // this family; the acceptance bar is >= 3x blocked-vs-naive on the
     // largest Dense and Conv shapes. Each row is annotated with its
-    // measured GFLOP/s (2·m·k·n per iteration).
-    println!("# gemm kernels: naive (branchy axpy) vs blocked/register-tiled");
+    // measured GFLOP/s (2·m·k·n per iteration). Baseline rows are pinned
+    // to the SCALAR kernel set so their meaning is stable across CI
+    // hardware; the dispatched SIMD tiers get their own per-ISA rows.
+    println!("# gemm kernels: naive (branchy axpy) vs blocked/register-tiled (scalar)");
+    simd::set_active(Isa::Scalar).expect("scalar is always available");
     let man = lags::runtime::native::native_manifest(42);
     let mut gemm_shapes: Vec<(String, usize, usize, usize)> = Vec::new();
     for name in ["mlp_deep", "convnet", "convnet_deep", "rnn"] {
@@ -113,7 +122,74 @@ fn main() {
         );
         println!("  speedup {label} ({m}x{k}x{n}): {:.2}x", s.median / s2.median);
     }
+
+    // --- the SIMD tier: re-run the blocked kernel under every available
+    // dispatched ISA (rows `gemm_blocked_{label}_{isa}`), so the snapshot
+    // carries the scalar-vs-SIMD trajectory; the acceptance bar is
+    // >= 1.5x over blocked-scalar on the largest shapes wherever a vector
+    // ISA is available. Results are bit-identical by the simd contract —
+    // only the wall clock may move.
+    println!("\n# gemm kernels: dispatched SIMD tiers vs blocked-scalar");
+    for isa in Isa::available() {
+        if isa == Isa::Scalar {
+            continue; // already measured as the gemm_blocked_{label} rows
+        }
+        simd::set_active(isa).expect("listed as available");
+        for (label, m, k, n) in &gemm_shapes {
+            let (m, k, n) = (*m, *k, *n);
+            let a = randvec(m * k, 11);
+            let b = randvec(k * n, 12);
+            let mut c = vec![0.0f32; m * n];
+            Rng::new(7).fill_normal(&mut c, 1.0);
+            let gflops_per_iter = 2.0 * m as f64 * k as f64 * n as f64;
+            let name = format!("gemm_blocked_{label}_{}", isa.name());
+            let s = bench::run_items(&name, m * k * n, || {
+                kernels::gemm_nn(bb(&mut c), bb(&a), bb(&b), m, k, n);
+            });
+            bench::annotate(&name, "gflops", gflops_per_iter / s.median / 1e9);
+            println!("  {} {label} ({m}x{k}x{n}): {:.2} GFLOP/s", isa.name(), gflops_per_iter / s.median / 1e9);
+        }
+    }
+
+    // --- select + sparse reduction per ISA (rows `kernels_mask_{isa}_*`,
+    // `kernels_split_{isa}_*`, `sparse_agg_add_{isa}`): the other two
+    // kernel families of the SIMD tier, in the same snapshot.
+    println!("\n# select + sparse reduction per dispatched ISA");
+    {
+        let n = 1 << 20;
+        let x = randvec(n, 7);
+        let thr = topk::kth_largest_abs(&x, n / 100);
+        let sv = {
+            let mut v = vec![0.0f32; n];
+            let mut rng = Rng::new(3);
+            for i in rng.sample_distinct(n, n / 100) {
+                v[i] = rng.normal_f32();
+            }
+            SparseVec::from_dense(&v)
+        };
+        for isa in Isa::available() {
+            simd::set_active(isa).expect("listed as available");
+            let mut out = vec![0.0f32; n];
+            bench::run_items(&format!("kernels_mask_{}_n{n}", isa.name()), n, || {
+                topk::mask_with_threshold(bb(&x), thr, &mut out);
+            });
+            let mut kept = vec![0.0f32; n];
+            let mut resid = vec![0.0f32; n];
+            bench::run_items(&format!("kernels_split_{}_n{n}", isa.name()), n, || {
+                topk::split_with_threshold(bb(&x), thr, &mut kept, &mut resid);
+            });
+            let mut dense = vec![0.0f32; n];
+            bench::run_items(&format!("sparse_agg_add_{}", isa.name()), sv.nnz(), || {
+                sv.add_into(bb(&mut dense));
+            });
+        }
+    }
+    simd::set_active(Isa::detect()).expect("detected ISA is available");
+
     bench::write_json("BENCH_gemm.json").expect("write BENCH_gemm.json");
+    if gemm_only {
+        return;
+    }
 
     println!("\n# threshold selection: exact O(n) vs double-sampling (stride 64)");
     for n in [65_536usize, 1 << 20, 1 << 22] {

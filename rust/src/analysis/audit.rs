@@ -23,9 +23,11 @@
 //! * **R3** — no float accumulation (`.fold(`, `.sum::<f32>`,
 //!   `.sum::<f64>`) in core modules outside the fixed-order sites
 //!   `runtime::kernels` and `collectives::sparse_agg`.
-//! * **R4** — `unsafe` forbidden crate-wide (backed by
-//!   `#![forbid(unsafe_code)]`; the lint also catches attempts to relax
-//!   that attribute in any module).
+//! * **R4** — `unsafe` denied crate-wide (backed by
+//!   `#![deny(unsafe_code)]`) and confined to `runtime::simd`, the
+//!   explicit SIMD kernel tier: every `unsafe` token there must carry an
+//!   individually reasoned waiver, and any bare `unsafe` anywhere else is
+//!   a hard finding.
 //! * **R5** — no randomness source other than `util::rng::Rng` (no
 //!   `rand::`, `thread_rng`, `getrandom`, `RandomState`, `chrono::`),
 //!   and no hand-rolled generators either: the multiplier/gamma
@@ -83,7 +85,7 @@ impl Rule {
             Rule::R1 => "no order-unstable collections (HashMap/HashSet) in deterministic core",
             Rule::R2 => "no wall-clock or environment reads outside util::clock::now",
             Rule::R3 => "no float accumulation outside runtime::kernels / collectives::sparse_agg",
-            Rule::R4 => "unsafe forbidden crate-wide",
+            Rule::R4 => "unsafe denied crate-wide; confined to runtime::simd under reasoned waivers",
             Rule::R5 => "no randomness source other than util::rng::Rng (incl. hand-rolled PRNGs)",
             Rule::W0 => "waiver protocol: waivers must parse, name known rules, and carry a reason",
         }
@@ -154,7 +156,8 @@ impl Rule {
 fn is_core(rel: &str) -> bool {
     const CORE_PREFIXES: [&str; 6] =
         ["trainer/", "cluster/", "collectives/", "sparsify/", "adaptive/", "pipeline/"];
-    const CORE_FILES: [&str; 3] = ["runtime/native.rs", "runtime/kernels.rs", "util/rng.rs"];
+    const CORE_FILES: [&str; 4] =
+        ["runtime/native.rs", "runtime/kernels.rs", "runtime/simd.rs", "util/rng.rs"];
     CORE_PREFIXES.iter().any(|p| rel.starts_with(p)) || CORE_FILES.contains(&rel)
 }
 

@@ -40,11 +40,13 @@
 //!
 //! The crate ships its own determinism auditor ([`analysis`], `lags
 //! audit`): rules R1–R5 (DESIGN.md §Determinism contract and enforcement)
-//! are statically enforced over this source tree, `unsafe` is forbidden
-//! crate-wide, and every wall-clock read funnels through
+//! are statically enforced over this source tree, `unsafe` is denied
+//! crate-wide and allowed only inside [`runtime::simd`] (the explicit
+//! SIMD kernel tier, where every intrinsic call carries an audited R4
+//! waiver), and every wall-clock read funnels through
 //! [`util::clock::now`].
 
-#![forbid(unsafe_code)]
+#![deny(unsafe_code)]
 
 pub mod adaptive;
 pub mod analysis;

@@ -13,6 +13,11 @@
 //!   smax      — Eq. 19 S_max sweep over r = t_c/t_b
 //!   audit     — static determinism-contract lint over rust/src (R1–R5)
 //!   validate  — Assumption-1 δ-gate over the (model × compressor) matrix
+//!   perf-diff — compare two bench JSON snapshots, fail on regression
+//!
+//! The global `--isa {scalar,avx2,avx512,neon}` flag (or the `LAGS_ISA`
+//! env var) forces the SIMD kernel tier's dispatch before any kernel runs;
+//! every ISA is bit-identical, so it selects wall clock, never results.
 
 #![forbid(unsafe_code)]
 
@@ -33,6 +38,13 @@ const USAGE: &str = "\
 lags — Layer-wise Adaptive Gradient Sparsification (AAAI'20 reproduction)
 
 USAGE: lags <subcommand> [flags]
+
+Global: --isa scalar|avx2|avx512|neon
+        force the SIMD kernel tier's dispatched ISA (default: the
+        strongest the CPU supports; LAGS_ISA is the env equivalent).
+        Every ISA is bit-identical to the scalar reference kernels, so
+        the flag changes wall clock, never results. `lags info` prints
+        what was detected and what is dispatched.
 
   info     [--artifacts DIR] [--layers]
   train    [--artifacts DIR] [--model M] [--algorithm dense|slgs|lags]
@@ -197,6 +209,15 @@ USAGE: lags <subcommand> [flags]
            5-model matrix. --inject-violation appends the bottom-k
            negative control (keeps the SMALLEST coordinates at c = 2),
            which must FAIL the gate — CI's proof the gate has teeth
+  perf-diff <old.json> <new.json> [--tolerance F]
+
+           compare two bench snapshots (the {\"benches\": [...]} documents
+           the bench targets write, e.g. BENCH_gemm.json) row by row on
+           ns_per_iter. Exits non-zero when any shared row is more than
+           --tolerance slower (default 0.10 = +10%); added and removed
+           rows are reported but never fail the diff. The CI perf-trend
+           step diffs fresh gemm/kernels/sparse_agg rows against the
+           committed BENCH_gemm.json snapshot
 ";
 
 fn main() {
@@ -219,6 +240,13 @@ fn main() {
 }
 
 fn run(args: &Args) -> Result<()> {
+    // resolve the SIMD dispatch FIRST so every kernel call — including the
+    // calibrate microbenchmark — runs under the requested ISA
+    if let Some(name) = args.get("isa") {
+        let isa = lags::runtime::simd::Isa::from_name(name)
+            .ok_or_else(|| anyhow::anyhow!("--isa {name:?} is not one of scalar/avx2/avx512/neon"))?;
+        lags::runtime::simd::set_active(isa)?;
+    }
     match args.subcommand.as_deref() {
         Some("info") => cmd_info(args),
         Some("train") => cmd_train(args),
@@ -233,6 +261,7 @@ fn run(args: &Args) -> Result<()> {
         Some("sweep") => cmd_sweep(args),
         Some("audit") => cmd_audit(args),
         Some("validate") => cmd_validate(args),
+        Some("perf-diff") => cmd_perf_diff(args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -263,6 +292,16 @@ fn cmd_info(args: &Args) -> Result<()> {
         lags::runtime::Manifest::load(&dir)?
     };
     println!("artifacts: {:?} (seed {})", man.dir, man.seed);
+    {
+        use lags::runtime::simd::Isa;
+        let names: Vec<&str> = Isa::available().iter().map(|i| i.name()).collect();
+        println!(
+            "simd: dispatch {} (detected {}, available: {})",
+            lags::runtime::simd::active().isa.name(),
+            Isa::detect().name(),
+            names.join(", ")
+        );
+    }
     println!("compress buckets: {:?}", man.compress_buckets);
     for (name, m) in &man.models {
         println!(
@@ -580,9 +619,10 @@ fn cmd_ratios(args: &Args) -> Result<()> {
         rc.c_max
     );
     println!(
-        "device flops: {:.3e}/s (source: {})",
+        "device flops: {:.3e}/s (source: {}; isa: {})",
         rt.device_flops(),
-        rt.flops_source()
+        rt.flops_source(),
+        lags::runtime::simd::active().isa.name()
     );
     if tc.workers <= 1 {
         println!("(P = 1: no communication to hide — all layers dense, c = 1)");
@@ -631,6 +671,7 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
         cal.flops_per_sec / 1e9,
         lags::models::DEVICE_FLOPS
     );
+    println!("kernel isa: {} (recorded in the calibration as provenance)", cal.isa);
     let default_path = Calibration::default_path(std::path::Path::new(&dir));
     let path = match args.get("out") {
         Some(p) => std::path::PathBuf::from(p),
@@ -766,6 +807,68 @@ fn cmd_validate(args: &Args) -> Result<()> {
         out
     );
     println!("Assumption-1 gate PASSED ({} legs)", report.results.len());
+    Ok(())
+}
+
+/// `lags perf-diff <old.json> <new.json>` — diff two bench snapshots (the
+/// `{"benches": [...]}` documents `util::bench::write_json` emits) on
+/// `ns_per_iter`. Shared rows slower by more than `--tolerance` (default
+/// 10%) fail the diff; added/removed rows only inform (bench sets grow
+/// across PRs). This is the CI perf-trend gate over BENCH_gemm.json.
+fn cmd_perf_diff(args: &Args) -> Result<()> {
+    let (Some(old_path), Some(new_path)) = (args.positional.first(), args.positional.get(1)) else {
+        anyhow::bail!("usage: lags perf-diff <old.json> <new.json> [--tolerance 0.10]");
+    };
+    let tol = args.f64_or("tolerance", 0.10)?;
+    anyhow::ensure!(tol.is_finite() && tol >= 0.0, "--tolerance must be a finite ratio >= 0");
+    let load = |p: &str| -> Result<Vec<(String, f64)>> {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("reading bench snapshot {p}: {e}"))?;
+        let doc = Json::parse(&text)?;
+        let mut rows = Vec::new();
+        for r in doc.get("benches")?.as_arr()? {
+            rows.push((r.get("name")?.as_str()?.to_string(), r.get("ns_per_iter")?.as_f64()?));
+        }
+        Ok(rows)
+    };
+    let old = load(old_path)?;
+    let new = load(new_path)?;
+    println!("perf-diff {old_path} -> {new_path} (tolerance +{:.0}%):", tol * 100.0);
+    println!("| {:<40} | {:>12} | {:>12} | {:>8} |", "bench", "old ns", "new ns", "delta");
+    let mut regressions = Vec::new();
+    let mut compared = 0usize;
+    for (name, new_ns) in &new {
+        match old.iter().find(|(n, _)| n == name) {
+            Some((_, old_ns)) if *old_ns > 0.0 => {
+                compared += 1;
+                let delta = (new_ns - old_ns) / old_ns;
+                println!(
+                    "| {:<40} | {:>12.1} | {:>12.1} | {:>+7.1}% |",
+                    name,
+                    old_ns,
+                    new_ns,
+                    delta * 100.0
+                );
+                if delta > tol {
+                    regressions
+                        .push(format!("{name}: {old_ns:.1}ns -> {new_ns:.1}ns ({:+.1}%)", delta * 100.0));
+                }
+            }
+            _ => println!("| {:<40} | {:>12} | {:>12.1} | {:>8} |", name, "-", new_ns, "added"),
+        }
+    }
+    for (name, old_ns) in &old {
+        if !new.iter().any(|(n, _)| n == name) {
+            println!("| {:<40} | {:>12.1} | {:>12} | {:>8} |", name, old_ns, "-", "removed");
+        }
+    }
+    anyhow::ensure!(
+        regressions.is_empty(),
+        "perf regression beyond the +{:.0}% tolerance:\n  {}",
+        tol * 100.0,
+        regressions.join("\n  ")
+    );
+    println!("perf-diff OK: {compared} shared row(s), none more than {:.0}% slower", tol * 100.0);
     Ok(())
 }
 

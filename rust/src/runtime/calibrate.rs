@@ -57,6 +57,11 @@ pub struct Calibration {
     /// sustained flops/s over the whole shape mix — the number that
     /// replaces `DEVICE_FLOPS` in `Runtime::device_flops`
     pub flops_per_sec: f64,
+    /// the SIMD kernel ISA that was dispatched while measuring
+    /// (`runtime::simd`); `"unrecorded"` for files persisted before the
+    /// field existed. A calibration is only an honest compute price for
+    /// runs dispatching the same ISA.
+    pub isa: String,
     pub shapes: Vec<ShapeSample>,
     /// the file this calibration was loaded from (None = freshly
     /// measured, not yet persisted)
@@ -116,13 +121,19 @@ impl Calibration {
             wtime += weight / rate;
             samples.push(ShapeSample { label, m, k, n, flops_per_sec: rate, step_flops: weight });
         }
-        Ok(Calibration { flops_per_sec: wsum / wtime, shapes: samples, source: None })
+        Ok(Calibration {
+            flops_per_sec: wsum / wtime,
+            isa: super::simd::active().isa.name().to_string(),
+            shapes: samples,
+            source: None,
+        })
     }
 
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("version", Json::Num(1.0)),
             ("flops_per_sec", Json::Num(self.flops_per_sec)),
+            ("isa", Json::Str(self.isa.clone())),
             (
                 "shapes",
                 Json::Arr(
@@ -154,6 +165,11 @@ impl Calibration {
             flops.is_finite() && flops > 0.0,
             "calibration flops_per_sec must be positive, got {flops}"
         );
+        // optional so pre-SIMD-tier v1 files keep loading
+        let isa = match v.opt("isa") {
+            Some(s) => s.as_str()?.to_string(),
+            None => "unrecorded".to_string(),
+        };
         let mut shapes = Vec::new();
         if let Some(arr) = v.opt("shapes") {
             for s in arr.as_arr()? {
@@ -167,7 +183,7 @@ impl Calibration {
                 });
             }
         }
-        Ok(Calibration { flops_per_sec: flops, shapes, source: None })
+        Ok(Calibration { flops_per_sec: flops, isa, shapes, source: None })
     }
 
     /// Load a persisted calibration; `Ok(None)` when the file doesn't
@@ -256,12 +272,15 @@ mod tests {
             cal.flops_per_sec
         );
         assert!(cal.source.is_none(), "freshly measured, not loaded");
+        // a fresh measurement records the ISA it actually dispatched
+        assert_eq!(cal.isa, crate::runtime::simd::active().isa.name());
     }
 
     #[test]
     fn json_round_trip() {
         let cal = Calibration {
             flops_per_sec: 2.5e9,
+            isa: "avx2".into(),
             shapes: vec![ShapeSample {
                 label: "dense_32x64x10".into(),
                 m: 32,
@@ -285,6 +304,10 @@ mod tests {
             &Json::parse(r#"{"version": 2, "flops_per_sec": 1e9}"#).unwrap()
         )
         .is_err());
+        // pre-SIMD-tier files (no "isa" key) still load, marked unrecorded
+        let legacy =
+            Calibration::from_json(&Json::parse(r#"{"flops_per_sec": 1e9}"#).unwrap()).unwrap();
+        assert_eq!(legacy.isa, "unrecorded");
     }
 
     #[test]

@@ -35,14 +35,28 @@
 //! keeps the trainer's parallel≡sequential / overlap≡barrier bit-identity
 //! contracts intact.
 
+use super::simd;
+
 /// Register-tile rows: each micro-kernel step amortises one `B` row load
-/// across this many `A` rows.
-const MR: usize = 4;
-/// Register-tile columns: the unrolled vector width of the inner loops.
-const NR: usize = 8;
+/// across this many `A` rows (shared with the SIMD tier's tile bodies).
+const MR: usize = simd::MR;
+/// Register-tile columns of the SCALAR micro-kernel: the unrolled vector
+/// width of its inner loops. The dispatched [`simd::KernelSet`] may tile
+/// wider (AVX-512 runs 16-column tiles) — legal under the contract
+/// because tile width only selects which independent per-element chains
+/// run together, never the order within one chain.
+pub(crate) const NR: usize = 8;
 /// Reduction-dimension cache block: keeps the active `B` panel (`KC`×`NR`
 /// f32) resident in L1/L2 across a row sweep.
 const KC: usize = 256;
+
+/// Reusable scratch a [`gemm_nt`] caller owns so the steady-state hot loop
+/// stays allocation-free (the Bᵀ pack buffer grows once to the largest
+/// shape, then is reused).
+#[derive(Debug, Default, Clone)]
+pub struct GemmScratch {
+    bt: Vec<f32>,
+}
 
 /// `C[m,n] += A·B` with `A` row-major `[m,k]`, `B` row-major `[k,n]`.
 pub fn gemm_nn(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
@@ -58,14 +72,22 @@ pub fn gemm_tn(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize
 }
 
 /// `C[m,n] += A·Bᵀ` with `B` STORED `[n,k]` row-major — the dX shape.
-/// Implemented by packing `Bᵀ` into `bt` (caller-owned scratch, so the
-/// steady-state hot loop stays allocation-free) and running the `nn`
+/// Implemented by packing `Bᵀ` into the caller-owned [`GemmScratch`] (so
+/// the steady-state hot loop stays allocation-free) and running the `nn`
 /// kernel; the pack is an exact element copy, so the reduction chain is
 /// the `kk`-ascending one of the contract.
-pub fn gemm_nt(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, bt: &mut Vec<f32>) {
+pub fn gemm_nt(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    scratch: &mut GemmScratch,
+) {
     debug_assert_eq!(b.len(), n * k);
-    pack_transpose(b, n, k, bt);
-    gemm_blocked::<false>(c, a, bt, m, k, n);
+    pack_transpose(b, n, k, &mut scratch.bt);
+    gemm_blocked::<false>(c, a, &scratch.bt, m, k, n);
 }
 
 /// Transpose row-major `src[rows, cols]` into `dst[cols, rows]`,
@@ -142,6 +164,12 @@ pub fn gemm_ref(
 /// The blocked core. `TA` selects A's storage: `false` = row-major
 /// `[m,k]`, `true` = transposed storage `[k,m]`. `B` is always row-major
 /// `[k,n]` and `C` row-major `[m,n]`.
+///
+/// The full-tile inner loop dispatches through the process-wide
+/// [`simd::KernelSet`] (resolved once at startup, forceable via
+/// `--isa`/`LAGS_ISA`); remainder rows/columns always run the scalar
+/// sweeps below. Every dispatched tile body is bit-identical to
+/// [`gemm_tile_scalar`], so the kernel's output is ISA-invariant.
 fn gemm_blocked<const TA: bool>(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(c.len(), m * n);
     debug_assert_eq!(b.len(), k * n);
@@ -153,6 +181,8 @@ fn gemm_blocked<const TA: bool>(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k
             a[i * k + kk]
         }
     }
+    let ks = simd::active();
+    let nr = ks.nr;
     let mut k0 = 0;
     while k0 < k {
         let kb = KC.min(k - k0);
@@ -160,28 +190,14 @@ fn gemm_blocked<const TA: bool>(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k
         let m_main = m - m % MR;
         let mut i0 = 0;
         while i0 < m_main {
-            // NR-column tiles: MR×NR accumulators seeded FROM C
+            // nr-column tiles: MR×nr accumulators seeded FROM C
             let mut j0 = 0;
-            while j0 + NR <= n {
-                let mut acc = [[0.0f32; NR]; MR];
-                for (r, arow) in acc.iter_mut().enumerate() {
-                    let crow = &c[(i0 + r) * n + j0..(i0 + r) * n + j0 + NR];
-                    arow.copy_from_slice(crow);
-                }
-                for kk in k0..k0 + kb {
-                    let brow = &b[kk * n + j0..kk * n + j0 + NR];
-                    for (r, arow) in acc.iter_mut().enumerate() {
-                        let av = a_at::<TA>(a, m, k, i0 + r, kk);
-                        for (o, &bv) in arow.iter_mut().zip(brow.iter()) {
-                            *o += av * bv;
-                        }
-                    }
-                }
-                for (r, arow) in acc.iter().enumerate() {
-                    let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + NR];
-                    crow.copy_from_slice(arow);
-                }
-                j0 += NR;
+            while j0 + nr <= n {
+                ks.gemm_tile(
+                    c,
+                    &simd::GemmTile { a, b, m, k, n, i0, j0, k0, kb, ta: TA },
+                );
+                j0 += nr;
             }
             // column remainder: per-row axpy sweeps, kk ascending
             if j0 < n {
@@ -211,6 +227,33 @@ fn gemm_blocked<const TA: bool>(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k
             }
         }
         k0 += kb;
+    }
+}
+
+/// The PR-5 scalar register tile, verbatim — the bit-exactness reference
+/// every [`simd`] tile body must match: an MR×[`NR`] accumulator tile
+/// seeded FROM `C`, products added in strictly ascending `kk`, stored
+/// back. The 8-wide unrolled inner loop vectorizes ACROSS output elements
+/// (independent chains), never across the reduction dimension.
+pub(crate) fn gemm_tile_scalar(c: &mut [f32], t: &simd::GemmTile<'_>) {
+    let simd::GemmTile { a, b, m, k, n, i0, j0, k0, kb, ta } = *t;
+    let mut acc = [[0.0f32; NR]; MR];
+    for (r, arow) in acc.iter_mut().enumerate() {
+        let crow = &c[(i0 + r) * n + j0..(i0 + r) * n + j0 + NR];
+        arow.copy_from_slice(crow);
+    }
+    for kk in k0..k0 + kb {
+        let brow = &b[kk * n + j0..kk * n + j0 + NR];
+        for (r, arow) in acc.iter_mut().enumerate() {
+            let av = if ta { a[kk * m + i0 + r] } else { a[(i0 + r) * k + kk] };
+            for (o, &bv) in arow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+    for (r, arow) in acc.iter().enumerate() {
+        let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + NR];
+        crow.copy_from_slice(arow);
     }
 }
 
@@ -270,7 +313,7 @@ mod tests {
             assert_eq!(bits(&got), bits(&want), "tn {m}x{k}x{n}");
 
             let mut got = c0.clone();
-            let mut scratch = Vec::new();
+            let mut scratch = GemmScratch::default();
             gemm_nt(&mut got, &a, &bt, m, k, n, &mut scratch);
             assert_eq!(bits(&got), bits(&want), "nt {m}x{k}x{n}");
 

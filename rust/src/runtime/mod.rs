@@ -25,6 +25,7 @@ pub mod manifest;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod simd;
 
 pub use calibrate::Calibration;
 pub use manifest::{BatchSpec, DType, LayerInfo, Manifest, Metric, ModelManifest};
@@ -410,6 +411,7 @@ mod tests {
         assert!(rt.flops_source().contains("fallback"), "{}", rt.flops_source());
         rt.set_calibration(Calibration {
             flops_per_sec: 3.5e9,
+            isa: "scalar".into(),
             shapes: Vec::new(),
             source: None,
         });

@@ -701,6 +701,9 @@ pub struct GradScratch {
     carry: Vec<f32>,
     /// per-layer MaxPool argmax tables (empty vecs for non-pool layers)
     pool_idx: Vec<Vec<u32>>,
+    /// the B-transpose pack buffer `gemm_nt` owns (the dense dX GEMM);
+    /// conv/BPTT keep packing into `wt` via their own scratch structs
+    gemm: kernels::GemmScratch,
 }
 
 /// One hot-loop GEMM shape with its per-step forward execution count —
@@ -1079,7 +1082,7 @@ impl NativeNet {
         let BatchData::I32(yv) = y else { bail!("y must be i32") };
         let b = self.batch;
         let nl = self.layers.len();
-        let GradScratch { acts, delta, prev, wt, col, dcol, dh, carry, pool_idx } = scratch;
+        let GradScratch { acts, delta, prev, wt, col, dcol, dh, carry, pool_idx, gemm } = scratch;
         self.forward_into(params, x, acts, col, pool_idx);
 
         delta.clear();
@@ -1135,7 +1138,7 @@ impl NativeNet {
                         let w = &params[off..off + fan_in * fan_out];
                         prev.clear();
                         prev.resize(rows * fan_in, 0.0);
-                        kernels::gemm_nt(prev, delta, w, *rows, *fan_out, *fan_in, wt);
+                        kernels::gemm_nt(prev, delta, w, *rows, *fan_out, *fan_in, gemm);
                         std::mem::swap(&mut *delta, &mut *prev);
                     }
                 }

@@ -1,0 +1,734 @@
+//! Explicit SIMD kernel tier with runtime ISA dispatch (ROADMAP item,
+//! DESIGN.md §SIMD dispatch).
+//!
+//! Three hot-path kernel families get hand-vectorized paths — the GEMM
+//! register tile ([`super::kernels`]), the branchless TopK select
+//! ([`crate::sparsify::topk`]) and the rank-ordered sparse reduction
+//! ([`crate::collectives::sparse_agg`] via `SparseVec::add_into`) — behind
+//! ONE dispatch decision resolved at startup into a [`KernelSet`]:
+//!
+//! * x86_64: AVX2 and AVX-512F via `std::arch` intrinsics, gated on
+//!   `is_x86_feature_detected!`;
+//! * aarch64: NEON (architecturally mandatory, so always available);
+//! * everywhere: the PR-5 scalar kernels, kept verbatim as the
+//!   bit-exactness reference.
+//!
+//! The dispatched ISA is overridable for testing and provenance with
+//! `--isa {scalar,avx2,avx512,neon}` / `LAGS_ISA` — the forced-ISA CI
+//! matrix re-runs the bit-identity suites under `LAGS_ISA=scalar` vs the
+//! detected ISA to prove training is ISA-invariant end to end.
+//!
+//! ## Determinism contract (bit-identical to scalar, not per-ISA goldens)
+//!
+//! Every SIMD path must preserve the per-output-element `kk`-ascending f32
+//! accumulation chain of [`super::kernels::gemm_ref`]. The vector paths
+//! achieve this *lane-blocked*: lanes are always OUTPUT elements
+//! (independent chains), never the reduction dimension, so no f32 sum is
+//! ever reassociated; multiplies and adds are separate roundings
+//! (`mul`+`add`, never FMA — scalar Rust f32 does not contract); the
+//! column-tile width per ISA (NR = 8 scalar/AVX2/NEON, 16 AVX-512) is
+//! free to differ because it only changes which independent chains run
+//! together, never the order within one chain. TopK select and the sparse
+//! reduction are pure per-element bit operations / single adds, so their
+//! SIMD forms are trivially chain-preserving; NaN/±0 semantics are kept by
+//! using sign-bit masking for `abs` and ordered-quiet (`GE_OQ` /
+//! `vcgeq_f32`) compares — exactly the scalar `v.abs() >= thr`.
+//!
+//! ## Unsafe containment
+//!
+//! This module is the ONLY place in the crate allowed to use `unsafe`
+//! (`#![deny(unsafe_code)]` at the crate root, `#![allow(unsafe_code)]`
+//! here): each ISA×family pair is a private `#[target_feature]` `unsafe
+//! fn` body plus a safe entry that asserts slice bounds before the single
+//! `unsafe { .. }` call, and every `unsafe` token line carries a reasoned
+//! `lags-audit` R4 waiver pinned by the audit self-test.
+
+#![allow(unsafe_code)]
+
+use crate::sparsify::{sparse, topk};
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Register-tile rows of the GEMM micro-kernel — shared by every ISA (the
+/// blocked driver in [`super::kernels`] walks row blocks of this height).
+pub const MR: usize = 4;
+
+/// An instruction-set tier the dispatcher can select.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// The PR-5 scalar kernels — the bit-exactness reference, always
+    /// available.
+    Scalar = 0,
+    /// 8-lane f32 via `std::arch::x86_64` AVX2.
+    Avx2 = 1,
+    /// 16-lane f32 via `std::arch::x86_64` AVX-512F.
+    Avx512 = 2,
+    /// 4-lane f32 via `std::arch::aarch64` NEON (8-wide tiles as register
+    /// pairs).
+    Neon = 3,
+}
+
+impl Isa {
+    /// The CLI / `LAGS_ISA` / calibration-provenance name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Parse a `--isa` / `LAGS_ISA` name.
+    pub fn from_name(s: &str) -> Option<Isa> {
+        match s {
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "avx512" => Some(Isa::Avx512),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Isa> {
+        match v {
+            0 => Some(Isa::Scalar),
+            1 => Some(Isa::Avx2),
+            2 => Some(Isa::Avx512),
+            3 => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+
+    /// Every ISA this hardware can run, weakest first (Scalar is always
+    /// present; the strongest entry is what [`Isa::detect`] picks).
+    pub fn available() -> Vec<Isa> {
+        #[allow(unused_mut)]
+        let mut isas = vec![Isa::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") {
+                isas.push(Isa::Avx2);
+            }
+            if is_x86_feature_detected!("avx512f") {
+                isas.push(Isa::Avx512);
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            // NEON is architecturally mandatory on aarch64
+            isas.push(Isa::Neon);
+        }
+        isas
+    }
+
+    /// The strongest ISA this hardware supports.
+    pub fn detect() -> Isa {
+        *Isa::available().last().expect("Scalar is always available")
+    }
+}
+
+/// The arguments of one GEMM register-tile update: accumulate
+/// `C[i0..i0+MR, j0..j0+NR] += A[.., k0..k0+kb] · B[k0..k0+kb, ..]` with
+/// the tile seeded FROM `C`. `ta` selects A's storage (`false` = row-major
+/// `[m,k]`, `true` = transposed `[k,m]`); `B` is row-major `[k,n]`.
+#[derive(Clone, Copy)]
+pub struct GemmTile<'a> {
+    pub a: &'a [f32],
+    pub b: &'a [f32],
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub i0: usize,
+    pub j0: usize,
+    pub k0: usize,
+    pub kb: usize,
+    pub ta: bool,
+}
+
+/// The dispatch product: one function pointer per kernel family, resolved
+/// once per process (or forced per test). Every member is bit-identical to
+/// its scalar twin by the module contract, so swapping sets can never
+/// change a result — only wall clock.
+#[derive(Clone, Copy)]
+pub struct KernelSet {
+    pub isa: Isa,
+    /// Column-tile width of this ISA's GEMM micro-kernel.
+    pub nr: usize,
+    tile: fn(&mut [f32], &GemmTile),
+    mask: fn(&[f32], f32, &mut [f32]),
+    split: fn(&[f32], f32, &mut [f32], &mut [f32]),
+    spadd: fn(&[u32], &[f32], &mut [f32]),
+}
+
+impl KernelSet {
+    /// The kernel set for one ISA. Panics if the ISA is not in
+    /// [`Isa::available`] — constructing a set whose intrinsics the CPU
+    /// lacks would be instant UB, so availability is the safety gate every
+    /// `unsafe` entry below leans on.
+    pub fn for_isa(isa: Isa) -> KernelSet {
+        assert!(
+            Isa::available().contains(&isa),
+            "ISA {} is not available on this hardware",
+            isa.name()
+        );
+        match isa {
+            Isa::Scalar => KernelSet {
+                isa,
+                nr: super::kernels::NR,
+                tile: super::kernels::gemm_tile_scalar,
+                mask: topk::mask_with_threshold_scalar,
+                split: topk::split_with_threshold_scalar,
+                spadd: sparse::sparse_add_scalar,
+            },
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => KernelSet {
+                isa,
+                nr: 8,
+                tile: x86::gemm_tile_avx2,
+                mask: x86::mask_avx2,
+                split: x86::split_avx2,
+                spadd: x86::sparse_add_avx2,
+            },
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx512 => KernelSet {
+                isa,
+                nr: 16,
+                tile: x86::gemm_tile_avx512,
+                mask: x86::mask_avx512,
+                split: x86::split_avx512,
+                // scatter stores are scalar either way, so the 512-bit set
+                // reuses the 256-bit gather path for the sparse reduction
+                spadd: x86::sparse_add_avx2,
+            },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => KernelSet {
+                isa,
+                nr: 8,
+                tile: neon::gemm_tile_neon,
+                mask: neon::mask_neon,
+                split: neon::split_neon,
+                // aarch64 has no gather: the scalar loop IS the fast path
+                spadd: sparse::sparse_add_scalar,
+            },
+            #[cfg(not(target_arch = "x86_64"))]
+            Isa::Avx2 | Isa::Avx512 => unreachable!("guarded by the availability assert"),
+            #[cfg(not(target_arch = "aarch64"))]
+            Isa::Neon => unreachable!("guarded by the availability assert"),
+        }
+    }
+
+    /// One GEMM register-tile update (full MR rows, `nr` columns).
+    #[inline]
+    pub fn gemm_tile(&self, c: &mut [f32], t: &GemmTile<'_>) {
+        (self.tile)(c, t)
+    }
+
+    /// `out_i = x_i if |x_i| >= thr else 0` (bit-preserving select).
+    #[inline]
+    pub fn mask_with_threshold(&self, x: &[f32], thr: f32, out: &mut [f32]) {
+        (self.mask)(x, thr, out)
+    }
+
+    /// Split `x` at the threshold into kept + residual (kept ⊕ resid = x).
+    #[inline]
+    pub fn split_with_threshold(&self, x: &[f32], thr: f32, kept: &mut [f32], resid: &mut [f32]) {
+        (self.split)(x, thr, kept, resid)
+    }
+
+    /// `out[idx[i]] += val[i]` for one sparse message (indices strictly
+    /// increasing).
+    #[inline]
+    pub fn sparse_add(&self, idx: &[u32], val: &[f32], out: &mut [f32]) {
+        (self.spadd)(idx, val, out)
+    }
+}
+
+/// Sentinel: dispatch not yet resolved.
+const ISA_UNRESOLVED: u8 = u8::MAX;
+
+/// The process-wide dispatch decision. An `AtomicU8` (not a `OnceLock`) so
+/// the forced-ISA tests and `--isa` can re-point it; every ISA is
+/// bit-identical, so a benign resolve race cannot change results.
+static ACTIVE: AtomicU8 = AtomicU8::new(ISA_UNRESOLVED);
+
+/// The ISA the process dispatches to (resolving `LAGS_ISA` / hardware
+/// detection on first use).
+pub fn active_isa() -> Isa {
+    match Isa::from_u8(ACTIVE.load(Ordering::Relaxed)) {
+        Some(isa) => isa,
+        None => {
+            let isa = resolve_startup_isa();
+            ACTIVE.store(isa as u8, Ordering::Relaxed);
+            isa
+        }
+    }
+}
+
+/// The active [`KernelSet`] — what the kernel call sites dispatch through.
+#[inline]
+pub fn active() -> KernelSet {
+    KernelSet::for_isa(active_isa())
+}
+
+/// Force the dispatched ISA (the `--isa` flag and the forced-ISA test
+/// matrix). Fails if the hardware cannot run it.
+pub fn set_active(isa: Isa) -> Result<()> {
+    if !Isa::available().contains(&isa) {
+        bail!(
+            "ISA {} is not available on this hardware (available: {})",
+            isa.name(),
+            Isa::available().iter().map(|i| i.name()).collect::<Vec<_>>().join(", ")
+        );
+    }
+    ACTIVE.store(isa as u8, Ordering::Relaxed);
+    Ok(())
+}
+
+/// First-use resolution: the `LAGS_ISA` override if set (unknown or
+/// unavailable names abort — a forced-ISA CI run must never silently fall
+/// back), else hardware detection.
+#[allow(clippy::disallowed_methods)] // LAGS_ISA is the documented forced-ISA override; read once, before any kernel dispatch
+fn resolve_startup_isa() -> Isa {
+    // lags-audit: allow(R2) reason="forced-ISA test override read once at first dispatch; every ISA is bit-identical by the module contract, so the env can only select which proof path runs, never change a result"
+    match std::env::var("LAGS_ISA") {
+        Err(_) => Isa::detect(),
+        Ok(name) => {
+            let isa = Isa::from_name(name.trim()).unwrap_or_else(|| {
+                panic!("LAGS_ISA={name:?} is not one of scalar/avx2/avx512/neon")
+            });
+            assert!(
+                Isa::available().contains(&isa),
+                "LAGS_ISA={} is not available on this hardware",
+                isa.name()
+            );
+            isa
+        }
+    }
+}
+
+/// Shared bounds gate for the SIMD gemm-tile entries: with this true,
+/// every raw load/store of a tile body stays inside `c` / `t.b` (loads
+/// from `t.a` use safe indexing and need no gate).
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+fn tile_in_bounds(c: &[f32], t: &GemmTile<'_>, nr: usize) -> bool {
+    t.j0 + nr <= t.n && c.len() >= (t.i0 + MR) * t.n && t.b.len() >= (t.k0 + t.kb) * t.n
+}
+
+// ---------------------------------------------------------------------------
+// x86_64: AVX2 + AVX-512F
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{tile_in_bounds, GemmTile, MR};
+    use crate::sparsify::{sparse, topk};
+    use std::arch::x86_64::*;
+
+    /// |v| as a bit pattern: clear the sign bit, preserve NaN payloads —
+    /// the vector twin of `f32::abs`.
+    const ABS_BITS: u32 = 0x7fff_ffff;
+
+    pub(super) fn gemm_tile_avx2(c: &mut [f32], t: &GemmTile<'_>) {
+        assert!(tile_in_bounds(c, t, 8), "gemm tile out of bounds");
+        // SAFETY: this entry is only reachable through a KernelSet built
+        // after `is_x86_feature_detected!("avx2")`; the assert above
+        // bounds every raw load/store inside `c` / `t.b`.
+        // lags-audit: allow(R4) reason="single dispatch into the avx2 tile body; CPU feature gated at KernelSet construction and slice bounds asserted on entry"
+        unsafe { gemm_tile_avx2_impl(c, t) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    // lags-audit: allow(R4) reason="std::arch avx2 intrinsics are unsafe fns; pointers stay inside the entry-asserted c/b ranges and the reduction keeps the scalar kk-ascending chain (mul+add, lanes = output columns)"
+    unsafe fn gemm_tile_avx2_impl(c: &mut [f32], t: &GemmTile<'_>) {
+        let GemmTile { a, b, m, k, n, i0, j0, k0, kb, ta } = *t;
+        // one 8-lane accumulator per tile row, seeded FROM C — lanes are
+        // output columns (independent chains), never the reduction dim
+        let mut acc = [_mm256_setzero_ps(); MR];
+        for (r, accr) in acc.iter_mut().enumerate() {
+            *accr = _mm256_loadu_ps(c.as_ptr().add((i0 + r) * n + j0));
+        }
+        for kk in k0..k0 + kb {
+            let bv = _mm256_loadu_ps(b.as_ptr().add(kk * n + j0));
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = if ta { a[kk * m + i0 + r] } else { a[(i0 + r) * k + kk] };
+                // mul then add, never FMA: scalar f32 does not contract,
+                // so the SIMD chain must round after the multiply too
+                *accr = _mm256_add_ps(*accr, _mm256_mul_ps(_mm256_set1_ps(av), bv));
+            }
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            _mm256_storeu_ps(c.as_mut_ptr().add((i0 + r) * n + j0), *accr);
+        }
+    }
+
+    pub(super) fn gemm_tile_avx512(c: &mut [f32], t: &GemmTile<'_>) {
+        assert!(tile_in_bounds(c, t, 16), "gemm tile out of bounds");
+        // SAFETY: as for avx2 — avx512f gated at KernelSet construction,
+        // bounds asserted above.
+        // lags-audit: allow(R4) reason="single dispatch into the avx512 tile body; CPU feature gated at KernelSet construction and slice bounds asserted on entry"
+        unsafe { gemm_tile_avx512_impl(c, t) }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    // lags-audit: allow(R4) reason="std::arch avx512f intrinsics are unsafe fns; pointers stay inside the entry-asserted c/b ranges and the reduction keeps the scalar kk-ascending chain (mul+add, lanes = output columns)"
+    unsafe fn gemm_tile_avx512_impl(c: &mut [f32], t: &GemmTile<'_>) {
+        let GemmTile { a, b, m, k, n, i0, j0, k0, kb, ta } = *t;
+        let mut acc = [_mm512_setzero_ps(); MR];
+        for (r, accr) in acc.iter_mut().enumerate() {
+            *accr = _mm512_loadu_ps(c.as_ptr().add((i0 + r) * n + j0));
+        }
+        for kk in k0..k0 + kb {
+            let bv = _mm512_loadu_ps(b.as_ptr().add(kk * n + j0));
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = if ta { a[kk * m + i0 + r] } else { a[(i0 + r) * k + kk] };
+                *accr = _mm512_add_ps(*accr, _mm512_mul_ps(_mm512_set1_ps(av), bv));
+            }
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            _mm512_storeu_ps(c.as_mut_ptr().add((i0 + r) * n + j0), *accr);
+        }
+    }
+
+    pub(super) fn mask_avx2(x: &[f32], thr: f32, out: &mut [f32]) {
+        assert_eq!(x.len(), out.len());
+        // SAFETY: avx2 gated at KernelSet construction; the vector loop
+        // stays below `x.len()`, which equals `out.len()` by the assert.
+        // lags-audit: allow(R4) reason="single dispatch into the avx2 mask body; CPU feature gated at KernelSet construction and equal slice lengths asserted on entry"
+        unsafe { mask_avx2_impl(x, thr, out) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    // lags-audit: allow(R4) reason="std::arch avx2 intrinsics are unsafe fns; loads/stores bounded by the 8-lane loop guard, select is the scalar bitmask semantics (sign-bit abs + GE_OQ compare)"
+    unsafe fn mask_avx2_impl(x: &[f32], thr: f32, out: &mut [f32]) {
+        let n = x.len();
+        let absmask = _mm256_set1_ps(f32::from_bits(ABS_BITS));
+        let thrv = _mm256_set1_ps(thr);
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            // ordered-quiet >=: NaN lanes (in v or thr) select 0, exactly
+            // the scalar `v.abs() >= thr`
+            let keep = _mm256_cmp_ps::<_CMP_GE_OQ>(_mm256_and_ps(v, absmask), thrv);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_and_ps(v, keep));
+            i += 8;
+        }
+        // lane tail: the scalar reference on the remainder
+        topk::mask_with_threshold_scalar(&x[i..], thr, &mut out[i..]);
+    }
+
+    pub(super) fn mask_avx512(x: &[f32], thr: f32, out: &mut [f32]) {
+        assert_eq!(x.len(), out.len());
+        // SAFETY: as for avx2 (avx512f gate + equal lengths).
+        // lags-audit: allow(R4) reason="single dispatch into the avx512 mask body; CPU feature gated at KernelSet construction and equal slice lengths asserted on entry"
+        unsafe { mask_avx512_impl(x, thr, out) }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    // lags-audit: allow(R4) reason="std::arch avx512f intrinsics are unsafe fns; loads/stores bounded by the 16-lane loop guard, maskz_mov preserves the scalar bitmask-select semantics"
+    unsafe fn mask_avx512_impl(x: &[f32], thr: f32, out: &mut [f32]) {
+        let n = x.len();
+        let absmask = _mm512_set1_epi32(ABS_BITS as i32);
+        let thrv = _mm512_set1_ps(thr);
+        let mut i = 0;
+        while i + 16 <= n {
+            let v = _mm512_loadu_ps(x.as_ptr().add(i));
+            let abs = _mm512_castsi512_ps(_mm512_and_si512(_mm512_castps_si512(v), absmask));
+            let keep = _mm512_cmp_ps_mask::<_CMP_GE_OQ>(abs, thrv);
+            // zero-masked move: kept lanes keep their exact bits (NaN
+            // payloads, -0.0), dropped lanes become the literal +0.0
+            _mm512_storeu_ps(out.as_mut_ptr().add(i), _mm512_maskz_mov_ps(keep, v));
+            i += 16;
+        }
+        topk::mask_with_threshold_scalar(&x[i..], thr, &mut out[i..]);
+    }
+
+    pub(super) fn split_avx2(x: &[f32], thr: f32, kept: &mut [f32], resid: &mut [f32]) {
+        assert!(x.len() == kept.len() && x.len() == resid.len());
+        // SAFETY: avx2 gated at KernelSet construction; all three slices
+        // have the asserted equal length bounding the vector loop.
+        // lags-audit: allow(R4) reason="single dispatch into the avx2 split body; CPU feature gated at KernelSet construction and equal slice lengths asserted on entry"
+        unsafe { split_avx2_impl(x, thr, kept, resid) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    // lags-audit: allow(R4) reason="std::arch avx2 intrinsics are unsafe fns; loads/stores bounded by the 8-lane loop guard, kept/resid are the complementary scalar bitmask selects"
+    unsafe fn split_avx2_impl(x: &[f32], thr: f32, kept: &mut [f32], resid: &mut [f32]) {
+        let n = x.len();
+        let absmask = _mm256_set1_ps(f32::from_bits(ABS_BITS));
+        let thrv = _mm256_set1_ps(thr);
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            let keep = _mm256_cmp_ps::<_CMP_GE_OQ>(_mm256_and_ps(v, absmask), thrv);
+            _mm256_storeu_ps(kept.as_mut_ptr().add(i), _mm256_and_ps(v, keep));
+            // andnot(keep, v) = !keep & v — the scalar `bits & !m`
+            _mm256_storeu_ps(resid.as_mut_ptr().add(i), _mm256_andnot_ps(keep, v));
+            i += 8;
+        }
+        topk::split_with_threshold_scalar(&x[i..], thr, &mut kept[i..], &mut resid[i..]);
+    }
+
+    pub(super) fn split_avx512(x: &[f32], thr: f32, kept: &mut [f32], resid: &mut [f32]) {
+        assert!(x.len() == kept.len() && x.len() == resid.len());
+        // SAFETY: as for avx2 (avx512f gate + equal lengths).
+        // lags-audit: allow(R4) reason="single dispatch into the avx512 split body; CPU feature gated at KernelSet construction and equal slice lengths asserted on entry"
+        unsafe { split_avx512_impl(x, thr, kept, resid) }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    // lags-audit: allow(R4) reason="std::arch avx512f intrinsics are unsafe fns; loads/stores bounded by the 16-lane loop guard, complementary maskz_mov pair preserves kept+resid == x bitwise"
+    unsafe fn split_avx512_impl(x: &[f32], thr: f32, kept: &mut [f32], resid: &mut [f32]) {
+        let n = x.len();
+        let absmask = _mm512_set1_epi32(ABS_BITS as i32);
+        let thrv = _mm512_set1_ps(thr);
+        let mut i = 0;
+        while i + 16 <= n {
+            let v = _mm512_loadu_ps(x.as_ptr().add(i));
+            let abs = _mm512_castsi512_ps(_mm512_and_si512(_mm512_castps_si512(v), absmask));
+            let keep = _mm512_cmp_ps_mask::<_CMP_GE_OQ>(abs, thrv);
+            _mm512_storeu_ps(kept.as_mut_ptr().add(i), _mm512_maskz_mov_ps(keep, v));
+            _mm512_storeu_ps(resid.as_mut_ptr().add(i), _mm512_maskz_mov_ps(!keep, v));
+            i += 16;
+        }
+        topk::split_with_threshold_scalar(&x[i..], thr, &mut kept[i..], &mut resid[i..]);
+    }
+
+    pub(super) fn sparse_add_avx2(idx: &[u32], val: &[f32], out: &mut [f32]) {
+        assert_eq!(idx.len(), val.len());
+        // the gather reads out[idx[l]] BEFORE any per-lane bounds panic
+        // could fire, so every index must be proven in-bounds up front
+        // (the scan autovectorizes; O(nnz) over u32 is noise next to the
+        // gather+add it guards)
+        if let Some(maxi) = idx.iter().copied().max() {
+            assert!(
+                (maxi as usize) < out.len(),
+                "sparse index {maxi} out of bounds for dense len {}",
+                out.len()
+            );
+        }
+        debug_assert!(
+            idx.windows(2).all(|w| w[0] < w[1]),
+            "SparseVec indices must be strictly increasing"
+        );
+        if out.len() > i32::MAX as usize {
+            // i32 gather offsets can't span it; the scalar loop can
+            sparse::sparse_add_scalar(idx, val, out);
+            return;
+        }
+        // SAFETY: avx2 gated at KernelSet construction; every gather lane
+        // was bounds-proven above and fits an i32 offset.
+        // lags-audit: allow(R4) reason="single dispatch into the avx2 gather body; CPU feature gated at KernelSet construction, every index bounds-proven on entry and within i32 offset range"
+        unsafe { sparse_add_avx2_impl(idx, val, out) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    // lags-audit: allow(R4) reason="std::arch avx2 gather is an unsafe fn; lanes read bounds-proven indices, and strictly-increasing indices mean lanes never alias, so each output gets exactly the scalar single add"
+    unsafe fn sparse_add_avx2_impl(idx: &[u32], val: &[f32], out: &mut [f32]) {
+        let n = idx.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            let iv = _mm256_loadu_si256(idx.as_ptr().add(i) as *const __m256i);
+            let gathered = _mm256_i32gather_ps::<4>(out.as_ptr(), iv);
+            let sum = _mm256_add_ps(gathered, _mm256_loadu_ps(val.as_ptr().add(i)));
+            let mut lanes = [0.0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), sum);
+            // AVX2 has no scatter: ascending per-lane stores (indices are
+            // strictly increasing, so lanes never alias within a chunk)
+            for (l, &s) in lanes.iter().enumerate() {
+                out[idx[i + l] as usize] = s;
+            }
+            i += 8;
+        }
+        sparse::sparse_add_scalar(&idx[i..], &val[i..], out);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aarch64: NEON
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{tile_in_bounds, GemmTile, MR};
+    use crate::sparsify::topk;
+    use std::arch::aarch64::*;
+
+    pub(super) fn gemm_tile_neon(c: &mut [f32], t: &GemmTile<'_>) {
+        assert!(tile_in_bounds(c, t, 8), "gemm tile out of bounds");
+        // SAFETY: NEON is architecturally mandatory on aarch64; the
+        // assert above bounds every raw load/store inside `c` / `t.b`.
+        // lags-audit: allow(R4) reason="single dispatch into the neon tile body; NEON is mandatory on aarch64 and slice bounds are asserted on entry"
+        unsafe { gemm_tile_neon_impl(c, t) }
+    }
+
+    #[target_feature(enable = "neon")]
+    // lags-audit: allow(R4) reason="std::arch neon intrinsics are unsafe fns; pointers stay inside the entry-asserted c/b ranges and the reduction keeps the scalar kk-ascending chain (vmul+vadd, lanes = output columns)"
+    unsafe fn gemm_tile_neon_impl(c: &mut [f32], t: &GemmTile<'_>) {
+        let GemmTile { a, b, m, k, n, i0, j0, k0, kb, ta } = *t;
+        // 8-wide tile rows as register pairs of 4 lanes each
+        let mut acc = [[vdupq_n_f32(0.0); 2]; MR];
+        for (r, arow) in acc.iter_mut().enumerate() {
+            let base = (i0 + r) * n + j0;
+            arow[0] = vld1q_f32(c.as_ptr().add(base));
+            arow[1] = vld1q_f32(c.as_ptr().add(base + 4));
+        }
+        for kk in k0..k0 + kb {
+            let b0 = vld1q_f32(b.as_ptr().add(kk * n + j0));
+            let b1 = vld1q_f32(b.as_ptr().add(kk * n + j0 + 4));
+            for (r, arow) in acc.iter_mut().enumerate() {
+                let av = if ta { a[kk * m + i0 + r] } else { a[(i0 + r) * k + kk] };
+                let avv = vdupq_n_f32(av);
+                // vmul + vadd, never vfma: match the scalar rounding chain
+                arow[0] = vaddq_f32(arow[0], vmulq_f32(avv, b0));
+                arow[1] = vaddq_f32(arow[1], vmulq_f32(avv, b1));
+            }
+        }
+        for (r, arow) in acc.iter().enumerate() {
+            let base = (i0 + r) * n + j0;
+            vst1q_f32(c.as_mut_ptr().add(base), arow[0]);
+            vst1q_f32(c.as_mut_ptr().add(base + 4), arow[1]);
+        }
+    }
+
+    pub(super) fn mask_neon(x: &[f32], thr: f32, out: &mut [f32]) {
+        assert_eq!(x.len(), out.len());
+        // SAFETY: NEON mandatory on aarch64; equal lengths asserted bound
+        // the 4-lane loop.
+        // lags-audit: allow(R4) reason="single dispatch into the neon mask body; NEON is mandatory on aarch64 and equal slice lengths are asserted on entry"
+        unsafe { mask_neon_impl(x, thr, out) }
+    }
+
+    #[target_feature(enable = "neon")]
+    // lags-audit: allow(R4) reason="std::arch neon intrinsics are unsafe fns; loads/stores bounded by the 4-lane loop guard, vcge+vand is the scalar bitmask select (NaN compares false)"
+    unsafe fn mask_neon_impl(x: &[f32], thr: f32, out: &mut [f32]) {
+        let n = x.len();
+        let thrv = vdupq_n_f32(thr);
+        let mut i = 0;
+        while i + 4 <= n {
+            let v = vld1q_f32(x.as_ptr().add(i));
+            let keep = vcgeq_f32(vabsq_f32(v), thrv);
+            let bits = vandq_u32(vreinterpretq_u32_f32(v), keep);
+            vst1q_f32(out.as_mut_ptr().add(i), vreinterpretq_f32_u32(bits));
+            i += 4;
+        }
+        topk::mask_with_threshold_scalar(&x[i..], thr, &mut out[i..]);
+    }
+
+    pub(super) fn split_neon(x: &[f32], thr: f32, kept: &mut [f32], resid: &mut [f32]) {
+        assert!(x.len() == kept.len() && x.len() == resid.len());
+        // SAFETY: NEON mandatory on aarch64; equal lengths asserted bound
+        // the 4-lane loop.
+        // lags-audit: allow(R4) reason="single dispatch into the neon split body; NEON is mandatory on aarch64 and equal slice lengths are asserted on entry"
+        unsafe { split_neon_impl(x, thr, kept, resid) }
+    }
+
+    #[target_feature(enable = "neon")]
+    // lags-audit: allow(R4) reason="std::arch neon intrinsics are unsafe fns; loads/stores bounded by the 4-lane loop guard, vand/vbic are the complementary scalar bitmask selects"
+    unsafe fn split_neon_impl(x: &[f32], thr: f32, kept: &mut [f32], resid: &mut [f32]) {
+        let n = x.len();
+        let thrv = vdupq_n_f32(thr);
+        let mut i = 0;
+        while i + 4 <= n {
+            let v = vld1q_f32(x.as_ptr().add(i));
+            let keep = vcgeq_f32(vabsq_f32(v), thrv);
+            let vbits = vreinterpretq_u32_f32(v);
+            vst1q_f32(kept.as_mut_ptr().add(i), vreinterpretq_f32_u32(vandq_u32(vbits, keep)));
+            // vbic(a, b) = a & !b — the scalar `bits & !m`
+            vst1q_f32(resid.as_mut_ptr().add(i), vreinterpretq_f32_u32(vbicq_u32(vbits, keep)));
+            i += 4;
+        }
+        topk::split_with_threshold_scalar(&x[i..], thr, &mut kept[i..], &mut resid[i..]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn isa_names_round_trip() {
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon] {
+            assert_eq!(Isa::from_name(isa.name()), Some(isa));
+            assert_eq!(Isa::from_u8(isa as u8), Some(isa));
+        }
+        assert_eq!(Isa::from_name("sse9"), None);
+        assert_eq!(Isa::from_u8(200), None);
+    }
+
+    #[test]
+    fn scalar_is_always_available_and_detect_is_strongest() {
+        let av = Isa::available();
+        assert_eq!(av[0], Isa::Scalar);
+        assert!(av.contains(&Isa::detect()));
+        assert_eq!(*av.last().unwrap(), Isa::detect());
+    }
+
+    #[test]
+    fn for_isa_builds_every_available_set() {
+        for isa in Isa::available() {
+            let ks = KernelSet::for_isa(isa);
+            assert_eq!(ks.isa, isa);
+            assert!(ks.nr == 8 || ks.nr == 16);
+        }
+        assert_eq!(KernelSet::for_isa(Isa::Scalar).nr, 8);
+    }
+
+    #[test]
+    fn set_active_rejects_nothing_available_and_accepts_detected() {
+        // what detect() picked must be settable; scalar always is
+        set_active(Isa::detect()).unwrap();
+        set_active(Isa::Scalar).unwrap();
+        assert_eq!(active_isa(), Isa::Scalar);
+        assert_eq!(active().isa, Isa::Scalar);
+        set_active(Isa::detect()).unwrap();
+    }
+
+    /// Every available ISA's mask/split/sparse_add must match the scalar
+    /// set bitwise, across lane tails and IEEE specials. (The GEMM tile is
+    /// covered end-to-end by the kernels unit tests, the conformance
+    /// proptest and the forced-ISA integration suite.)
+    #[test]
+    fn select_and_sparse_add_bit_identical_across_isas() {
+        let scalar = KernelSet::for_isa(Isa::Scalar);
+        for isa in Isa::available() {
+            let ks = KernelSet::for_isa(isa);
+            for n in [0usize, 1, 3, 4, 7, 8, 9, 15, 16, 17, 31, 33, 250] {
+                let mut rng = Rng::new(7 + n as u64);
+                let mut x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+                if n >= 4 {
+                    x[0] = f32::NAN;
+                    x[1] = f32::INFINITY;
+                    x[2] = -0.0;
+                    x[3] = 0.0;
+                }
+                for thr in [0.0f32, 0.5, f32::INFINITY, f32::NAN] {
+                    let (mut m0, mut m1) = (vec![9.0f32; n], vec![9.0f32; n]);
+                    scalar.mask_with_threshold(&x, thr, &mut m0);
+                    ks.mask_with_threshold(&x, thr, &mut m1);
+                    let (mut k0, mut r0) = (vec![9.0f32; n], vec![9.0f32; n]);
+                    let (mut k1, mut r1) = (vec![9.0f32; n], vec![9.0f32; n]);
+                    scalar.split_with_threshold(&x, thr, &mut k0, &mut r0);
+                    ks.split_with_threshold(&x, thr, &mut k1, &mut r1);
+                    for i in 0..n {
+                        assert_eq!(m0[i].to_bits(), m1[i].to_bits(), "{} mask n={n} i={i}", isa.name());
+                        assert_eq!(k0[i].to_bits(), k1[i].to_bits(), "{} kept n={n} i={i}", isa.name());
+                        assert_eq!(r0[i].to_bits(), r1[i].to_bits(), "{} resid n={n} i={i}", isa.name());
+                    }
+                }
+                // sparse add: strictly-increasing indices over a dense out
+                let dense = 4 * n + 16;
+                let idx: Vec<u32> = (0..n).map(|j| (j * 4 + 1) as u32).collect();
+                let val: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+                let mut o0: Vec<f32> = (0..dense).map(|_| rng.normal_f32()).collect();
+                let mut o1 = o0.clone();
+                scalar.sparse_add(&idx, &val, &mut o0);
+                ks.sparse_add(&idx, &val, &mut o1);
+                for i in 0..dense {
+                    assert_eq!(o0[i].to_bits(), o1[i].to_bits(), "{} spadd n={n} i={i}", isa.name());
+                }
+            }
+        }
+    }
+}

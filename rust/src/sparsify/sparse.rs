@@ -63,12 +63,13 @@ impl SparseVec {
     }
 
     /// Accumulate into an existing dense buffer: out[idx] += val.
-    /// This is the aggregation step of Algorithm 1 line 9.
+    /// This is the aggregation step of Algorithm 1 line 9; it dispatches
+    /// through the process-wide [`crate::runtime::simd::KernelSet`] —
+    /// every ISA path performs the same single add per coordinate, so the
+    /// result is bit-identical to [`sparse_add_scalar`] on every ISA.
     pub fn add_into(&self, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.len);
-        for (&i, &v) in self.idx.iter().zip(self.val.iter()) {
-            out[i as usize] += v;
-        }
+        crate::runtime::simd::active().sparse_add(&self.idx, &self.val, out);
     }
 
     /// Accumulate a scaled copy: out[idx] += scale * val.
@@ -148,6 +149,15 @@ impl SparseVec {
             out.val.push(other.val[i]);
         }
         out
+    }
+}
+
+/// The PR-1 scalar sparse reduction, verbatim — the bit-exactness
+/// reference for the SIMD gather path (and the scalar/NEON `KernelSet`
+/// member): one f32 add per (index, value) pair, indices ascending.
+pub(crate) fn sparse_add_scalar(idx: &[u32], val: &[f32], out: &mut [f32]) {
+    for (&i, &v) in idx.iter().zip(val.iter()) {
+        out[i as usize] += v;
     }
 }
 

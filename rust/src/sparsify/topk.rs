@@ -61,12 +61,20 @@ const LANES: usize = 8;
 
 /// Apply a precomputed threshold: out_i = x_i if |x_i| >= thr else 0.
 ///
-/// Branchless (bitmask select) and chunk-unrolled by [`LANES`] so the loop
-/// autovectorizes — this runs per layer per worker per step (the masked
-/// compress path and the XLA host emulation). Semantics are identical to
-/// the branchy form, including NaN/±inf handling and the literal `+0.0`
-/// written for dropped elements.
+/// Runs per layer per worker per step (the masked compress path and the
+/// XLA host emulation); dispatches through the process-wide
+/// [`crate::runtime::simd::KernelSet`] — every ISA path is bit-identical
+/// to [`mask_with_threshold_scalar`], including NaN/±inf handling and the
+/// literal `+0.0` written for dropped elements.
 pub fn mask_with_threshold(x: &[f32], thr: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    crate::runtime::simd::active().mask_with_threshold(x, thr, out);
+}
+
+/// The PR-5 branchless scalar kernel, verbatim — the bit-exactness
+/// reference for every SIMD mask path (and the scalar `KernelSet` member):
+/// bitmask select, chunk-unrolled by [`LANES`] so the loop autovectorizes.
+pub(crate) fn mask_with_threshold_scalar(x: &[f32], thr: f32, out: &mut [f32]) {
     debug_assert_eq!(x.len(), out.len());
     let mut xc = x.chunks_exact(LANES);
     let mut oc = out.chunks_exact_mut(LANES);
@@ -83,8 +91,17 @@ pub fn mask_with_threshold(x: &[f32], thr: f32, out: &mut [f32]) {
 
 /// Split x at the threshold: `kept` gets the TopK part, `resid` gets the
 /// complement (kept + resid == x elementwise). The error-feedback hot
-/// path; branchless + chunk-unrolled like [`mask_with_threshold`].
+/// path; dispatches like [`mask_with_threshold`].
 pub fn split_with_threshold(x: &[f32], thr: f32, kept: &mut [f32], resid: &mut [f32]) {
+    debug_assert_eq!(x.len(), kept.len());
+    debug_assert_eq!(x.len(), resid.len());
+    crate::runtime::simd::active().split_with_threshold(x, thr, kept, resid);
+}
+
+/// The PR-5 branchless scalar split, verbatim — the bit-exactness
+/// reference for every SIMD split path (and the scalar `KernelSet`
+/// member).
+pub(crate) fn split_with_threshold_scalar(x: &[f32], thr: f32, kept: &mut [f32], resid: &mut [f32]) {
     debug_assert_eq!(x.len(), kept.len());
     debug_assert_eq!(x.len(), resid.len());
     let mut xc = x.chunks_exact(LANES);

@@ -7,7 +7,8 @@
 //!    a waivered twin that MUST suppress-but-report; plus the reasonless
 //!    waiver, which suppresses nothing and is itself a W0.
 //! 2. **Self-audit**: the shipped `rust/src` tree must audit clean, with
-//!    exactly the four justified waivers the contract documents.
+//!    exactly the justified waivers the contract documents (four legacy
+//!    exceptions plus the per-intrinsic R4 waivers in `runtime/simd.rs`).
 
 use lags::analysis::audit::{audit_source, audit_tree, Finding, Rule};
 use std::path::Path;
@@ -107,6 +108,27 @@ fn waived_r4_suppresses_but_reports() {
     assert_eq!(waived_of(&fs, Rule::R4), 1);
 }
 
+#[test]
+fn bad_r4_intrinsic_flags_target_feature_fn_and_caller() {
+    // SIMD-tier shape: a #[target_feature] unsafe fn plus the unsafe call
+    // into it — two bare `unsafe` tokens, two findings, core or not
+    for rel in ["runtime/fixture.rs", "metrics/fixture.rs"] {
+        let fs = audit_fixture("bad_r4_intrinsic.rs", rel);
+        assert_eq!(unwaived_of(&fs, Rule::R4), 2, "R4 must fire twice under {rel}: {fs:?}");
+    }
+}
+
+#[test]
+fn waived_r4_intrinsic_twin_suppresses_both_sites() {
+    // the waiver for the fn line sits BETWEEN the #[target_feature]
+    // attribute and the `unsafe fn` (attributes count as code, so a
+    // comment above the attribute would miss its target)
+    let fs = audit_fixture("waived_r4_intrinsic.rs", "runtime/fixture.rs");
+    assert_eq!(unwaived_of(&fs, Rule::R4), 0, "{fs:?}");
+    assert_eq!(waived_of(&fs, Rule::R4), 2, "fn line + call line both waived: {fs:?}");
+    assert!(fs.iter().all(|f| f.waiver.as_deref().unwrap().contains("intrinsic")));
+}
+
 // --- R5: foreign randomness ----------------------------------------------
 
 #[test]
@@ -171,18 +193,25 @@ fn shipped_tree_audits_clean_with_documented_waivers() {
     );
     assert!(report.clean());
 
-    // exactly the four justified exceptions the contract documents —
-    // adding a waiver anywhere in rust/src must update this list (and the
-    // DESIGN.md table) to stay green
+    // exactly the justified exceptions the contract documents — the four
+    // legacy waivers plus the SIMD tier's per-unsafe-token R4 waivers and
+    // its one LAGS_ISA env read. Adding a waiver anywhere in rust/src must
+    // update this list (and the DESIGN.md table) to stay green.
     let mut got: Vec<(String, &'static str)> =
         report.waivers().iter().map(|f| (f.file.clone(), f.rule.id())).collect();
     got.sort();
-    let want = vec![
+    let mut want: Vec<(String, &'static str)> = vec![
         ("adaptive/ratio.rs".to_string(), "R3"),
         ("runtime/native.rs".to_string(), "R3"),
+        ("runtime/simd.rs".to_string(), "R2"), // the LAGS_ISA override read
         ("util/cli.rs".to_string(), "R2"),
         ("util/rng.rs".to_string(), "R1"),
     ];
+    // 20 unsafe tokens in the SIMD tier: 7 x86 entry/impl fn pairs + 3
+    // NEON pairs, 2 tokens each (the `unsafe fn` line and the wrapper's
+    // `unsafe { .. }` call line), every one individually waived
+    want.extend(std::iter::repeat(("runtime/simd.rs".to_string(), "R4")).take(20));
+    want.sort();
     assert_eq!(got, want, "shipped waiver set drifted");
     // every effective waiver carries a non-empty reason (audit.json shape)
     assert!(report
@@ -194,5 +223,5 @@ fn shipped_tree_audits_clean_with_documented_waivers() {
     let j = report.to_json();
     assert!(j.get("clean").unwrap().as_bool().unwrap());
     assert_eq!(j.get("findings").unwrap().as_arr().unwrap().len(), 0);
-    assert_eq!(j.get("waivers").unwrap().as_arr().unwrap().len(), 4);
+    assert_eq!(j.get("waivers").unwrap().as_arr().unwrap().len(), 25);
 }

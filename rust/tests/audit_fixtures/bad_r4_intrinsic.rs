@@ -1,0 +1,17 @@
+// R4 fixture: the SIMD-tier shape — a #[target_feature] impl fn plus the
+// checked-dispatch wrapper that calls it. Both carry a bare `unsafe`
+// token, so the scanner must flag TWICE, under every rel path.
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn mask_avx2_impl(x: &[f32], out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let v = _mm256_loadu_ps(x.as_ptr());
+    _mm256_storeu_ps(out.as_mut_ptr(), v);
+}
+
+#[cfg(target_arch = "x86_64")]
+fn mask_avx2(x: &[f32], out: &mut [f32]) {
+    assert!(x.len() >= 8 && out.len() >= 8);
+    unsafe { mask_avx2_impl(x, out) }
+}

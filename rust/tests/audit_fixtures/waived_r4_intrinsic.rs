@@ -1,0 +1,21 @@
+// R4 fixture: the waivered twin of bad_r4_intrinsic.rs. Two waivers, one
+// per unsafe token. NOTE the placement of the first one: attribute lines
+// count as code to the scanner's next-code-line targeting, so the waiver
+// must sit BETWEEN #[target_feature] and the `unsafe fn` line (legal Rust
+// — comments may separate an attribute from its item).
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+// lags-audit: allow(R4) reason="fixture: target_feature intrinsic impl, lanes are independent chains"
+unsafe fn mask_avx2_impl(x: &[f32], out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let v = _mm256_loadu_ps(x.as_ptr());
+    _mm256_storeu_ps(out.as_mut_ptr(), v);
+}
+
+#[cfg(target_arch = "x86_64")]
+fn mask_avx2(x: &[f32], out: &mut [f32]) {
+    assert!(x.len() >= 8 && out.len() >= 8);
+    // lags-audit: allow(R4) reason="fixture: intrinsic entry, bounds asserted above, ISA checked by dispatch"
+    unsafe { mask_avx2_impl(x, out) }
+}

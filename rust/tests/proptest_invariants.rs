@@ -907,7 +907,7 @@ fn prop_blocked_gemm_bit_identical_to_reference() {
             return Err(format!("gemm_tn {m}x{k}x{n} diverged from gemm_ref"));
         }
         let mut got = c0.clone();
-        let mut scratch = Vec::new();
+        let mut scratch = kernels::GemmScratch::default();
         kernels::gemm_nt(&mut got, &a, &bt, m, k, n, &mut scratch);
         if bits(&got) != bits(&want) {
             return Err(format!("gemm_nt {m}x{k}x{n} diverged from gemm_ref"));
